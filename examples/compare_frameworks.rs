@@ -1,0 +1,49 @@
+//! Paired comparison of all four frameworks (SplitMe, FedAvg, vanilla SFL,
+//! O-RANFed) on an identical topology + data — a console version of the
+//! paper's §V evaluation at reduced scale.
+//!
+//! ```bash
+//! cargo run --release --example compare_frameworks
+//! ```
+
+use anyhow::Result;
+use repro::config::SimConfig;
+use repro::experiments::{self, Budget};
+use repro::runtime::Engine;
+
+fn main() -> Result<()> {
+    let engine = Engine::from_default_manifest()?;
+    let mut cfg = SimConfig::commag();
+    // reduced federation so the whole comparison runs in ~a minute
+    cfg.num_clients = 12;
+    cfg.b_min = 1.0 / 12.0;
+    cfg.samples_per_client = 64;
+    cfg.test_samples = 192;
+    cfg.inversion_clients = 6;
+    cfg.fedavg_k = 4;
+    cfg.sfl_k = 4;
+    cfg.sfl_e = 8;
+    cfg.eval_every = 2;
+
+    let budget = Budget { splitme_rounds: 10, baseline_rounds: 16 };
+    let summaries = experiments::run_comparison(&engine, &cfg, budget, true)?;
+
+    println!("\n{:-^78}", " summary ");
+    println!(
+        "{:<10} {:>7} {:>9} {:>10} {:>12} {:>10}",
+        "framework", "rounds", "best acc", "sim time", "uplink MB", "R_co total"
+    );
+    for s in &summaries {
+        println!(
+            "{:<10} {:>7} {:>8.1}% {:>9.2}s {:>12.2} {:>10.1}",
+            s.framework,
+            s.rounds,
+            100.0 * s.best_accuracy,
+            s.total_sim_time,
+            s.total_comm_bytes / 1e6,
+            s.total_comm_cost
+        );
+    }
+    experiments::headline(&summaries);
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Quickstart: train SplitMe on a pocket-sized O-RAN federation and print
+//! the per-round metrics plus the final (inverted) model's test accuracy.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use repro::prelude::*;
+use repro::config::FrameworkKind;
+
+fn main() -> Result<()> {
+    // the engine loads + compiles the AOT artifacts once (build-time python
+    // output; no python at runtime)
+    let engine = Engine::from_default_manifest()?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // Table III defaults, scaled to laptop size: 9 near-RT-RICs, 64 KPI
+    // samples each (one slice class per RIC — the paper's non-IID setting)
+    let mut cfg = SimConfig::commag();
+    cfg.num_clients = 9;
+    cfg.b_min = 1.0 / 9.0;
+    cfg.samples_per_client = 64;
+    cfg.test_samples = 192;
+    cfg.e_initial = 8;
+    cfg.e_max = 8;
+    cfg.inversion_clients = 6;
+
+    let mut runner = Runner::new(&engine, &cfg, FrameworkKind::SplitMe)?;
+    runner.progress = Some(Box::new(|r| {
+        println!(
+            "round {:>2}: selected={} E={} train_loss={:.4} acc={:.3} sim_time={:.3}s",
+            r.round, r.selected, r.e, r.train_loss, r.accuracy, r.sim_time
+        );
+    }));
+    let summary = runner.train(8)?;
+
+    println!("\nbest accuracy     : {:.1}%", 100.0 * summary.best_accuracy);
+    println!("simulated time    : {:.3}s", summary.total_sim_time);
+    println!("uplink volume     : {:.2} MB", summary.total_comm_bytes / 1e6);
+    println!("comm resource cost: {:.1}", summary.total_comm_cost);
+    Ok(())
+}

@@ -1,0 +1,228 @@
+"""AOT bridge: lower every L2 function to HLO *text* artifacts + manifest.json.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``); rust loads the manifest and the
+``*.hlo.txt`` files and never touches python again.
+
+Scalar-ish inputs (learning rate) are passed as shape-(1,) f32 arrays — the
+rust side builds every input uniformly as a rank-n f32 Literal.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .specs import PRESETS, Preset
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.artifacts: Dict[str, dict] = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(self, name: str, fn, arg_shapes: List[tuple]):
+        """Lower ``fn`` for the given input shapes and write ``name.hlo.txt``."""
+        specs = [jax.ShapeDtypeStruct(s, F32) for s in arg_shapes]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        n_out = len(jax.eval_shape(fn, *specs))
+        out_shapes = [list(o.shape) for o in jax.eval_shape(fn, *specs)]
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.artifacts[name] = {
+            "file": fname,
+            "inputs": [list(s) for s in arg_shapes],
+            "outputs": out_shapes,
+            "hlo_bytes": len(text),
+        }
+        print(f"  {name}: {len(text)/1e6:.2f} MB, in={arg_shapes} out={n_out}")
+        return name
+
+
+def scalar(v):
+    """Unwrap a shape-(1,) lr array into a scalar inside the lowered fn."""
+    return v[0]
+
+
+def build_preset(b: Builder, p: Preset, quick: bool = False) -> dict:
+    B = p.batch
+    C = p.num_classes
+    D = p.split_dim
+    IN = (B,) + p.input_shape
+    ncp, nsp, nip, nfp = (
+        p.client_param_count,
+        p.server_param_count,
+        p.inverse_param_count,
+        p.full_param_count,
+    )
+    n = p.name
+    print(f"preset {n}: client={ncp} server={nsp} inverse={nip} full={nfp} params")
+
+    arts = {}
+    arts["client_fwd"] = b.add(
+        f"{n}_client_fwd", lambda wc, x: (M.client_fwd(p, wc, x),), [(ncp,), IN]
+    )
+    arts["client_step"] = b.add(
+        f"{n}_client_step",
+        lambda wc, x, z, lr: M.client_step(p, wc, x, z, scalar(lr)),
+        [(ncp,), IN, (B, D), (1,)],
+    )
+    arts["inv_acts"] = b.add(
+        f"{n}_inv_acts", lambda wsi, y: M.inverse_acts(p, wsi, y), [(nip,), (B, C)]
+    )
+    arts["inv_step"] = b.add(
+        f"{n}_inv_step",
+        lambda wsi, y, c, lr: M.inv_step(p, wsi, y, c, scalar(lr)),
+        [(nip,), (B, C), (B, D), (1,)],
+    )
+    arts["fedavg_step"] = b.add(
+        f"{n}_fedavg_step",
+        lambda wf, x, y, lr: M.fedavg_step(p, wf, x, y, scalar(lr)),
+        [(nfp,), IN, (B, C), (1,)],
+    )
+    arts["full_eval"] = b.add(
+        f"{n}_full_eval", lambda wf, x, y: M.full_eval(p, wf, x, y), [(nfp,), IN, (B, C)]
+    )
+    arts["mutual_gap"] = b.add(
+        f"{n}_mutual_gap",
+        lambda wc, wsi, x, y: M.mutual_gap(p, wc, wsi, x, y),
+        [(ncp,), (nip,), IN, (B, C)],
+    )
+    arts["sfl_server_step"] = b.add(
+        f"{n}_sfl_server_step",
+        lambda ws, sm, y, lr: M.sfl_server_step(p, ws, sm, y, scalar(lr)),
+        [(nsp,), (B, D), (B, C), (1,)],
+    )
+    arts["sfl_client_bwd"] = b.add(
+        f"{n}_sfl_client_bwd",
+        lambda wc, x, g, lr: M.sfl_client_bwd(p, wc, x, g, scalar(lr)),
+        [(ncp,), IN, (B, D), (1,)],
+    )
+
+    # scan-chunked steps (perf: one dispatch per CHUNK local updates)
+    CH = M.CHUNK
+    CIN = (CH,) + IN
+    arts["client_step_chunk"] = b.add(
+        f"{n}_client_step_c{CH}",
+        lambda wc, xs, zs, lr: M.client_step_chunk(p, wc, xs, zs, scalar(lr)),
+        [(ncp,), CIN, (CH, B, D), (1,)],
+    )
+    arts["inv_step_chunk"] = b.add(
+        f"{n}_inv_step_c{CH}",
+        lambda wsi, ys, cs, lr: M.inv_step_chunk(p, wsi, ys, cs, scalar(lr)),
+        [(nip,), (CH, B, C), (CH, B, D), (1,)],
+    )
+    arts["fedavg_step_chunk"] = b.add(
+        f"{n}_fedavg_step_c{CH}",
+        lambda wf, xs, ys, lr: M.fedavg_step_chunk(p, wf, xs, ys, scalar(lr)),
+        [(nfp,), CIN, (CH, B, C), (1,)],
+    )
+    # pure-jnp ablation of the hottest step (perf measurement only)
+    arts["inv_step_pure"] = b.add(
+        f"{n}_inv_step_pure",
+        lambda wsi, y, c, lr: M.inv_step_pure(p, wsi, y, c, scalar(lr)),
+        [(nip,), (B, C), (B, D), (1,)],
+    )
+
+    # ---- layer-wise inversion artifacts, deduped by (d_in, d_out, act) ----
+    layer_table = []
+    seen = {}
+    L = p.server_depth
+    for l, (d_in, d_out, act) in enumerate(p.server_layer_shapes()):
+        final = l == L - 1
+        key = (d_in, d_out, act, final)
+        if key not in seen:
+            tag = f"{n}_l{d_in}x{d_out}{'a' if act else 'f'}"
+            gram = b.add(
+                f"{tag}_gram",
+                # hidden layers' targets are post-activation inverse-model
+                # activations -> undo the bijective leaky-relu; the final
+                # layer's target is the raw one-hot labels.
+                lambda o, z, ia=not final: M.gram_layer(o, z, ia),
+                [(B, d_in), (B, d_out)],
+            )
+            apply_ = b.add(
+                f"{tag}_apply",
+                lambda w, o, a=act: M.apply_layer(w, o, a),
+                [(d_in + 1, d_out), (B, d_in)],
+            )
+            seen[key] = (gram, apply_)
+        gram, apply_ = seen[key]
+        # z_index: mirrored inverse-model activation index (0-based into the
+        # inv_acts output tuple); the final layer targets the labels directly.
+        z_index = -1 if final else L - 2 - l
+        layer_table.append(
+            {
+                "d_in": d_in,
+                "d_out": d_out,
+                "act": act,
+                "gram": gram,
+                "apply": apply_,
+                "z_index": z_index,
+            }
+        )
+
+    return {
+        "batch": B,
+        "num_classes": C,
+        "split_dim": D,
+        "chunk": M.CHUNK,
+        "input_shape": list(p.input_shape),
+        "client_params": ncp,
+        "server_params": nsp,
+        "inverse_params": nip,
+        "full_params": nfp,
+        "eta_c": p.eta_c,
+        "eta_s": p.eta_s,
+        "server_layers": layer_table,
+        "artifacts": arts,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; artifacts land beside it")
+    ap.add_argument("--preset", default="all", choices=["all", *PRESETS])
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    b = Builder(out_dir)
+    presets = {}
+    names = list(PRESETS) if args.preset == "all" else [args.preset]
+    for name in names:
+        presets[name] = build_preset(b, PRESETS[name])
+
+    manifest = {"presets": presets, "artifacts": b.artifacts}
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=1)
+    total = sum(a["hlo_bytes"] for a in b.artifacts.values())
+    print(f"wrote {len(b.artifacts)} artifacts ({total/1e6:.1f} MB) + {args.out}")
+
+
+if __name__ == "__main__":
+    main()

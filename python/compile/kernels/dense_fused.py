@@ -1,0 +1,116 @@
+"""L1: fused dense layer (matmul + bias + leaky-ReLU) Pallas kernel.
+
+The forward hot path of every MLP stack in the system (client model,
+inverse server model, recovered server model).  Output-stationary MXU
+tiling identical in structure to ``matmul_t``: grid ``(i, j, k)`` over
+``(B/bb, dout/bd, din/bk)``; bias-add and the activation are fused into the
+last reduction step so the activation never round-trips to HBM.
+
+A custom VJP makes the kernel differentiable (Pallas calls carry no AD
+rule): the backward pass recovers the activation mask from the *sign of the
+output* (leaky-ReLU with positive slope preserves sign, so no pre-activation
+tensor is saved) and computes ``dW`` with the ``matmul_t`` Pallas kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..specs import LEAKY_SLOPE
+from .matmul_t import matmul_t
+
+
+def leaky_relu(x, slope: float = LEAKY_SLOPE):
+    return jnp.where(x >= 0, x, slope * x)
+
+
+def leaky_relu_inv(y, slope: float = LEAKY_SLOPE):
+    """Exact inverse — used on the inversion targets Z_l (DESIGN.md §7)."""
+    return jnp.where(y >= 0, y, y / slope)
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, k_steps: int, act: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _finish():
+        y = o_ref[...] + b_ref[...][None, :]
+        if act:
+            y = leaky_relu(y)
+        o_ref[...] = y
+
+
+def _dense_raw(x, w, b, act: bool,
+               block_b: int = 32, block_d: int = 128, block_k: int = 128):
+    B, din = x.shape
+    din2, dout = w.shape
+    assert din == din2 and b.shape == (dout,), (x.shape, w.shape, b.shape)
+    block_b = min(block_b, B)
+    block_d = min(block_d, dout)
+    block_k = min(block_k, din)
+
+    pb = (-B) % block_b
+    pk = (-din) % block_k
+    pd = (-dout) % block_d
+    xp = jnp.pad(x, ((0, pb), (0, pk))) if (pb or pk) else x
+    wp = jnp.pad(w, ((0, pk), (0, pd))) if (pk or pd) else w
+    bp_ = jnp.pad(b, (0, pd)) if pd else b
+    Bp, dinp = xp.shape
+    doutp = wp.shape[1]
+    k_steps = dinp // block_k
+
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, k_steps=k_steps, act=act),
+        grid=(Bp // block_b, doutp // block_d, k_steps),
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_d), lambda i, j, k: (k, j)),
+            pl.BlockSpec((block_d,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_d), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, doutp), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp_)
+    return out[:B, :dout]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _dense(act, x, w, b):
+    return _dense_raw(x, w, b, act)
+
+
+def _dense_fwd(act, x, w, b):
+    y = _dense_raw(x, w, b, act)
+    return y, (x, w, y)
+
+
+def _dense_bwd(act, res, dy):
+    x, w, y = res
+    if act:
+        # sign(pre) == sign(post) for leaky-relu with slope > 0
+        dpre = dy * jnp.where(y >= 0, 1.0, LEAKY_SLOPE)
+    else:
+        dpre = dy
+    dx = dpre @ w.T
+    dw = matmul_t(x, dpre)  # x^T dpre via the Pallas Gram kernel
+    db = jnp.sum(dpre, axis=0)
+    return dx, dw, db
+
+
+_dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+def dense_fused(x, w, b, act: bool = True):
+    """``leaky_relu(x @ w + b)`` (or linear when ``act=False``); differentiable."""
+    return _dense(act, x, w, b)

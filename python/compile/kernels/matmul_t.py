@@ -1,0 +1,87 @@
+"""L1: tiled A^T B Pallas kernel — the Gram accumulation of the layer-wise
+inversion (Eq 8-9 of the paper).
+
+The final-model acquisition solves, per server layer ``l``,
+``W_l = (sum_m O_l^T O_l + gamma I)^{-1} (sum_m O_l^T Z_l)``: the hot part is
+the per-client, per-batch Gram products ``O^T O`` and ``O^T Z``, which the
+paper all-reduces across rApps.  This kernel computes one batch's ``A^T B``
+with output-stationary MXU tiling: grid ``(i, j, k)`` over
+``(p/bp, q/bq, n/bn)``, the ``(bp, bq)`` f32 output tile stays resident in
+VMEM across the ``k`` reduction steps while ``(bn, bp)`` / ``(bn, bq)``
+input tiles stream HBM->VMEM via the BlockSpec index maps (the role the
+paper's GPU baseline would fill with threadblock loops + shared memory).
+
+Gram(A) is just ``matmul_t(A, A)``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_t_kernel(a_ref, b_ref, o_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] += jax.lax.dot_general(
+        a,
+        b,
+        (((0,), (0,)), ((), ())),  # contract over the row (batch) axis
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _pad_to(x, mult0, mult1):
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def matmul_t(a, b, block_n: int = 32, block_p: int = 128, block_q: int = 128):
+    """``a[n, p], b[n, q] -> a.T @ b  [p, q]`` (f32 accumulate).
+
+    Inputs are zero-padded up to block multiples (zero rows contribute
+    nothing to the reduction), output sliced back.
+    """
+    n, p = a.shape
+    n2, q = b.shape
+    assert n == n2, (a.shape, b.shape)
+    block_n = min(block_n, n)
+    block_p = min(block_p, p)
+    block_q = min(block_q, q)
+    ap = _pad_to(a, block_n, block_p)
+    bp_ = _pad_to(b, block_n, block_q)
+    np_, pp = ap.shape
+    qp = bp_.shape[1]
+    k_steps = np_ // block_n
+    out = pl.pallas_call(
+        functools.partial(_mm_t_kernel, k_steps=k_steps),
+        grid=(pp // block_p, qp // block_q, k_steps),
+        in_specs=[
+            pl.BlockSpec((block_n, block_p), lambda i, j, k: (k, i)),
+            pl.BlockSpec((block_n, block_q), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_p, block_q), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pp, qp), jnp.float32),
+        interpret=True,
+    )(ap, bp_)
+    return out[:p, :q]
+
+
+def gram_pair(o, z, block_n: int = 32):
+    """(O~^T O~, O~^T Z) with O~ = [O, 1] bias-augmented — one inversion batch.
+
+    Returns the two partial sums that rust all-reduces across selected rApps
+    before the centralized ridge solve.
+    """
+    n = o.shape[0]
+    ones = jnp.ones((n, 1), o.dtype)
+    o_aug = jnp.concatenate([o, ones], axis=1)
+    return matmul_t(o_aug, o_aug, block_n=block_n), matmul_t(o_aug, z, block_n=block_n)

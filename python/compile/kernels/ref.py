@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel — the CORE correctness signal.
+
+pytest (python/tests/) asserts kernel == ref to tight tolerances across a
+hypothesis sweep of shapes/dtypes; nothing here uses Pallas.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..specs import LEAKY_SLOPE
+
+
+def leaky_relu_ref(x, slope: float = LEAKY_SLOPE):
+    return jnp.where(x >= 0, x, slope * x)
+
+
+def leaky_relu_inv_ref(y, slope: float = LEAKY_SLOPE):
+    return jnp.where(y >= 0, y, y / slope)
+
+
+def softmax_ref(x):
+    x = x - jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def kl_mutual_ref(x, z):
+    """Per-row KL(softmax(z) || softmax(x)) and gradient w.r.t. x."""
+    q = softmax_ref(x.astype(jnp.float32))
+    p = softmax_ref(z.astype(jnp.float32))
+    logq = jax.nn.log_softmax(x.astype(jnp.float32), axis=-1)
+    logp = jax.nn.log_softmax(z.astype(jnp.float32), axis=-1)
+    loss = jnp.sum(p * (logp - logq), axis=-1)
+    grad = q - p
+    return loss, grad
+
+
+def kl_mutual_loss_ref(x, z):
+    loss, _ = kl_mutual_ref(x, z)
+    return jnp.mean(loss)
+
+
+def matmul_t_ref(a, b):
+    return a.astype(jnp.float32).T @ b.astype(jnp.float32)
+
+
+def gram_pair_ref(o, z):
+    ones = jnp.ones((o.shape[0], 1), o.dtype)
+    o_aug = jnp.concatenate([o, ones], axis=1)
+    return matmul_t_ref(o_aug, o_aug), matmul_t_ref(o_aug, z)
+
+
+def dense_ref(x, w, b, act: bool = True):
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    return leaky_relu_ref(y) if act else y

@@ -1,0 +1,335 @@
+"""L2: the paper's models + train/eval step functions in JAX (build-time only).
+
+Everything here is written against *flat f32 parameter vectors* and fixed
+batch shapes so each function AOT-lowers to a static HLO artifact that the
+rust coordinator executes via PJRT (see aot.py).  The compute hot spots call
+the L1 Pallas kernels (kernels/) so they lower into the same HLO.
+
+Model zoo (specs.py):
+  * client model  c(.)       — near-RT-RIC side (xApp):  mlp or conv stack
+  * server model  s(.)       — non-RT-RIC side:          mlp chain
+  * inverse model s^{-1}(.)  — non-RT-RIC side (rApp):   mirrored mlp chain
+                               labels -> split-activation space (Fig 2)
+
+Train steps:
+  * client_step   — one SGD step on  D_KL(c(X) || s^{-1}(Y))        (Eq 6)
+  * inv_step      — one SGD step on  D_KL(s^{-1}(Y) || c(X))        (Eq 7)
+  * fedavg_step   — one SGD step on  CE(full(X), Y)     (FedAvg / O-RANFed)
+  * sfl_server_step / sfl_client_bwd — vanilla SplitFed split fwd/bwd [12]
+Inversion (Step 4, Eq 8-9):
+  * gram_layer    — per-batch (O~^T O~, O~^T act^{-1}(Z)) partial sums
+  * apply_layer   — run one recovered server layer forward
+(the tiny SPD ridge solve itself lives in rust::linalg — DESIGN.md §7).
+"""
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .specs import LEAKY_SLOPE, Preset
+from .kernels.dense_fused import dense_fused, leaky_relu, leaky_relu_inv
+from .kernels.kl_mutual import kl_mutual_loss, kl_mutual_raw
+from .kernels.matmul_t import gram_pair
+
+# --------------------------------------------------------------------------
+# parameter layout: per layer W.ravel() then b, layers concatenated in order
+# --------------------------------------------------------------------------
+
+
+def mlp_shapes(chain: Sequence[int]) -> List[Tuple[Tuple[int, int], Tuple[int]]]:
+    return [((chain[i], chain[i + 1]), (chain[i + 1],)) for i in range(len(chain) - 1)]
+
+
+def conv_shapes(preset: Preset):
+    return [
+        ((c.ksize, c.ksize, c.in_ch, c.out_ch), (c.out_ch,))
+        for c in preset.client_convs
+    ]
+
+
+def unflatten(flat, shapes):
+    """flat f32[n] -> [(W, b)] following the manifest layout."""
+    out, off = [], 0
+    for ws, bs in shapes:
+        wn = 1
+        for d in ws:
+            wn *= d
+        bn = bs[0]
+        w = jax.lax.dynamic_slice(flat, (off,), (wn,)).reshape(ws)
+        off += wn
+        b = jax.lax.dynamic_slice(flat, (off,), (bn,))
+        off += bn
+        out.append((w, b))
+    return out
+
+
+def flatten(params) -> jnp.ndarray:
+    return jnp.concatenate([jnp.concatenate([w.ravel(), b]) for w, b in params])
+
+
+def init_mlp(key, chain: Sequence[int]):
+    """He-style init matching the rust-side seeded initializer."""
+    params = []
+    for i in range(len(chain) - 1):
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / chain[i])
+        w = jax.random.normal(sub, (chain[i], chain[i + 1]), jnp.float32) * scale
+        params.append((w, jnp.zeros((chain[i + 1],), jnp.float32)))
+    return params
+
+
+# --------------------------------------------------------------------------
+# forwards
+# --------------------------------------------------------------------------
+
+
+def mlp_fwd(params, x, final_act: bool):
+    """Stack of fused dense layers; activation on all layers except
+    optionally the last (logit) layer."""
+    n = len(params)
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = dense_fused(h, w, b, act=(i < n - 1) or final_act)
+    return h
+
+
+def conv_fwd(preset: Preset, params, x):
+    """Vision client: stride-2 SAME convs + leaky-relu, then flatten."""
+    h = x
+    for (w, b), spec in zip(params, preset.client_convs):
+        h = jax.lax.conv_general_dilated(
+            h, w,
+            window_strides=(spec.stride, spec.stride),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        h = leaky_relu(h + b[None, None, None, :])
+    return h.reshape(h.shape[0], -1)
+
+
+def client_shapes(preset: Preset):
+    if preset.client_dims is not None:
+        return mlp_shapes(preset.client_dims)
+    return conv_shapes(preset)
+
+
+def client_fwd(preset: Preset, wc_flat, x):
+    """c(X): smashed-data (split-layer activation) for one batch."""
+    params = unflatten(wc_flat, client_shapes(preset))
+    if preset.client_dims is not None:
+        return mlp_fwd(params, x, final_act=True)
+    return conv_fwd(preset, params, x)
+
+
+def inverse_acts(preset: Preset, ws_inv_flat, y_onehot):
+    """s^{-1}(Y) feed-forward returning EVERY intermediate activation
+    u_1 .. u_L (u_L is the split-space output; u_{L-l} is the inversion
+    target Z_l for server layer l — Fig 2)."""
+    params = unflatten(ws_inv_flat, mlp_shapes(preset.inverse_chain))
+    acts = []
+    h = y_onehot
+    for w, b in params:
+        h = dense_fused(h, w, b, act=True)
+        acts.append(h)
+    return tuple(acts)
+
+
+def server_fwd_from_flat(preset: Preset, ws_flat, smash):
+    """s(.) from a flat server parameter vector (vanilla SFL / FedAvg path)."""
+    params = unflatten(ws_flat, mlp_shapes(preset.server_chain))
+    return mlp_fwd(params, smash, final_act=False)
+
+
+def full_fwd(preset: Preset, wfull_flat, x):
+    """s(c(X)) from the concatenated [client | server] flat vector."""
+    nc = preset.client_param_count
+    wc = jax.lax.dynamic_slice(wfull_flat, (0,), (nc,))
+    ws = jax.lax.dynamic_slice(wfull_flat, (nc,), (preset.server_param_count,))
+    smash = client_fwd(preset, wc, x)
+    return server_fwd_from_flat(preset, ws, smash)
+
+
+# --------------------------------------------------------------------------
+# losses + SGD steps (each is one minibatch step; the E-loop lives in rust)
+# --------------------------------------------------------------------------
+
+
+def _sgd(flat, grad, lr):
+    return flat - lr * grad
+
+
+def client_step(preset: Preset, wc_flat, x, z_target, lr):
+    """Eq 6: w_C <- w_C - eta_C * grad D_KL(c(X) || s^{-1}(Y))."""
+
+    def loss_fn(wc):
+        smash = client_fwd(preset, wc, x)
+        return kl_mutual_loss(smash, z_target)
+
+    loss, grad = jax.value_and_grad(loss_fn)(wc_flat)
+    return _sgd(wc_flat, grad, lr), loss
+
+
+def inv_step(preset: Preset, ws_inv_flat, y_onehot, c_target, lr):
+    """Eq 7: w_S <- w_S - eta_S * grad D_KL(s^{-1}(Y) || c(X))."""
+
+    def loss_fn(ws):
+        u = inverse_acts(preset, ws, y_onehot)[-1]
+        return kl_mutual_loss(u, c_target)
+
+    loss, grad = jax.value_and_grad(loss_fn)(ws_inv_flat)
+    return _sgd(ws_inv_flat, grad, lr), loss
+
+
+def softmax_ce(logits, y_onehot):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def fedavg_step(preset: Preset, wfull_flat, x, y_onehot, lr):
+    """One local SGD step of FedAvg / O-RANFed on the full model."""
+
+    def loss_fn(w):
+        return softmax_ce(full_fwd(preset, w, x), y_onehot)
+
+    loss, grad = jax.value_and_grad(loss_fn)(wfull_flat)
+    return _sgd(wfull_flat, grad, lr), loss
+
+
+def sfl_server_step(preset: Preset, ws_flat, smash, y_onehot, lr):
+    """Vanilla SplitFed server step: CE on s(smash); returns the smashed-data
+    gradient that is shipped back to the client (the per-batch ping-pong
+    SplitMe eliminates)."""
+
+    def loss_fn(ws, sm):
+        return softmax_ce(server_fwd_from_flat(preset, ws, sm), y_onehot)
+
+    loss, (gws, gsm) = jax.value_and_grad(loss_fn, argnums=(0, 1))(ws_flat, smash)
+    return _sgd(ws_flat, gws, lr), gsm, loss
+
+
+def sfl_client_bwd(preset: Preset, wc_flat, x, gsmash, lr):
+    """Vanilla SplitFed client backward: VJP of c(.) with the server's
+    smashed-data cotangent."""
+    smash, vjp = jax.vjp(lambda wc: client_fwd(preset, wc, x), wc_flat)
+    (grad,) = vjp(gsmash)
+    return (_sgd(wc_flat, grad, lr),)
+
+
+# --------------------------------------------------------------------------
+# scan-chunked steps (perf: amortize PJRT dispatch + host copies over CHUNK
+# local updates; the rust E-loop uses these for floor(E/CHUNK) iterations and
+# falls back to the single-step artifacts for the remainder)
+# --------------------------------------------------------------------------
+
+CHUNK = 4
+
+
+def client_step_chunk(preset: Preset, wc_flat, xs, zs, lr):
+    """CHUNK successive client SGD steps; xs: [CHUNK, B, ...], zs: [CHUNK, B, D]."""
+
+    def body(w, xz):
+        x, z = xz
+        w2, loss = client_step(preset, w, x, z, lr)
+        return w2, loss
+
+    w2, losses = jax.lax.scan(body, wc_flat, (xs, zs))
+    return w2, jnp.mean(losses)
+
+
+def inv_step_chunk(preset: Preset, ws_inv_flat, ys, cs, lr):
+    def body(w, yc):
+        y, c = yc
+        w2, loss = inv_step(preset, w, y, c, lr)
+        return w2, loss
+
+    w2, losses = jax.lax.scan(body, ws_inv_flat, (ys, cs))
+    return w2, jnp.mean(losses)
+
+
+def fedavg_step_chunk(preset: Preset, wfull_flat, xs, ys, lr):
+    def body(w, xy):
+        x, y = xy
+        w2, loss = fedavg_step(preset, w, x, y, lr)
+        return w2, loss
+
+    w2, losses = jax.lax.scan(body, wfull_flat, (xs, ys))
+    return w2, jnp.mean(losses)
+
+
+# --------------------------------------------------------------------------
+# pure-jnp ablation of the hottest step (perf §: quantifies the Pallas
+# interpret-mode lowering tax on CPU; not used by the trainers)
+# --------------------------------------------------------------------------
+
+
+def _mlp_fwd_pure(params, x, final_act: bool):
+    n = len(params)
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = h @ w + b
+        if (i < n - 1) or final_act:
+            h = leaky_relu(h)
+    return h
+
+
+def inv_step_pure(preset: Preset, ws_inv_flat, y_onehot, c_target, lr):
+    """inv_step with plain-jnp dense layers + KL (no Pallas calls)."""
+
+    def loss_fn(ws):
+        params = unflatten(ws, mlp_shapes(preset.inverse_chain))
+        u = _mlp_fwd_pure(params, y_onehot, final_act=True)
+        logq = jax.nn.log_softmax(u, axis=-1)
+        p = jax.nn.softmax(c_target, axis=-1)
+        logp = jax.nn.log_softmax(c_target, axis=-1)
+        return jnp.mean(jnp.sum(p * (logp - logq), axis=-1))
+
+    loss, grad = jax.value_and_grad(loss_fn)(ws_inv_flat)
+    return _sgd(ws_inv_flat, grad, lr), loss
+
+
+# --------------------------------------------------------------------------
+# evaluation
+# --------------------------------------------------------------------------
+
+
+def full_eval(preset: Preset, wfull_flat, x, y_onehot):
+    """(correct-count, mean CE) over one batch — accuracy curves of Fig 4a/5."""
+    logits = full_fwd(preset, wfull_flat, x)
+    pred = jnp.argmax(logits, axis=-1)
+    truth = jnp.argmax(y_onehot, axis=-1)
+    correct = jnp.sum((pred == truth).astype(jnp.float32))
+    return correct, softmax_ce(logits, y_onehot)
+
+
+def mutual_gap(preset: Preset, wc_flat, ws_inv_flat, x, y_onehot):
+    """Symmetric KL between c(X) and s^{-1}(Y) — the mutual-learning
+    agreement diagnostic logged per round."""
+    smash = client_fwd(preset, wc_flat, x)
+    u = inverse_acts(preset, ws_inv_flat, y_onehot)[-1]
+    l1, _ = kl_mutual_raw(smash, u)
+    l2, _ = kl_mutual_raw(u, smash)
+    return (jnp.mean(l1) + jnp.mean(l2),)
+
+
+# --------------------------------------------------------------------------
+# layer-wise inversion (Step 4, Eq 8-9)
+# --------------------------------------------------------------------------
+
+
+def gram_layer(o, z, invert_act: bool):
+    """Per-batch partial sums for Eq 9: (O~^T O~, O~^T act^{-1}(Z)).
+
+    ``o``: inputs of server layer l computed by the already-recovered prefix
+    on c(X); ``z``: the mirrored inverse-model activation (or the one-hot
+    labels for the final layer).  rust all-reduces these across the selected
+    rApps and solves the ridge system (rust::linalg)."""
+    zt = leaky_relu_inv(z) if invert_act else z
+    return gram_pair(o, zt)
+
+
+def apply_layer(w_aug, o, act: bool):
+    """One recovered server layer: o @ W + b with W_aug = [W; b] ((d_in+1, d_out))."""
+    w = w_aug[:-1, :]
+    b = w_aug[-1, :]
+    return (dense_fused(o, w, b, act=act),)

@@ -1,0 +1,116 @@
+"""Model/preset specifications shared between L2 (jax) and L3 (rust, via manifest.json).
+
+Two presets reproduce the paper's two workloads:
+
+* ``commag``  — the 10-layer traffic-classification DNN of §V on (synthetic)
+  COMMAG-style slice KPI vectors: 32 features -> 3 classes (eMBB/mMTC/URLLC).
+  Split 20%: 2 layers on the client (near-RT-RIC), 8 on the server
+  (non-RT-RIC), split-activation width 64.
+* ``vision``  — the Fig-5 generality analogue: a compact conv client +
+  dense server on 32x32x3 images, 10 classes (CIFAR-10-like shapes).
+
+The *inverse server model* s^{-1} mirrors the server chain, mapping one-hot
+labels back to the split-activation space (Fig 2 of the paper).
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+LEAKY_SLOPE = 0.1  # leaky-relu slope; bijective, so the layer-wise
+                   # inversion (Eq 8-9) can undo it analytically.
+
+
+@dataclass(frozen=True)
+class ConvLayer:
+    """One stride-2 SAME conv layer of the vision client."""
+
+    in_ch: int
+    out_ch: int
+    ksize: int = 3
+    stride: int = 2
+
+    def param_count(self) -> int:
+        return self.ksize * self.ksize * self.in_ch * self.out_ch + self.out_ch
+
+
+@dataclass(frozen=True)
+class Preset:
+    name: str
+    batch: int
+    num_classes: int
+    # client side: either an MLP chain (commag) or conv stack (vision)
+    input_shape: Tuple[int, ...]           # per-sample
+    client_dims: Optional[List[int]]       # mlp chain incl. input+split dims
+    client_convs: Optional[List[ConvLayer]]
+    server_chain: List[int] = field(default_factory=list)  # split_dim ... classes
+    # learning-rate defaults (Corollary 3: eta_C > eta_S)
+    eta_c: float = 0.05
+    eta_s: float = 0.03
+
+    @property
+    def split_dim(self) -> int:
+        return self.server_chain[0]
+
+    @property
+    def inverse_chain(self) -> List[int]:
+        """Mirror of the server chain: classes -> ... -> split_dim."""
+        return list(reversed(self.server_chain))
+
+    @property
+    def server_depth(self) -> int:
+        return len(self.server_chain) - 1
+
+    # ---- parameter counts (flat f32 layout: per layer W.ravel() then b) ----
+    def mlp_count(self, chain: List[int]) -> int:
+        return sum(chain[i] * chain[i + 1] + chain[i + 1] for i in range(len(chain) - 1))
+
+    @property
+    def client_param_count(self) -> int:
+        if self.client_dims is not None:
+            return self.mlp_count(self.client_dims)
+        return sum(c.param_count() for c in self.client_convs)
+
+    @property
+    def server_param_count(self) -> int:
+        return self.mlp_count(self.server_chain)
+
+    @property
+    def inverse_param_count(self) -> int:
+        return self.mlp_count(self.inverse_chain)
+
+    @property
+    def full_param_count(self) -> int:
+        return self.client_param_count + self.server_param_count
+
+    def server_layer_shapes(self) -> List[Tuple[int, int, bool]]:
+        """[(d_in, d_out, has_activation)] for each server layer, in order."""
+        ch = self.server_chain
+        n = len(ch) - 1
+        return [(ch[i], ch[i + 1], i < n - 1) for i in range(n)]
+
+
+COMMAG = Preset(
+    name="commag",
+    batch=32,
+    num_classes=3,
+    input_shape=(32,),
+    client_dims=[32, 64, 64],          # 2 client layers (20% of 10)
+    client_convs=None,
+    server_chain=[64] * 8 + [3],        # 8 server layers
+    eta_c=0.05,
+    eta_s=0.03,
+)
+
+VISION = Preset(
+    name="vision",
+    batch=32,
+    num_classes=10,
+    input_shape=(32, 32, 3),
+    client_dims=None,
+    client_convs=[ConvLayer(3, 8), ConvLayer(8, 16)],  # 32x32 -> 8x8, flat 1024
+    server_chain=[1024, 128, 128, 10],
+    eta_c=0.05,
+    eta_s=0.03,
+)
+
+PRESETS = {p.name: p for p in (COMMAG, VISION)}

@@ -1,0 +1,96 @@
+"""AOT artifact sanity: manifest consistency with specs.py and HLO well-formedness.
+
+Skipped unless ``make artifacts`` has produced artifacts/manifest.json.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile.specs import PRESETS
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART_DIR, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_all_presets_present(manifest):
+    assert set(manifest["presets"]) == set(PRESETS)
+
+
+@pytest.mark.parametrize("name", list(PRESETS))
+def test_param_counts_match_specs(manifest, name):
+    p = PRESETS[name]
+    m = manifest["presets"][name]
+    assert m["client_params"] == p.client_param_count
+    assert m["server_params"] == p.server_param_count
+    assert m["inverse_params"] == p.inverse_param_count
+    assert m["full_params"] == p.full_param_count
+    assert m["batch"] == p.batch
+    assert m["split_dim"] == p.split_dim
+    assert len(m["server_layers"]) == p.server_depth
+
+
+@pytest.mark.parametrize("name", list(PRESETS))
+def test_layer_table_wiring(manifest, name):
+    p = PRESETS[name]
+    m = manifest["presets"][name]
+    layers = m["server_layers"]
+    # chain consistency
+    assert layers[0]["d_in"] == p.split_dim
+    assert layers[-1]["d_out"] == p.num_classes
+    for a, b in zip(layers, layers[1:]):
+        assert a["d_out"] == b["d_in"]
+    # final layer targets labels, hidden layers target mirrored activations
+    assert layers[-1]["z_index"] == -1
+    for l, entry in enumerate(layers[:-1]):
+        assert entry["z_index"] == p.server_depth - 2 - l
+        assert entry["act"] is True
+    assert layers[-1]["act"] is False
+
+
+def test_artifact_files_exist_and_are_hlo(manifest):
+    for name, art in manifest["artifacts"].items():
+        path = os.path.join(ART_DIR, art["file"])
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, name
+        assert art["outputs"], name
+
+
+def test_referenced_artifacts_resolve(manifest):
+    names = set(manifest["artifacts"])
+    for m in manifest["presets"].values():
+        for key, art in m["artifacts"].items():
+            assert art in names, (key, art)
+        for entry in m["server_layers"]:
+            assert entry["gram"] in names
+            assert entry["apply"] in names
+
+
+@pytest.mark.parametrize("name", list(PRESETS))
+def test_input_shapes(manifest, name):
+    """Spot-check the shapes rust will feed each executable."""
+    p = PRESETS[name]
+    m = manifest["presets"][name]
+    arts = manifest["artifacts"]
+    B = p.batch
+    cs = arts[m["artifacts"]["client_step"]]["inputs"]
+    assert cs[0] == [p.client_param_count]
+    assert cs[1] == [B, *p.input_shape]
+    assert cs[2] == [B, p.split_dim]
+    assert cs[3] == [1]
+    ia = arts[m["artifacts"]["inv_acts"]]
+    assert len(ia["outputs"]) == p.server_depth
+    assert ia["outputs"][-1] == [B, p.split_dim]

@@ -1,0 +1,177 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes (incl. non-block-multiple edges) and value ranges;
+assert_allclose with tight f32 tolerances is the core correctness signal.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dense_fused import dense_fused, leaky_relu, leaky_relu_inv
+from compile.kernels.kl_mutual import kl_mutual_loss, kl_mutual_raw
+from compile.kernels.matmul_t import gram_pair, matmul_t
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rng_array(seed, shape, lo=-4.0, hi=4.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- kl_mutual
+
+
+class TestKlMutual:
+    @given(
+        b=st.integers(1, 97),
+        d=st.sampled_from([3, 10, 64, 128, 1024]),
+        seed=st.integers(0, 2**31),
+    )
+    @settings(**SETTINGS)
+    def test_matches_ref(self, b, d, seed):
+        x = rng_array(seed, (b, d))
+        z = rng_array(seed + 1, (b, d))
+        loss, grad = kl_mutual_raw(x, z)
+        loss_r, grad_r = ref.kl_mutual_ref(x, z)
+        np.testing.assert_allclose(np.asarray(loss), np.asarray(loss_r), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(grad), np.asarray(grad_r), atol=1e-6)
+
+    def test_zero_when_equal(self):
+        x = rng_array(7, (32, 64))
+        loss, grad = kl_mutual_raw(x, x)
+        np.testing.assert_allclose(np.asarray(loss), 0.0, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(grad), 0.0, atol=1e-6)
+
+    def test_loss_nonnegative(self):
+        x = rng_array(11, (64, 16))
+        z = rng_array(13, (64, 16))
+        loss, _ = kl_mutual_raw(x, z)
+        assert np.all(np.asarray(loss) >= -1e-6)
+
+    def test_shift_invariance(self):
+        """Softmax inside the kernel: constant logit shifts are no-ops."""
+        x = rng_array(17, (16, 32))
+        z = rng_array(19, (16, 32))
+        l0, g0 = kl_mutual_raw(x, z)
+        l1, g1 = kl_mutual_raw(x + 100.0, z - 50.0)
+        np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(g0), np.asarray(g1), atol=1e-5)
+
+    def test_custom_vjp_matches_autodiff_of_ref(self):
+        x = rng_array(23, (8, 64))
+        z = rng_array(29, (8, 64))
+        g_kernel = jax.grad(lambda a: kl_mutual_loss(a, z))(x)
+        g_ref = jax.grad(lambda a: ref.kl_mutual_loss_ref(a, z))(x)
+        np.testing.assert_allclose(np.asarray(g_kernel), np.asarray(g_ref), atol=1e-6)
+
+    def test_extreme_logits_stable(self):
+        x = jnp.asarray([[1e4, -1e4, 0.0], [-1e4, 1e4, 5.0]], jnp.float32)
+        z = jnp.asarray([[0.0, 0.0, 0.0], [1e3, -1e3, 0.0]], jnp.float32)
+        loss, grad = kl_mutual_raw(x, z)
+        assert np.all(np.isfinite(np.asarray(loss)))
+        assert np.all(np.isfinite(np.asarray(grad)))
+
+
+# ----------------------------------------------------------------- matmul_t
+
+
+class TestMatmulT:
+    @given(
+        n=st.integers(1, 100),
+        p=st.integers(1, 140),
+        q=st.integers(1, 140),
+        seed=st.integers(0, 2**31),
+    )
+    @settings(**SETTINGS)
+    def test_matches_ref(self, n, p, q, seed):
+        a = rng_array(seed, (n, p))
+        b = rng_array(seed + 1, (n, q))
+        got = matmul_t(a, b)
+        want = ref.matmul_t_ref(a, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+    @given(seed=st.integers(0, 2**31))
+    @settings(max_examples=10, deadline=None)
+    def test_gram_symmetric_psd(self, seed):
+        a = rng_array(seed, (48, 65))
+        g = np.asarray(matmul_t(a, a))
+        np.testing.assert_allclose(g, g.T, atol=1e-4)
+        eig = np.linalg.eigvalsh(g)
+        assert eig.min() >= -1e-2
+
+    def test_block_boundary_shapes(self):
+        """Exactly the awkward shapes of the inversion: 65 and 1025 columns."""
+        for p in (65, 1025):
+            a = rng_array(3, (32, p))
+            b = rng_array(5, (32, 64))
+            np.testing.assert_allclose(
+                np.asarray(matmul_t(a, b)),
+                np.asarray(ref.matmul_t_ref(a, b)),
+                rtol=1e-5,
+                atol=1e-4,
+            )
+
+    @given(seed=st.integers(0, 2**31))
+    @settings(max_examples=10, deadline=None)
+    def test_gram_pair_matches_ref(self, seed):
+        o = rng_array(seed, (32, 64))
+        z = rng_array(seed + 2, (32, 64))
+        a0, a1 = gram_pair(o, z)
+        r0, r1 = ref.gram_pair_ref(o, z)
+        np.testing.assert_allclose(np.asarray(a0), np.asarray(r0), rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(a1), np.asarray(r1), rtol=1e-5, atol=1e-4)
+
+
+# -------------------------------------------------------------- dense_fused
+
+
+class TestDenseFused:
+    @given(
+        b=st.integers(1, 70),
+        din=st.sampled_from([3, 32, 64, 65, 128, 1024]),
+        dout=st.sampled_from([3, 10, 64, 128]),
+        act=st.booleans(),
+        seed=st.integers(0, 2**31),
+    )
+    @settings(**SETTINGS)
+    def test_matches_ref(self, b, din, dout, act, seed):
+        x = rng_array(seed, (b, din), -1, 1)
+        w = rng_array(seed + 1, (din, dout), -0.3, 0.3)
+        bias = rng_array(seed + 2, (dout,), -0.5, 0.5)
+        got = dense_fused(x, w, bias, act=act)
+        want = ref.dense_ref(x, w, bias, act=act)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+    @given(act=st.booleans(), seed=st.integers(0, 2**31))
+    @settings(max_examples=15, deadline=None)
+    def test_vjp_matches_ref(self, act, seed):
+        x = rng_array(seed, (16, 24), -1, 1)
+        w = rng_array(seed + 1, (24, 12), -0.5, 0.5)
+        bias = rng_array(seed + 2, (12,))
+
+        def f_kernel(x, w, b):
+            return jnp.sum(jnp.sin(dense_fused(x, w, b, act=act)))
+
+        def f_ref(x, w, b):
+            return jnp.sum(jnp.sin(ref.dense_ref(x, w, b, act=act)))
+
+        gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, bias)
+        gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, bias)
+        for a, b_ in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-4, atol=1e-4)
+
+    def test_leaky_relu_inverse_roundtrip(self):
+        x = rng_array(31, (64, 64), -10, 10)
+        y = leaky_relu(x)
+        np.testing.assert_allclose(np.asarray(leaky_relu_inv(y)), np.asarray(x), atol=1e-5)
+        # inverse is exact also through the ref implementation
+        np.testing.assert_allclose(
+            np.asarray(ref.leaky_relu_inv_ref(ref.leaky_relu_ref(x))),
+            np.asarray(x),
+            atol=1e-5,
+        )

@@ -1,0 +1,184 @@
+"""L2 correctness: model shapes, parameter layout, train-step semantics for
+both presets, and cross-checks of the SFL/FedAvg steps against plain autodiff.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+from compile.specs import COMMAG, PRESETS, VISION
+
+
+def init_flat(key, preset, part):
+    if part == "client":
+        if preset.client_dims is not None:
+            return M.flatten(M.init_mlp(key, preset.client_dims))
+        ps = []
+        for shp in M.conv_shapes(preset):
+            key, sub = jax.random.split(key)
+            fan_in = shp[0][0] * shp[0][1] * shp[0][2]
+            w = jax.random.normal(sub, shp[0]) * jnp.sqrt(2.0 / fan_in)
+            ps.append((w, jnp.zeros(shp[1])))
+        return M.flatten(ps)
+    if part == "server":
+        return M.flatten(M.init_mlp(key, preset.server_chain))
+    if part == "inverse":
+        return M.flatten(M.init_mlp(key, preset.inverse_chain))
+    raise ValueError(part)
+
+
+def batch(key, preset):
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (preset.batch,) + preset.input_shape)
+    labels = jax.random.randint(ky, (preset.batch,), 0, preset.num_classes)
+    y = jax.nn.one_hot(labels, preset.num_classes)
+    return x, y
+
+
+@pytest.fixture(params=["commag", "vision"])
+def preset(request):
+    return PRESETS[request.param]
+
+
+class TestLayout:
+    def test_param_counts(self, preset):
+        key = jax.random.PRNGKey(0)
+        assert init_flat(key, preset, "client").shape == (preset.client_param_count,)
+        assert init_flat(key, preset, "server").shape == (preset.server_param_count,)
+        assert init_flat(key, preset, "inverse").shape == (preset.inverse_param_count,)
+
+    def test_flatten_unflatten_roundtrip(self, preset):
+        key = jax.random.PRNGKey(1)
+        params = M.init_mlp(key, preset.server_chain)
+        flat = M.flatten(params)
+        back = M.unflatten(flat, M.mlp_shapes(preset.server_chain))
+        for (w1, b1), (w2, b2) in zip(params, back):
+            np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+            np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+
+    def test_paper_split_proportion_commag(self):
+        # Table III: omega = client share ~ 1/5 of layers (2 of 10)
+        assert len(COMMAG.client_dims) - 1 == 2
+        assert COMMAG.server_depth == 8
+
+    def test_inverse_chain_mirrors_server(self, preset):
+        assert preset.inverse_chain == list(reversed(preset.server_chain))
+
+
+class TestForwards:
+    def test_shapes(self, preset):
+        key = jax.random.PRNGKey(2)
+        x, y = batch(key, preset)
+        wc = init_flat(key, preset, "client")
+        wsi = init_flat(key, preset, "inverse")
+        ws = init_flat(key, preset, "server")
+        smash = M.client_fwd(preset, wc, x)
+        assert smash.shape == (preset.batch, preset.split_dim)
+        acts = M.inverse_acts(preset, wsi, y)
+        assert len(acts) == preset.server_depth
+        assert acts[-1].shape == (preset.batch, preset.split_dim)
+        logits = M.server_fwd_from_flat(preset, ws, smash)
+        assert logits.shape == (preset.batch, preset.num_classes)
+        wf = jnp.concatenate([wc, ws])
+        np.testing.assert_allclose(
+            np.asarray(M.full_fwd(preset, wf, x)), np.asarray(logits), rtol=1e-5, atol=1e-5
+        )
+
+    def test_inverse_acts_shapes_match_mirror(self, preset):
+        key = jax.random.PRNGKey(3)
+        _, y = batch(key, preset)
+        wsi = init_flat(key, preset, "inverse")
+        acts = M.inverse_acts(preset, wsi, y)
+        chain = preset.inverse_chain
+        for j, a in enumerate(acts):
+            assert a.shape == (preset.batch, chain[j + 1])
+
+
+class TestSteps:
+    def test_client_step_descends(self, preset):
+        key = jax.random.PRNGKey(4)
+        x, _ = batch(key, preset)
+        z = jax.random.normal(key, (preset.batch, preset.split_dim))
+        wc = init_flat(key, preset, "client")
+
+        def loss(wc_):
+            return ref.kl_mutual_loss_ref(M.client_fwd(preset, wc_, x), z)
+
+        l0 = float(loss(wc))
+        wc1, l_rep = M.client_step(preset, wc, x, z, 0.05)
+        for _ in range(10):
+            wc1, _ = M.client_step(preset, wc1, x, z, 0.05)
+        assert float(loss(wc1)) < l0
+        np.testing.assert_allclose(float(l_rep), l0, rtol=1e-4)
+
+    def test_inv_step_descends(self, preset):
+        key = jax.random.PRNGKey(5)
+        x, y = batch(key, preset)
+        wc = init_flat(key, preset, "client")
+        wsi = init_flat(key, preset, "inverse")
+        c_t = M.client_fwd(preset, wc, x)
+
+        def loss(ws_):
+            return ref.kl_mutual_loss_ref(M.inverse_acts(preset, ws_, y)[-1], c_t)
+
+        l0 = float(loss(wsi))
+        w1, _ = M.inv_step(preset, wsi, y, c_t, 0.03)
+        for _ in range(10):
+            w1, _ = M.inv_step(preset, w1, y, c_t, 0.03)
+        assert float(loss(w1)) < l0
+
+    def test_fedavg_step_descends(self, preset):
+        key = jax.random.PRNGKey(6)
+        x, y = batch(key, preset)
+        wf = jnp.concatenate(
+            [init_flat(key, preset, "client"), init_flat(key, preset, "server")]
+        )
+        l0 = float(M.softmax_ce(M.full_fwd(preset, wf, x), y))
+        w1 = wf
+        for _ in range(12):
+            w1, _ = M.fedavg_step(preset, w1, x, y, 0.05)
+        assert float(M.softmax_ce(M.full_fwd(preset, w1, x), y)) < l0
+
+    def test_sfl_split_equals_joint_gradient(self, preset):
+        """One vanilla-SFL round (server step + client bwd) must equal one
+        joint SGD step on the un-split model: the split is exact."""
+        key = jax.random.PRNGKey(7)
+        x, y = batch(key, preset)
+        wc = init_flat(key, preset, "client")
+        ws = init_flat(key, preset, "server")
+        lr = 0.02
+
+        smash = M.client_fwd(preset, wc, x)
+        ws1, gsm, _ = M.sfl_server_step(preset, ws, smash, y, lr)
+        (wc1,) = M.sfl_client_bwd(preset, wc, x, gsm, lr)
+
+        wf = jnp.concatenate([wc, ws])
+        wf1, _ = M.fedavg_step(preset, wf, x, y, lr)
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate([wc1, ws1])), np.asarray(wf1), rtol=1e-4, atol=1e-5
+        )
+
+    def test_eval_counts(self, preset):
+        key = jax.random.PRNGKey(8)
+        x, y = batch(key, preset)
+        wf = jnp.concatenate(
+            [init_flat(key, preset, "client"), init_flat(key, preset, "server")]
+        )
+        correct, ce = M.full_eval(preset, wf, x, y)
+        assert 0 <= float(correct) <= preset.batch
+        assert float(ce) > 0
+        # perfect model sanity: logits == 100*y gives all-correct, ~0 CE
+        logits = 100.0 * y
+        pred = jnp.argmax(logits, -1)
+        assert float(jnp.sum(pred == jnp.argmax(y, -1))) == preset.batch
+
+    def test_mutual_gap_nonnegative_and_zero_on_agreement(self, preset):
+        key = jax.random.PRNGKey(9)
+        x, y = batch(key, preset)
+        wc = init_flat(key, preset, "client")
+        wsi = init_flat(key, preset, "inverse")
+        (gap,) = M.mutual_gap(preset, wc, wsi, x, y)
+        assert float(gap) >= -1e-5

@@ -1,0 +1,100 @@
+//! Ablation benches for the design choices of §IV (DESIGN.md §5): what each
+//! piece of the system optimization buys.
+//!
+//!  A1  adaptive E (P2) vs fixed E = E_initial
+//!  A2  water-filling bandwidth vs uniform split
+//!  A3  deadline-aware selection (Alg 1) vs fixed-K random selection
+//!
+//! Each ablation runs paired SplitMe configurations on identical
+//! topology/data and compares modeled round latency / cost / selection.
+
+use repro::allocation::{solve_p2, waterfill};
+use repro::config::SimConfig;
+use repro::harness;
+use repro::oran::{self, RicProfile, Topology, UploadSizes};
+use repro::selection::DeadlineSelector;
+
+fn sizes_for(topo: &Topology) -> Vec<UploadSizes> {
+    topo.rics
+        .iter()
+        .map(|r| UploadSizes {
+            model_bytes: 25e3,
+            feature_bytes: (r.n_samples * 64 * 4) as f64,
+        })
+        .collect()
+}
+
+fn main() {
+    let cfg = SimConfig::commag();
+    let topo = Topology::build(&cfg);
+    let all_sizes = sizes_for(&topo);
+
+    harness::experiment("A1_adaptive_e_vs_fixed", || {
+        let sel: Vec<&RicProfile> = topo.rics.iter().take(35).collect();
+        let sz: Vec<UploadSizes> = sel.iter().map(|r| all_sizes[r.id]).collect();
+        let adaptive = solve_p2(&cfg, &sel, &sz, cfg.e_initial, true, 1.0, true);
+        let fixed = solve_p2(&cfg, &sel, &sz, cfg.e_initial, false, 1.0, true);
+        println!(
+            "adaptive: E={} latency={:.1}ms K_eps-weighted obj={:.1}",
+            adaptive.e,
+            1e3 * adaptive.latency.total(),
+            adaptive.objective
+        );
+        println!(
+            "fixed   : E={} latency={:.1}ms K_eps-weighted obj={:.1}",
+            fixed.e,
+            1e3 * fixed.latency.total(),
+            fixed.objective
+        );
+        println!(
+            "=> adaptive E cuts the K_eps-weighted objective by {:.1}%",
+            100.0 * (1.0 - adaptive.objective / fixed.objective)
+        );
+    });
+
+    harness::experiment("A2_waterfill_vs_uniform", || {
+        let sel: Vec<&RicProfile> = topo.rics.iter().take(35).collect();
+        let sz: Vec<UploadSizes> = sel.iter().map(|r| all_sizes[r.id]).collect();
+        let ct: Vec<f64> = sel.iter().map(|r| 5.0 * r.q_c).collect();
+        let by: Vec<f64> = sz.iter().map(|s| s.total()).collect();
+        let wf = waterfill(&ct, &by, cfg.bandwidth_bps, cfg.b_min);
+        let uni = vec![1.0 / sel.len() as f64; sel.len()];
+        let lat_wf = oran::round_latency(&sel, &wf, &sz, 5, cfg.bandwidth_bps, 0.0, 1.0);
+        let lat_uni = oran::round_latency(&sel, &uni, &sz, 5, cfg.bandwidth_bps, 0.0, 1.0);
+        println!(
+            "waterfill client-phase: {:.2}ms, uniform: {:.2}ms => {:.1}% faster",
+            1e3 * lat_wf.client_phase,
+            1e3 * lat_uni.client_phase,
+            100.0 * (1.0 - lat_wf.client_phase / lat_uni.client_phase)
+        );
+    });
+
+    harness::experiment("A3_deadline_aware_vs_random_k", || {
+        let mut sel = DeadlineSelector::new(&topo, &all_sizes, cfg.alpha);
+        // steady state after observing realistic uplinks
+        sel.observe(0.045);
+        sel.observe(0.045);
+        let e_sel = 8.0;
+        let chosen = sel.select(&topo, |r| e_sel * (r.q_c + r.q_s));
+        let viol_alg1 = chosen
+            .iter()
+            .filter(|r| e_sel * (r.q_c + r.q_s) + sel.t_estimate() > r.t_round)
+            .count();
+        println!(
+            "Alg1: |A_t|={} deadline violations={viol_alg1}",
+            chosen.len()
+        );
+        // random K=20 ignores deadlines entirely: count would-be violations
+        let viol_random = topo
+            .rics
+            .iter()
+            .take(20)
+            .filter(|r| e_sel * (r.q_c + r.q_s) + sel.t_estimate() > r.t_round)
+            .count();
+        println!("random K=20: would violate {viol_random} deadlines");
+        println!(
+            "=> Alg1 admits {}x more trainers with zero violations",
+            chosen.len() as f64 / 20.0
+        );
+    });
+}

@@ -1,0 +1,34 @@
+//! Fig 3b bench: accumulated communication volume (MB) across frameworks.
+
+use repro::config::SimConfig;
+use repro::experiments::{self, Budget};
+use repro::harness;
+use repro::runtime::Engine;
+
+fn main() {
+    let engine = Engine::from_default_manifest().expect("run `make artifacts` first");
+    let full = harness::full_scale();
+    let mut cfg = SimConfig::commag();
+    let budget = if full {
+        Budget::default()
+    } else {
+        cfg.samples_per_client = 64;
+        cfg.test_samples = 192;
+        cfg.eval_every = 0;
+        Budget { splitme_rounds: 10, baseline_rounds: 10 }
+    };
+    let summaries = harness::experiment("fig3b_comm_volume", || {
+        experiments::run_comparison(&engine, &cfg, budget, false).expect("run")
+    });
+    experiments::fig3b(&summaries);
+
+    // paper shape: per-round SFL volume slightly below SplitMe, but FedAvg /
+    // O-RANFed (full-model uploads) dominate per-client cost
+    for s in &summaries {
+        println!(
+            "check: {:>8} mean volume/round {:.2} MB",
+            s.framework,
+            s.total_comm_bytes / s.rounds as f64 / 1e6
+        );
+    }
+}

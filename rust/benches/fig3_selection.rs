@@ -1,0 +1,34 @@
+//! Fig 3a bench: number of selected trainers per round across the four
+//! frameworks (paired run). Default is a scaled-down smoke; set
+//! `REPRO_BENCH_FULL=1` for the paper-scale (30/150-round) configuration.
+
+use repro::config::SimConfig;
+use repro::experiments::{self, Budget};
+use repro::harness;
+use repro::runtime::Engine;
+
+fn main() {
+    let engine = Engine::from_default_manifest().expect("run `make artifacts` first");
+    let full = harness::full_scale();
+    let mut cfg = SimConfig::commag();
+    let budget = if full {
+        Budget::default()
+    } else {
+        cfg.samples_per_client = 64;
+        cfg.test_samples = 192;
+        cfg.eval_every = 0; // selection dynamics need no eval
+        Budget { splitme_rounds: 10, baseline_rounds: 10 }
+    };
+    let summaries = harness::experiment("fig3a_selected_trainers", || {
+        experiments::run_comparison(&engine, &cfg, budget, false).expect("run")
+    });
+    experiments::fig3a(&summaries);
+
+    // expectation from the paper: SplitMe admits the most trainers
+    let sm = summaries.iter().find(|s| s.framework == "splitme").unwrap();
+    let of = summaries.iter().find(|s| s.framework == "oranfed").unwrap();
+    println!(
+        "\ncheck: splitme mean selected {:.1} vs oranfed {:.1} (paper: splitme up to 35, highest)",
+        sm.mean_selected, of.mean_selected
+    );
+}

@@ -1,0 +1,26 @@
+//! Fig 4a bench: test accuracy vs total (simulated) training time, the
+//! headline convergence comparison (83% accuracy, ~8x speedup claims).
+
+use repro::config::SimConfig;
+use repro::experiments::{self, Budget};
+use repro::harness;
+use repro::runtime::Engine;
+
+fn main() {
+    let engine = Engine::from_default_manifest().expect("run `make artifacts` first");
+    let full = harness::full_scale();
+    let mut cfg = SimConfig::commag();
+    let budget = if full {
+        Budget::default()
+    } else {
+        cfg.samples_per_client = 64;
+        cfg.test_samples = 192;
+        cfg.eval_every = 2;
+        Budget { splitme_rounds: 8, baseline_rounds: 12 }
+    };
+    let summaries = harness::experiment("fig4a_accuracy_vs_time", || {
+        experiments::run_comparison(&engine, &cfg, budget, false).expect("run")
+    });
+    experiments::fig4a(&summaries);
+    experiments::headline(&summaries);
+}

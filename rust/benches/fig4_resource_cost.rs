@@ -1,0 +1,24 @@
+//! Fig 4b bench: cumulative communication resource cost vs training time.
+
+use repro::config::SimConfig;
+use repro::experiments::{self, Budget};
+use repro::harness;
+use repro::runtime::Engine;
+
+fn main() {
+    let engine = Engine::from_default_manifest().expect("run `make artifacts` first");
+    let full = harness::full_scale();
+    let mut cfg = SimConfig::commag();
+    let budget = if full {
+        Budget::default()
+    } else {
+        cfg.samples_per_client = 64;
+        cfg.test_samples = 192;
+        cfg.eval_every = 0;
+        Budget { splitme_rounds: 10, baseline_rounds: 10 }
+    };
+    let summaries = harness::experiment("fig4b_resource_cost", || {
+        experiments::run_comparison(&engine, &cfg, budget, false).expect("run")
+    });
+    experiments::fig4b(&summaries);
+}

@@ -1,0 +1,25 @@
+//! Fig 5 bench: generality on the vision preset (synthetic CIFAR-like data,
+//! conv client + dense server) — SplitMe vs baselines accuracy curves.
+
+use repro::config::SimConfig;
+use repro::experiments::{self, Budget};
+use repro::harness;
+use repro::runtime::Engine;
+
+fn main() {
+    let engine = Engine::from_default_manifest().expect("run `make artifacts` first");
+    let full = harness::full_scale();
+    let mut cfg = SimConfig::vision();
+    let budget = if full {
+        Budget { splitme_rounds: 20, baseline_rounds: 40 }
+    } else {
+        cfg.samples_per_client = 32;
+        cfg.test_samples = 96;
+        cfg.eval_every = 2;
+        Budget { splitme_rounds: 4, baseline_rounds: 6 }
+    };
+    let summaries = harness::experiment("fig5_vision_generality", || {
+        experiments::run_comparison(&engine, &cfg, budget, false).expect("run")
+    });
+    experiments::fig5(&summaries);
+}

@@ -1,0 +1,137 @@
+//! Performance microbenches (EXPERIMENTS.md §Perf input): per-artifact
+//! execution latency, the L3-only components (waterfill, selection, ridge
+//! solve, aggregation), and the end-to-end round step per framework.
+
+use repro::allocation::waterfill;
+use repro::config::SimConfig;
+use repro::coordinator::Runner;
+use repro::fl::aggregate;
+use repro::harness::bench;
+use repro::linalg::{gram, ridge_solve, Mat};
+use repro::oran::{Topology, UploadSizes};
+use repro::runtime::{Engine, Tensor};
+use repro::selection::DeadlineSelector;
+use repro::sim::{fill_normal, RngPool};
+
+fn main() {
+    let engine = Engine::from_default_manifest().expect("run `make artifacts` first");
+    let p = engine.preset("commag").expect("commag preset").clone();
+    engine.warmup_preset("commag").expect("warmup");
+    let pool = RngPool::new(1);
+
+    // ---- L1/L2: hot artifacts --------------------------------------------
+    let mut rng = pool.stream("bench", 0);
+    let mk = |dims: &[usize], rng: &mut repro::sim::Rng64| {
+        let n: usize = dims.iter().product();
+        let mut data = vec![0f32; n];
+        fill_normal(rng, &mut data, 0.5);
+        Tensor::new(dims.to_vec(), data).unwrap()
+    };
+    let wc = mk(&[p.client_params], &mut rng);
+    let wsi = mk(&[p.inverse_params], &mut rng);
+    let wf = mk(&[p.full_params], &mut rng);
+    let x = mk(&[p.batch, 32], &mut rng);
+    let y = {
+        let mut t = Tensor::zeros(&[p.batch, p.num_classes]);
+        for i in 0..p.batch {
+            t.data[i * p.num_classes + i % p.num_classes] = 1.0;
+        }
+        t
+    };
+    let z = mk(&[p.batch, p.split_dim], &mut rng);
+    let lr = Tensor::scalar1(0.05);
+
+    let arts = [
+        ("client_step", vec![&wc, &x, &z, &lr]),
+        ("client_fwd", vec![&wc, &x]),
+        ("inv_acts", vec![&wsi, &y]),
+        ("inv_step", vec![&wsi, &y, &z, &lr]),
+        ("fedavg_step", vec![&wf, &x, &y, &lr]),
+        ("full_eval", vec![&wf, &x, &y]),
+    ];
+    for (role, inputs) in arts {
+        let name = p.artifact(role).unwrap().to_string();
+        bench(&format!("artifact/{role}"), 3, 30, || {
+            engine.run(&name, &inputs).unwrap();
+        });
+    }
+    // gram + apply (inversion hot path)
+    let o = mk(&[p.batch, 64], &mut rng);
+    let zt = mk(&[p.batch, 64], &mut rng);
+    let gram_art = p.server_layers[0].gram.clone();
+    bench("artifact/gram_64x64", 3, 30, || {
+        engine.run(&gram_art, &[&o, &zt]).unwrap();
+    });
+
+    // chunked-vs-single dispatch (the §Perf L2 optimization) and the
+    // pure-jnp ablation quantifying the Pallas interpret-mode tax on CPU
+    let ys4 = mk(&[4, p.batch, p.num_classes], &mut rng);
+    let cs4 = mk(&[4, p.batch, p.split_dim], &mut rng);
+    let inv_c4 = p.artifact("inv_step_chunk").unwrap().to_string();
+    bench("artifact/inv_step_c4 (4 updates)", 3, 30, || {
+        engine.run(&inv_c4, &[&wsi, &ys4, &cs4, &lr]).unwrap();
+    });
+    let inv_pure = p.artifact("inv_step_pure").unwrap().to_string();
+    bench("artifact/inv_step_pure (no pallas)", 3, 30, || {
+        engine.run(&inv_pure, &[&wsi, &y, &z, &lr]).unwrap();
+    });
+
+    // ---- L3-only components ----------------------------------------------
+    let cfg = SimConfig::commag();
+    let topo = Topology::build(&cfg);
+    let ct: Vec<f64> = topo.rics.iter().map(|r| 10.0 * r.q_c).collect();
+    let by: Vec<f64> = topo.rics.iter().map(|r| 65e3 + r.id as f64).collect();
+    bench("l3/waterfill_50", 10, 200, || {
+        std::hint::black_box(waterfill(&ct, &by, 1e9, 0.02));
+    });
+
+    let sizes = vec![UploadSizes { model_bytes: 28e3, feature_bytes: 65e3 }; topo.len()];
+    let sel = DeadlineSelector::new(&topo, &sizes, 0.7);
+    bench("l3/select_50", 10, 500, || {
+        std::hint::black_box(sel.select(&topo, |r| 10.0 * (r.q_c + r.q_s)));
+    });
+
+    let mut rng2 = pool.stream("mat", 0);
+    let mut a_data = vec![0f32; 2048 * 65];
+    fill_normal(&mut rng2, &mut a_data, 1.0);
+    let a = Mat::from_f32(2048, 65, &a_data).unwrap();
+    let a0 = gram(&a);
+    let mut b_data = vec![0f32; 65 * 64];
+    fill_normal(&mut rng2, &mut b_data, 1.0);
+    let a1 = Mat::from_f32(65, 64, &b_data).unwrap();
+    bench("l3/ridge_solve_65x64", 3, 50, || {
+        std::hint::black_box(ridge_solve(&a0, &a1, 1e-3).unwrap());
+    });
+
+    let parts: Vec<Tensor> = (0..35).map(|_| mk(&[p.client_params], &mut rng)).collect();
+    bench("l3/aggregate_35x6272", 5, 100, || {
+        std::hint::black_box(aggregate(&parts).unwrap());
+    });
+
+    // ---- end-to-end round step per framework ------------------------------
+    use repro::config::FrameworkKind;
+    for kind in FrameworkKind::all() {
+        let mut cfg = SimConfig::commag();
+        cfg.samples_per_client = 64;
+        cfg.test_samples = 96;
+        cfg.eval_every = 0;
+        let mut runner = Runner::new(&engine, &cfg, kind).unwrap();
+        let mut round = 0usize;
+        bench(&format!("e2e/{}_round", kind.name()), 1, 5, || {
+            runner.step(round).unwrap();
+            round += 1;
+        });
+    }
+
+    // per-artifact cumulative profile
+    println!("\nper-artifact cumulative profile:");
+    for (name, s) in engine.stats().into_iter().take(10) {
+        println!(
+            "  {:<30} calls={:>6} total={:>8.2}s mean={:>8.3}ms",
+            name,
+            s.calls,
+            s.total_secs,
+            1e3 * s.total_secs / s.calls.max(1) as f64
+        );
+    }
+}

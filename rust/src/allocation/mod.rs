@@ -1,0 +1,284 @@
+//! P2: computational and communication resource allocation (§IV-D).
+//!
+//! For a fixed selected set `A_t` and local-update count `E`, the bandwidth
+//! subproblem — minimize `max_m (E Q_C,m + T^co_m)` over the simplex with
+//! per-client floor `b_min` — is convex with a water-filling KKT structure:
+//! at the optimum every client whose allocation is above the floor finishes
+//! at exactly the same completion time `tau`. `b_m(tau) = S'_m·8 / (B (tau -
+//! E Q_C,m))` is strictly decreasing in `tau`, so the budget equation
+//! `sum_m max(b_min, b_m(tau)) = 1` has a unique root, found by bisection —
+//! an *exact* solve where the paper invokes Ipopt (DESIGN.md §3).
+//!
+//! The outer integer search over `E ∈ {1..E_max}` weights each candidate's
+//! round cost (Eq 20) by `K_eps(E) ∝ (E+1)²/E²` (22f) — Corollary 4's
+//! round-count model — and applies the paper's guard `E = min(Ê, E_last)`.
+
+use crate::config::SimConfig;
+use crate::oran::{self, RicProfile, UploadSizes};
+
+/// Result of one P2 solve.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    /// bandwidth fraction per selected client (sums to 1)
+    pub fracs: Vec<f64>,
+    /// chosen number of local updates (after the E <= E_last guard)
+    pub e: usize,
+    /// modeled round latency under this allocation
+    pub latency: oran::RoundLatency,
+    /// modeled per-round cost (Eq 20)
+    pub round_cost: f64,
+    /// K_eps(E)-weighted objective value (what P2 minimizes)
+    pub objective: f64,
+}
+
+/// Water-filling bandwidth allocation for fixed (A_t, E).
+///
+/// `client_time[m]` is client m's compute time before its upload starts
+/// (e.g. `E * Q_C,m`), `bytes[m]` its per-round upload volume.
+pub fn waterfill(
+    client_time: &[f64],
+    bytes: &[f64],
+    bandwidth_bps: f64,
+    b_min: f64,
+) -> Vec<f64> {
+    let k = client_time.len();
+    assert!(k > 0, "waterfill over empty selection");
+    let floor_sum = b_min * k as f64;
+    assert!(
+        floor_sum <= 1.0 + 1e-9,
+        "infeasible: k*b_min = {floor_sum} > 1"
+    );
+    // budget fully consumed by the floors (e.g. all M clients selected with
+    // b_min = 1/M): the only feasible point is the uniform floor allocation
+    if floor_sum >= 1.0 - 1e-9 {
+        return vec![1.0 / k as f64; k];
+    }
+
+    let need = |tau: f64| -> f64 {
+        client_time
+            .iter()
+            .zip(bytes)
+            .map(|(&t, &s)| {
+                let dt = tau - t;
+                if dt <= 0.0 {
+                    f64::INFINITY
+                } else {
+                    (s * 8.0 / (bandwidth_bps * dt)).max(b_min)
+                }
+            })
+            .sum()
+    };
+
+    // bracket: lo just above the slowest compute, hi large enough that all
+    // clients sit at the floor
+    let t_max = client_time.iter().cloned().fold(0.0_f64, f64::max);
+    let mut lo = t_max + 1e-12;
+    let mut hi = t_max + 1.0;
+    while need(hi) > 1.0 {
+        hi *= 2.0;
+        assert!(hi < 1e9, "waterfill failed to bracket");
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if need(mid) > 1.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let tau = hi;
+    let mut fr: Vec<f64> = client_time
+        .iter()
+        .zip(bytes)
+        .map(|(&t, &s)| (s * 8.0 / (bandwidth_bps * (tau - t))).max(b_min))
+        .collect();
+    // normalize the residual rounding error onto the non-floored clients
+    let sum: f64 = fr.iter().sum();
+    let excess = sum - 1.0;
+    if excess.abs() > 1e-12 {
+        let free: f64 = fr.iter().filter(|&&f| f > b_min + 1e-12).sum();
+        if free > 0.0 {
+            for f in fr.iter_mut() {
+                if *f > b_min + 1e-12 {
+                    *f -= excess * (*f / free);
+                }
+            }
+        } else {
+            for f in fr.iter_mut() {
+                *f -= excess / k as f64;
+            }
+        }
+    }
+    fr
+}
+
+/// Full P2 solve: bandwidth + adaptive E for the selected clients.
+///
+/// `client_time_scale` maps `Q_C,m` to the actual per-batch client compute
+/// (1.0 for split frameworks; `1/omega` for unsplit O-RANFed, which runs all
+/// layers on the weak edge). `server_side` toggles the `E·Q_S` phase and the
+/// rApp half of R_cp (absent in unsplit frameworks).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_p2(
+    cfg: &SimConfig,
+    selected: &[&RicProfile],
+    sizes: &[UploadSizes],
+    e_last: usize,
+    adapt_e: bool,
+    client_time_scale: f64,
+    server_side: bool,
+) -> Allocation {
+    assert!(!selected.is_empty());
+    let bytes: Vec<f64> = sizes.iter().map(|s| s.total()).collect();
+
+    let eval = |e: usize| -> Allocation {
+        let ct: Vec<f64> = selected
+            .iter()
+            .map(|r| e as f64 * r.q_c * client_time_scale)
+            .collect();
+        let fracs = waterfill(&ct, &bytes, cfg.bandwidth_bps, cfg.b_min);
+        let latency = oran::round_latency(
+            selected,
+            &fracs,
+            sizes,
+            e,
+            cfg.bandwidth_bps,
+            0.0,
+            client_time_scale,
+        );
+        let lat_total = if server_side {
+            latency.total()
+        } else {
+            latency.client_phase
+        };
+        let r_co = oran::comm_cost(&fracs, cfg.bandwidth_bps, cfg.p_c);
+        let r_cp = if server_side {
+            oran::comp_cost(selected, e, cfg.p_tr)
+        } else {
+            selected
+                .iter()
+                .map(|r| e as f64 * r.q_c * client_time_scale * cfg.p_tr)
+                .sum()
+        };
+        let round_cost = oran::total_cost(cfg.rho, r_co, r_cp, lat_total);
+        Allocation {
+            fracs,
+            e,
+            latency,
+            round_cost,
+            objective: cfg.k_eps(e) * round_cost,
+        }
+    };
+
+    if !adapt_e {
+        return eval(e_last);
+    }
+    let mut best = eval(1);
+    for e in 2..=cfg.e_max {
+        let cand = eval(e);
+        if cand.objective < best.objective {
+            best = cand;
+        }
+    }
+    // the paper's guard: never increase E past the value used for selection
+    if best.e > e_last {
+        best = eval(e_last);
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oran::Topology;
+
+    fn setup(k: usize) -> (SimConfig, Topology) {
+        let mut cfg = SimConfig::commag();
+        cfg.num_clients = k.max(10);
+        (cfg, Topology::build(&SimConfig::commag()))
+    }
+
+    fn sizes(k: usize) -> Vec<UploadSizes> {
+        (0..k)
+            .map(|i| UploadSizes {
+                model_bytes: 28e3,
+                feature_bytes: 65e3 + 1e3 * i as f64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn waterfill_sums_to_one_and_respects_floor() {
+        let ct = vec![0.004, 0.008, 0.002, 0.006];
+        let by = vec![9e4, 6e4, 1.2e5, 3e4];
+        let fr = waterfill(&ct, &by, 1e9, 0.02);
+        assert!((fr.iter().sum::<f64>() - 1.0).abs() < 1e-9, "{fr:?}");
+        assert!(fr.iter().all(|&f| f >= 0.02 - 1e-12), "{fr:?}");
+    }
+
+    #[test]
+    fn waterfill_equalizes_unfloored_completion_times() {
+        let ct = vec![0.004, 0.008, 0.002];
+        let by = vec![5e5, 5e5, 5e5]; // big transfers -> nobody floored
+        let fr = waterfill(&ct, &by, 1e9, 0.01);
+        let t: Vec<f64> = ct
+            .iter()
+            .zip(&by)
+            .zip(&fr)
+            .map(|((&c, &s), &f)| c + s * 8.0 / (f * 1e9))
+            .collect();
+        for w in t.windows(2) {
+            assert!((w[0] - w[1]).abs() < 1e-6, "{t:?}");
+        }
+    }
+
+    #[test]
+    fn waterfill_beats_uniform_allocation() {
+        let ct = vec![0.001, 0.009, 0.003, 0.005];
+        let by = vec![2e5, 1e4, 1.5e5, 8e4];
+        let fr = waterfill(&ct, &by, 1e9, 0.01);
+        let maxt = |fr: &[f64]| {
+            ct.iter()
+                .zip(&by)
+                .zip(fr)
+                .map(|((&c, &s), &f)| c + s * 8.0 / (f * 1e9))
+                .fold(0.0_f64, f64::max)
+        };
+        assert!(maxt(&fr) <= maxt(&[0.25; 4]) + 1e-12);
+    }
+
+    #[test]
+    fn p2_adapts_e_downward_from_extreme_point() {
+        let (cfg, topo) = setup(50);
+        let sel: Vec<&RicProfile> = topo.rics.iter().take(20).collect();
+        let alloc = solve_p2(&cfg, &sel, &sizes(20), cfg.e_initial, true, 1.0, true);
+        assert!(alloc.e <= cfg.e_initial);
+        assert!(alloc.e >= 1);
+        assert!((alloc.fracs.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p2_guard_caps_at_e_last() {
+        let (cfg, topo) = setup(50);
+        let sel: Vec<&RicProfile> = topo.rics.iter().take(5).collect();
+        let alloc = solve_p2(&cfg, &sel, &sizes(5), 2, true, 1.0, true);
+        assert!(alloc.e <= 2);
+    }
+
+    #[test]
+    fn p2_fixed_e_passthrough() {
+        let (cfg, topo) = setup(50);
+        let sel: Vec<&RicProfile> = topo.rics.iter().take(5).collect();
+        let alloc = solve_p2(&cfg, &sel, &sizes(5), 14, false, 1.0, true);
+        assert_eq!(alloc.e, 14);
+    }
+
+    #[test]
+    fn p2_objective_weights_round_count() {
+        // K_eps(E) must make E=1 unattractive even though per-round cost is low
+        let (cfg, topo) = setup(50);
+        let sel: Vec<&RicProfile> = topo.rics.iter().take(10).collect();
+        let a = solve_p2(&cfg, &sel, &sizes(10), cfg.e_max, true, 1.0, true);
+        assert!(a.e > 1, "adaptive E collapsed to 1: K_eps weighting broken");
+    }
+}

@@ -1,0 +1,103 @@
+//! FedAvg [6]: the basic FL baseline — fixed K random clients, fixed E local
+//! SGD steps on the FULL model at each client, uniform bandwidth, no model
+//! splitting, no system optimization.
+//!
+//! Timing model: the near-RT-RIC runs all layers, so its per-batch time is
+//! `Q_C,m / omega` (Q_C covers the client-side omega-fraction of layers);
+//! there is no rApp training phase. Each round uplinks the full model d.
+
+use anyhow::Result;
+
+use crate::fl::{aggregate, run_steps, sample_clients, FlContext, Framework, RoundOutcome};
+use crate::oran::{self, RicProfile, UploadSizes};
+use crate::runtime::Tensor;
+
+pub struct FedAvg {
+    wf: Tensor,
+}
+
+impl FedAvg {
+    pub fn new(ctx: &FlContext) -> Result<Self> {
+        let c = ctx.init.client(&ctx.pool)?;
+        let s = ctx.init.server(&ctx.pool)?;
+        Ok(Self { wf: ctx.init.concat_full(&c, &s)? })
+    }
+
+    /// Shared by O-RANFed: run E full-model SGD steps for each selected
+    /// client from the global model and aggregate.
+    pub(crate) fn train_selected(
+        ctx: &FlContext,
+        wf: &Tensor,
+        selected: &[usize],
+        e: usize,
+    ) -> Result<(Tensor, f32)> {
+        let eta = ctx.eta_c();
+        let mut parts = Vec::with_capacity(selected.len());
+        let mut loss_sum = 0f32;
+        let mut loss_n = 0usize;
+        for &m in selected {
+            let shard = &ctx.shards[m].data;
+            let (w, ls, ln) = run_steps(
+                ctx,
+                "fedavg_step",
+                "fedavg_step_chunk",
+                wf.clone(),
+                e,
+                &eta,
+                |t| {
+                    let (x, y) = shard.batch(t);
+                    (x, y)
+                },
+            )?;
+            loss_sum += ls;
+            loss_n += ln;
+            parts.push(w);
+        }
+        Ok((aggregate(&parts)?, loss_sum / loss_n.max(1) as f32))
+    }
+}
+
+impl Framework for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn run_round(&mut self, ctx: &FlContext, round: usize) -> Result<RoundOutcome> {
+        let cfg = &ctx.cfg;
+        let ids = sample_clients(&ctx.pool, "fedavg_select", round, ctx.topo.len(), cfg.fedavg_k);
+        let e = cfg.fedavg_e;
+
+        let (wf, train_loss) = Self::train_selected(ctx, &self.wf, &ids, e)?;
+        self.wf = wf;
+
+        // uniform bandwidth among the K selected; full-model upload each
+        let selected: Vec<&RicProfile> = ids.iter().map(|&m| &ctx.topo.rics[m]).collect();
+        let fracs = vec![1.0 / ids.len() as f64; ids.len()];
+        let sizes = vec![
+            UploadSizes { model_bytes: ctx.full_model_bytes(), feature_bytes: 0.0 };
+            ids.len()
+        ];
+        let scale = 1.0 / cfg.omega; // full model on the weak edge
+        let mut latency =
+            oran::round_latency(&selected, &fracs, &sizes, e, cfg.bandwidth_bps, 0.0, scale);
+        latency.server_phase = 0.0; // no rApp training in plain FL
+
+        let comp_cost: f64 = selected
+            .iter()
+            .map(|r| e as f64 * r.q_c * scale * cfg.p_tr)
+            .sum();
+        Ok(RoundOutcome {
+            selected_ids: ids.clone(),
+            e,
+            comm_bytes: sizes.iter().map(|s| s.total()).sum(),
+            latency,
+            comm_cost: oran::comm_cost(&fracs, cfg.bandwidth_bps, cfg.p_c),
+            comp_cost,
+            train_loss,
+        })
+    }
+
+    fn full_model(&mut self, _ctx: &FlContext) -> Result<Tensor> {
+        Ok(self.wf.clone())
+    }
+}

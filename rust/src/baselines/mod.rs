@@ -1,0 +1,26 @@
+//! Baseline frameworks of §V: FedAvg [6], vanilla SplitFed [12], and
+//! O-RANFed [8] — all real trainers over the same AOT artifacts, topology,
+//! and data shards as SplitMe, differing exactly where the paper says they
+//! differ (splitting, selection, allocation, adaptivity).
+
+pub mod fedavg;
+pub mod oranfed;
+pub mod sfl;
+
+pub use fedavg::FedAvg;
+pub use oranfed::OranFed;
+pub use sfl::VanillaSfl;
+
+use crate::config::FrameworkKind;
+use crate::fl::{FlContext, Framework};
+use anyhow::Result;
+
+/// Instantiate any framework by kind.
+pub fn build(kind: FrameworkKind, ctx: &FlContext) -> Result<Box<dyn Framework>> {
+    Ok(match kind {
+        FrameworkKind::SplitMe => Box::new(crate::splitme::SplitMe::new(ctx)?),
+        FrameworkKind::FedAvg => Box::new(FedAvg::new(ctx)?),
+        FrameworkKind::Sfl => Box::new(VanillaSfl::new(ctx)?),
+        FrameworkKind::OranFed => Box::new(OranFed::new(ctx)?),
+    })
+}

@@ -1,0 +1,94 @@
+//! O-RANFed [8]: FL with O-RAN system optimization but WITHOUT splitting —
+//! deadline-aware trainer selection and water-filling bandwidth allocation
+//! over full-model uploads, fixed E (no adaptive local updates, the gap the
+//! paper's P2 closes).
+
+use anyhow::Result;
+
+use crate::allocation::solve_p2;
+use crate::baselines::fedavg::FedAvg;
+use crate::fl::{FlContext, Framework, RoundOutcome};
+use crate::oran::{self, RicProfile, UploadSizes};
+use crate::runtime::Tensor;
+use crate::selection::DeadlineSelector;
+
+pub struct OranFed {
+    wf: Tensor,
+    selector: DeadlineSelector,
+}
+
+impl OranFed {
+    pub fn new(ctx: &FlContext) -> Result<Self> {
+        let c = ctx.init.client(&ctx.pool)?;
+        let s = ctx.init.server(&ctx.pool)?;
+        let sizes = vec![
+            UploadSizes { model_bytes: ctx.full_model_bytes(), feature_bytes: 0.0 };
+            ctx.topo.len()
+        ];
+        Ok(Self {
+            wf: ctx.init.concat_full(&c, &s)?,
+            selector: DeadlineSelector::new(&ctx.topo, &sizes, ctx.cfg.alpha),
+        })
+    }
+}
+
+impl Framework for OranFed {
+    fn name(&self) -> &'static str {
+        "oranfed"
+    }
+
+    fn run_round(&mut self, ctx: &FlContext, _round: usize) -> Result<RoundOutcome> {
+        let cfg = &ctx.cfg;
+        let e = cfg.oranfed_e;
+        let scale = 1.0 / cfg.omega; // full model on the weak edge
+
+        // deadline-aware selection over FULL-model local compute
+        let mut selected: Vec<&RicProfile> = self
+            .selector
+            .select(&ctx.topo, |r| e as f64 * r.q_c * scale);
+        if selected.is_empty() {
+            let best = ctx
+                .topo
+                .rics
+                .iter()
+                .max_by(|a, b| {
+                    let slack = |r: &RicProfile| r.t_round - e as f64 * r.q_c * scale;
+                    slack(a).total_cmp(&slack(b))
+                })
+                .expect("non-empty topology");
+            selected.push(best);
+        }
+        let sizes = vec![
+            UploadSizes { model_bytes: ctx.full_model_bytes(), feature_bytes: 0.0 };
+            selected.len()
+        ];
+
+        // bandwidth allocation at fixed E, no server-side phase
+        let alloc = solve_p2(cfg, &selected, &sizes, e, false, scale, false);
+        self.selector.observe(alloc.latency.max_uplink);
+
+        let ids: Vec<usize> = selected.iter().map(|r| r.id).collect();
+        let (wf, train_loss) = FedAvg::train_selected(ctx, &self.wf, &ids, e)?;
+        self.wf = wf;
+
+        let mut latency = alloc.latency;
+        latency.server_phase = 0.0;
+        let comp_cost: f64 = selected
+            .iter()
+            .map(|r| e as f64 * r.q_c * scale * cfg.p_tr)
+            .sum();
+        Ok(RoundOutcome {
+            selected_ids: ids,
+            e,
+            comm_bytes: sizes.iter().map(|s| s.total()).sum(),
+            latency,
+            comm_cost: oran::comm_cost(&alloc.fracs, cfg.bandwidth_bps, cfg.p_c),
+            comp_cost,
+            train_loss,
+        })
+    }
+
+    fn full_model(&mut self, _ctx: &FlContext) -> Result<Tensor> {
+        Ok(self.wf.clone())
+    }
+}

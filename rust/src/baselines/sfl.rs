@@ -1,0 +1,101 @@
+//! Vanilla SplitFed [12]: the basic SFL baseline — fixed K random clients,
+//! fixed E, layer-split model, and the per-batch smashed-data/gradient
+//! ping-pong between xApp and rApp that SplitMe eliminates.
+//!
+//! Per local update t: the client forwards its batch (`client_fwd`), uplinks
+//! the smashed tensor, the rApp runs forward+backward (`sfl_server_step`),
+//! downlinks the smashed-data gradient, and the client backpropagates
+//! (`sfl_client_bwd`). Both model halves are aggregated each round
+//! (SplitFedV1 with a fed server on each side).
+//!
+//! Communication accounting matches the paper's conventions: only uplink is
+//! billed/latency-bearing (downlink "free"), so each local update adds one
+//! smashed batch to the uplink and each round adds the client half-model.
+
+use anyhow::Result;
+
+use crate::fl::{aggregate, sample_clients, FlContext, Framework, RoundOutcome};
+use crate::oran::{self, RicProfile, UploadSizes};
+use crate::runtime::Tensor;
+
+pub struct VanillaSfl {
+    wc: Tensor,
+    ws: Tensor,
+}
+
+impl VanillaSfl {
+    pub fn new(ctx: &FlContext) -> Result<Self> {
+        Ok(Self {
+            wc: ctx.init.client(&ctx.pool)?,
+            ws: ctx.init.server(&ctx.pool)?,
+        })
+    }
+}
+
+impl Framework for VanillaSfl {
+    fn name(&self) -> &'static str {
+        "sfl"
+    }
+
+    fn run_round(&mut self, ctx: &FlContext, round: usize) -> Result<RoundOutcome> {
+        let cfg = &ctx.cfg;
+        let ids = sample_clients(&ctx.pool, "sfl_select", round, ctx.topo.len(), cfg.sfl_k);
+        let e = cfg.sfl_e;
+        let eta = ctx.eta_c();
+        let fwd = ctx.preset.artifact("client_fwd")?;
+        let server_step = ctx.preset.artifact("sfl_server_step")?;
+        let client_bwd = ctx.preset.artifact("sfl_client_bwd")?;
+
+        let mut wc_parts = Vec::with_capacity(ids.len());
+        let mut ws_parts = Vec::with_capacity(ids.len());
+        let mut loss_sum = 0f32;
+        let mut loss_n = 0usize;
+        for &m in &ids {
+            let shard = &ctx.shards[m].data;
+            let mut wc_m = self.wc.clone();
+            let mut ws_m = self.ws.clone();
+            for t in 0..e {
+                let (x, y) = shard.batch(t);
+                let smash = ctx.engine.run(fwd, &[&wc_m, x])?.remove(0);
+                let out = ctx.engine.run(server_step, &[&ws_m, &smash, y, &eta])?;
+                let mut it = out.into_iter();
+                ws_m = it.next().expect("sfl_server_step: params");
+                let gsm = it.next().expect("sfl_server_step: gsmash");
+                loss_sum += it.next().expect("sfl_server_step: loss").data[0];
+                loss_n += 1;
+                wc_m = ctx.engine.run(client_bwd, &[&wc_m, x, &gsm, &eta])?.remove(0);
+            }
+            wc_parts.push(wc_m);
+            ws_parts.push(ws_m);
+        }
+        self.wc = aggregate(&wc_parts)?;
+        self.ws = aggregate(&ws_parts)?;
+
+        // uniform bandwidth among K; uplink = E smashed batches + half-model
+        let selected: Vec<&RicProfile> = ids.iter().map(|&m| &ctx.topo.rics[m]).collect();
+        let fracs = vec![1.0 / ids.len() as f64; ids.len()];
+        let sizes = vec![
+            UploadSizes { model_bytes: ctx.client_model_bytes(), feature_bytes: 0.0 };
+            ids.len()
+        ];
+        let per_update = ctx.smashed_batch_bytes();
+        let latency = oran::round_latency(
+            &selected, &fracs, &sizes, e, cfg.bandwidth_bps, per_update, 1.0,
+        );
+
+        Ok(RoundOutcome {
+            selected_ids: ids.clone(),
+            e,
+            comm_bytes: sizes.iter().map(|s| s.total()).sum::<f64>()
+                + per_update * (e * ids.len()) as f64,
+            latency,
+            comm_cost: oran::comm_cost(&fracs, cfg.bandwidth_bps, cfg.p_c),
+            comp_cost: oran::comp_cost(&selected, e, cfg.p_tr),
+            train_loss: loss_sum / loss_n.max(1) as f32,
+        })
+    }
+
+    fn full_model(&mut self, ctx: &FlContext) -> Result<Tensor> {
+        ctx.init.concat_full(&self.wc, &self.ws)
+    }
+}

@@ -1,0 +1,140 @@
+//! Tiny CLI substrate (the offline environment has no `clap`): positional
+//! subcommand + `--flag[=| ]value` options with typed accessors and
+//! "unknown flag" errors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    /// positional arguments (after the subcommand)
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// flags that were consumed (for unknown-flag detection)
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first non-flag token is the subcommand, the rest
+    /// are `--key value`, `--key=value`, or bare `--switch` (value "true").
+    pub fn parse(argv: &[String]) -> Result<(String, Args)> {
+        let mut it = argv.iter().peekable();
+        let mut cmd = String::new();
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    flags.insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if cmd.is_empty() {
+                cmd = tok.clone();
+            } else {
+                positional.push(tok.clone());
+            }
+        }
+        if cmd.is_empty() {
+            bail!("missing subcommand");
+        }
+        Ok((cmd, Args { positional, flags, seen: Default::default() }))
+    }
+
+    fn raw(&self, key: &str) -> Option<&str> {
+        self.seen.borrow_mut().push(key.to_string());
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.raw(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.raw(key).map(|s| s.to_string())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.raw(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Call after reading all known flags: errors on leftovers (typos).
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.flags.keys() {
+            if !seen.contains(k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let (cmd, a) = Args::parse(&argv("run --rounds 30 --verbose --out=res dir")).unwrap();
+        assert_eq!(cmd, "run");
+        assert_eq!(a.usize_or("rounds", 1).unwrap(), 30);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.str_or("out", "x"), "res");
+        assert_eq!(a.positional, vec!["dir"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let (_, a) = Args::parse(&argv("run")).unwrap();
+        assert_eq!(a.usize_or("rounds", 7).unwrap(), 7);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let (_, a) = Args::parse(&argv("run --typo 3")).unwrap();
+        let _ = a.usize_or("rounds", 1);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let (_, a) = Args::parse(&argv("run --rounds abc")).unwrap();
+        assert!(a.usize_or("rounds", 1).is_err());
+    }
+
+    #[test]
+    fn missing_subcommand_errors() {
+        assert!(Args::parse(&argv("")).is_err());
+    }
+}

@@ -1,0 +1,387 @@
+//! Typed configuration: Table III experimental settings, framework
+//! selection, and per-experiment overrides (JSON-loadable, CLI-overridable).
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonio::Json;
+
+/// Which FL framework drives a run (§V baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameworkKind {
+    /// The paper's contribution: mutual learning + inversion + P1/P2.
+    SplitMe,
+    /// FedAvg [6]: fixed K=10, E=10, no splitting, no system optimization.
+    FedAvg,
+    /// Vanilla SplitFed [12]: fixed K=20, E=14, per-batch smashed ping-pong.
+    Sfl,
+    /// O-RANFed [8]: deadline-aware selection + bandwidth allocation, no split.
+    OranFed,
+}
+
+impl FrameworkKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::SplitMe => "splitme",
+            Self::FedAvg => "fedavg",
+            Self::Sfl => "sfl",
+            Self::OranFed => "oranfed",
+        }
+    }
+
+    pub fn all() -> [FrameworkKind; 4] {
+        [Self::SplitMe, Self::FedAvg, Self::Sfl, Self::OranFed]
+    }
+}
+
+impl std::str::FromStr for FrameworkKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "splitme" | "split-me" | "split_me" => Ok(Self::SplitMe),
+            "fedavg" | "fed-avg" => Ok(Self::FedAvg),
+            "sfl" | "splitfed" => Ok(Self::Sfl),
+            "oranfed" | "o-ranfed" | "oran-fed" => Ok(Self::OranFed),
+            other => bail!("unknown framework {other:?} (splitme|fedavg|sfl|oranfed)"),
+        }
+    }
+}
+
+/// Table III of the paper + simulator knobs. All times in seconds, bandwidth
+/// in bits/s, sizes in bytes.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// artifact preset: "commag" (§V main) or "vision" (Fig 5)
+    pub preset: String,
+    /// M — maximum number of local trainers (near-RT-RICs)
+    pub num_clients: usize,
+    /// B — total uplink bandwidth budget (bits/s); Table III: 1 Gbps
+    pub bandwidth_bps: f64,
+    /// Q_C,m ~ U(lo, hi) per-batch client processing time (s)
+    pub q_c_range: (f64, f64),
+    /// Q_S,m ~ U(lo, hi) per-batch server processing time (s)
+    pub q_s_range: (f64, f64),
+    /// p_c — per-unit communication cost
+    pub p_c: f64,
+    /// p_tr — per-unit-time computation cost
+    pub p_tr: f64,
+    /// b_min — minimum bandwidth fraction for a selected client (<= 1/M)
+    pub b_min: f64,
+    /// omega — client share of the full model parameters (Table III: 1/5)
+    pub omega: f64,
+    /// rho — Pareto trade-off between resource cost and learning time
+    pub rho: f64,
+    /// t_round ~ U(lo, hi) slice-specific control-loop deadline (s)
+    pub t_round_range: (f64, f64),
+    /// alpha — heuristic factor of Algorithm 1
+    pub alpha: f64,
+    /// E_initial / N (=E_max) — local update bounds (§IV-D)
+    pub e_initial: usize,
+    pub e_max: usize,
+    /// epsilon in K_eps = O((E+1)^2 / (E^2 eps^2)) (Corollary 4 / 22f)
+    pub epsilon: f64,
+    /// samples held by each near-RT-RIC (one slice class each — non-IID)
+    pub samples_per_client: usize,
+    /// balanced test-set size
+    pub test_samples: usize,
+    /// class-separation knob of the synthetic COMMAG generator (DESIGN.md §3)
+    pub data_difficulty: f64,
+    /// root seed for every RNG stream
+    pub seed: u64,
+    /// evaluate every k rounds (1 = every round, figures need 1)
+    pub eval_every: usize,
+    /// ridge regularizer gamma of Eq 8 (Step-4 inversion)
+    pub ridge_gamma: f64,
+    /// how many rApps pool Gram statistics in the inversion (must supply
+    /// more samples than the widest server layer's d_in+1)
+    pub inversion_clients: usize,
+    /// stop a run early once test accuracy reaches this (paper: 83%)
+    pub target_accuracy: f32,
+    pub stop_at_target: bool,
+    /// learning-rate overrides (None -> manifest defaults, eta_c > eta_s)
+    pub eta_c: Option<f32>,
+    pub eta_s: Option<f32>,
+    /// fixed-K baselines (FedAvg K=10/E=10, SFL K=20/E=14 per §V)
+    pub fedavg_k: usize,
+    pub fedavg_e: usize,
+    pub sfl_k: usize,
+    pub sfl_e: usize,
+    pub oranfed_e: usize,
+}
+
+impl SimConfig {
+    /// Table III defaults on the COMMAG-like workload.
+    pub fn commag() -> Self {
+        Self {
+            preset: "commag".into(),
+            num_clients: 50,
+            bandwidth_bps: 1e9,
+            q_c_range: (0.34e-3, 0.46e-3),
+            q_s_range: (1.2e-3, 1.6e-3),
+            p_c: 1.0,
+            p_tr: 1.0,
+            b_min: 1.0 / 50.0,
+            omega: 0.2,
+            rho: 0.8,
+            t_round_range: (50e-3, 100e-3),
+            alpha: 0.7,
+            e_initial: 20,
+            e_max: 20,
+            epsilon: 0.1,
+            samples_per_client: 512,
+            test_samples: 1536,
+            data_difficulty: 1.0,
+            seed: 20250710,
+            eval_every: 1,
+            ridge_gamma: 1.0,
+            inversion_clients: 12,
+            target_accuracy: 0.775,
+            stop_at_target: false,
+            eta_c: Some(0.03),
+            eta_s: Some(0.02),
+            fedavg_k: 10,
+            fedavg_e: 10,
+            sfl_k: 20,
+            sfl_e: 14,
+            oranfed_e: 10,
+        }
+    }
+
+    /// Fig-5 analogue: the vision preset with a smaller federation (the
+    /// conv model is ~20x heavier per step on the CPU testbed).
+    pub fn vision() -> Self {
+        Self {
+            preset: "vision".into(),
+            num_clients: 10,
+            b_min: 1.0 / 10.0,
+            samples_per_client: 128,
+            test_samples: 512,
+            fedavg_k: 4,
+            sfl_k: 4,
+            sfl_e: 8,
+            // widest vision layer has d_in+1 = 1025 unknowns: pool all 10
+            // clients (10*128 = 1280 samples) in the inversion
+            inversion_clients: 10,
+            target_accuracy: 0.80,
+            ..Self::commag()
+        }
+    }
+
+    pub fn preset_config(name: &str) -> Result<Self> {
+        match name {
+            "commag" => Ok(Self::commag()),
+            "vision" => Ok(Self::vision()),
+            other => bail!("unknown config preset {other:?} (commag|vision)"),
+        }
+    }
+
+    pub fn from_json_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let cfg = Self::from_json(&Json::parse(&text).context("parsing SimConfig json")?)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize to JSON (all fields; pairs as 2-arrays).
+    pub fn to_json(&self) -> Json {
+        let pair = |p: (f64, f64)| Json::arr(vec![Json::num(p.0), Json::num(p.1)]);
+        let opt = |o: Option<f32>| o.map(|v| Json::num(v as f64)).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("preset", Json::str(self.preset.clone())),
+            ("num_clients", Json::num(self.num_clients as f64)),
+            ("bandwidth_bps", Json::num(self.bandwidth_bps)),
+            ("q_c_range", pair(self.q_c_range)),
+            ("q_s_range", pair(self.q_s_range)),
+            ("p_c", Json::num(self.p_c)),
+            ("p_tr", Json::num(self.p_tr)),
+            ("b_min", Json::num(self.b_min)),
+            ("omega", Json::num(self.omega)),
+            ("rho", Json::num(self.rho)),
+            ("t_round_range", pair(self.t_round_range)),
+            ("alpha", Json::num(self.alpha)),
+            ("e_initial", Json::num(self.e_initial as f64)),
+            ("e_max", Json::num(self.e_max as f64)),
+            ("epsilon", Json::num(self.epsilon)),
+            ("samples_per_client", Json::num(self.samples_per_client as f64)),
+            ("test_samples", Json::num(self.test_samples as f64)),
+            ("data_difficulty", Json::num(self.data_difficulty)),
+            ("seed", Json::num(self.seed as f64)),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            ("ridge_gamma", Json::num(self.ridge_gamma)),
+            ("inversion_clients", Json::num(self.inversion_clients as f64)),
+            ("target_accuracy", Json::num(self.target_accuracy as f64)),
+            ("stop_at_target", Json::Bool(self.stop_at_target)),
+            ("eta_c", opt(self.eta_c)),
+            ("eta_s", opt(self.eta_s)),
+            ("fedavg_k", Json::num(self.fedavg_k as f64)),
+            ("fedavg_e", Json::num(self.fedavg_e as f64)),
+            ("sfl_k", Json::num(self.sfl_k as f64)),
+            ("sfl_e", Json::num(self.sfl_e as f64)),
+            ("oranfed_e", Json::num(self.oranfed_e as f64)),
+        ])
+    }
+
+    /// Parse from JSON. Missing keys fall back to the preset named by
+    /// `"preset"` (so partial override files stay valid).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let preset = j
+            .opt("preset")
+            .map(|v| v.as_str().map(str::to_string))
+            .transpose()?
+            .unwrap_or_else(|| "commag".to_string());
+        let mut cfg = Self::preset_config(&preset)?;
+        let pair = |v: &Json| -> Result<(f64, f64)> {
+            let a = v.as_arr()?;
+            if a.len() != 2 {
+                bail!("range must be a 2-array");
+            }
+            Ok((a[0].as_f64()?, a[1].as_f64()?))
+        };
+        if let Some(v) = j.opt("num_clients") { cfg.num_clients = v.as_usize()?; }
+        if let Some(v) = j.opt("bandwidth_bps") { cfg.bandwidth_bps = v.as_f64()?; }
+        if let Some(v) = j.opt("q_c_range") { cfg.q_c_range = pair(v)?; }
+        if let Some(v) = j.opt("q_s_range") { cfg.q_s_range = pair(v)?; }
+        if let Some(v) = j.opt("p_c") { cfg.p_c = v.as_f64()?; }
+        if let Some(v) = j.opt("p_tr") { cfg.p_tr = v.as_f64()?; }
+        if let Some(v) = j.opt("b_min") { cfg.b_min = v.as_f64()?; }
+        if let Some(v) = j.opt("omega") { cfg.omega = v.as_f64()?; }
+        if let Some(v) = j.opt("rho") { cfg.rho = v.as_f64()?; }
+        if let Some(v) = j.opt("t_round_range") { cfg.t_round_range = pair(v)?; }
+        if let Some(v) = j.opt("alpha") { cfg.alpha = v.as_f64()?; }
+        if let Some(v) = j.opt("e_initial") { cfg.e_initial = v.as_usize()?; }
+        if let Some(v) = j.opt("e_max") { cfg.e_max = v.as_usize()?; }
+        if let Some(v) = j.opt("epsilon") { cfg.epsilon = v.as_f64()?; }
+        if let Some(v) = j.opt("samples_per_client") { cfg.samples_per_client = v.as_usize()?; }
+        if let Some(v) = j.opt("test_samples") { cfg.test_samples = v.as_usize()?; }
+        if let Some(v) = j.opt("data_difficulty") { cfg.data_difficulty = v.as_f64()?; }
+        if let Some(v) = j.opt("seed") { cfg.seed = v.as_f64()? as u64; }
+        if let Some(v) = j.opt("eval_every") { cfg.eval_every = v.as_usize()?; }
+        if let Some(v) = j.opt("ridge_gamma") { cfg.ridge_gamma = v.as_f64()?; }
+        if let Some(v) = j.opt("inversion_clients") { cfg.inversion_clients = v.as_usize()?; }
+        if let Some(v) = j.opt("target_accuracy") { cfg.target_accuracy = v.as_f64()? as f32; }
+        if let Some(v) = j.opt("stop_at_target") { cfg.stop_at_target = v.as_bool()?; }
+        if let Some(v) = j.opt("eta_c") {
+            cfg.eta_c = match v {
+                Json::Null => None,
+                other => Some(other.as_f64()? as f32),
+            };
+        }
+        if let Some(v) = j.opt("eta_s") {
+            cfg.eta_s = match v {
+                Json::Null => None,
+                other => Some(other.as_f64()? as f32),
+            };
+        }
+        if let Some(v) = j.opt("fedavg_k") { cfg.fedavg_k = v.as_usize()?; }
+        if let Some(v) = j.opt("fedavg_e") { cfg.fedavg_e = v.as_usize()?; }
+        if let Some(v) = j.opt("sfl_k") { cfg.sfl_k = v.as_usize()?; }
+        if let Some(v) = j.opt("sfl_e") { cfg.sfl_e = v.as_usize()?; }
+        if let Some(v) = j.opt("oranfed_e") { cfg.oranfed_e = v.as_usize()?; }
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.num_clients == 0 {
+            bail!("num_clients must be > 0");
+        }
+        if !(self.b_min > 0.0 && self.b_min <= 1.0 / self.num_clients as f64 + 1e-12) {
+            bail!("b_min must be in (0, 1/M]; got {} for M={}", self.b_min, self.num_clients);
+        }
+        if !(0.0..=1.0).contains(&self.rho) {
+            bail!("rho must be in [0,1]");
+        }
+        if !(0.0..=1.0).contains(&self.alpha) {
+            bail!("alpha must be in [0,1]");
+        }
+        if self.e_initial == 0 || self.e_max == 0 || self.e_initial > self.e_max {
+            bail!("need 1 <= e_initial <= e_max");
+        }
+        if self.q_c_range.0 > self.q_c_range.1 || self.q_s_range.0 > self.q_s_range.1 {
+            bail!("Q ranges must be lo <= hi");
+        }
+        if self.t_round_range.0 > self.t_round_range.1 {
+            bail!("t_round range must be lo <= hi");
+        }
+        if self.bandwidth_bps <= 0.0 {
+            bail!("bandwidth must be positive");
+        }
+        Ok(())
+    }
+
+    /// K_eps(E) of constraint (22f): O((E+1)^2 / (E^2 eps^2)).
+    pub fn k_eps(&self, e: usize) -> f64 {
+        let e = e as f64;
+        (e + 1.0) * (e + 1.0) / (e * e * self.epsilon * self.epsilon)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_iii_defaults() {
+        let c = SimConfig::commag();
+        assert_eq!(c.num_clients, 50);
+        assert_eq!(c.bandwidth_bps, 1e9);
+        assert_eq!(c.b_min, 0.02);
+        assert_eq!(c.omega, 0.2);
+        assert_eq!(c.rho, 0.8);
+        assert_eq!(c.alpha, 0.7);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn k_eps_decreases_with_e() {
+        let c = SimConfig::commag();
+        // Corollary 4: more local updates -> fewer communication rounds
+        assert!(c.k_eps(1) > c.k_eps(5));
+        assert!(c.k_eps(5) > c.k_eps(20));
+        // and tends to 1/eps^2
+        assert!((c.k_eps(10_000) - 1.0 / (0.1f64 * 0.1)).abs() < 1.0);
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = SimConfig::commag();
+        c.b_min = 0.5;
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::commag();
+        c.rho = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::commag();
+        c.e_initial = 30;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = SimConfig::vision();
+        c.num_clients = 7;
+        c.b_min = 1.0 / 7.0;
+        c.eta_c = Some(0.01);
+        let s = c.to_json().to_string_pretty();
+        let back = SimConfig::from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back.preset, "vision");
+        assert_eq!(back.num_clients, 7);
+        assert_eq!(back.eta_c, Some(0.01));
+        assert_eq!(back.sfl_e, c.sfl_e);
+    }
+
+    #[test]
+    fn json_partial_override_falls_back_to_preset() {
+        let j = Json::parse(r#"{"preset": "commag", "num_clients": 12, "b_min": 0.05}"#).unwrap();
+        let c = SimConfig::from_json(&j).unwrap();
+        assert_eq!(c.num_clients, 12);
+        assert_eq!(c.b_min, 0.05);
+        assert_eq!(c.fedavg_k, 10); // untouched default
+    }
+
+    #[test]
+    fn framework_kind_parses() {
+        use std::str::FromStr;
+        assert_eq!(FrameworkKind::from_str("splitme").unwrap(), FrameworkKind::SplitMe);
+        assert_eq!(FrameworkKind::from_str("SFL").unwrap(), FrameworkKind::Sfl);
+        assert!(FrameworkKind::from_str("nope").is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! Round engine: drives any [`Framework`] over global training rounds,
+//! advancing the simulated O-RAN clock (Eq 18), accumulating resource costs
+//! (Eq 16/17/20), evaluating the test set, and recording per-round metrics.
+
+use anyhow::Result;
+
+use crate::baselines;
+use crate::config::{FrameworkKind, SimConfig};
+use crate::fl::{FlContext, Framework};
+use crate::metrics::{RoundRecord, RunSummary};
+use crate::oran;
+use crate::runtime::Engine;
+use crate::sim::Clock;
+
+/// A single-framework training run.
+pub struct Runner<'a> {
+    pub ctx: FlContext<'a>,
+    framework: Box<dyn Framework>,
+    kind: FrameworkKind,
+    clock: Clock,
+    records: Vec<RoundRecord>,
+    /// optional live progress callback (round record) — used by the CLI
+    pub progress: Option<Box<dyn Fn(&RoundRecord)>>,
+}
+
+impl<'a> Runner<'a> {
+    pub fn new(engine: &'a Engine, cfg: &SimConfig, kind: FrameworkKind) -> Result<Self> {
+        let ctx = FlContext::new(engine, cfg)?;
+        let framework = baselines::build(kind, &ctx)?;
+        Ok(Self {
+            ctx,
+            framework,
+            kind,
+            clock: Clock::new(),
+            records: Vec::new(),
+            progress: None,
+        })
+    }
+
+    /// Run `rounds` global rounds (early-stopping at `target_accuracy` when
+    /// `stop_at_target` is set). Returns the run summary with all records.
+    pub fn train(&mut self, rounds: usize) -> Result<RunSummary> {
+        for round in 0..rounds {
+            let rec = self.step(round)?;
+            let hit = !rec.accuracy.is_nan() && rec.accuracy >= self.ctx.cfg.target_accuracy;
+            if let Some(cb) = &self.progress {
+                cb(&rec);
+            }
+            self.records.push(rec);
+            if hit && self.ctx.cfg.stop_at_target {
+                break;
+            }
+        }
+        Ok(self.summary())
+    }
+
+    /// One global round: train + clock + cost accounting + (periodic) eval.
+    pub fn step(&mut self, round: usize) -> Result<RoundRecord> {
+        let wall = std::time::Instant::now();
+        let out = self.framework.run_round(&self.ctx, round)?;
+        self.clock.advance(out.latency.total());
+
+        let evaluate = self.ctx.cfg.eval_every > 0
+            && (round % self.ctx.cfg.eval_every == 0 || round + 1 == usize::MAX);
+        let (accuracy, test_loss) = if evaluate {
+            let wfull = self.framework.full_model(&self.ctx)?;
+            self.ctx.evaluate(&wfull)?
+        } else {
+            (f32::NAN, f32::NAN)
+        };
+
+        Ok(RoundRecord {
+            round,
+            selected: out.selected_ids.len(),
+            e: out.e,
+            comm_bytes: out.comm_bytes,
+            round_time: out.latency.total(),
+            sim_time: self.clock.now(),
+            comm_cost: out.comm_cost,
+            comp_cost: out.comp_cost,
+            total_cost: oran::total_cost(
+                self.ctx.cfg.rho,
+                out.comm_cost,
+                out.comp_cost,
+                out.latency.total(),
+            ),
+            train_loss: out.train_loss,
+            accuracy,
+            test_loss,
+            wall_secs: wall.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Force an evaluation of the current model (outside the round cadence).
+    pub fn evaluate_now(&mut self) -> Result<(f32, f32)> {
+        let wfull = self.framework.full_model(&self.ctx)?;
+        self.ctx.evaluate(&wfull)
+    }
+
+    pub fn summary(&self) -> RunSummary {
+        RunSummary::from_records(
+            self.kind.name(),
+            &self.ctx.cfg.preset,
+            self.ctx.cfg.target_accuracy,
+            self.records.clone(),
+        )
+    }
+
+    pub fn records(&self) -> &[RoundRecord] {
+        &self.records
+    }
+
+    pub fn sim_time(&self) -> f64 {
+        self.clock.now()
+    }
+}

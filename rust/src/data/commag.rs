@@ -1,0 +1,238 @@
+//! Synthetic COMMAG-style O-RAN slicing workload (DESIGN.md §3).
+//!
+//! The real COMMAG dataset [37] holds per-slice RAN KPI traces (throughput,
+//! PRB allocation, buffer occupancy, MCS, ...) from the Colosseum testbed;
+//! the task of §V is 3-way traffic classification (eMBB / mMTC / URLLC).
+//! This generator preserves that learning-problem shape:
+//!
+//! * 32 KPI-like features per sample whose class structure is a *nonlinear
+//!   traffic-regime manifold*: the slice class lives in a twisted angular
+//!   sector ("pinwheel") of a 2-D latent network state (load, burstiness),
+//!   linearly embedded into the 32 KPIs together with a low-rank nuisance
+//!   factor and measurement noise. A linear probe — or a one-shot ridge fit
+//!   on random features, which is what the Step-4 inversion applied to an
+//!   UNTRAINED client model amounts to — stays far below the plateau;
+//!   reaching it requires the client stack to actually learn the regime
+//!   boundaries, as in the paper's 10-layer-DNN setting;
+//! * **label noise** (`LABEL_FLIP` = 25% resampled uniformly) pins the Bayes
+//!   accuracy near `1 - 0.25*(2/3) ≈ 0.833` — the paper's reported 83%
+//!   plateau — so "reaching the highest accuracy" is a well-defined event;
+//! * non-IID federation: each near-RT-RIC stores exactly ONE slice class
+//!   (`client_id mod 3`), the paper's slice-specific data heterogeneity.
+
+use super::{pack_batches, Batched, ClientShard};
+use crate::config::SimConfig;
+use crate::sim::{normal, Rng64, RngPool};
+
+pub const NUM_FEATURES: usize = 32;
+pub const NUM_CLASSES: usize = 3;
+pub const LABEL_FLIP: f64 = 0.15;
+const LOW_RANK: usize = 4;
+/// radians of sector twist per unit radius — the nonlinearity knob
+const TWIST: f64 = 0.5;
+
+/// Deterministic embedding of the 2-D regime latent + nuisance factors into
+/// the 32 KPI dimensions (class-independent; all class information is in the
+/// latent geometry).
+struct ClassModel {
+    embed: Vec<f32>,      // 2 x NUM_FEATURES
+    loadings: Vec<f32>,   // LOW_RANK x NUM_FEATURES (shared nuisance)
+}
+
+fn class_model(pool: &RngPool) -> ClassModel {
+    let mut rng = pool.stream("commag_embed", 0);
+    let embed: Vec<f32> = (0..2 * NUM_FEATURES)
+        .map(|_| (normal(&mut rng) * 1.2) as f32)
+        .collect();
+    let loadings: Vec<f32> = (0..LOW_RANK * NUM_FEATURES)
+        .map(|_| (normal(&mut rng) * 0.4) as f32)
+        .collect();
+    ClassModel { embed, loadings }
+}
+
+const TAU: f64 = 2.0 * std::f64::consts::PI;
+
+/// Draw one sample of class `k`: a latent (load, burstiness) point from
+/// class-k's twisted sector, embedded + nuisance + noise; observed label
+/// flipped to a uniform class w.p. LABEL_FLIP.
+fn sample(model: &ClassModel, k: usize, difficulty: f64, rng: &mut Rng64) -> (Vec<f32>, u32) {
+    // rejection-sample a 2-D gaussian latent until it falls in sector k
+    let (mut u0, mut u1);
+    loop {
+        u0 = normal(rng);
+        u1 = normal(rng);
+        let r = (u0 * u0 + u1 * u1).sqrt();
+        let theta = u1.atan2(u0) + TWIST * r; // untwist defines the regime
+        let sector = ((theta.rem_euclid(TAU)) / (TAU / NUM_CLASSES as f64)) as usize;
+        if sector.min(NUM_CLASSES - 1) == k {
+            break;
+        }
+    }
+    let sigma = 0.2 * difficulty;
+    let z: Vec<f64> = (0..LOW_RANK).map(|_| normal(rng)).collect();
+    let mut x = vec![0f32; NUM_FEATURES];
+    for f in 0..NUM_FEATURES {
+        let mut v = u0 * model.embed[f] as f64 + u1 * model.embed[NUM_FEATURES + f] as f64;
+        for (r, zr) in z.iter().enumerate() {
+            v += model.loadings[r * NUM_FEATURES + f] as f64 * zr;
+        }
+        v += sigma * normal(rng);
+        x[f] = v as f32;
+    }
+    let label = if rng.f64() < LABEL_FLIP {
+        rng.below(NUM_CLASSES) as u32
+    } else {
+        k as u32
+    };
+    (x, label)
+}
+
+/// Generate the federated training shards (one slice class per client) and a
+/// balanced test set.
+pub fn generate(cfg: &SimConfig, batch: usize) -> (Vec<ClientShard>, Batched) {
+    let pool = RngPool::new(cfg.seed);
+    let model = class_model(&pool);
+
+    let mut shards = Vec::with_capacity(cfg.num_clients);
+    for m in 0..cfg.num_clients {
+        let k = m % NUM_CLASSES;
+        let mut rng = pool.stream("commag_client", m as u64);
+        let mut x = Vec::with_capacity(cfg.samples_per_client * NUM_FEATURES);
+        let mut y = Vec::with_capacity(cfg.samples_per_client);
+        for _ in 0..cfg.samples_per_client {
+            let (xs, ys) = sample(&model, k, cfg.data_difficulty, &mut rng);
+            x.extend_from_slice(&xs);
+            y.push(ys);
+        }
+        shards.push(ClientShard {
+            client_id: m,
+            slice_class: k,
+            data: pack_batches(&x, &y, &[NUM_FEATURES], NUM_CLASSES, batch),
+        });
+    }
+
+    let mut rng = pool.stream("commag_test", 0);
+    let mut x = Vec::with_capacity(cfg.test_samples * NUM_FEATURES);
+    let mut y = Vec::with_capacity(cfg.test_samples);
+    for i in 0..cfg.test_samples {
+        let k = i % NUM_CLASSES; // balanced
+        let (xs, ys) = sample(&model, k, cfg.data_difficulty, &mut rng);
+        x.extend_from_slice(&xs);
+        y.push(ys);
+    }
+    let test = pack_batches(&x, &y, &[NUM_FEATURES], NUM_CLASSES, batch);
+    (shards, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::commag();
+        c.samples_per_client = 64;
+        c.test_samples = 96;
+        c.num_clients = 6;
+        c
+    }
+
+    #[test]
+    fn shards_are_single_slice() {
+        let (shards, _) = generate(&cfg(), 32);
+        assert_eq!(shards.len(), 6);
+        for s in &shards {
+            assert_eq!(s.slice_class, s.client_id % 3);
+            assert_eq!(s.data.num_samples(), 64);
+            // most labels match the slice class (75% clean + flips back)
+            let mut match_count = 0usize;
+            let mut total = 0usize;
+            for (_, yb) in &s.data.batches {
+                for row in yb.data.chunks(3) {
+                    let lbl = row.iter().position(|&v| v == 1.0).unwrap();
+                    if lbl == s.slice_class {
+                        match_count += 1;
+                    }
+                    total += 1;
+                }
+            }
+            assert!(
+                match_count as f64 / total as f64 > 0.6,
+                "client {} only {}/{} on-slice",
+                s.client_id, match_count, total
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (a, _) = generate(&cfg(), 32);
+        let (b, _) = generate(&cfg(), 32);
+        assert_eq!(a[0].data.batches[0].0.data, b[0].data.batches[0].0.data);
+    }
+
+    #[test]
+    fn test_set_is_balanced() {
+        let (_, test) = generate(&cfg(), 32);
+        let mut counts = [0usize; 3];
+        let mut flips = 0usize;
+        for (i, (_, yb)) in test.batches.iter().enumerate() {
+            for (j, row) in yb.data.chunks(3).enumerate() {
+                let lbl = row.iter().position(|&v| v == 1.0).unwrap();
+                counts[lbl] += 1;
+                if lbl != (i * 32 + j) % 3 {
+                    flips += 1;
+                }
+            }
+        }
+        let total: usize = counts.iter().sum();
+        // flips move ~25%*2/3 of labels off the generating class
+        let flip_rate = flips as f64 / total as f64;
+        assert!(flip_rate > 0.05 && flip_rate < 0.35, "flip rate {flip_rate}");
+        for c in counts {
+            assert!(c > total / 5, "unbalanced test set: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn latent_regime_geometry_is_recoverable() {
+        // decode the 2-D latent back out of the 32 KPIs by least squares on
+        // the known embedding; the untwisted sector must match the
+        // generating class for the vast majority of samples — i.e. the class
+        // signal survives the embedding + nuisance + noise.
+        let pool = RngPool::new(cfg().seed);
+        let model = class_model(&pool);
+        let mut rng = pool.stream("sep_test", 0);
+        // 2x2 normal equations of the embedding columns
+        let (mut e00, mut e01, mut e11) = (0f64, 0f64, 0f64);
+        for f in 0..NUM_FEATURES {
+            let a = model.embed[f] as f64;
+            let b = model.embed[NUM_FEATURES + f] as f64;
+            e00 += a * a;
+            e01 += a * b;
+            e11 += b * b;
+        }
+        let det = e00 * e11 - e01 * e01;
+        let mut hits = 0usize;
+        let n = 300;
+        for i in 0..n {
+            let k = i % NUM_CLASSES;
+            let (x, _) = sample(&model, k, 1.0, &mut rng);
+            let (mut p0, mut p1) = (0f64, 0f64);
+            for f in 0..NUM_FEATURES {
+                p0 += x[f] as f64 * model.embed[f] as f64;
+                p1 += x[f] as f64 * model.embed[NUM_FEATURES + f] as f64;
+            }
+            let u0 = (e11 * p0 - e01 * p1) / det;
+            let u1 = (e00 * p1 - e01 * p0) / det;
+            let r = (u0 * u0 + u1 * u1).sqrt();
+            let theta = u1.atan2(u0) + TWIST * r;
+            let sector =
+                (((theta.rem_euclid(TAU)) / (TAU / NUM_CLASSES as f64)) as usize).min(NUM_CLASSES - 1);
+            if sector == k {
+                hits += 1;
+            }
+        }
+        let acc = hits as f64 / n as f64;
+        assert!(acc > 0.7, "latent decode accuracy only {acc}");
+    }
+}

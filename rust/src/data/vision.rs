@@ -1,0 +1,155 @@
+//! Synthetic CIFAR-like vision workload for the Fig-5 generality experiment.
+//!
+//! Fig 5 of the paper only argues that SplitMe generalizes to computer-vision
+//! models (VGG-11 / ResNet-18 on CIFAR-10/100); the substitute (DESIGN.md §3)
+//! is class-patterned 32×32×3 images: a per-class low-resolution template
+//! (8×8, bilinearly upsampled) modulated by a random per-sample contrast and
+//! translation, plus pixel noise — enough structure that the conv client
+//! must learn spatial features, with 10% label noise bounding the plateau.
+
+use super::{pack_batches, Batched, ClientShard};
+use crate::config::SimConfig;
+use crate::sim::{normal, Rng64, RngPool};
+
+pub const SIDE: usize = 32;
+pub const CHANNELS: usize = 3;
+pub const NUM_CLASSES: usize = 10;
+pub const LABEL_FLIP: f64 = 0.10;
+const TEMPLATE: usize = 8;
+
+struct Templates {
+    /// [class][TEMPLATE*TEMPLATE*CHANNELS]
+    t: Vec<Vec<f32>>,
+}
+
+fn templates(pool: &RngPool) -> Templates {
+    let mut t = Vec::new();
+    for k in 0..NUM_CLASSES {
+        let mut rng = pool.stream("vision_class", k as u64);
+        t.push(
+            (0..TEMPLATE * TEMPLATE * CHANNELS)
+                .map(|_| normal(&mut rng) as f32)
+                .collect(),
+        );
+    }
+    Templates { t }
+}
+
+/// Bilinear upsample the 8×8 template to 32×32 with an integer shift.
+fn render(template: &[f32], dx: i32, dy: i32, contrast: f32, out: &mut [f32]) {
+    let scale = (TEMPLATE - 1) as f32 / (SIDE - 1) as f32;
+    for y in 0..SIDE {
+        for x in 0..SIDE {
+            let sx = ((x as i32 - dx).clamp(0, SIDE as i32 - 1)) as f32 * scale;
+            let sy = ((y as i32 - dy).clamp(0, SIDE as i32 - 1)) as f32 * scale;
+            let (x0, y0) = (sx as usize, sy as usize);
+            let (x1, y1) = ((x0 + 1).min(TEMPLATE - 1), (y0 + 1).min(TEMPLATE - 1));
+            let (fx, fy) = (sx - x0 as f32, sy - y0 as f32);
+            for c in 0..CHANNELS {
+                let at = |yy: usize, xx: usize| template[(yy * TEMPLATE + xx) * CHANNELS + c];
+                let v = at(y0, x0) * (1.0 - fx) * (1.0 - fy)
+                    + at(y0, x1) * fx * (1.0 - fy)
+                    + at(y1, x0) * (1.0 - fx) * fy
+                    + at(y1, x1) * fx * fy;
+                out[(y * SIDE + x) * CHANNELS + c] = contrast * v;
+            }
+        }
+    }
+}
+
+fn sample(tpl: &Templates, k: usize, difficulty: f64, rng: &mut Rng64) -> (Vec<f32>, u32) {
+    let mut img = vec![0f32; SIDE * SIDE * CHANNELS];
+    let dx = rng.range_i32(-3, 3);
+    let dy = rng.range_i32(-3, 3);
+    let contrast = 0.7 + 0.6 * rng.f64() as f32;
+    render(&tpl.t[k], dx, dy, contrast, &mut img);
+    let sigma = 0.4 * difficulty;
+    for v in &mut img {
+        *v += (sigma * normal(rng)) as f32;
+    }
+    let label = if rng.f64() < LABEL_FLIP {
+        rng.below(NUM_CLASSES) as u32
+    } else {
+        k as u32
+    };
+    (img, label)
+}
+
+/// Federated shards (two classes per client round-robin — vision clients are
+/// fewer, so single-class sharding would starve classes) + balanced test set.
+pub fn generate(cfg: &SimConfig, batch: usize) -> (Vec<ClientShard>, Batched) {
+    let pool = RngPool::new(cfg.seed);
+    let tpl = templates(&pool);
+    let dims = [SIDE, SIDE, CHANNELS];
+
+    let mut shards = Vec::with_capacity(cfg.num_clients);
+    for m in 0..cfg.num_clients {
+        let mut rng = pool.stream("vision_client", m as u64);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..cfg.samples_per_client {
+            // two interleaved classes per client: still heterogeneous
+            let k = (m * 2 + i % 2) % NUM_CLASSES;
+            let (xs, ys) = sample(&tpl, k, cfg.data_difficulty, &mut rng);
+            x.extend_from_slice(&xs);
+            y.push(ys);
+        }
+        shards.push(ClientShard {
+            client_id: m,
+            slice_class: (m * 2) % NUM_CLASSES,
+            data: pack_batches(&x, &y, &dims, NUM_CLASSES, batch),
+        });
+    }
+
+    let mut rng = pool.stream("vision_test", 0);
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for i in 0..cfg.test_samples {
+        let k = i % NUM_CLASSES;
+        let (xs, ys) = sample(&tpl, k, cfg.data_difficulty, &mut rng);
+        x.extend_from_slice(&xs);
+        y.push(ys);
+    }
+    let test = pack_batches(&x, &y, &dims, NUM_CLASSES, batch);
+    (shards, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::vision();
+        c.samples_per_client = 64;
+        c.test_samples = 64;
+        c.num_clients = 4;
+        c
+    }
+
+    #[test]
+    fn image_shapes() {
+        let (shards, test) = generate(&cfg(), 32);
+        let (xb, yb) = shards[0].data.batch(0);
+        assert_eq!(xb.dims, vec![32, 32, 32, 3]);
+        assert_eq!(yb.dims, vec![32, 10]);
+        assert_eq!(test.num_samples(), 64);
+    }
+
+    #[test]
+    fn templates_make_classes_distinguishable() {
+        let (shards, _) = generate(&cfg(), 32);
+        // images of different dominant classes must differ substantially
+        let a = &shards[0].data.batches[0].0.data[..SIDE * SIDE * CHANNELS];
+        let b = &shards[1].data.batches[0].0.data[..SIDE * SIDE * CHANNELS];
+        let d: f32 = a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f32>()
+            / (SIDE * SIDE * CHANNELS) as f32;
+        assert!(d > 0.2, "inter-class mean abs diff too small: {d}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let (a, _) = generate(&cfg(), 32);
+        let (b, _) = generate(&cfg(), 32);
+        assert_eq!(a[1].data.batches[0].0.data, b[1].data.batches[0].0.data);
+    }
+}

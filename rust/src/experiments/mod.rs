@@ -1,0 +1,197 @@
+//! Experiment harness regenerating every figure of §V (DESIGN.md §5).
+//!
+//! Figures 3a/3b/4a/4b all read off the same paired four-framework run on
+//! the COMMAG-like workload; Fig 5 repeats the comparison on the vision
+//! preset. Each `fig*` helper extracts exactly the series the paper plots
+//! and pretty-prints it; the raw per-round records are also written as CSV
+//! for external plotting.
+
+pub mod sweep;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::{FrameworkKind, SimConfig};
+use crate::coordinator::Runner;
+use crate::metrics::RunSummary;
+use crate::runtime::Engine;
+
+/// Rounds budget per framework (paper: SplitMe converges in ~30 rounds, the
+/// baselines are tracked for 150).
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    pub splitme_rounds: usize,
+    pub baseline_rounds: usize,
+}
+
+impl Default for Budget {
+    fn default() -> Self {
+        Self { splitme_rounds: 30, baseline_rounds: 150 }
+    }
+}
+
+/// Run all four frameworks on identical topology/data (paired comparison).
+pub fn run_comparison(
+    engine: &Engine,
+    cfg: &SimConfig,
+    budget: Budget,
+    verbose: bool,
+) -> Result<Vec<RunSummary>> {
+    let mut out = Vec::new();
+    for kind in FrameworkKind::all() {
+        let rounds = match kind {
+            FrameworkKind::SplitMe => budget.splitme_rounds,
+            _ => budget.baseline_rounds,
+        };
+        let mut runner = Runner::new(engine, cfg, kind)?;
+        if verbose {
+            let name = kind.name().to_string();
+            runner.progress = Some(Box::new(move |r| {
+                eprintln!(
+                    "[{name}] round {:>3}: sel={:>2} E={:>2} acc={:.3} loss={:.4} t={:.2}s vol={:.2}MB",
+                    r.round, r.selected, r.e, r.accuracy, r.train_loss, r.sim_time,
+                    r.comm_bytes / 1e6
+                );
+            }));
+        }
+        let summary = runner.train(rounds)?;
+        out.push(summary);
+    }
+    Ok(out)
+}
+
+pub fn write_all(summaries: &[RunSummary], dir: impl AsRef<Path>) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    for s in summaries {
+        s.write_csv(dir.join(format!("{}_{}.csv", s.preset, s.framework)))?;
+        s.write_json(dir.join(format!("{}_{}.json", s.preset, s.framework)))?;
+    }
+    Ok(())
+}
+
+fn series_header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Fig 3a: number of selected trainers per round.
+pub fn fig3a(summaries: &[RunSummary]) {
+    series_header("Fig 3a — selected trainers per round");
+    for s in summaries {
+        let max = s.records.iter().map(|r| r.selected).max().unwrap_or(0);
+        println!(
+            "{:>8}: mean {:>5.1}  max {:>2}  (rounds {})",
+            s.framework, s.mean_selected, max, s.rounds
+        );
+        print!("          series:");
+        for r in s.records.iter().step_by((s.rounds / 15).max(1)) {
+            print!(" {}", r.selected);
+        }
+        println!();
+    }
+}
+
+/// Fig 3b: accumulated communication volume (MB) over rounds.
+pub fn fig3b(summaries: &[RunSummary]) {
+    series_header("Fig 3b — accumulated communication volume (MB)");
+    for s in summaries {
+        let mut acc = 0.0;
+        let series: Vec<f64> = s
+            .records
+            .iter()
+            .map(|r| {
+                acc += r.comm_bytes;
+                acc / 1e6
+            })
+            .collect();
+        println!(
+            "{:>8}: total {:>8.1} MB over {} rounds",
+            s.framework,
+            series.last().unwrap_or(&0.0),
+            s.rounds
+        );
+        print!("          cumMB:");
+        for v in series.iter().step_by((s.rounds / 10).max(1)) {
+            print!(" {v:.0}");
+        }
+        println!();
+    }
+}
+
+/// Fig 4a: test accuracy vs total (simulated) training time.
+pub fn fig4a(summaries: &[RunSummary]) {
+    series_header("Fig 4a — test accuracy vs training time");
+    for s in summaries {
+        println!(
+            "{:>8}: best {:.3}  final {:.3}  time-to-{:.0}% {}  total {:.2}s",
+            s.framework,
+            s.best_accuracy,
+            s.final_accuracy,
+            100.0 * 0.83,
+            s.time_to_target
+                .map(|t| format!("{t:.2}s"))
+                .unwrap_or_else(|| "never".into()),
+            s.total_sim_time
+        );
+        print!("          (t,acc):");
+        for r in s
+            .records
+            .iter()
+            .filter(|r| !r.accuracy.is_nan())
+            .step_by((s.rounds / 8).max(1))
+        {
+            print!(" ({:.1},{:.2})", r.sim_time, r.accuracy);
+        }
+        println!();
+    }
+}
+
+/// Fig 4b: cumulative communication resource cost vs training time.
+pub fn fig4b(summaries: &[RunSummary]) {
+    series_header("Fig 4b — communication resource cost vs training time");
+    for s in summaries {
+        println!(
+            "{:>8}: total R_co {:>8.1}  (R_cp {:>8.3})  over {:.2}s",
+            s.framework, s.total_comm_cost, s.total_comp_cost, s.total_sim_time
+        );
+        let mut acc = 0.0;
+        print!("          (t,Rco):");
+        for r in s.records.iter().step_by((s.rounds / 8).max(1)) {
+            acc += r.comm_cost;
+            print!(" ({:.1},{:.0})", r.sim_time, acc);
+        }
+        println!();
+    }
+}
+
+/// Fig 5: the vision-preset generality run (accuracy curves).
+pub fn fig5(summaries: &[RunSummary]) {
+    series_header("Fig 5 — vision generality (synthetic CIFAR-like)");
+    fig4a(summaries);
+}
+
+/// Print the paper-vs-measured headline claims (EXPERIMENTS.md source).
+pub fn headline(summaries: &[RunSummary]) {
+    series_header("Headline claims");
+    let get = |k: &str| summaries.iter().find(|s| s.framework == k);
+    if let (Some(sm), Some(fa)) = (get("splitme"), get("fedavg")) {
+        println!(
+            "SplitMe best acc {:.1}% (paper 83%), rounds-to-target {:?} (paper ~30)",
+            100.0 * sm.best_accuracy, sm.rounds_to_target
+        );
+        if let (Some(t_sm), Some(t_fa)) = (sm.time_to_target, fa.time_to_target) {
+            println!("speedup vs FedAvg: {:.1}x (paper ~8x)", t_fa / t_sm);
+        }
+        let best_other: f64 = summaries
+            .iter()
+            .filter(|s| s.framework != "splitme")
+            .map(|s| s.total_comm_bytes)
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "total comm volume: SplitMe {:.1} MB vs best baseline {:.1} MB",
+            sm.total_comm_bytes / 1e6,
+            best_other / 1e6
+        );
+    }
+}

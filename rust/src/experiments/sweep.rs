@@ -1,0 +1,157 @@
+//! Resource-model sweeps: explore the P1/P2 trade-off surface of §IV without
+//! training — how bandwidth budget, trade-off weight rho, and deadlines move
+//! the selected-trainer count, the adaptive E, and the round cost/latency.
+//!
+//! Pure modeling (topology + Alg 1 + water-filling + K_eps), so a full grid
+//! evaluates in milliseconds; used by `repro sweep` and unit-tested below.
+
+use crate::allocation::{solve_p2, Allocation};
+use crate::config::SimConfig;
+use crate::oran::{Topology, UploadSizes};
+use crate::selection::DeadlineSelector;
+
+/// One sweep point: the steady-state decision the optimizer reaches after
+/// `settle` rounds of selection/allocation feedback (no training).
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub bandwidth_bps: f64,
+    pub rho: f64,
+    pub selected: usize,
+    pub e: usize,
+    pub round_latency: f64,
+    pub round_cost: f64,
+}
+
+fn sizes(topo: &Topology, split_dim: usize, client_params: usize) -> Vec<UploadSizes> {
+    topo.rics
+        .iter()
+        .map(|r| UploadSizes {
+            model_bytes: client_params as f64 * 4.0,
+            feature_bytes: (r.n_samples * split_dim) as f64 * 4.0,
+        })
+        .collect()
+}
+
+/// Iterate selection -> allocation -> observe until the admitted set is
+/// stable (the closed loop of Algorithm 2 lines 2-3).
+pub fn settle(cfg: &SimConfig, split_dim: usize, client_params: usize, rounds: usize) -> SweepPoint {
+    let topo = Topology::build(cfg);
+    let all_sizes = sizes(&topo, split_dim, client_params);
+    let mut selector = DeadlineSelector::new(&topo, &all_sizes, cfg.alpha);
+    let mut e_last = cfg.e_initial;
+    let mut last: Option<Allocation> = None;
+    let mut selected_n = 0usize;
+    for _ in 0..rounds {
+        let mut selected: Vec<_> = selector
+            .select(&topo, |r| e_last as f64 * (r.q_c + r.q_s))
+            .into_iter()
+            .collect();
+        if selected.is_empty() {
+            selected.push(&topo.rics[0]);
+        }
+        let sz: Vec<UploadSizes> = selected.iter().map(|r| all_sizes[r.id]).collect();
+        let alloc = solve_p2(cfg, &selected, &sz, e_last, true, 1.0, true);
+        e_last = alloc.e;
+        selector.observe(alloc.latency.max_uplink);
+        selected_n = selected.len();
+        last = Some(alloc);
+    }
+    let alloc = last.expect("rounds > 0");
+    SweepPoint {
+        bandwidth_bps: cfg.bandwidth_bps,
+        rho: cfg.rho,
+        selected: selected_n,
+        e: alloc.e,
+        round_latency: alloc.latency.total(),
+        round_cost: alloc.round_cost,
+    }
+}
+
+/// Grid sweep over bandwidth budgets and rho values.
+pub fn grid(
+    base: &SimConfig,
+    bandwidths: &[f64],
+    rhos: &[f64],
+    split_dim: usize,
+    client_params: usize,
+) -> Vec<SweepPoint> {
+    let mut out = Vec::new();
+    for &b in bandwidths {
+        for &rho in rhos {
+            let mut cfg = base.clone();
+            cfg.bandwidth_bps = b;
+            cfg.rho = rho;
+            out.push(settle(&cfg, split_dim, client_params, 10));
+        }
+    }
+    out
+}
+
+pub fn print_table(points: &[SweepPoint]) {
+    println!(
+        "{:>12} {:>6} {:>9} {:>4} {:>12} {:>11}",
+        "bandwidth", "rho", "|A_t|", "E", "latency(ms)", "round cost"
+    );
+    for p in points {
+        println!(
+            "{:>9.2}Gbps {:>6.2} {:>9} {:>4} {:>12.2} {:>11.2}",
+            p.bandwidth_bps / 1e9,
+            p.rho,
+            p.selected,
+            p.e,
+            1e3 * p.round_latency,
+            p.round_cost
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPLIT: usize = 64;
+    const CP: usize = 6272;
+
+    #[test]
+    fn settle_is_deterministic_and_feasible() {
+        let cfg = SimConfig::commag();
+        let a = settle(&cfg, SPLIT, CP, 10);
+        let b = settle(&cfg, SPLIT, CP, 10);
+        assert_eq!(a.selected, b.selected);
+        assert_eq!(a.e, b.e);
+        assert!(a.selected >= 1 && a.selected <= cfg.num_clients);
+        assert!(a.e >= 1 && a.e <= cfg.e_max);
+        assert!(a.round_latency > 0.0);
+    }
+
+    #[test]
+    fn more_bandwidth_admits_at_least_as_many() {
+        let mut lo = SimConfig::commag();
+        lo.bandwidth_bps = 2e8;
+        let mut hi = SimConfig::commag();
+        hi.bandwidth_bps = 4e9;
+        let p_lo = settle(&lo, SPLIT, CP, 10);
+        let p_hi = settle(&hi, SPLIT, CP, 10);
+        assert!(
+            p_hi.selected >= p_lo.selected,
+            "bandwidth up, admission down: {p_lo:?} vs {p_hi:?}"
+        );
+        // NOTE: round latency is NOT monotone in bandwidth — more bandwidth
+        // admits more trainers, and the synchronous round waits for the
+        // slowest of a larger set. The correct invariant is on the
+        // per-admission efficiency of the allocation:
+        assert!(
+            p_hi.round_latency / p_hi.selected as f64
+                <= p_lo.round_latency / p_lo.selected as f64 + 1e-9,
+            "latency per admitted trainer got worse: {p_lo:?} vs {p_hi:?}"
+        );
+    }
+
+    #[test]
+    fn grid_covers_all_points() {
+        let pts = grid(&SimConfig::commag(), &[5e8, 1e9], &[0.2, 0.8], SPLIT, CP);
+        assert_eq!(pts.len(), 4);
+        // the K_eps-weighted P2 keeps E within bounds everywhere
+        assert!(pts.iter().all(|p| p.e >= 1 && p.e <= 20));
+    }
+}

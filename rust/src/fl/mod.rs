@@ -1,0 +1,247 @@
+//! Federated-learning core: the shared run context, the [`Framework`] trait
+//! every trainer (SplitMe + baselines) implements, parameter aggregation,
+//! and test-set evaluation.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::SimConfig;
+use crate::data::{commag, vision, Batched, ClientShard};
+use crate::model::ModelInit;
+use crate::oran::{RoundLatency, Topology};
+use crate::runtime::{Engine, PresetManifest, Tensor};
+use crate::sim::RngPool;
+
+/// Everything a framework needs for a run: the engine, the O-RAN topology,
+/// the federated data shards, and the parameter initializer. Built once and
+/// shared by all frameworks for paired comparisons (same topology, same
+/// shards, same init streams).
+pub struct FlContext<'a> {
+    pub engine: &'a Engine,
+    pub cfg: SimConfig,
+    pub preset: &'a PresetManifest,
+    pub init: ModelInit<'a>,
+    pub topo: Topology,
+    pub shards: Vec<ClientShard>,
+    pub test: Batched,
+    pub pool: RngPool,
+}
+
+impl<'a> FlContext<'a> {
+    pub fn new(engine: &'a Engine, cfg: &SimConfig) -> Result<Self> {
+        cfg.validate()?;
+        let preset = engine.preset(&cfg.preset)?;
+        engine
+            .warmup_preset(&cfg.preset)
+            .context("compiling preset artifacts")?;
+        let (shards, test) = match cfg.preset.as_str() {
+            "commag" => commag::generate(cfg, preset.batch),
+            "vision" => vision::generate(cfg, preset.batch),
+            other => bail!("no data generator for preset {other:?}"),
+        };
+        if shards.iter().any(|s| s.data.num_batches() == 0) {
+            bail!("samples_per_client must be >= batch size {}", preset.batch);
+        }
+        Ok(Self {
+            engine,
+            cfg: cfg.clone(),
+            preset,
+            init: ModelInit::new(&cfg.preset, preset),
+            topo: Topology::build(cfg),
+            shards,
+            test,
+            pool: RngPool::new(cfg.seed),
+        })
+    }
+
+    /// Learning rates as the shape-(1,) tensors the artifacts take.
+    pub fn eta_c(&self) -> Tensor {
+        Tensor::scalar1(self.cfg.eta_c.unwrap_or(self.preset.eta_c))
+    }
+
+    pub fn eta_s(&self) -> Tensor {
+        Tensor::scalar1(self.cfg.eta_s.unwrap_or(self.preset.eta_s))
+    }
+
+    /// Wire size of the client-side model (omega*d of Eq 19), bytes.
+    pub fn client_model_bytes(&self) -> f64 {
+        self.preset.client_params as f64 * 4.0
+    }
+
+    /// Wire size of the full model (d of Eq 19), bytes.
+    pub fn full_model_bytes(&self) -> f64 {
+        self.preset.full_params as f64 * 4.0
+    }
+
+    /// Wire size of client m's whole-dataset smashed upload (S_m), bytes.
+    pub fn smashed_bytes(&self, m: usize) -> f64 {
+        (self.shards[m].data.num_samples() * self.preset.split_dim) as f64 * 4.0
+    }
+
+    /// Per-batch smashed tensor size, bytes (vanilla SFL's per-update unit).
+    pub fn smashed_batch_bytes(&self) -> f64 {
+        (self.preset.batch * self.preset.split_dim) as f64 * 4.0
+    }
+
+    /// Evaluate a full-model parameter vector on the test set.
+    pub fn evaluate(&self, wfull: &Tensor) -> Result<(f32, f32)> {
+        let art = self.preset.artifact("full_eval")?;
+        let mut correct = 0f32;
+        let mut loss = 0f32;
+        let nb = self.test.num_batches();
+        for (x, y) in &self.test.batches {
+            let out = self.engine.run(art, &[wfull, x, y])?;
+            correct += out[0].data[0];
+            loss += out[1].data[0];
+        }
+        Ok((
+            correct / self.test.num_samples() as f32,
+            loss / nb as f32,
+        ))
+    }
+}
+
+/// Run `e` local SGD steps of a `(params, a_t, b_t, lr) -> (params', loss)`
+/// step artifact, dispatching the scan-folded `*_chunk` variant for
+/// `floor(e/chunk)` iterations (one PJRT call per `chunk` updates — the §Perf
+/// optimization) and the single-step artifact for the remainder.
+///
+/// `at(t)` supplies the two per-step batch tensors (cyclic over local data).
+/// Returns `(params, loss_sum, steps_counted)`.
+pub fn run_steps<'t>(
+    ctx: &FlContext,
+    single_role: &str,
+    chunk_role: &str,
+    mut params: Tensor,
+    e: usize,
+    lr: &Tensor,
+    at: impl Fn(usize) -> (&'t Tensor, &'t Tensor),
+) -> Result<(Tensor, f32, usize)> {
+    let single = ctx.preset.artifact(single_role)?;
+    // REPRO_NO_CHUNK=1 disables the folded dispatch (perf ablation)
+    let chunk = if std::env::var("REPRO_NO_CHUNK").map(|v| v == "1").unwrap_or(false) {
+        1
+    } else {
+        ctx.preset.chunk.max(1)
+    };
+    let mut loss_sum = 0f32;
+    let mut n = 0usize;
+    let mut t = 0usize;
+    if chunk > 1 {
+        if let Ok(chunk_art) = ctx.preset.artifact(chunk_role) {
+            while e - t >= chunk {
+                let aa: Vec<&Tensor> = (0..chunk).map(|i| at(t + i).0).collect();
+                let bb: Vec<&Tensor> = (0..chunk).map(|i| at(t + i).1).collect();
+                let xs = Tensor::stack(&aa)?;
+                let zs = Tensor::stack(&bb)?;
+                let out = ctx.engine.run(chunk_art, &[&params, &xs, &zs, lr])?;
+                let mut it = out.into_iter();
+                params = it.next().expect("chunk step: params");
+                // artifact reports the chunk-mean loss
+                loss_sum += it.next().expect("chunk step: loss").data[0] * chunk as f32;
+                n += chunk;
+                t += chunk;
+            }
+        }
+    }
+    while t < e {
+        let (a, b) = at(t);
+        let out = ctx.engine.run(single, &[&params, a, b, lr])?;
+        let mut it = out.into_iter();
+        params = it.next().expect("step: params");
+        loss_sum += it.next().expect("step: loss").data[0];
+        n += 1;
+        t += 1;
+    }
+    Ok((params, loss_sum, n))
+}
+
+/// Uniform parameter average (the aggregation of Step 3 / FedAvg).
+pub fn aggregate(parts: &[Tensor]) -> Result<Tensor> {
+    let Some(first) = parts.first() else {
+        bail!("aggregate over empty set");
+    };
+    let mut acc = Tensor::zeros(&first.dims);
+    let w = 1.0 / parts.len() as f32;
+    for p in parts {
+        acc.axpy(w, p)?;
+    }
+    Ok(acc)
+}
+
+/// What one global round produced (feeds metrics + the simulated clock).
+#[derive(Debug, Clone)]
+pub struct RoundOutcome {
+    pub selected_ids: Vec<usize>,
+    pub e: usize,
+    pub comm_bytes: f64,
+    pub latency: RoundLatency,
+    pub comm_cost: f64,
+    pub comp_cost: f64,
+    pub train_loss: f32,
+}
+
+/// One FL framework (SplitMe or a baseline). Implementations hold their own
+/// global model state across rounds.
+pub trait Framework {
+    fn name(&self) -> &'static str;
+
+    /// Execute one global training round: select, allocate, train for real
+    /// (PJRT), aggregate, and report the modeled costs/latency.
+    fn run_round(&mut self, ctx: &FlContext, round: usize) -> Result<RoundOutcome>;
+
+    /// Materialize the current full model for evaluation. For SplitMe this
+    /// triggers the Step-4 layer-wise inversion; for the baselines it is a
+    /// concatenation.
+    fn full_model(&mut self, ctx: &FlContext) -> Result<Tensor>;
+}
+
+/// Draw K distinct client ids uniformly (FedAvg / vanilla-SFL selection).
+pub fn sample_clients(pool: &RngPool, label: &str, round: usize, m: usize, k: usize) -> Vec<usize> {
+    let mut rng = pool.stream(label, round as u64);
+    let mut ids: Vec<usize> = (0..m).collect();
+    rng.shuffle(&mut ids);
+    ids.truncate(k.min(m));
+    ids.sort_unstable();
+    ids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_averages() {
+        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(vec![3], vec![3.0, 2.0, 1.0]).unwrap();
+        let avg = aggregate(&[a, b]).unwrap();
+        assert_eq!(avg.data, vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn aggregate_rejects_empty() {
+        assert!(aggregate(&[]).is_err());
+    }
+
+    #[test]
+    fn sample_clients_distinct_sorted_stable() {
+        let pool = RngPool::new(9);
+        let a = sample_clients(&pool, "sel", 3, 50, 10);
+        let b = sample_clients(&pool, "sel", 3, 50, 10);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 10);
+        let mut c = a.clone();
+        c.dedup();
+        assert_eq!(c.len(), 10);
+        assert!(a.windows(2).all(|w| w[0] < w[1]));
+        // different rounds differ
+        let d = sample_clients(&pool, "sel", 4, 50, 10);
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn sample_clients_caps_at_m() {
+        let pool = RngPool::new(9);
+        let a = sample_clients(&pool, "sel", 0, 5, 10);
+        assert_eq!(a, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,126 @@
+//! Mini-criterion benchmark substrate (no `criterion` offline).
+//!
+//! `cargo bench` runs the `harness = false` bench binaries in rust/benches/;
+//! each uses this module: warmup, timed iterations, robust statistics
+//! (median + MAD), and a one-line report comparable across runs. Also
+//! supports "experiment benches" that run a closure once and report derived
+//! metrics (the paper-figure regenerations, which are minutes-long and make
+//! no sense to repeat 100×).
+
+use std::time::{Duration, Instant};
+
+/// Result of a timed benchmark.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mad: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub mean: Duration,
+}
+
+impl Stats {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.median.as_secs_f64()
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured and `iters` measured iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Stats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let median = samples[samples.len() / 2];
+    let mad = {
+        let mut dev: Vec<i128> = samples
+            .iter()
+            .map(|s| (s.as_nanos() as i128 - median.as_nanos() as i128).abs())
+            .collect();
+        dev.sort_unstable();
+        Duration::from_nanos(dev[dev.len() / 2] as u64)
+    };
+    let mean = Duration::from_nanos(
+        (samples.iter().map(|s| s.as_nanos()).sum::<u128>() / iters as u128) as u64,
+    );
+    let stats = Stats {
+        name: name.to_string(),
+        iters,
+        median,
+        mad,
+        min: samples[0],
+        max: *samples.last().unwrap(),
+        mean,
+    };
+    println!(
+        "bench {:<40} median {:>10}  ±{:>9}  min {:>10}  max {:>10}  n={}",
+        stats.name,
+        fmt_dur(stats.median),
+        fmt_dur(stats.mad),
+        fmt_dur(stats.min),
+        fmt_dur(stats.max),
+        stats.iters
+    );
+    stats
+}
+
+/// Run a long experiment once and report its wallclock + caller-formatted
+/// metric lines (the per-figure benches).
+pub fn experiment<F, T>(name: &str, f: F) -> T
+where
+    F: FnOnce() -> T,
+{
+    println!("== experiment {name} ==");
+    let t0 = Instant::now();
+    let out = f();
+    println!("== experiment {name} done in {} ==", fmt_dur(t0.elapsed()));
+    out
+}
+
+/// Quick-mode switch shared by all benches: `REPRO_BENCH_FULL=1` runs the
+/// paper-scale configuration; default is a scaled-down smoke that still
+/// exercises every code path.
+pub fn full_scale() -> bool {
+    std::env::var("REPRO_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let s = bench("noop-ish", 2, 11, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.iters, 11);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn experiment_passes_value() {
+        let v = experiment("three", || 3);
+        assert_eq!(v, 3);
+    }
+}

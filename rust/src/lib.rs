@@ -1,0 +1,52 @@
+//! # repro — SplitMe: Split Federated Learning in O-RAN
+//!
+//! Production-shaped reproduction of *"Communication and Computation
+//! Efficient Split Federated Learning in O-RAN"* (CS.LG 2025) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the O-RAN coordination contribution: round
+//!   orchestration, deadline-aware trainer selection (Algorithm 1),
+//!   bandwidth/local-update allocation (problem P2), cost & latency
+//!   accounting (Eq 16–20), the SplitMe trainer plus FedAvg / vanilla-SFL /
+//!   O-RANFed baselines, metrics, and the experiment harness regenerating
+//!   every figure of §V.
+//! * **L2/L1 (python/, build-time only)** — JAX models + Pallas kernels,
+//!   AOT-lowered to HLO text artifacts executed via PJRT ([`runtime`]).
+//!
+//! Quick start:
+//! ```no_run
+//! use repro::prelude::*;
+//!
+//! let engine = Engine::from_default_manifest().unwrap();
+//! let cfg = SimConfig::commag();
+//! let mut run = Runner::new(&engine, &cfg, FrameworkKind::SplitMe).unwrap();
+//! let summary = run.train(30).unwrap();
+//! println!("accuracy={:.3}", summary.final_accuracy);
+//! ```
+
+pub mod allocation;
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod fl;
+pub mod harness;
+pub mod jsonio;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod oran;
+pub mod runtime;
+pub mod selection;
+pub mod sim;
+pub mod splitme;
+pub mod testkit;
+
+pub mod prelude {
+    pub use crate::config::{FrameworkKind, SimConfig};
+    pub use crate::coordinator::Runner;
+    pub use crate::metrics::{RoundRecord, RunSummary};
+    pub use crate::runtime::{Engine, Manifest, Tensor};
+}

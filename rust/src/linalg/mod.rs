@@ -1,0 +1,244 @@
+//! Dense linear-algebra substrate for the Step-4 ridge solve (Eq 9).
+//!
+//! The Gram accumulation (the O(n·d²) hot part) runs in the Pallas
+//! `matmul_t` kernel via the `*_gram` artifacts; the tiny SPD solve
+//! ((d+1)×(d+1), d ≤ 1024) is done here in f64 Cholesky — pure rust, no
+//! LAPACK custom-calls, which the PJRT CPU plugin of xla_extension 0.5.1
+//! does not register (DESIGN.md §7).
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f64 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Result<Self> {
+        if data.len() != rows * cols {
+            bail!("Mat::from_f32: {}x{} needs {} elems, got {}", rows, cols, rows * cols, data.len());
+        }
+        Ok(Self { rows, cols, data: data.iter().map(|&v| v as f64).collect() })
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// `self += alpha * other` (Gram all-reduce accumulation).
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) -> Result<()> {
+        if self.rows != other.rows || self.cols != other.cols {
+            bail!("axpy shape mismatch");
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+}
+
+/// In-place lower Cholesky of an SPD matrix. Returns the factor L (row-major,
+/// lower triangle; upper left untouched garbage is zeroed).
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    if a.rows != a.cols {
+        bail!("cholesky: matrix must be square");
+    }
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j);
+            for k in 0..j {
+                sum -= l.at(i, k) * l.at(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("cholesky: not positive definite at pivot {i} (sum={sum:.3e})");
+                }
+                *l.at_mut(i, j) = sum.sqrt();
+            } else {
+                *l.at_mut(i, j) = sum / l.at(j, j);
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `L y = b` (forward) then `L^T x = y` (backward) for each column of B.
+fn cholesky_solve_inplace(l: &Mat, b: &mut Mat) {
+    let n = l.rows;
+    let m = b.cols;
+    // forward substitution
+    for i in 0..n {
+        for c in 0..m {
+            let mut v = b.at(i, c);
+            for k in 0..i {
+                v -= l.at(i, k) * b.at(k, c);
+            }
+            *b.at_mut(i, c) = v / l.at(i, i);
+        }
+    }
+    // backward substitution with L^T
+    for i in (0..n).rev() {
+        for c in 0..m {
+            let mut v = b.at(i, c);
+            for k in (i + 1)..n {
+                v -= l.at(k, i) * b.at(k, c);
+            }
+            *b.at_mut(i, c) = v / l.at(i, i);
+        }
+    }
+}
+
+/// Ridge solve `(A0 + gamma I)^{-1} A1` with adaptive jitter: if `A0 + gamma I`
+/// is numerically indefinite (rank-deficient Gram from too few samples), the
+/// regularizer is escalated ×10 up to 6 times before giving up.
+pub fn ridge_solve(a0: &Mat, a1: &Mat, gamma: f64) -> Result<Mat> {
+    if a0.rows != a0.cols || a0.rows != a1.rows {
+        bail!(
+            "ridge_solve: shape mismatch A0 {}x{}, A1 {}x{}",
+            a0.rows, a0.cols, a1.rows, a1.cols
+        );
+    }
+    let mut g = gamma.max(1e-12);
+    for _attempt in 0..7 {
+        let mut reg = a0.clone();
+        for i in 0..reg.rows {
+            *reg.at_mut(i, i) += g;
+        }
+        match cholesky(&reg) {
+            Ok(l) => {
+                let mut x = a1.clone();
+                cholesky_solve_inplace(&l, &mut x);
+                return Ok(x);
+            }
+            Err(_) => g *= 10.0,
+        }
+    }
+    bail!("ridge_solve: matrix stayed indefinite up to gamma={g:.3e}")
+}
+
+/// `A^T A` helper (used by tests as an oracle for the Pallas gram path).
+pub fn gram(a: &Mat) -> Mat {
+    let mut g = Mat::zeros(a.cols, a.cols);
+    for i in 0..a.cols {
+        for j in 0..a.cols {
+            let mut s = 0.0;
+            for r in 0..a.rows {
+                s += a.at(r, i) * a.at(r, j);
+            }
+            *g.at_mut(i, j) = s;
+        }
+    }
+    g
+}
+
+pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
+    if a.cols != b.rows {
+        bail!("matmul shape mismatch");
+    }
+    let mut out = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            let av = a.at(i, k);
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..b.cols {
+                *out.at_mut(i, j) += av * b.at(k, j);
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{fill_normal, RngPool};
+
+    fn random_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = RngPool::new(seed).stream("mat", 0);
+        let mut data = vec![0f32; rows * cols];
+        fill_normal(&mut rng, &mut data, 1.0);
+        Mat::from_f32(rows, cols, &data).unwrap()
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let a = random_mat(24, 12, 1);
+        let g = gram(&a); // SPD for full-column-rank a
+        let l = cholesky(&g).unwrap();
+        // L L^T == G
+        let mut lt = Mat::zeros(l.cols, l.rows);
+        for i in 0..l.rows {
+            for j in 0..l.cols {
+                *lt.at_mut(j, i) = l.at(i, j);
+            }
+        }
+        let rec = matmul(&l, &lt).unwrap();
+        for (x, y) in rec.data.iter().zip(&g.data) {
+            assert!((x - y).abs() < 1e-6 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn ridge_recovers_exact_solution() {
+        // consistent system: A1 = A0 * W  => solve returns W (gamma small)
+        let a = random_mat(64, 16, 2);
+        let a0 = gram(&a);
+        let w = random_mat(16, 5, 3);
+        let a1 = matmul(&a0, &w).unwrap();
+        let x = ridge_solve(&a0, &a1, 1e-10).unwrap();
+        for (got, want) in x.data.iter().zip(&w.data) {
+            assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn ridge_jitter_survives_singular_gram() {
+        // rank-deficient: 4 samples, 16 features
+        let a = random_mat(4, 16, 4);
+        let a0 = gram(&a);
+        let a1 = random_mat(16, 3, 5);
+        // tiny gamma would fail plain cholesky; adaptive jitter must cope
+        let x = ridge_solve(&a0, &a1, 1e-12).unwrap();
+        assert!(x.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn ridge_shrinks_with_gamma() {
+        let a = random_mat(32, 8, 6);
+        let a0 = gram(&a);
+        let a1 = random_mat(8, 2, 7);
+        let norm = |m: &Mat| m.data.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let x_small = ridge_solve(&a0, &a1, 1e-6).unwrap();
+        let x_big = ridge_solve(&a0, &a1, 1e3).unwrap();
+        assert!(norm(&x_big) < norm(&x_small));
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut m = Mat::zeros(2, 2);
+        *m.at_mut(0, 0) = 1.0;
+        *m.at_mut(1, 1) = -1.0;
+        assert!(cholesky(&m).is_err());
+    }
+}

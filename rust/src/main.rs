@@ -1,0 +1,193 @@
+//! `repro` — CLI launcher for the SplitMe O-RAN reproduction.
+//!
+//! Subcommands:
+//!   * `run`        — train one framework on one preset, CSV/JSON out
+//!   * `experiment` — regenerate a paper figure (fig3a/fig3b/fig4a/fig4b/fig5/all)
+//!   * `inspect`    — list presets + artifacts of the AOT manifest
+//!
+//! The binary is self-contained after `make artifacts`: python never runs on
+//! this path.
+
+use std::str::FromStr;
+
+use anyhow::Result;
+
+use repro::cli::Args;
+use repro::config::{FrameworkKind, SimConfig};
+use repro::coordinator::Runner;
+use repro::experiments::{self, Budget};
+use repro::runtime::{Engine, Manifest};
+
+const USAGE: &str = "\
+repro — SplitMe: split federated learning in O-RAN (paper reproduction)
+
+USAGE:
+  repro run [--framework splitme|fedavg|sfl|oranfed] [--preset commag|vision]
+            [--config file.json] [--rounds N] [--stop-at-target]
+            [--out DIR] [--seed N] [--eval-every K]
+  repro experiment [fig3a|fig3b|fig4a|fig4b|fig5|all]
+            [--splitme-rounds N] [--baseline-rounds N] [--out DIR]
+            [--seed N] [--verbose]
+  repro sweep   [--preset commag|vision]   # P2 trade-off surface, no training
+  repro inspect
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print!("{USAGE}");
+        return;
+    }
+    if let Err(e) = real_main(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main(argv: &[String]) -> Result<()> {
+    let (cmd, args) = Args::parse(argv)?;
+    match cmd.as_str() {
+        "run" => cmd_run(&args),
+        "experiment" => cmd_experiment(&args),
+        "sweep" => cmd_sweep(&args),
+        "inspect" => cmd_inspect(),
+        other => {
+            print!("{USAGE}");
+            anyhow::bail!("unknown subcommand {other:?}");
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let framework = FrameworkKind::from_str(&args.str_or("framework", "splitme"))?;
+    let preset = args.str_or("preset", "commag");
+    let mut cfg = match args.opt_str("config") {
+        Some(path) => SimConfig::from_json_file(&path)?,
+        None => SimConfig::preset_config(&preset)?,
+    };
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
+    cfg.stop_at_target = args.flag("stop-at-target") || cfg.stop_at_target;
+    let rounds = args.usize_or("rounds", 30)?;
+    let out = args.str_or("out", "results");
+    args.finish()?;
+
+    let engine = Engine::from_default_manifest()?;
+    println!(
+        "platform={} preset={} framework={}",
+        engine.platform(),
+        cfg.preset,
+        framework.name()
+    );
+    let mut runner = Runner::new(&engine, &cfg, framework)?;
+    runner.progress = Some(Box::new(|r| {
+        println!(
+            "round {:>3}: sel={:>2} E={:>2} acc={:.3} train_loss={:.4} sim_t={:.2}s",
+            r.round, r.selected, r.e, r.accuracy, r.train_loss, r.sim_time
+        );
+    }));
+    let summary = runner.train(rounds)?;
+    std::fs::create_dir_all(&out)?;
+    summary.write_csv(format!("{out}/{}_{}.csv", cfg.preset, framework.name()))?;
+    summary.write_json(format!("{out}/{}_{}.json", cfg.preset, framework.name()))?;
+    println!(
+        "done: best_acc={:.3} rounds={} sim_time={:.2}s comm={:.1}MB -> {out}/",
+        summary.best_accuracy,
+        summary.rounds,
+        summary.total_sim_time,
+        summary.total_comm_bytes / 1e6
+    );
+    // perf visibility: hottest artifacts
+    for (name, s) in engine.stats().into_iter().take(5) {
+        println!(
+            "  artifact {:<28} calls={:>7} total={:>8.2}s mean={:>7.3}ms",
+            name,
+            s.calls,
+            s.total_secs,
+            1e3 * s.total_secs / s.calls.max(1) as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args.positional.first().cloned().unwrap_or_else(|| "all".into());
+    let budget = Budget {
+        splitme_rounds: args.usize_or("splitme-rounds", 30)?,
+        baseline_rounds: args.usize_or("baseline-rounds", 150)?,
+    };
+    let out = args.str_or("out", "results");
+    let seed = args.u64_or("seed", 20250710)?;
+    let verbose = args.flag("verbose");
+    args.finish()?;
+
+    let engine = Engine::from_default_manifest()?;
+    let mut cfg = if which == "fig5" { SimConfig::vision() } else { SimConfig::commag() };
+    cfg.seed = seed;
+    let summaries = experiments::run_comparison(&engine, &cfg, budget, verbose)?;
+    experiments::write_all(&summaries, &out)?;
+    match which.as_str() {
+        "fig3a" => experiments::fig3a(&summaries),
+        "fig3b" => experiments::fig3b(&summaries),
+        "fig4a" => experiments::fig4a(&summaries),
+        "fig4b" => experiments::fig4b(&summaries),
+        "fig5" => experiments::fig5(&summaries),
+        "all" => {
+            experiments::fig3a(&summaries);
+            experiments::fig3b(&summaries);
+            experiments::fig4a(&summaries);
+            experiments::fig4b(&summaries);
+            experiments::headline(&summaries);
+        }
+        other => anyhow::bail!("unknown experiment {other:?} (fig3a|fig3b|fig4a|fig4b|fig5|all)"),
+    }
+    println!("\nraw per-round CSVs in {out}/");
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use repro::experiments::sweep;
+    let preset = args.str_or("preset", "commag");
+    args.finish()?;
+    let base = SimConfig::preset_config(&preset)?;
+    let m = Manifest::load_default()?;
+    let p = m.preset(&preset)?;
+    let bandwidths = [1e8, 2.5e8, 5e8, 1e9, 2e9, 4e9];
+    let rhos = [0.2, 0.5, 0.8];
+    let pts = sweep::grid(&base, &bandwidths, &rhos, p.split_dim, p.client_params);
+    println!("P1/P2 steady state over bandwidth x rho ({preset}, M={}):", base.num_clients);
+    sweep::print_table(&pts);
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<()> {
+    let m = Manifest::load_default()?;
+    let mut names: Vec<_> = m.presets.keys().collect();
+    names.sort();
+    for name in names {
+        let p = &m.presets[name];
+        println!(
+            "preset {name}: batch={} classes={} split_dim={} params(c/s/i/full)={}/{}/{}/{}",
+            p.batch,
+            p.num_classes,
+            p.split_dim,
+            p.client_params,
+            p.server_params,
+            p.inverse_params,
+            p.full_params
+        );
+        let mut roles: Vec<_> = p.artifacts.iter().collect();
+        roles.sort();
+        for (role, art) in roles {
+            let e = &m.artifacts[art];
+            println!("  {role:<18} -> {art} (in {:?})", e.inputs);
+        }
+        for l in &p.server_layers {
+            println!(
+                "  layer {}x{} act={} z_index={} gram={} apply={}",
+                l.d_in, l.d_out, l.act, l.z_index, l.gram, l.apply
+            );
+        }
+    }
+    Ok(())
+}

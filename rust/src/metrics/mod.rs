@@ -1,0 +1,223 @@
+//! Metrics: per-round records, run summaries, CSV/JSON export — the data
+//! behind every figure of §V.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::jsonio::Json;
+
+/// Everything measured in one global training round.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// |A_t| — Fig 3a
+    pub selected: usize,
+    /// local updates used this round (adaptive for SplitMe)
+    pub e: usize,
+    /// bytes uplinked this round across all selected clients — Fig 3b
+    pub comm_bytes: f64,
+    /// simulated round latency (Eq 18), seconds
+    pub round_time: f64,
+    /// cumulative simulated time at the END of this round — x-axis of Fig 4
+    pub sim_time: f64,
+    /// R_co of this round (Eq 16)
+    pub comm_cost: f64,
+    /// R_cp of this round (Eq 17)
+    pub comp_cost: f64,
+    /// Eq 20 weighted total
+    pub total_cost: f64,
+    /// mean local training loss reported by the step artifacts
+    pub train_loss: f32,
+    /// test accuracy (NaN when eval was skipped this round)
+    pub accuracy: f32,
+    /// test cross-entropy (NaN when eval skipped)
+    pub test_loss: f32,
+    /// host wallclock spent on the real numerics this round (perf §)
+    pub wall_secs: f64,
+}
+
+/// Aggregated outcome of a run.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub framework: String,
+    pub preset: String,
+    pub rounds: usize,
+    pub final_accuracy: f32,
+    pub best_accuracy: f32,
+    /// rounds needed to first reach `target_accuracy` (None if never)
+    pub rounds_to_target: Option<usize>,
+    /// simulated seconds to first reach the target
+    pub time_to_target: Option<f64>,
+    pub total_sim_time: f64,
+    pub total_comm_bytes: f64,
+    pub total_comm_cost: f64,
+    pub total_comp_cost: f64,
+    pub mean_selected: f64,
+    pub records: Vec<RoundRecord>,
+}
+
+impl RunSummary {
+    pub fn from_records(
+        framework: &str,
+        preset: &str,
+        target_accuracy: f32,
+        records: Vec<RoundRecord>,
+    ) -> Self {
+        let rounds = records.len();
+        let evals: Vec<&RoundRecord> =
+            records.iter().filter(|r| !r.accuracy.is_nan()).collect();
+        let final_accuracy = evals.last().map(|r| r.accuracy).unwrap_or(f32::NAN);
+        let best_accuracy = evals
+            .iter()
+            .map(|r| r.accuracy)
+            .fold(f32::NEG_INFINITY, f32::max);
+        let hit = evals.iter().find(|r| r.accuracy >= target_accuracy);
+        Self {
+            framework: framework.to_string(),
+            preset: preset.to_string(),
+            rounds,
+            final_accuracy,
+            best_accuracy,
+            rounds_to_target: hit.map(|r| r.round),
+            time_to_target: hit.map(|r| r.sim_time),
+            total_sim_time: records.last().map(|r| r.sim_time).unwrap_or(0.0),
+            total_comm_bytes: records.iter().map(|r| r.comm_bytes).sum(),
+            total_comm_cost: records.iter().map(|r| r.comm_cost).sum(),
+            total_comp_cost: records.iter().map(|r| r.comp_cost).sum(),
+            mean_selected: if rounds > 0 {
+                records.iter().map(|r| r.selected as f64).sum::<f64>() / rounds as f64
+            } else {
+                0.0
+            },
+            records,
+        }
+    }
+
+    /// CSV with one row per round (figure-regeneration input).
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {:?}", path.as_ref()))?;
+        writeln!(
+            f,
+            "round,selected,e,comm_bytes,round_time,sim_time,comm_cost,comp_cost,total_cost,train_loss,accuracy,test_loss"
+        )?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{},{},{:.1},{:.6},{:.6},{:.4},{:.6},{:.6},{:.5},{:.4},{:.5}",
+                r.round, r.selected, r.e, r.comm_bytes, r.round_time, r.sim_time,
+                r.comm_cost, r.comp_cost, r.total_cost, r.train_loss, r.accuracy, r.test_loss
+            )?;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let recs = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("round", Json::num(r.round as f64)),
+                    ("selected", Json::num(r.selected as f64)),
+                    ("e", Json::num(r.e as f64)),
+                    ("comm_bytes", Json::num(r.comm_bytes)),
+                    ("round_time", Json::num(r.round_time)),
+                    ("sim_time", Json::num(r.sim_time)),
+                    ("comm_cost", Json::num(r.comm_cost)),
+                    ("comp_cost", Json::num(r.comp_cost)),
+                    ("total_cost", Json::num(r.total_cost)),
+                    ("train_loss", Json::num(r.train_loss as f64)),
+                    ("accuracy", Json::num(r.accuracy as f64)),
+                    ("test_loss", Json::num(r.test_loss as f64)),
+                    ("wall_secs", Json::num(r.wall_secs)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("framework", Json::str(self.framework.clone())),
+            ("preset", Json::str(self.preset.clone())),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("final_accuracy", Json::num(self.final_accuracy as f64)),
+            ("best_accuracy", Json::num(self.best_accuracy as f64)),
+            (
+                "rounds_to_target",
+                self.rounds_to_target.map(|v| Json::num(v as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "time_to_target",
+                self.time_to_target.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("total_sim_time", Json::num(self.total_sim_time)),
+            ("total_comm_bytes", Json::num(self.total_comm_bytes)),
+            ("total_comm_cost", Json::num(self.total_comm_cost)),
+            ("total_comp_cost", Json::num(self.total_comp_cost)),
+            ("mean_selected", Json::num(self.mean_selected)),
+            ("records", Json::arr(recs)),
+        ])
+    }
+
+    pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {:?}", path.as_ref()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, acc: f32, t: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            selected: 10,
+            e: 5,
+            comm_bytes: 1e6,
+            round_time: 0.05,
+            sim_time: t,
+            comm_cost: 1.0,
+            comp_cost: 0.2,
+            total_cost: 1.2,
+            train_loss: 0.5,
+            accuracy: acc,
+            test_loss: 0.6,
+            wall_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn summary_targets() {
+        let recs = vec![rec(0, 0.4, 0.05), rec(1, 0.7, 0.10), rec(2, 0.85, 0.15), rec(3, 0.8, 0.2)];
+        let s = RunSummary::from_records("splitme", "commag", 0.83, recs);
+        assert_eq!(s.rounds_to_target, Some(2));
+        assert_eq!(s.time_to_target, Some(0.15));
+        assert_eq!(s.best_accuracy, 0.85);
+        assert_eq!(s.final_accuracy, 0.8);
+        assert_eq!(s.total_comm_bytes, 4e6);
+        assert_eq!(s.mean_selected, 10.0);
+    }
+
+    #[test]
+    fn summary_handles_skipped_evals() {
+        let mut r1 = rec(0, f32::NAN, 0.05);
+        r1.accuracy = f32::NAN;
+        let recs = vec![r1, rec(1, 0.9, 0.1)];
+        let s = RunSummary::from_records("fedavg", "commag", 0.83, recs);
+        assert_eq!(s.rounds_to_target, Some(1));
+        assert_eq!(s.final_accuracy, 0.9);
+    }
+
+    #[test]
+    fn csv_writes_all_rounds() {
+        let recs = vec![rec(0, 0.4, 0.05), rec(1, 0.6, 0.1)];
+        let s = RunSummary::from_records("sfl", "commag", 0.83, recs);
+        let dir = std::env::temp_dir().join("repro_metrics_test.csv");
+        s.write_csv(&dir).unwrap();
+        let text = std::fs::read_to_string(&dir).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        std::fs::remove_file(dir).ok();
+    }
+}

@@ -1,0 +1,218 @@
+//! Model parameter management: seeded initialization of the flat f32 vectors
+//! the AOT artifacts consume, plus the client/server/inverse layout glue.
+//!
+//! The layout contract (per layer `W.ravel()` then `b`, layers in order) is
+//! defined by python/compile/model.py and carried in the manifest's parameter
+//! counts; rust only ever slices/concatenates whole sections, so it needs the
+//! counts, not the per-layer shapes — except for initialization, which walks
+//! the server layer table (and the preset-specific client chain).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{PresetManifest, Tensor};
+use crate::sim::{fill_normal, Rng64, RngPool};
+
+/// He-style init of one dense layer into `out`: W ~ N(0, sqrt(2/fan_in)),
+/// b = 0. Matches python/compile/model.py::init_mlp.
+fn init_dense(rng: &mut Rng64, fan_in: usize, fan_out: usize, out: &mut Vec<f32>) {
+    let mut w = vec![0f32; fan_in * fan_out];
+    fill_normal(rng, &mut w, (2.0 / fan_in as f64).sqrt());
+    out.extend_from_slice(&w);
+    out.extend(std::iter::repeat(0f32).take(fan_out));
+}
+
+/// The client chain is preset-specific (not in the manifest layer table), so
+/// reconstruct it from the preset name — must mirror python/compile/specs.py.
+fn client_chain(preset_name: &str) -> Option<Vec<usize>> {
+    match preset_name {
+        "commag" => Some(vec![32, 64, 64]),
+        // vision client is convolutional; handled separately
+        _ => None,
+    }
+}
+
+/// Conv stack spec of the vision client (mirror of specs.py::VISION).
+fn vision_convs() -> Vec<(usize, usize, usize)> {
+    // (ksize, in_ch, out_ch)
+    vec![(3, 3, 8), (3, 8, 16)]
+}
+
+/// Parameter initializer for one preset.
+pub struct ModelInit<'a> {
+    pub preset_name: String,
+    pub manifest: &'a PresetManifest,
+}
+
+impl<'a> ModelInit<'a> {
+    pub fn new(preset_name: &str, manifest: &'a PresetManifest) -> Self {
+        Self { preset_name: preset_name.to_string(), manifest: manifest }
+    }
+
+    /// Initial client-side parameters w_C^0.
+    pub fn client(&self, pool: &RngPool) -> Result<Tensor> {
+        let mut rng = pool.stream("init_client", 0);
+        let mut data = Vec::with_capacity(self.manifest.client_params);
+        if let Some(chain) = client_chain(&self.preset_name) {
+            for w in chain.windows(2) {
+                init_dense(&mut rng, w[0], w[1], &mut data);
+            }
+        } else {
+            for (k, cin, cout) in vision_convs() {
+                let fan_in = k * k * cin;
+                let mut w = vec![0f32; fan_in * cout];
+                fill_normal(&mut rng, &mut w, (2.0 / fan_in as f64).sqrt());
+                data.extend_from_slice(&w);
+                data.extend(std::iter::repeat(0f32).take(cout));
+            }
+        }
+        self.check("client", &data, self.manifest.client_params)?;
+        Tensor::new(vec![self.manifest.client_params], data)
+    }
+
+    /// Initial server-side parameters w_S^0 (vanilla SFL / FedAvg full model).
+    pub fn server(&self, pool: &RngPool) -> Result<Tensor> {
+        let mut rng = pool.stream("init_server", 0);
+        let mut data = Vec::with_capacity(self.manifest.server_params);
+        for l in &self.manifest.server_layers {
+            init_dense(&mut rng, l.d_in, l.d_out, &mut data);
+        }
+        self.check("server", &data, self.manifest.server_params)?;
+        Tensor::new(vec![self.manifest.server_params], data)
+    }
+
+    /// Initial inverse-server parameters (the mirrored chain).
+    pub fn inverse(&self, pool: &RngPool) -> Result<Tensor> {
+        let mut rng = pool.stream("init_inverse", 0);
+        let mut data = Vec::with_capacity(self.manifest.inverse_params);
+        // mirrored chain: reverse the server chain dims
+        let mut chain: Vec<usize> = Vec::new();
+        chain.push(self.manifest.num_classes);
+        for l in self.manifest.server_layers.iter().rev() {
+            chain.push(l.d_in);
+        }
+        for w in chain.windows(2) {
+            init_dense(&mut rng, w[0], w[1], &mut data);
+        }
+        self.check("inverse", &data, self.manifest.inverse_params)?;
+        Tensor::new(vec![self.manifest.inverse_params], data)
+    }
+
+    /// Concatenate [client | server] into the full-model vector.
+    pub fn concat_full(&self, client: &Tensor, server: &Tensor) -> Result<Tensor> {
+        if client.len() != self.manifest.client_params || server.len() != self.manifest.server_params {
+            bail!(
+                "concat_full: got client {} / server {}, manifest says {} / {}",
+                client.len(), server.len(),
+                self.manifest.client_params, self.manifest.server_params
+            );
+        }
+        let mut data = Vec::with_capacity(self.manifest.full_params);
+        data.extend_from_slice(&client.data);
+        data.extend_from_slice(&server.data);
+        Tensor::new(vec![self.manifest.full_params], data)
+    }
+
+    /// Split a full-model vector back into (client, server).
+    pub fn split_full(&self, full: &Tensor) -> Result<(Tensor, Tensor)> {
+        if full.len() != self.manifest.full_params {
+            bail!("split_full: wrong length {}", full.len());
+        }
+        let nc = self.manifest.client_params;
+        Ok((
+            Tensor::new(vec![nc], full.data[..nc].to_vec())?,
+            Tensor::new(vec![self.manifest.server_params], full.data[nc..].to_vec())?,
+        ))
+    }
+
+    /// Flatten the recovered per-layer `[W; b]` matrices (row-major
+    /// (d_in+1, d_out)) into the server parameter layout (W.ravel() then b).
+    pub fn server_from_layer_mats(&self, mats: &[Tensor]) -> Result<Tensor> {
+        if mats.len() != self.manifest.server_layers.len() {
+            bail!("expected {} layer matrices, got {}", self.manifest.server_layers.len(), mats.len());
+        }
+        let mut data = Vec::with_capacity(self.manifest.server_params);
+        for (l, m) in self.manifest.server_layers.iter().zip(mats) {
+            if m.dims != vec![l.d_in + 1, l.d_out] {
+                bail!("layer mat dims {:?}, expected {:?}", m.dims, [l.d_in + 1, l.d_out]);
+            }
+            // rows 0..d_in are W (already row-major d_in x d_out), last row is b
+            data.extend_from_slice(&m.data[..l.d_in * l.d_out]);
+            data.extend_from_slice(&m.data[l.d_in * l.d_out..]);
+        }
+        self.check("recovered server", &data, self.manifest.server_params)?;
+        Tensor::new(vec![self.manifest.server_params], data)
+    }
+
+    fn check(&self, what: &str, data: &[f32], expect: usize) -> Result<()> {
+        if data.len() != expect {
+            bail!(
+                "{what} param init produced {} values, manifest expects {expect} \
+                 (rust model spec out of sync with python/compile/specs.py)",
+                data.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn manifest() -> Option<Manifest> {
+        Manifest::load_default().ok()
+    }
+
+    #[test]
+    fn init_lengths_match_manifest() {
+        let Some(m) = manifest() else { return };
+        let pool = RngPool::new(1);
+        for name in ["commag", "vision"] {
+            let p = m.preset(name).unwrap();
+            let init = ModelInit::new(name, p);
+            assert_eq!(init.client(&pool).unwrap().len(), p.client_params, "{name}");
+            assert_eq!(init.server(&pool).unwrap().len(), p.server_params, "{name}");
+            assert_eq!(init.inverse(&pool).unwrap().len(), p.inverse_params, "{name}");
+        }
+    }
+
+    #[test]
+    fn concat_split_roundtrip() {
+        let Some(m) = manifest() else { return };
+        let p = m.preset("commag").unwrap();
+        let init = ModelInit::new("commag", p);
+        let pool = RngPool::new(2);
+        let c = init.client(&pool).unwrap();
+        let s = init.server(&pool).unwrap();
+        let full = init.concat_full(&c, &s).unwrap();
+        let (c2, s2) = init.split_full(&full).unwrap();
+        assert_eq!(c, c2);
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn layer_mats_roundtrip_layout() {
+        let Some(m) = manifest() else { return };
+        let p = m.preset("commag").unwrap();
+        let init = ModelInit::new("commag", p);
+        // identity-ish mats with recognizable values
+        let mats: Vec<Tensor> = p
+            .server_layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let data: Vec<f32> = (0..(l.d_in + 1) * l.d_out)
+                    .map(|j| (i * 1000 + j) as f32)
+                    .collect();
+                Tensor::new(vec![l.d_in + 1, l.d_out], data).unwrap()
+            })
+            .collect();
+        let flat = init.server_from_layer_mats(&mats).unwrap();
+        assert_eq!(flat.len(), p.server_params);
+        // first layer: W occupies d_in*d_out, then bias = last row values
+        let l0 = &p.server_layers[0];
+        assert_eq!(flat.data[0], 0.0);
+        assert_eq!(flat.data[l0.d_in * l0.d_out], (l0.d_in * l0.d_out) as f32);
+    }
+}

@@ -1,0 +1,235 @@
+//! O-RAN system substrate: the topology, channel, cost, and latency models
+//! of §IV (Eq 16–20).
+//!
+//! One regional cloud (non-RT-RIC, hosting the rApps) plus `M` near-RT-RICs
+//! (each an xApp-running edge server). Per-batch processing times `Q_{C,m}`,
+//! `Q_{S,m}` and slice-specific control-loop deadlines `t_round` are drawn
+//! per client from the Table III distributions (the paper's own emulation
+//! parameters — this IS the paper's hardware model, see DESIGN.md §3).
+//! The m-plane fiber uplink has total budget `B`; a round's allocation is a
+//! fraction vector over the selected clients.
+
+use crate::config::SimConfig;
+use crate::sim::{uniform, RngPool};
+
+/// Static profile of one near-RT-RIC / xApp / rApp trio.
+#[derive(Debug, Clone)]
+pub struct RicProfile {
+    pub id: usize,
+    /// slice class served (0=eMBB, 1=mMTC, 2=URLLC) — sets the deadline class
+    pub slice_class: usize,
+    /// Q_C,m: per-batch client-side processing time (s)
+    pub q_c: f64,
+    /// Q_S,m: per-batch server-side (rApp GPU) processing time (s)
+    pub q_s: f64,
+    /// t_round: slice-specific O-RAN control-loop deadline (s)
+    pub t_round: f64,
+    /// local sample count (sets the smashed-data upload size S_m)
+    pub n_samples: usize,
+}
+
+/// The whole O-RAN federation.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub rics: Vec<RicProfile>,
+    /// total uplink bandwidth B (bits/s)
+    pub bandwidth_bps: f64,
+}
+
+impl Topology {
+    /// Build from config; all draws come from dedicated RNG substreams so
+    /// the topology is identical across frameworks (paired comparison).
+    pub fn build(cfg: &SimConfig) -> Self {
+        let pool = RngPool::new(cfg.seed);
+        let rics = (0..cfg.num_clients)
+            .map(|m| {
+                let mut rng = pool.stream("ric_profile", m as u64);
+                RicProfile {
+                    id: m,
+                    slice_class: m % 3,
+                    q_c: uniform(&mut rng, cfg.q_c_range.0, cfg.q_c_range.1),
+                    q_s: uniform(&mut rng, cfg.q_s_range.0, cfg.q_s_range.1),
+                    t_round: uniform(&mut rng, cfg.t_round_range.0, cfg.t_round_range.1),
+                    n_samples: cfg.samples_per_client,
+                }
+            })
+            .collect();
+        Self { rics, bandwidth_bps: cfg.bandwidth_bps }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rics.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rics.is_empty()
+    }
+}
+
+/// Per-round wire sizes (bytes) of one framework's uplink traffic.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct UploadSizes {
+    /// model-parameter bytes uploaded by client m (omega*d, or d unsplit)
+    pub model_bytes: f64,
+    /// intermediate-feature bytes uploaded by client m per round
+    pub feature_bytes: f64,
+}
+
+impl UploadSizes {
+    pub fn total(&self) -> f64 {
+        self.model_bytes + self.feature_bytes
+    }
+}
+
+/// Uplink transfer time (Eq 19): `T^co_m = (S_m + omega*d) / (b_m * B)`,
+/// sizes in bytes, B in bits/s.
+pub fn uplink_time(bytes: f64, frac: f64, bandwidth_bps: f64) -> f64 {
+    assert!(frac > 0.0, "uplink_time with zero bandwidth fraction");
+    bytes * 8.0 / (frac * bandwidth_bps)
+}
+
+/// Communication resource cost of one round (Eq 16):
+/// `R_co = sum_m a_m b_m B p_c` — bandwidth-seconds priced at p_c.
+/// With constraints (22a)/(22b) the selected fractions sum to 1, so a fully
+/// subscribed round costs exactly `B * p_c`.
+pub fn comm_cost(fracs: &[f64], bandwidth_bps: f64, p_c: f64) -> f64 {
+    fracs.iter().sum::<f64>() * bandwidth_bps * p_c / 1e9 // per-Gbps unit
+}
+
+/// Computation resource cost of one round (Eq 17):
+/// `R_cp = sum_m a_m E (Q_C,m + Q_S,m) p_tr` (both sides billed — the
+/// difference from O-RANFed/MCORANFed the paper calls out).
+pub fn comp_cost(selected: &[&RicProfile], e: usize, p_tr: f64) -> f64 {
+    selected
+        .iter()
+        .map(|r| e as f64 * (r.q_c + r.q_s) * p_tr)
+        .sum()
+}
+
+/// One round's latency decomposition (Eq 18).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundLatency {
+    /// max_m (E*Q_C,m + T^co_m): client compute + uplink phase
+    pub client_phase: f64,
+    /// max_m (E*Q_S,m): server compute phase
+    pub server_phase: f64,
+    /// the slowest client's uplink time alone (feeds Algorithm 1's t_max)
+    pub max_uplink: f64,
+}
+
+impl RoundLatency {
+    pub fn total(&self) -> f64 {
+        self.client_phase + self.server_phase
+    }
+}
+
+/// Evaluate Eq 18 for a synchronous round: selected clients, their bandwidth
+/// fractions, per-client upload sizes, and E local updates. `extra_uplink_per
+/// _update` models frameworks whose transfers happen inside each local update
+/// (vanilla SFL's per-batch smashed/gradient ping-pong) — SplitMe and the FL
+/// baselines pass 0.
+pub fn round_latency(
+    selected: &[&RicProfile],
+    fracs: &[f64],
+    sizes: &[UploadSizes],
+    e: usize,
+    bandwidth_bps: f64,
+    extra_uplink_per_update: f64,
+    client_time_scale: f64,
+) -> RoundLatency {
+    assert_eq!(selected.len(), fracs.len());
+    assert_eq!(selected.len(), sizes.len());
+    let mut lat = RoundLatency::default();
+    for ((r, &f), s) in selected.iter().zip(fracs).zip(sizes) {
+        let per_round_bytes = s.total() + extra_uplink_per_update * e as f64;
+        let t_co = uplink_time(per_round_bytes, f, bandwidth_bps);
+        let t_client = e as f64 * r.q_c * client_time_scale + t_co;
+        lat.client_phase = lat.client_phase.max(t_client);
+        lat.server_phase = lat.server_phase.max(e as f64 * r.q_s);
+        lat.max_uplink = lat.max_uplink.max(t_co);
+    }
+    lat
+}
+
+/// Total weighted round cost (Eq 20):
+/// `rho (R_co + R_cp) + (1-rho) T_total`.
+pub fn total_cost(rho: f64, r_co: f64, r_cp: f64, t_total: f64) -> f64 {
+    rho * (r_co + r_cp) + (1.0 - rho) * t_total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        let mut cfg = SimConfig::commag();
+        cfg.num_clients = 8;
+        Topology::build(&cfg)
+    }
+
+    #[test]
+    fn profiles_within_table_iii_ranges() {
+        let t = topo();
+        for r in &t.rics {
+            assert!((0.34e-3..=0.46e-3).contains(&r.q_c), "{:?}", r);
+            assert!((1.2e-3..=1.6e-3).contains(&r.q_s), "{:?}", r);
+            assert!((50e-3..=100e-3).contains(&r.t_round), "{:?}", r);
+            assert_eq!(r.slice_class, r.id % 3);
+        }
+    }
+
+    #[test]
+    fn topology_is_deterministic() {
+        let a = topo();
+        let b = topo();
+        assert_eq!(a.rics[3].q_c, b.rics[3].q_c);
+        assert_eq!(a.rics[5].t_round, b.rics[5].t_round);
+    }
+
+    #[test]
+    fn uplink_time_eq19() {
+        // 1 MB at 20% of 1 Gbps = 8e6 bits / 2e8 bps = 40 ms
+        let t = uplink_time(1e6, 0.2, 1e9);
+        assert!((t - 0.04).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_is_max_over_clients() {
+        let t = topo();
+        let sel: Vec<&RicProfile> = t.rics.iter().take(3).collect();
+        let sizes = vec![UploadSizes { model_bytes: 1e5, feature_bytes: 0.0 }; 3];
+        let fr = vec![0.5, 0.25, 0.25];
+        let lat = round_latency(&sel, &fr, &sizes, 10, 1e9, 0.0, 1.0);
+        // client phase >= every individual client's time
+        for ((r, &f), s) in sel.iter().zip(&fr).zip(&sizes) {
+            let own = 10.0 * r.q_c + uplink_time(s.total(), f, 1e9);
+            assert!(lat.client_phase >= own - 1e-15);
+        }
+        assert!(lat.server_phase >= 10.0 * sel[0].q_s - 1e-15);
+        assert!(lat.total() > 0.0);
+    }
+
+    #[test]
+    fn sfl_per_update_traffic_scales_with_e() {
+        let t = topo();
+        let sel: Vec<&RicProfile> = t.rics.iter().take(2).collect();
+        let sizes = vec![UploadSizes::default(); 2];
+        let fr = vec![0.5, 0.5];
+        let l1 = round_latency(&sel, &fr, &sizes, 1, 1e9, 2e5, 1.0);
+        let l10 = round_latency(&sel, &fr, &sizes, 10, 1e9, 2e5, 1.0);
+        assert!(l10.max_uplink > 9.0 * l1.max_uplink);
+    }
+
+    #[test]
+    fn cost_models() {
+        let t = topo();
+        let sel: Vec<&RicProfile> = t.rics.iter().take(4).collect();
+        // fully-subscribed round: sum fracs = 1 -> R_co = B*p_c (in Gbps units)
+        let rco = comm_cost(&[0.25; 4], 1e9, 1.0);
+        assert!((rco - 1.0).abs() < 1e-12);
+        let rcp = comp_cost(&sel, 10, 1.0);
+        assert!(rcp > 0.0);
+        let tot = total_cost(0.8, rco, rcp, 0.1);
+        assert!((tot - (0.8 * (rco + rcp) + 0.2 * 0.1)).abs() < 1e-12);
+    }
+}

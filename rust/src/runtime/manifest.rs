@@ -1,0 +1,204 @@
+//! The AOT manifest (artifacts/manifest.json) written by `python -m compile.aot`.
+//!
+//! It is the single source of truth tying L3 to L2: parameter layouts, batch
+//! shapes, the per-preset artifact names, and the layer table driving the
+//! Step-4 inversion.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonio::Json;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub presets: HashMap<String, PresetManifest>,
+    pub artifacts: HashMap<String, ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct PresetManifest {
+    pub batch: usize,
+    /// local updates folded into one `*_chunk` artifact dispatch (perf §)
+    pub chunk: usize,
+    pub num_classes: usize,
+    pub split_dim: usize,
+    pub input_shape: Vec<usize>,
+    pub client_params: usize,
+    pub server_params: usize,
+    pub inverse_params: usize,
+    pub full_params: usize,
+    pub eta_c: f32,
+    pub eta_s: f32,
+    pub server_layers: Vec<ServerLayer>,
+    pub artifacts: HashMap<String, String>,
+}
+
+/// One server layer of the inversion table (Eq 8-9 of the paper).
+#[derive(Debug, Clone)]
+pub struct ServerLayer {
+    pub d_in: usize,
+    pub d_out: usize,
+    pub act: bool,
+    /// artifact computing this layer's (O~^T O~, O~^T act^{-1}(Z)) batch sums
+    pub gram: String,
+    /// artifact applying the recovered layer forward
+    pub apply: String,
+    /// index into the inv_acts output tuple supplying Z_l; -1 = the labels
+    pub z_index: i64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+    pub hlo_bytes: usize,
+}
+
+fn parse_layer(j: &Json) -> Result<ServerLayer> {
+    Ok(ServerLayer {
+        d_in: j.get("d_in")?.as_usize()?,
+        d_out: j.get("d_out")?.as_usize()?,
+        act: j.get("act")?.as_bool()?,
+        gram: j.get("gram")?.as_str()?.to_string(),
+        apply: j.get("apply")?.as_str()?.to_string(),
+        z_index: j.get("z_index")?.as_i64()?,
+    })
+}
+
+fn parse_preset(j: &Json) -> Result<PresetManifest> {
+    Ok(PresetManifest {
+        batch: j.get("batch")?.as_usize()?,
+        chunk: j.opt("chunk").map(|v| v.as_usize()).transpose()?.unwrap_or(1),
+        num_classes: j.get("num_classes")?.as_usize()?,
+        split_dim: j.get("split_dim")?.as_usize()?,
+        input_shape: j.get("input_shape")?.as_usize_vec()?,
+        client_params: j.get("client_params")?.as_usize()?,
+        server_params: j.get("server_params")?.as_usize()?,
+        inverse_params: j.get("inverse_params")?.as_usize()?,
+        full_params: j.get("full_params")?.as_usize()?,
+        eta_c: j.get("eta_c")?.as_f64()? as f32,
+        eta_s: j.get("eta_s")?.as_f64()? as f32,
+        server_layers: j
+            .get("server_layers")?
+            .as_arr()?
+            .iter()
+            .map(parse_layer)
+            .collect::<Result<_>>()?,
+        artifacts: j
+            .get("artifacts")?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), v.as_str()?.to_string())))
+            .collect::<Result<_>>()?,
+    })
+}
+
+fn parse_artifact(j: &Json) -> Result<ArtifactEntry> {
+    Ok(ArtifactEntry {
+        file: j.get("file")?.as_str()?.to_string(),
+        inputs: j
+            .get("inputs")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize_vec())
+            .collect::<Result<_>>()?,
+        outputs: j
+            .get("outputs")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize_vec())
+            .collect::<Result<_>>()?,
+        hlo_bytes: j.get("hlo_bytes")?.as_usize()?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let presets = j
+            .get("presets")?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), parse_preset(v).with_context(|| format!("preset {k}"))?)))
+            .collect::<Result<HashMap<_, _>>>()?;
+        let artifacts = j
+            .get("artifacts")?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), parse_artifact(v).with_context(|| format!("artifact {k}"))?)))
+            .collect::<Result<HashMap<_, _>>>()?;
+        let m = Manifest { presets, artifacts, dir };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Default location: `$REPRO_ARTIFACTS` or `<repo root>/artifacts`.
+    pub fn load_default() -> Result<Self> {
+        if let Ok(dir) = std::env::var("REPRO_ARTIFACTS") {
+            return Self::load(dir);
+        }
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        Self::load(root.join("artifacts"))
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&PresetManifest> {
+        self.presets
+            .get(name)
+            .with_context(|| format!("unknown preset {name:?} (have: {:?})", self.preset_names()))
+    }
+
+    pub fn preset_names(&self) -> Vec<&str> {
+        self.presets.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        let entry = self
+            .artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?;
+        Ok(self.dir.join(&entry.file))
+    }
+
+    fn validate(&self) -> Result<()> {
+        for (pname, p) in &self.presets {
+            for (role, art) in &p.artifacts {
+                if !self.artifacts.contains_key(art) {
+                    bail!("preset {pname}: artifact for {role} ({art}) missing from manifest");
+                }
+            }
+            for l in &p.server_layers {
+                if !self.artifacts.contains_key(&l.gram) || !self.artifacts.contains_key(&l.apply) {
+                    bail!("preset {pname}: inversion artifacts for layer {}x{} missing", l.d_in, l.d_out);
+                }
+            }
+            let chain_ok = p.server_layers.first().map(|l| l.d_in) == Some(p.split_dim)
+                && p.server_layers.last().map(|l| l.d_out) == Some(p.num_classes);
+            if !chain_ok {
+                bail!("preset {pname}: server layer chain inconsistent with split_dim/num_classes");
+            }
+        }
+        Ok(())
+    }
+}
+
+impl PresetManifest {
+    pub fn artifact(&self, role: &str) -> Result<&str> {
+        self.artifacts
+            .get(role)
+            .map(|s| s.as_str())
+            .with_context(|| format!("preset has no artifact role {role:?}"))
+    }
+
+    /// Input feature element count per sample.
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}

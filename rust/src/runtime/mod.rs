@@ -1,0 +1,169 @@
+//! PJRT runtime: load AOT HLO-text artifacts once, execute them from the
+//! coordinator hot path.
+//!
+//! Pattern (see /opt/xla-example/load_hlo/): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format — xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos (64-bit instruction ids).
+//!
+//! The engine is deliberately single-threaded: the PJRT wrapper types are not
+//! `Send`/`Sync`, and the O-RAN "parallelism" of the paper is *simulated
+//! time* (sim::Clock), not host concurrency — all 50 near-RT-RICs share one
+//! process and one compiled executable per artifact.
+
+pub mod manifest;
+pub mod tensor;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{ArtifactEntry, Manifest, PresetManifest, ServerLayer};
+pub use tensor::Tensor;
+
+/// Cumulative execution statistics, keyed by artifact name (perf pass input).
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+/// Compiled-executable cache over one PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    execs: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<HashMap<String, ExecStats>>,
+}
+
+impl Engine {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            execs: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn from_default_manifest() -> Result<Self> {
+        Self::new(Manifest::load_default()?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&PresetManifest> {
+        self.manifest.preset(name)
+    }
+
+    /// Compile (or fetch from cache) one artifact.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.execs.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.artifact_path(name)?;
+        let path_str = path
+            .to_str()
+            .with_context(|| format!("non-utf8 artifact path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        self.execs.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Eagerly compile every artifact a preset needs (startup, off hot path).
+    pub fn warmup_preset(&self, preset: &str) -> Result<()> {
+        let p = self.manifest.preset(preset)?.clone();
+        for art in p.artifacts.values() {
+            self.ensure_compiled(art)?;
+        }
+        for l in &p.server_layers {
+            self.ensure_compiled(&l.gram)?;
+            self.ensure_compiled(&l.apply)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact. Inputs are checked against the manifest shapes;
+    /// outputs come back as host tensors (the lowered modules return tuples).
+    pub fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let entry = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?;
+        if entry.inputs.len() != inputs.len() {
+            bail!(
+                "artifact {name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            if &t.dims != spec {
+                bail!("artifact {name}: input {i} shape {:?} != manifest {:?}", t.dims, spec);
+            }
+        }
+        self.ensure_compiled(name)?;
+
+        let start = Instant::now();
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let outs = {
+            let execs = self.execs.borrow();
+            let exe = execs.get(name).expect("ensured above");
+            exe.execute::<xla::Literal>(&lits)
+                .with_context(|| format!("executing artifact {name}"))?
+        };
+        // single CPU device, return_tuple=True → one tuple buffer
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        let parts = lit.to_tuple()?;
+        let result: Vec<Tensor> = parts
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<_>>()?;
+        if result.len() != entry.outputs.len() {
+            bail!(
+                "artifact {name}: manifest promises {} outputs, got {}",
+                entry.outputs.len(),
+                result.len()
+            );
+        }
+
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(name.to_string()).or_default();
+        s.calls += 1;
+        s.total_secs += start.elapsed().as_secs_f64();
+        Ok(result)
+    }
+
+    /// Per-artifact wallclock accounting for EXPERIMENTS.md §Perf.
+    pub fn stats(&self) -> Vec<(String, ExecStats)> {
+        let mut v: Vec<_> = self
+            .stats
+            .borrow()
+            .iter()
+            .map(|(k, s)| (k.clone(), s.clone()))
+            .collect();
+        v.sort_by(|a, b| b.1.total_secs.total_cmp(&a.1.total_secs));
+        v
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

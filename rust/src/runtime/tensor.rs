@@ -1,0 +1,93 @@
+//! Host-side f32 tensors and conversions to/from PJRT [`xla::Literal`]s.
+//!
+//! Everything crossing the artifact boundary is f32 (the AOT manifest only
+//! emits f32 shapes), so a flat `Vec<f32>` + dims is all we need.
+
+use anyhow::{bail, Context, Result};
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("tensor dims {:?} need {} elements, got {}", dims, n, data.len());
+        }
+        Ok(Self { dims, data })
+    }
+
+    pub fn zeros(dims: &[usize]) -> Self {
+        let n = dims.iter().product();
+        Self { dims: dims.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar1(v: f32) -> Self {
+        Self { dims: vec![1], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Bytes on the wire — the unit of the O-RAN communication accounting.
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&self.data);
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal is not an array")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Tensor::new(dims, data)
+    }
+
+    /// Stack equally-shaped tensors along a new leading axis (chunked-step
+    /// artifact inputs).
+    pub fn stack(parts: &[&Tensor]) -> Result<Tensor> {
+        let Some(first) = parts.first() else {
+            bail!("stack of zero tensors");
+        };
+        let mut dims = vec![parts.len()];
+        dims.extend_from_slice(&first.dims);
+        let mut data = Vec::with_capacity(first.len() * parts.len());
+        for p in parts {
+            if p.dims != first.dims {
+                bail!("stack shape mismatch: {:?} vs {:?}", p.dims, first.dims);
+            }
+            data.extend_from_slice(&p.data);
+        }
+        Tensor::new(dims, data)
+    }
+
+    /// In-place axpy: `self += alpha * other` (used by the aggregator).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) -> Result<()> {
+        if self.dims != other.dims {
+            bail!("axpy shape mismatch: {:?} vs {:?}", self.dims, other.dims);
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Algorithm 1: deadline-aware selection of local trainers (P1).
+//!
+//! At each round the concerned rApp admits every near-RT-RIC whose estimated
+//! round time `E·(Q_C,m + Q_S,m) + t_estimate` fits its slice-specific
+//! control-loop deadline `t_round,m`. The communication-time estimate is the
+//! `alpha`-weighted average of the *measured* max uplink time of the previous
+//! two rounds; round 0 uses the pessimistic
+//! `t_max^0 = max_m M(S_m + omega d)/B` (uniform bandwidth, all M selected),
+//! which deliberately starts from the paper's "extreme point" (§V-B: E=20,
+//! |A_t|=8) and relaxes as real measurements arrive.
+
+use crate::oran::{RicProfile, Topology, UploadSizes};
+
+/// Rolling state of the t_estimate heuristic.
+#[derive(Debug, Clone)]
+pub struct DeadlineSelector {
+    alpha: f64,
+    /// t_max^k (last round) and t_max^{k-1}
+    t_max_k: f64,
+    t_max_km1: f64,
+}
+
+impl DeadlineSelector {
+    /// `sizes[m]` must describe what client m WOULD upload in a round — used
+    /// only for the pessimistic round-0 estimate.
+    pub fn new(topo: &Topology, sizes: &[UploadSizes], alpha: f64) -> Self {
+        let m = topo.len() as f64;
+        let t0 = sizes
+            .iter()
+            .map(|s| m * s.total() * 8.0 / topo.bandwidth_bps)
+            .fold(0.0_f64, f64::max);
+        Self { alpha, t_max_k: t0, t_max_km1: t0 }
+    }
+
+    /// Current communication-time estimate (weighted average of Alg 1 L7).
+    pub fn t_estimate(&self) -> f64 {
+        self.alpha * self.t_max_k + (1.0 - self.alpha) * self.t_max_km1
+    }
+
+    /// Run Algorithm 1: admit every RIC whose compute + estimated comm time
+    /// meets its deadline. `compute_time(r)` is the per-round local compute
+    /// model — `E (Q_C + Q_S)` for split frameworks, `E·Q_full` for unsplit
+    /// O-RANFed (which has no rApp training phase).
+    pub fn select<'a, F>(&self, topo: &'a Topology, compute_time: F) -> Vec<&'a RicProfile>
+    where
+        F: Fn(&RicProfile) -> f64,
+    {
+        let t_est = self.t_estimate();
+        topo.rics
+            .iter()
+            .filter(|r| compute_time(r) + t_est <= r.t_round)
+            .collect()
+    }
+
+    /// Feed back the measured max uplink time of the finished round (Alg 1
+    /// line 7 keeps the two most recent values).
+    pub fn observe(&mut self, measured_max_uplink: f64) {
+        self.t_max_km1 = self.t_max_k;
+        self.t_max_k = measured_max_uplink;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn setup(m: usize) -> (Topology, Vec<UploadSizes>) {
+        let mut cfg = SimConfig::commag();
+        cfg.num_clients = m;
+        cfg.b_min = 1.0 / m as f64;
+        let topo = Topology::build(&cfg);
+        let sizes = vec![UploadSizes { model_bytes: 28e3, feature_bytes: 65e3 }; m];
+        (topo, sizes)
+    }
+
+    #[test]
+    fn round0_estimate_is_pessimistic_uniform_share() {
+        let (topo, sizes) = setup(50);
+        let sel = DeadlineSelector::new(&topo, &sizes, 0.7);
+        let expect = 50.0 * (28e3 + 65e3) * 8.0 / 1e9;
+        assert!((sel.t_estimate() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn selection_respects_deadline_invariant() {
+        let (topo, sizes) = setup(50);
+        let sel = DeadlineSelector::new(&topo, &sizes, 0.7);
+        let e = 20usize;
+        let chosen = sel.select(&topo, |r| e as f64 * (r.q_c + r.q_s));
+        for r in &chosen {
+            assert!(e as f64 * (r.q_c + r.q_s) + sel.t_estimate() <= r.t_round);
+        }
+    }
+
+    #[test]
+    fn smaller_estimate_admits_more_trainers() {
+        let (topo, sizes) = setup(50);
+        let mut sel = DeadlineSelector::new(&topo, &sizes, 0.7);
+        let e = 20usize;
+        let ct = |r: &RicProfile| e as f64 * (r.q_c + r.q_s);
+        let before = sel.select(&topo, ct).len();
+        // after observing a fast real round, the estimate shrinks
+        sel.observe(1e-3);
+        sel.observe(1e-3);
+        let after = sel.select(&topo, ct).len();
+        assert!(after >= before);
+        assert!(after > 40, "nearly all trainers should fit: {after}");
+    }
+
+    #[test]
+    fn lower_e_admits_at_least_as_many() {
+        let (topo, sizes) = setup(50);
+        let mut sel = DeadlineSelector::new(&topo, &sizes, 0.7);
+        sel.observe(30e-3);
+        sel.observe(30e-3);
+        let n_e20 = sel.select(&topo, |r| 20.0 * (r.q_c + r.q_s)).len();
+        let n_e5 = sel.select(&topo, |r| 5.0 * (r.q_c + r.q_s)).len();
+        assert!(n_e5 >= n_e20);
+    }
+
+    #[test]
+    fn observe_keeps_two_round_window() {
+        let (topo, sizes) = setup(10);
+        let mut sel = DeadlineSelector::new(&topo, &sizes, 0.7);
+        sel.observe(0.010);
+        sel.observe(0.020);
+        // 0.7*0.020 + 0.3*0.010
+        assert!((sel.t_estimate() - 0.017).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,252 @@
+//! Simulation substrate: the simulated clock and deterministic per-entity
+//! RNG streams.
+//!
+//! The paper's testbed (8×RTX4090 + 50×i5 CPUs) is replaced by a
+//! discrete-time simulator (DESIGN.md §3): every latency in the figures is
+//! *simulated* time advanced from the paper's own cost model (Eq 18–19) with
+//! per-batch processing times drawn from the Table III distributions, while
+//! the learning numerics run for real on PJRT-CPU.
+//!
+//! The RNG is an in-tree xoshiro256++ (the offline environment has no `rand`
+//! crate): SplitMix64 seeding, full 2^256-1 period, passes BigCrush per the
+//! reference implementation — deterministic and reproducible across runs.
+
+/// Simulated wall clock, in seconds. Strictly monotone.
+#[derive(Debug, Clone, Default)]
+pub struct Clock {
+    now: f64,
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        Self { now: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance by `dt` seconds; panics on negative dt (a modelling bug).
+    pub fn advance(&mut self, dt: f64) {
+        assert!(dt >= 0.0 && dt.is_finite(), "clock step must be finite >= 0, got {dt}");
+        self.now += dt;
+    }
+}
+
+/// xoshiro256++ PRNG (Blackman & Vigna), seeded via SplitMix64.
+#[derive(Debug, Clone)]
+pub struct Rng64 {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng64 {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        Self {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's rejection-free-ish method with
+    /// rejection fallback to stay unbiased).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = {
+                let m = (x as u128) * (n as u128);
+                ((m >> 64) as u64, m as u64)
+            };
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return hi as usize;
+            }
+        }
+    }
+
+    /// Uniform integer in `[lo, hi]` inclusive.
+    pub fn range_i32(&mut self, lo: i32, hi: i32) -> i32 {
+        assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as usize) as i32
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, slice: &mut [T]) {
+        for i in (1..slice.len()).rev() {
+            let j = self.below(i + 1);
+            slice.swap(i, j);
+        }
+    }
+}
+
+/// Deterministic RNG with stable per-entity substreams: entity `i`'s stream
+/// depends only on (root seed, label, i), so adding clients or reordering
+/// calls never perturbs other entities — essential for paired baseline runs.
+#[derive(Debug, Clone)]
+pub struct RngPool {
+    seed: u64,
+}
+
+impl RngPool {
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+
+    /// A substream keyed by (label, index).
+    pub fn stream(&self, label: &str, index: u64) -> Rng64 {
+        // FNV-1a over the label, mixed with the index — cheap + stable.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in label.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        Rng64::seed_from_u64(self.seed ^ h ^ index.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+    }
+}
+
+/// `U(lo, hi)` draw.
+pub fn uniform(rng: &mut Rng64, lo: f64, hi: f64) -> f64 {
+    lo + (hi - lo) * rng.f64()
+}
+
+/// Standard normal via Box–Muller.
+pub fn normal(rng: &mut Rng64) -> f64 {
+    loop {
+        let u1 = rng.f64();
+        let u2 = rng.f64();
+        if u1 > f64::MIN_POSITIVE {
+            return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        }
+    }
+}
+
+/// Fill a slice with `N(0, sigma)` f32 samples.
+pub fn fill_normal(rng: &mut Rng64, out: &mut [f32], sigma: f64) {
+    for v in out {
+        *v = (normal(rng) * sigma) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_monotone() {
+        let mut c = Clock::new();
+        c.advance(0.5);
+        c.advance(0.0);
+        assert_eq!(c.now(), 0.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn clock_rejects_negative() {
+        Clock::new().advance(-1.0);
+    }
+
+    #[test]
+    fn streams_are_stable_and_independent() {
+        let pool = RngPool::new(42);
+        let a1 = pool.stream("q_c", 3).next_u64();
+        let a2 = pool.stream("q_c", 3).next_u64();
+        let b = pool.stream("q_c", 4).next_u64();
+        let c = pool.stream("q_s", 3).next_u64();
+        assert_eq!(a1, a2);
+        assert_ne!(a1, b);
+        assert_ne!(a1, c);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = RngPool::new(7).stream("norm", 0);
+        let n = 20_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = normal(&mut rng);
+            sum += v;
+            sq += v * v;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut rng = RngPool::new(7).stream("u", 0);
+        for _ in 0..1000 {
+            let v = uniform(&mut rng, 0.34e-3, 0.46e-3);
+            assert!((0.34e-3..=0.46e-3).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_across_range() {
+        let mut rng = Rng64::seed_from_u64(1);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[rng.below(7)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Rng64::seed_from_u64(5);
+        let mut v: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn xoshiro_reference_vector() {
+        // golden: first outputs for seed_from_u64(0) must stay stable forever
+        let mut rng = Rng64::seed_from_u64(0);
+        let first: Vec<u64> = (0..3).map(|_| rng.next_u64()).collect();
+        let mut rng2 = Rng64::seed_from_u64(0);
+        let again: Vec<u64> = (0..3).map(|_| rng2.next_u64()).collect();
+        assert_eq!(first, again);
+    }
+}

@@ -1,0 +1,97 @@
+//! Step 4 — final model acquisition (Eq 8-9): recover the true server model
+//! `s(.)` from the trained inverse model `s^{-1}(.)` layer by layer.
+//!
+//! For each server layer `l` (in order):
+//!   1. every participating rApp feeds its labels through `s^{-1}` and takes
+//!      the mirrored activation `Z_l` (the supervision; the final layer's
+//!      target is the labels themselves) — the `inv_acts` artifact;
+//!   2. the layer input `O_l` is the already-recovered prefix applied to the
+//!      client's smashed data `c(X_m)` — the `*_apply` artifacts;
+//!   3. per-batch Gram partial sums `(O~^T O~, O~^T act^{-1}(Z))` come from
+//!      the Pallas `*_gram` artifacts and are **all-reduced** (summed) across
+//!      rApps — the paper's one-communication-round GLOO step;
+//!   4. the centralized ridge solve `(A0 + gamma I)^{-1} A1` runs in
+//!      rust::linalg (f64 Cholesky with adaptive jitter).
+
+use anyhow::{bail, Result};
+
+use crate::fl::FlContext;
+use crate::linalg::{ridge_solve, Mat};
+use crate::runtime::Tensor;
+
+/// Per-client inversion inputs: the label batches and the matching smashed
+/// activations produced by the CURRENT aggregated client model.
+pub struct ClientTrace {
+    /// one-hot label batches [B, classes]
+    pub labels: Vec<Tensor>,
+    /// smashed-data batches [B, split_dim], same order
+    pub smashed: Vec<Tensor>,
+}
+
+/// Recover all server layers; returns the per-layer `[W; b]` matrices
+/// ((d_in+1) x d_out) in layer order.
+pub fn recover_server_layers(ctx: &FlContext, wsi: &Tensor, traces: &[ClientTrace]) -> Result<Vec<Tensor>> {
+    if traces.is_empty() {
+        bail!("inversion needs at least one participating rApp");
+    }
+    let p = ctx.preset;
+    let inv_acts = p.artifact("inv_acts")?;
+
+    // (1) supervision: inverse-model activation stacks per client per batch
+    //     acts[c][b][j] = u_{j+1} of client c's batch b
+    let mut acts: Vec<Vec<Vec<Tensor>>> = Vec::with_capacity(traces.len());
+    for tr in traces {
+        let mut per_batch = Vec::with_capacity(tr.labels.len());
+        for y in &tr.labels {
+            per_batch.push(ctx.engine.run(inv_acts, &[wsi, y])?);
+        }
+        acts.push(per_batch);
+    }
+
+    // (2)-(4): walk the layer table, carrying each batch's running input O
+    let mut o_cur: Vec<Vec<Tensor>> = traces.iter().map(|t| t.smashed.clone()).collect();
+    let mut recovered = Vec::with_capacity(p.server_layers.len());
+    for layer in &p.server_layers {
+        let n_aug = layer.d_in + 1;
+        let mut a0 = Mat::zeros(n_aug, n_aug);
+        let mut a1 = Mat::zeros(n_aug, layer.d_out);
+        for (c, tr) in traces.iter().enumerate() {
+            for b in 0..tr.labels.len() {
+                let z: &Tensor = if layer.z_index < 0 {
+                    &tr.labels[b]
+                } else {
+                    &acts[c][b][layer.z_index as usize]
+                };
+                let out = ctx.engine.run(&layer.gram, &[&o_cur[c][b], z])?;
+                // all-reduce: sum the partial Grams across rApps/batches
+                a0.axpy(1.0, &Mat::from_f32(n_aug, n_aug, &out[0].data)?)?;
+                a1.axpy(1.0, &Mat::from_f32(n_aug, layer.d_out, &out[1].data)?)?;
+            }
+        }
+        let w = ridge_solve(&a0, &a1, ctx.cfg.ridge_gamma)?;
+        let w_t = Tensor::new(vec![n_aug, layer.d_out], w.to_f32())?;
+
+        // advance every batch's running input through the recovered layer
+        for oc in o_cur.iter_mut() {
+            for o in oc.iter_mut() {
+                let out = ctx.engine.run(&layer.apply, &[&w_t, o])?;
+                *o = out.into_iter().next().expect("apply returns one output");
+            }
+        }
+        recovered.push(w_t);
+    }
+    Ok(recovered)
+}
+
+/// Bytes each rApp contributes to the Gram all-reduce (server-internal GLOO
+/// traffic — reported, but NOT billed on the m-plane uplink; DESIGN.md §7).
+pub fn allreduce_bytes(ctx: &FlContext) -> f64 {
+    ctx.preset
+        .server_layers
+        .iter()
+        .map(|l| {
+            let n = (l.d_in + 1) as f64;
+            (n * n + n * l.d_out as f64) * 4.0
+        })
+        .sum()
+}

@@ -1,0 +1,223 @@
+//! SplitMe — the paper's framework (§III): mutual learning between the
+//! client model and the inverse server model, one upload per global round,
+//! deadline-aware selection (Algorithm 1) + adaptive-E resource allocation
+//! (P2), and layer-wise inversion for the final model.
+
+pub mod inversion;
+
+use anyhow::{Context, Result};
+
+use crate::allocation::solve_p2;
+use crate::fl::{aggregate, run_steps, FlContext, Framework, RoundOutcome};
+use crate::oran::{RicProfile, UploadSizes};
+use crate::runtime::Tensor;
+use crate::selection::DeadlineSelector;
+use inversion::ClientTrace;
+
+pub struct SplitMe {
+    /// aggregated client model w_C
+    wc: Tensor,
+    /// aggregated inverse server model (the rApps' w_S)
+    wsi: Tensor,
+    selector: DeadlineSelector,
+    /// E used in the previous round (paper guard: E is non-increasing)
+    e_last: usize,
+    /// selected set of the most recent round — the rApps that run Step 4
+    last_selected: Vec<usize>,
+}
+
+impl SplitMe {
+    pub fn new(ctx: &FlContext) -> Result<Self> {
+        let sizes = Self::upload_sizes_all(ctx);
+        Ok(Self {
+            wc: ctx.init.client(&ctx.pool)?,
+            wsi: ctx.init.inverse(&ctx.pool)?,
+            selector: DeadlineSelector::new(&ctx.topo, &sizes, ctx.cfg.alpha),
+            e_last: ctx.cfg.e_initial,
+            last_selected: Vec::new(),
+        })
+    }
+
+    /// Per-round uplink of client m: its client-side model (omega*d) plus the
+    /// whole-dataset smashed activations S_m (§V-B: SplitMe "inputs all the
+    /// local data ... to generate the labels for the server").
+    fn upload_sizes_all(ctx: &FlContext) -> Vec<UploadSizes> {
+        (0..ctx.topo.len())
+            .map(|m| UploadSizes {
+                model_bytes: ctx.client_model_bytes(),
+                feature_bytes: ctx.smashed_bytes(m),
+            })
+            .collect()
+    }
+
+    /// Generate the mutual-learning targets z = s^{-1}(Y) for one client's
+    /// label batches (Step 1's "label download"; downlink is free per §IV-B).
+    fn z_targets(&self, ctx: &FlContext, m: usize) -> Result<Vec<Tensor>> {
+        let inv_acts = ctx.preset.artifact("inv_acts")?;
+        let mut out = Vec::new();
+        for (_, y) in &ctx.shards[m].data.batches {
+            let acts = ctx.engine.run(inv_acts, &[&self.wsi, y])?;
+            out.push(acts.into_iter().last().expect("inv_acts returns >=1 output"));
+        }
+        Ok(out)
+    }
+
+    /// Smashed activations of client m's whole shard under parameters `wc`.
+    fn smash_all(&self, ctx: &FlContext, m: usize, wc: &Tensor) -> Result<Vec<Tensor>> {
+        let fwd = ctx.preset.artifact("client_fwd")?;
+        let mut out = Vec::new();
+        for (x, _) in &ctx.shards[m].data.batches {
+            let r = ctx.engine.run(fwd, &[wc, x])?;
+            out.push(r.into_iter().next().expect("client_fwd returns one output"));
+        }
+        Ok(out)
+    }
+
+    /// Collect inversion traces (labels + fresh smashed data) from the given
+    /// clients under the current aggregated client model.
+    fn traces(&self, ctx: &FlContext, clients: &[usize]) -> Result<Vec<ClientTrace>> {
+        clients
+            .iter()
+            .map(|&m| {
+                let labels: Vec<Tensor> =
+                    ctx.shards[m].data.batches.iter().map(|(_, y)| y.clone()).collect();
+                let smashed = self.smash_all(ctx, m, &self.wc)?;
+                Ok(ClientTrace { labels, smashed })
+            })
+            .collect()
+    }
+
+    /// Clients used for Step 4: the last round's selected rApps, topped up
+    /// (round-robin) to `inversion_clients` so the pooled Gram stays full
+    /// rank even when few trainers were admitted.
+    fn inversion_set(&self, ctx: &FlContext) -> Vec<usize> {
+        let want = ctx.cfg.inversion_clients.clamp(1, ctx.topo.len());
+        let mut set = self.last_selected.clone();
+        set.truncate(want);
+        let mut m = 0usize;
+        while set.len() < want {
+            if !set.contains(&m) {
+                set.push(m);
+            }
+            m += 1;
+        }
+        set
+    }
+}
+
+impl Framework for SplitMe {
+    fn name(&self) -> &'static str {
+        "splitme"
+    }
+
+    fn run_round(&mut self, ctx: &FlContext, round: usize) -> Result<RoundOutcome> {
+        let cfg = &ctx.cfg;
+
+        // ---- P1: deadline-aware selection (Algorithm 1) ----
+        let e_sel = self.e_last;
+        let mut selected: Vec<&RicProfile> = self
+            .selector
+            .select(&ctx.topo, |r| e_sel as f64 * (r.q_c + r.q_s));
+        if selected.is_empty() {
+            // degenerate deadline draw: admit the single most-slack RIC so
+            // training always progresses (and the estimate can relax)
+            let best = ctx
+                .topo
+                .rics
+                .iter()
+                .max_by(|a, b| {
+                    let slack = |r: &RicProfile| r.t_round - e_sel as f64 * (r.q_c + r.q_s);
+                    slack(a).total_cmp(&slack(b))
+                })
+                .expect("non-empty topology");
+            selected.push(best);
+        }
+        let sizes: Vec<UploadSizes> = selected
+            .iter()
+            .map(|r| UploadSizes {
+                model_bytes: ctx.client_model_bytes(),
+                feature_bytes: ctx.smashed_bytes(r.id),
+            })
+            .collect();
+
+        // ---- P2: bandwidth + adaptive E ----
+        let alloc = solve_p2(cfg, &selected, &sizes, self.e_last, true, 1.0, true);
+        let e = alloc.e;
+        self.e_last = e;
+        self.selector.observe(alloc.latency.max_uplink);
+
+        // ---- real training: Steps 1-3 ----
+        // Corollary 2/3 schedule: eta ~ 1/sqrt(T) damps the mutual-learning
+        // target drift so the late-round plateau is stable
+        let decay = 1.0 / (1.0 + round as f32 / 8.0).sqrt();
+        let eta_c = Tensor::scalar1(ctx.eta_c().data[0] * decay);
+        let eta_s = Tensor::scalar1(ctx.eta_s().data[0] * decay);
+        let mut wc_parts = Vec::with_capacity(selected.len());
+        let mut wsi_parts = Vec::with_capacity(selected.len());
+        let mut loss_sum = 0f32;
+        let mut loss_n = 0usize;
+
+        for r in &selected {
+            let m = r.id;
+            // Step 1: download w_C and z = s^{-1}(Y_m)
+            let z = self.z_targets(ctx, m).context("generating z targets")?;
+            let shard = &ctx.shards[m].data;
+
+            // Step 2: E client-side KL steps over the reconstructed dataset
+            let (wc_m, ls, ln) = run_steps(
+                ctx,
+                "client_step",
+                "client_step_chunk",
+                self.wc.clone(),
+                e,
+                &eta_c,
+                |t| (shard.batch(t).0, &z[t % z.len()]),
+            )?;
+            loss_sum += ls;
+            loss_n += ln;
+
+            // upload: latest w_C,m + smashed c(X_m) of the WHOLE shard
+            let smashed = self.smash_all(ctx, m, &wc_m)?;
+
+            // Step 3: E inverse-server KL steps on (Y_m, c(X_m))
+            let (wsi_m, ls, ln) = run_steps(
+                ctx,
+                "inv_step",
+                "inv_step_chunk",
+                self.wsi.clone(),
+                e,
+                &eta_s,
+                |t| (shard.batch(t).1, &smashed[t % smashed.len()]),
+            )?;
+            loss_sum += ls;
+            loss_n += ln;
+
+            wc_parts.push(wc_m);
+            wsi_parts.push(wsi_m);
+        }
+
+        // aggregation + broadcast (downlink free)
+        self.wc = aggregate(&wc_parts)?;
+        self.wsi = aggregate(&wsi_parts)?;
+        self.last_selected = selected.iter().map(|r| r.id).collect();
+
+        Ok(RoundOutcome {
+            selected_ids: self.last_selected.clone(),
+            e,
+            comm_bytes: sizes.iter().map(|s| s.total()).sum(),
+            latency: alloc.latency,
+            comm_cost: crate::oran::comm_cost(&alloc.fracs, cfg.bandwidth_bps, cfg.p_c),
+            comp_cost: crate::oran::comp_cost(&selected, e, cfg.p_tr),
+            train_loss: if loss_n > 0 { loss_sum / loss_n as f32 } else { f32::NAN },
+        })
+    }
+
+    /// Step 4: recover s(.) from s^{-1}(.) and concatenate with w_C.
+    fn full_model(&mut self, ctx: &FlContext) -> Result<Tensor> {
+        let clients = self.inversion_set(ctx);
+        let traces = self.traces(ctx, &clients)?;
+        let layers = inversion::recover_server_layers(ctx, &self.wsi, &traces)?;
+        let ws = ctx.init.server_from_layer_mats(&layers)?;
+        ctx.init.concat_full(&self.wc, &ws)
+    }
+}

@@ -1,0 +1,147 @@
+//! Mini-proptest substrate (no `proptest` offline): seeded random-case
+//! property checking with failure reporting that includes the reproducing
+//! case index + seed, plus simple generators over the simulation domain.
+//!
+//! Usage (see rust/tests/proptests.rs):
+//! ```ignore
+//! testkit::check("waterfill sums to 1", 500, |g| {
+//!     let k = g.usize_in(1..=40);
+//!     let bytes = g.vec_f64(k, 1e3..1e7);
+//!     ...
+//!     Ok(())
+//! });
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use crate::sim::Rng64;
+
+/// Per-case random generator handed to the property closure.
+pub struct Gen {
+    rng: Rng64,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, range: std::ops::RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, range: std::ops::Range<f64>) -> f64 {
+        range.start + (range.end - range.start) * self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f64(&mut self, n: usize, range: std::ops::Range<f64>) -> Vec<f64> {
+        (0..n).map(|_| self.f64_in(range.clone())).collect()
+    }
+
+    pub fn vec_f32(&mut self, n: usize, range: std::ops::Range<f64>) -> Vec<f32> {
+        (0..n).map(|_| self.f64_in(range.clone()) as f32).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.below(items.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Rng64 {
+        &mut self.rng
+    }
+}
+
+/// Root seed: override with `REPRO_PROPTEST_SEED` to replay a failure.
+fn root_seed() -> u64 {
+    std::env::var("REPRO_PROPTEST_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x5eed_2025)
+}
+
+/// Run `cases` random cases of `prop`; panics with the case index and seed
+/// on the first failure so it can be replayed deterministically.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<()>,
+{
+    let seed = root_seed();
+    for case in 0..cases {
+        let mut g = Gen {
+            rng: Rng64::seed_from_u64(seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            case,
+        };
+        if let Err(e) = prop(&mut g) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases} \
+                 (replay with REPRO_PROPTEST_SEED={seed}): {e:#}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            anyhow::bail!($($fmt)+);
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            anyhow::bail!(concat!("assertion failed: ", stringify!($cond)));
+        }
+    };
+}
+
+pub use prop_assert;
+
+/// Approximate equality for property checks.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<()> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(anyhow!("{a} !~ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_good_property() {
+        check("sum is commutative", 100, |g| {
+            let a = g.f64_in(-10.0..10.0);
+            let b = g.f64_in(-10.0..10.0);
+            close(a + b, b + a, 1e-12)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn check_reports_failures() {
+        check("always fails at 3", 10, |g| {
+            if g.case == 3 {
+                anyhow::bail!("boom");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        check("ranges", 200, |g| {
+            let n = g.usize_in(1..=7);
+            prop_assert!((1..=7).contains(&n), "n={n}");
+            let v = g.f64_in(2.0..3.0);
+            prop_assert!((2.0..3.0).contains(&v), "v={v}");
+            let xs = g.vec_f32(n, 0.0..1.0);
+            prop_assert!(xs.len() == n);
+            Ok(())
+        });
+    }
+}

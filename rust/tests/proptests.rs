@@ -1,0 +1,271 @@
+//! Property-based tests (testkit, the in-tree mini-proptest) over the L3
+//! coordinator invariants: bandwidth allocation, selection, aggregation,
+//! cost/latency models, linalg, and the JSON substrate.
+
+use repro::allocation::{solve_p2, waterfill};
+use repro::config::SimConfig;
+use repro::fl::{aggregate, sample_clients};
+use repro::jsonio::Json;
+use repro::linalg::{gram, matmul, ridge_solve, Mat};
+use repro::oran::{self, Topology, UploadSizes};
+use repro::prop_assert;
+use repro::runtime::Tensor;
+use repro::selection::DeadlineSelector;
+use repro::sim::{fill_normal, RngPool};
+use repro::testkit::{check, close};
+
+// --------------------------------------------------------------- allocation
+
+#[test]
+fn waterfill_simplex_and_floor_invariants() {
+    check("waterfill: sum=1, floor respected", 300, |g| {
+        let k = g.usize_in(1..=45);
+        let b_min = g.f64_in(0.001..(1.0 / k as f64).min(0.02));
+        let ct = g.vec_f64(k, 0.0..0.05);
+        let by = g.vec_f64(k, 1e3..5e6);
+        let fr = waterfill(&ct, &by, 1e9, b_min);
+        close(fr.iter().sum::<f64>(), 1.0, 1e-7)?;
+        for &f in &fr {
+            prop_assert!(f >= b_min - 1e-9, "frac {f} below floor {b_min}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn waterfill_minimizes_makespan_vs_random_feasible() {
+    check("waterfill optimality vs random feasible points", 150, |g| {
+        let k = g.usize_in(2..=10);
+        let b_min = 0.01;
+        let ct = g.vec_f64(k, 0.0..0.02);
+        let by = g.vec_f64(k, 1e4..2e6);
+        let fr = waterfill(&ct, &by, 1e9, b_min);
+        let makespan = |fr: &[f64]| -> f64 {
+            ct.iter()
+                .zip(&by)
+                .zip(fr)
+                .map(|((&c, &s), &f)| c + s * 8.0 / (f * 1e9))
+                .fold(0.0_f64, f64::max)
+        };
+        let opt = makespan(&fr);
+        // random feasible competitor: dirichlet-ish then floor-projected
+        for _ in 0..5 {
+            let mut cand = g.vec_f64(k, 0.1..1.0);
+            let sum: f64 = cand.iter().sum();
+            let spare = 1.0 - b_min * k as f64;
+            for c in cand.iter_mut() {
+                *c = b_min + spare * *c / sum;
+            }
+            prop_assert!(
+                opt <= makespan(&cand) + 1e-9,
+                "waterfill {opt} beaten by random {}",
+                makespan(&cand)
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn p2_invariants() {
+    check("solve_p2: e bounds + simplex", 100, |g| {
+        let mut cfg = SimConfig::commag();
+        cfg.e_max = g.usize_in(2..=20);
+        cfg.e_initial = cfg.e_max;
+        let topo = Topology::build(&cfg);
+        let k = g.usize_in(1..=20);
+        let sel: Vec<_> = topo.rics.iter().take(k).collect();
+        let sizes: Vec<UploadSizes> = (0..k)
+            .map(|_| UploadSizes {
+                model_bytes: g.f64_in(1e3..1e5),
+                feature_bytes: g.f64_in(1e3..1e6),
+            })
+            .collect();
+        let e_last = g.usize_in(1..=cfg.e_max);
+        let alloc = solve_p2(&cfg, &sel, &sizes, e_last, true, 1.0, true);
+        prop_assert!(alloc.e >= 1 && alloc.e <= e_last, "E={} e_last={e_last}", alloc.e);
+        close(alloc.fracs.iter().sum::<f64>(), 1.0, 1e-7)?;
+        prop_assert!(alloc.latency.total() > 0.0);
+        prop_assert!(alloc.objective >= alloc.round_cost, "K_eps >= 1 must hold");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------- selection
+
+#[test]
+fn selection_deadline_invariant() {
+    check("Algorithm 1 never violates a deadline", 150, |g| {
+        let mut cfg = SimConfig::commag();
+        cfg.num_clients = g.usize_in(1..=50);
+        cfg.b_min = 1.0 / cfg.num_clients as f64;
+        cfg.seed = g.usize_in(0..=10_000) as u64;
+        let topo = Topology::build(&cfg);
+        let sizes = vec![
+            UploadSizes { model_bytes: 28e3, feature_bytes: 65e3 };
+            topo.len()
+        ];
+        let mut sel = DeadlineSelector::new(&topo, &sizes, cfg.alpha);
+        // random observation history
+        for _ in 0..g.usize_in(0..=5) {
+            sel.observe(g.f64_in(0.0..0.1));
+        }
+        let e = g.usize_in(1..=20);
+        let chosen = sel.select(&topo, |r| e as f64 * (r.q_c + r.q_s));
+        for r in chosen {
+            prop_assert!(
+                e as f64 * (r.q_c + r.q_s) + sel.t_estimate() <= r.t_round + 1e-12,
+                "client {} would violate its deadline",
+                r.id
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn random_selection_invariants() {
+    check("sample_clients: distinct, in-range, right count", 200, |g| {
+        let m = g.usize_in(1..=60);
+        let k = g.usize_in(1..=60);
+        let pool = RngPool::new(g.usize_in(0..=1000) as u64);
+        let ids = sample_clients(&pool, "sel", g.usize_in(0..=300), m, k);
+        prop_assert!(ids.len() == k.min(m));
+        let mut d = ids.clone();
+        d.dedup();
+        prop_assert!(d.len() == ids.len(), "duplicates in {ids:?}");
+        prop_assert!(ids.iter().all(|&i| i < m));
+        Ok(())
+    });
+}
+
+// -------------------------------------------------------------- aggregation
+
+#[test]
+fn aggregation_is_affine_invariant() {
+    check("aggregate: mean within min/max, exact on constants", 200, |g| {
+        let n = g.usize_in(1..=20);
+        let len = g.usize_in(1..=128);
+        let parts: Vec<Tensor> = (0..n)
+            .map(|_| Tensor::new(vec![len], g.vec_f32(len, -5.0..5.0)).unwrap())
+            .collect();
+        let avg = aggregate(&parts).unwrap();
+        for i in 0..len {
+            let vals: Vec<f32> = parts.iter().map(|p| p.data[i]).collect();
+            let lo = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            prop_assert!(
+                avg.data[i] >= lo - 1e-4 && avg.data[i] <= hi + 1e-4,
+                "mean outside hull at {i}"
+            );
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------------- linalg
+
+#[test]
+fn ridge_solves_spd_systems() {
+    check("ridge_solve recovers planted solutions", 60, |g| {
+        let n = g.usize_in(1..=24);
+        let m = g.usize_in(1..=8);
+        let rows = n + g.usize_in(1..=32);
+        let mut rng = RngPool::new(g.case as u64).stream("mat", 0);
+        let mut data = vec![0f32; rows * n];
+        fill_normal(&mut rng, &mut data, 1.0);
+        let a = Mat::from_f32(rows, n, &data).unwrap();
+        let a0 = gram(&a);
+        let mut wdata = vec![0f32; n * m];
+        fill_normal(&mut rng, &mut wdata, 1.0);
+        let w = Mat::from_f32(n, m, &wdata).unwrap();
+        let a1 = matmul(&a0, &w).unwrap();
+        let x = ridge_solve(&a0, &a1, 1e-9).unwrap();
+        for (got, want) in x.data.iter().zip(&w.data) {
+            close(*got, *want, 1e-4)?;
+        }
+        Ok(())
+    });
+}
+
+// --------------------------------------------------------------- cost model
+
+#[test]
+fn latency_monotone_in_e_and_bytes() {
+    check("Eq 18 monotonicity", 150, |g| {
+        let mut cfg = SimConfig::commag();
+        cfg.seed = g.usize_in(0..=9999) as u64;
+        let topo = Topology::build(&cfg);
+        let k = g.usize_in(1..=10);
+        let sel: Vec<_> = topo.rics.iter().take(k).collect();
+        let fr = vec![1.0 / k as f64; k];
+        let small = vec![UploadSizes { model_bytes: 1e4, feature_bytes: 1e4 }; k];
+        let big = vec![UploadSizes { model_bytes: 2e4, feature_bytes: 3e4 }; k];
+        let e = g.usize_in(1..=19);
+        let l_small = oran::round_latency(&sel, &fr, &small, e, 1e9, 0.0, 1.0);
+        let l_big = oran::round_latency(&sel, &fr, &big, e, 1e9, 0.0, 1.0);
+        let l_more_e = oran::round_latency(&sel, &fr, &small, e + 1, 1e9, 0.0, 1.0);
+        prop_assert!(l_big.total() >= l_small.total());
+        prop_assert!(l_more_e.total() >= l_small.total());
+        prop_assert!(l_small.client_phase >= l_small.max_uplink);
+        Ok(())
+    });
+}
+
+// --------------------------------------------------------------------- json
+
+#[test]
+fn json_roundtrips_arbitrary_trees() {
+    check("jsonio roundtrip", 300, |g| {
+        fn build(g: &mut repro::testkit::Gen, depth: usize) -> Json {
+            let pick = if depth == 0 { g.usize_in(0..=3) } else { g.usize_in(0..=5) };
+            match pick {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => {
+                    // grid-aligned doubles survive text roundtrip exactly
+                    Json::num((g.f64_in(-1e6..1e6) * 64.0).round() / 64.0)
+                }
+                3 => Json::str(format!("s{}-é✓", g.usize_in(0..=999))),
+                4 => Json::arr((0..g.usize_in(0..=4)).map(|_| build(g, depth - 1)).collect()),
+                _ => Json::obj(
+                    (0..g.usize_in(0..=4))
+                        .map(|i| {
+                            let key = format!("k{i}");
+                            (key, build(g, depth - 1))
+                        })
+                        .map(|(k, v)| (Box::leak(k.into_boxed_str()) as &str, v))
+                        .collect(),
+                ),
+            }
+        }
+        let tree = build(g, 3);
+        let text = tree.to_string_pretty();
+        let back = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        prop_assert!(back == tree, "roundtrip mismatch for {text}");
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------------- config
+
+#[test]
+fn config_json_roundtrip_random_fields() {
+    check("SimConfig json roundtrip", 100, |g| {
+        let mut c = SimConfig::commag();
+        c.num_clients = g.usize_in(1..=50);
+        c.b_min = (1.0 / c.num_clients as f64) * g.f64_in(0.1..1.0);
+        c.rho = g.f64_in(0.0..1.0);
+        c.e_max = g.usize_in(1..=30);
+        c.e_initial = g.usize_in(1..=c.e_max);
+        c.seed = g.usize_in(0..=1_000_000) as u64;
+        let back = SimConfig::from_json(&Json::parse(&c.to_json().to_string_pretty()).unwrap())
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        prop_assert!(back.num_clients == c.num_clients);
+        close(back.b_min, c.b_min, 1e-12)?;
+        close(back.rho, c.rho, 1e-12)?;
+        prop_assert!(back.e_initial == c.e_initial && back.e_max == c.e_max);
+        prop_assert!(back.seed == c.seed);
+        Ok(())
+    });
+}
