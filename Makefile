@@ -1,0 +1,14 @@
+# Build-time entry points. `make artifacts` must run before any rust test,
+# bench, or CLI invocation: it AOT-lowers the L2 JAX/Pallas functions to the
+# HLO-text artifacts + manifest.json that rust/src/runtime loads.
+
+.PHONY: artifacts tier1 bench
+
+artifacts:
+	cd python && python -m compile.aot --out ../rust/artifacts/manifest.json
+
+tier1:
+	cd rust && cargo build --release && cargo test -q
+
+bench: artifacts
+	cd rust && cargo bench --bench perf_micro

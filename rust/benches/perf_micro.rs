@@ -1,25 +1,30 @@
 //! Performance microbenches (EXPERIMENTS.md §Perf input): per-artifact
-//! execution latency, the L3-only components (waterfill, selection, ridge
-//! solve, aggregation), and the end-to-end round step per framework.
+//! execution latency through the prepared path (interned ids + cached
+//! literals), the L3-only components (waterfill, selection, blocked gram,
+//! ridge solve, aggregation), and the end-to-end round step per framework.
+//!
+//! Writes the machine-readable perf trajectory to BENCH_perf.json
+//! (schema in PERF.md; override the path with REPRO_BENCH_JSON).
 
 use repro::allocation::waterfill;
 use repro::config::SimConfig;
 use repro::coordinator::Runner;
 use repro::fl::aggregate;
-use repro::harness::bench;
+use repro::harness::Recorder;
 use repro::linalg::{gram, ridge_solve, Mat};
 use repro::oran::{Topology, UploadSizes};
-use repro::runtime::{Engine, Tensor};
+use repro::runtime::{Arg, Engine, Tensor};
 use repro::selection::DeadlineSelector;
 use repro::sim::{fill_normal, RngPool};
 
 fn main() {
     let engine = Engine::from_default_manifest().expect("run `make artifacts` first");
     let p = engine.preset("commag").expect("commag preset").clone();
-    engine.warmup_preset("commag").expect("warmup");
+    let plan = engine.warmup_preset("commag").expect("warmup");
     let pool = RngPool::new(1);
+    let mut rec = Recorder::new();
 
-    // ---- L1/L2: hot artifacts --------------------------------------------
+    // ---- L1/L2: hot artifacts (prepared dispatch) ------------------------
     let mut rng = pool.stream("bench", 0);
     let mk = |dims: &[usize], rng: &mut repro::sim::Rng64| {
         let n: usize = dims.iter().product();
@@ -27,53 +32,58 @@ fn main() {
         fill_normal(rng, &mut data, 0.5);
         Tensor::new(dims.to_vec(), data).unwrap()
     };
+    // mutable params stay fresh Tensors; immutable batch inputs are frozen
     let wc = mk(&[p.client_params], &mut rng);
     let wsi = mk(&[p.inverse_params], &mut rng);
     let wf = mk(&[p.full_params], &mut rng);
-    let x = mk(&[p.batch, 32], &mut rng);
+    let x = mk(&[p.batch, 32], &mut rng).freeze();
     let y = {
         let mut t = Tensor::zeros(&[p.batch, p.num_classes]);
         for i in 0..p.batch {
             t.data[i * p.num_classes + i % p.num_classes] = 1.0;
         }
-        t
+        t.freeze()
     };
-    let z = mk(&[p.batch, p.split_dim], &mut rng);
-    let lr = Tensor::scalar1(0.05);
+    let z = mk(&[p.batch, p.split_dim], &mut rng).freeze();
+    let lr = Tensor::scalar1(0.05).freeze();
 
-    let arts = [
-        ("client_step", vec![&wc, &x, &z, &lr]),
-        ("client_fwd", vec![&wc, &x]),
-        ("inv_acts", vec![&wsi, &y]),
-        ("inv_step", vec![&wsi, &y, &z, &lr]),
-        ("fedavg_step", vec![&wf, &x, &y, &lr]),
-        ("full_eval", vec![&wf, &x, &y]),
+    let arts: [(&str, Vec<Arg>); 6] = [
+        ("client_step", vec![Arg::Fresh(&wc), Arg::Cached(&x), Arg::Cached(&z), Arg::Cached(&lr)]),
+        ("client_fwd", vec![Arg::Fresh(&wc), Arg::Cached(&x)]),
+        ("inv_acts", vec![Arg::Fresh(&wsi), Arg::Cached(&y)]),
+        ("inv_step", vec![Arg::Fresh(&wsi), Arg::Cached(&y), Arg::Cached(&z), Arg::Cached(&lr)]),
+        ("fedavg_step", vec![Arg::Fresh(&wf), Arg::Cached(&x), Arg::Cached(&y), Arg::Cached(&lr)]),
+        ("full_eval", vec![Arg::Fresh(&wf), Arg::Cached(&x), Arg::Cached(&y)]),
     ];
-    for (role, inputs) in arts {
-        let name = p.artifact(role).unwrap().to_string();
-        bench(&format!("artifact/{role}"), 3, 30, || {
-            engine.run(&name, &inputs).unwrap();
+    for (role, args) in &arts {
+        let id = plan.role(role).unwrap();
+        rec.bench(&format!("artifact/{role}"), 3, 30, || {
+            engine.run_id(id, args).unwrap();
         });
     }
     // gram + apply (inversion hot path)
-    let o = mk(&[p.batch, 64], &mut rng);
-    let zt = mk(&[p.batch, 64], &mut rng);
-    let gram_art = p.server_layers[0].gram.clone();
-    bench("artifact/gram_64x64", 3, 30, || {
-        engine.run(&gram_art, &[&o, &zt]).unwrap();
+    let o = mk(&[p.batch, 64], &mut rng).freeze();
+    let zt = mk(&[p.batch, 64], &mut rng).freeze();
+    let gram_id = plan.layers[0].gram;
+    rec.bench("artifact/gram_64x64", 3, 30, || {
+        engine.run_id(gram_id, &[Arg::Cached(&o), Arg::Cached(&zt)]).unwrap();
     });
 
     // chunked-vs-single dispatch (the §Perf L2 optimization) and the
     // pure-jnp ablation quantifying the Pallas interpret-mode tax on CPU
-    let ys4 = mk(&[4, p.batch, p.num_classes], &mut rng);
-    let cs4 = mk(&[4, p.batch, p.split_dim], &mut rng);
-    let inv_c4 = p.artifact("inv_step_chunk").unwrap().to_string();
-    bench("artifact/inv_step_c4 (4 updates)", 3, 30, || {
-        engine.run(&inv_c4, &[&wsi, &ys4, &cs4, &lr]).unwrap();
+    let ys4 = mk(&[4, p.batch, p.num_classes], &mut rng).freeze();
+    let cs4 = mk(&[4, p.batch, p.split_dim], &mut rng).freeze();
+    let inv_c4 = plan.role("inv_step_chunk").unwrap();
+    rec.bench("artifact/inv_step_c4 (4 updates)", 3, 30, || {
+        engine
+            .run_id(inv_c4, &[Arg::Fresh(&wsi), Arg::Cached(&ys4), Arg::Cached(&cs4), Arg::Cached(&lr)])
+            .unwrap();
     });
-    let inv_pure = p.artifact("inv_step_pure").unwrap().to_string();
-    bench("artifact/inv_step_pure (no pallas)", 3, 30, || {
-        engine.run(&inv_pure, &[&wsi, &y, &z, &lr]).unwrap();
+    let inv_pure = plan.role("inv_step_pure").unwrap();
+    rec.bench("artifact/inv_step_pure (no pallas)", 3, 30, || {
+        engine
+            .run_id(inv_pure, &[Arg::Fresh(&wsi), Arg::Cached(&y), Arg::Cached(&z), Arg::Cached(&lr)])
+            .unwrap();
     });
 
     // ---- L3-only components ----------------------------------------------
@@ -81,13 +91,13 @@ fn main() {
     let topo = Topology::build(&cfg);
     let ct: Vec<f64> = topo.rics.iter().map(|r| 10.0 * r.q_c).collect();
     let by: Vec<f64> = topo.rics.iter().map(|r| 65e3 + r.id as f64).collect();
-    bench("l3/waterfill_50", 10, 200, || {
+    rec.bench("l3/waterfill_50", 10, 200, || {
         std::hint::black_box(waterfill(&ct, &by, 1e9, 0.02));
     });
 
     let sizes = vec![UploadSizes { model_bytes: 28e3, feature_bytes: 65e3 }; topo.len()];
     let sel = DeadlineSelector::new(&topo, &sizes, 0.7);
-    bench("l3/select_50", 10, 500, || {
+    rec.bench("l3/select_50", 10, 500, || {
         std::hint::black_box(sel.select(&topo, |r| 10.0 * (r.q_c + r.q_s)));
     });
 
@@ -95,16 +105,19 @@ fn main() {
     let mut a_data = vec![0f32; 2048 * 65];
     fill_normal(&mut rng2, &mut a_data, 1.0);
     let a = Mat::from_f32(2048, 65, &a_data).unwrap();
+    rec.bench("l3/gram_2048x65", 3, 50, || {
+        std::hint::black_box(gram(&a));
+    });
     let a0 = gram(&a);
     let mut b_data = vec![0f32; 65 * 64];
     fill_normal(&mut rng2, &mut b_data, 1.0);
     let a1 = Mat::from_f32(65, 64, &b_data).unwrap();
-    bench("l3/ridge_solve_65x64", 3, 50, || {
+    rec.bench("l3/ridge_solve_65x64", 3, 50, || {
         std::hint::black_box(ridge_solve(&a0, &a1, 1e-3).unwrap());
     });
 
     let parts: Vec<Tensor> = (0..35).map(|_| mk(&[p.client_params], &mut rng)).collect();
-    bench("l3/aggregate_35x6272", 5, 100, || {
+    rec.bench("l3/aggregate_35x6272", 5, 100, || {
         std::hint::black_box(aggregate(&parts).unwrap());
     });
 
@@ -117,7 +130,7 @@ fn main() {
         cfg.eval_every = 0;
         let mut runner = Runner::new(&engine, &cfg, kind).unwrap();
         let mut round = 0usize;
-        bench(&format!("e2e/{}_round", kind.name()), 1, 5, || {
+        rec.bench(&format!("e2e/{}_round", kind.name()), 1, 5, || {
             runner.step(round).unwrap();
             round += 1;
         });
@@ -133,5 +146,10 @@ fn main() {
             s.total_secs,
             1e3 * s.total_secs / s.calls.max(1) as f64
         );
+    }
+
+    match rec.write_json(None) {
+        Ok(path) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write BENCH_perf.json: {e}"),
     }
 }

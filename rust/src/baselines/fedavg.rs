@@ -48,6 +48,7 @@ impl FedAvg {
                     let (x, y) = shard.batch(t);
                     (x, y)
                 },
+                ctx.shard_chunks(m),
             )?;
             loss_sum += ls;
             loss_n += ln;

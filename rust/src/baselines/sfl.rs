@@ -16,7 +16,7 @@ use anyhow::Result;
 
 use crate::fl::{aggregate, sample_clients, FlContext, Framework, RoundOutcome};
 use crate::oran::{self, RicProfile, UploadSizes};
-use crate::runtime::Tensor;
+use crate::runtime::{Arg, Tensor};
 
 pub struct VanillaSfl {
     wc: Tensor,
@@ -42,9 +42,9 @@ impl Framework for VanillaSfl {
         let ids = sample_clients(&ctx.pool, "sfl_select", round, ctx.topo.len(), cfg.sfl_k);
         let e = cfg.sfl_e;
         let eta = ctx.eta_c();
-        let fwd = ctx.preset.artifact("client_fwd")?;
-        let server_step = ctx.preset.artifact("sfl_server_step")?;
-        let client_bwd = ctx.preset.artifact("sfl_client_bwd")?;
+        let fwd = ctx.plan.role("client_fwd")?;
+        let server_step = ctx.plan.role("sfl_server_step")?;
+        let client_bwd = ctx.plan.role("sfl_client_bwd")?;
 
         let mut wc_parts = Vec::with_capacity(ids.len());
         let mut ws_parts = Vec::with_capacity(ids.len());
@@ -56,14 +56,26 @@ impl Framework for VanillaSfl {
             let mut ws_m = self.ws.clone();
             for t in 0..e {
                 let (x, y) = shard.batch(t);
-                let smash = ctx.engine.run(fwd, &[&wc_m, x])?.remove(0);
-                let out = ctx.engine.run(server_step, &[&ws_m, &smash, y, &eta])?;
+                let smash = ctx
+                    .engine
+                    .run_id(fwd, &[Arg::Fresh(&wc_m), Arg::Cached(x)])?
+                    .remove(0);
+                let out = ctx.engine.run_id(
+                    server_step,
+                    &[Arg::Fresh(&ws_m), Arg::Fresh(&smash), Arg::Cached(y), Arg::Cached(&eta)],
+                )?;
                 let mut it = out.into_iter();
                 ws_m = it.next().expect("sfl_server_step: params");
                 let gsm = it.next().expect("sfl_server_step: gsmash");
                 loss_sum += it.next().expect("sfl_server_step: loss").data[0];
                 loss_n += 1;
-                wc_m = ctx.engine.run(client_bwd, &[&wc_m, x, &gsm, &eta])?.remove(0);
+                wc_m = ctx
+                    .engine
+                    .run_id(
+                        client_bwd,
+                        &[Arg::Fresh(&wc_m), Arg::Cached(x), Arg::Fresh(&gsm), Arg::Cached(&eta)],
+                    )?
+                    .remove(0);
             }
             wc_parts.push(wc_m);
             ws_parts.push(ws_m);

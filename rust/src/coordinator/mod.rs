@@ -60,8 +60,7 @@ impl<'a> Runner<'a> {
         let out = self.framework.run_round(&self.ctx, round)?;
         self.clock.advance(out.latency.total());
 
-        let evaluate = self.ctx.cfg.eval_every > 0
-            && (round % self.ctx.cfg.eval_every == 0 || round + 1 == usize::MAX);
+        let evaluate = self.ctx.cfg.eval_every > 0 && round % self.ctx.cfg.eval_every == 0;
         let (accuracy, test_loss) = if evaluate {
             let wfull = self.framework.full_model(&self.ctx)?;
             self.ctx.evaluate(&wfull)?
@@ -112,5 +111,11 @@ impl<'a> Runner<'a> {
 
     pub fn sim_time(&self) -> f64 {
         self.clock.now()
+    }
+
+    /// Per-artifact wallclock accounting of the underlying engine (the
+    /// §Perf profile; see `benches/perf_micro.rs`).
+    pub fn exec_stats(&self) -> Vec<(String, crate::runtime::ExecStats)> {
+        self.ctx.engine.stats()
     }
 }

@@ -15,15 +15,18 @@
 pub mod commag;
 pub mod vision;
 
-use crate::runtime::Tensor;
+use crate::runtime::{Frozen, Tensor};
 
 /// A batched supervised dataset: inputs pre-packed into fixed-size batch
 /// tensors matching the AOT artifact shapes (the last partial batch is
 /// dropped, as is standard in FL simulators).
+///
+/// Batches are [`Frozen`]: immutable for the whole run, so their PJRT
+/// literals are built once and reused by every framework on every round.
 #[derive(Debug, Clone)]
 pub struct Batched {
     /// (x, y_onehot) pairs; x dims = [batch, ...input], y dims = [batch, classes]
-    pub batches: Vec<(Tensor, Tensor)>,
+    pub batches: Vec<(Frozen, Frozen)>,
     pub batch_size: usize,
     pub num_classes: usize,
 }
@@ -39,7 +42,7 @@ impl Batched {
 
     /// Cyclic batch access — local update `t` of a client consumes batch
     /// `t mod n` (sequential passes over the local data).
-    pub fn batch(&self, step: usize) -> (&Tensor, &Tensor) {
+    pub fn batch(&self, step: usize) -> (&Frozen, &Frozen) {
         let (x, y) = &self.batches[step % self.batches.len()];
         (x, y)
     }
@@ -77,8 +80,8 @@ pub fn pack_batches(
         let mut xdims = vec![batch];
         xdims.extend_from_slice(input_dims);
         batches.push((
-            Tensor::new(xdims, xd).expect("x batch"),
-            Tensor::new(vec![batch, num_classes], yd).expect("y batch"),
+            Tensor::new(xdims, xd).expect("x batch").freeze(),
+            Tensor::new(vec![batch, num_classes], yd).expect("y batch").freeze(),
         ));
     }
     Batched { batches, batch_size: batch, num_classes }

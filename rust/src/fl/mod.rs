@@ -2,26 +2,42 @@
 //! every trainer (SplitMe + baselines) implements, parameter aggregation,
 //! and test-set evaluation.
 
+use std::sync::OnceLock;
+
 use anyhow::{bail, Context, Result};
 
 use crate::config::SimConfig;
 use crate::data::{commag, vision, Batched, ClientShard};
 use crate::model::ModelInit;
 use crate::oran::{RoundLatency, Topology};
-use crate::runtime::{Engine, PresetManifest, Tensor};
+use crate::runtime::{Arg, ChunkStacks, Engine, Frozen, PresetManifest, PresetPlan, Tensor};
 use crate::sim::RngPool;
 
-/// Everything a framework needs for a run: the engine, the O-RAN topology,
-/// the federated data shards, and the parameter initializer. Built once and
-/// shared by all frameworks for paired comparisons (same topology, same
-/// shards, same init streams).
+/// Precomputed chunk-window stacks over one shard's cyclic batches, built
+/// once in [`FlContext::new`] and reused by every framework on every round.
+pub struct ShardChunks {
+    /// stacked input batches `[chunk, batch, ...input]`
+    pub xs: ChunkStacks,
+    /// stacked one-hot label batches `[chunk, batch, classes]`
+    pub ys: ChunkStacks,
+}
+
+/// Everything a framework needs for a run: the engine, the prepared
+/// execution plan, the O-RAN topology, the federated data shards, and the
+/// parameter initializer. Built once and shared by all frameworks for paired
+/// comparisons (same topology, same shards, same init streams).
 pub struct FlContext<'a> {
     pub engine: &'a Engine,
     pub cfg: SimConfig,
     pub preset: &'a PresetManifest,
+    /// interned artifacts + inversion layer table (the prepared hot path)
+    pub plan: PresetPlan,
     pub init: ModelInit<'a>,
     pub topo: Topology,
     pub shards: Vec<ClientShard>,
+    /// per-shard precomputed chunk stacks, parallel to `shards`; empty when
+    /// chunked dispatch is disabled or the preset has no `*_chunk` artifacts
+    pub chunks: Vec<ShardChunks>,
     pub test: Batched,
     pub pool: RngPool,
 }
@@ -30,7 +46,7 @@ impl<'a> FlContext<'a> {
     pub fn new(engine: &'a Engine, cfg: &SimConfig) -> Result<Self> {
         cfg.validate()?;
         let preset = engine.preset(&cfg.preset)?;
-        engine
+        let plan = engine
             .warmup_preset(&cfg.preset)
             .context("compiling preset artifacts")?;
         let (shards, test) = match cfg.preset.as_str() {
@@ -41,25 +57,73 @@ impl<'a> FlContext<'a> {
         if shards.iter().any(|s| s.data.num_batches() == 0) {
             bail!("samples_per_client must be >= batch size {}", preset.batch);
         }
+
+        // plan-build shape validation: every batch tensor is checked against
+        // the manifest once HERE, so the per-dispatch hot path (run_id)
+        // carries no shape loop.
+        let mut xdims = vec![preset.batch];
+        xdims.extend_from_slice(&preset.input_shape);
+        let ydims = vec![preset.batch, preset.num_classes];
+        let all = shards
+            .iter()
+            .flat_map(|s| s.data.batches.iter())
+            .chain(test.batches.iter());
+        for (x, y) in all {
+            if x.dims != xdims || y.dims != ydims {
+                bail!(
+                    "batch shapes ({:?}, {:?}) do not match manifest ({:?}, {:?})",
+                    x.dims, y.dims, xdims, ydims
+                );
+            }
+        }
+
+        // precompute the cyclic chunk stacks once per shard (§Perf): the
+        // chunked dispatch then reuses one frozen stack per window instead
+        // of re-stacking + re-copying inside every chunk iteration
+        let chunk = effective_chunk(preset);
+        let chunks = if chunk > 1 && plan.has_chunk_roles() {
+            shards
+                .iter()
+                .map(|s| {
+                    let xs: Vec<&Tensor> = s.data.batches.iter().map(|(x, _)| x.tensor()).collect();
+                    let ys: Vec<&Tensor> = s.data.batches.iter().map(|(_, y)| y.tensor()).collect();
+                    Ok(ShardChunks {
+                        xs: ChunkStacks::new(&xs, chunk)?,
+                        ys: ChunkStacks::new(&ys, chunk)?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()
+                .context("precomputing chunk stacks")?
+        } else {
+            Vec::new()
+        };
+
         Ok(Self {
             engine,
             cfg: cfg.clone(),
             preset,
+            plan,
             init: ModelInit::new(&cfg.preset, preset),
             topo: Topology::build(cfg),
             shards,
+            chunks,
             test,
             pool: RngPool::new(cfg.seed),
         })
     }
 
-    /// Learning rates as the shape-(1,) tensors the artifacts take.
-    pub fn eta_c(&self) -> Tensor {
-        Tensor::scalar1(self.cfg.eta_c.unwrap_or(self.preset.eta_c))
+    /// Learning rates as frozen shape-(1,) tensors (literal built once).
+    pub fn eta_c(&self) -> Frozen {
+        Tensor::scalar1(self.cfg.eta_c.unwrap_or(self.preset.eta_c)).freeze()
     }
 
-    pub fn eta_s(&self) -> Tensor {
-        Tensor::scalar1(self.cfg.eta_s.unwrap_or(self.preset.eta_s))
+    pub fn eta_s(&self) -> Frozen {
+        Tensor::scalar1(self.cfg.eta_s.unwrap_or(self.preset.eta_s)).freeze()
+    }
+
+    /// Chunk stacks for shard `m`: `(xs, ys)` if precomputed.
+    pub fn shard_chunks(&self, m: usize) -> Option<(&ChunkStacks, &ChunkStacks)> {
+        self.chunks.get(m).map(|c| (&c.xs, &c.ys))
     }
 
     /// Wire size of the client-side model (omega*d of Eq 19), bytes.
@@ -84,12 +148,16 @@ impl<'a> FlContext<'a> {
 
     /// Evaluate a full-model parameter vector on the test set.
     pub fn evaluate(&self, wfull: &Tensor) -> Result<(f32, f32)> {
-        let art = self.preset.artifact("full_eval")?;
+        let art = self.plan.role("full_eval")?;
+        // loop-invariant: convert the model literal once, not per batch
+        let wf = wfull.clone().freeze();
         let mut correct = 0f32;
         let mut loss = 0f32;
         let nb = self.test.num_batches();
         for (x, y) in &self.test.batches {
-            let out = self.engine.run(art, &[wfull, x, y])?;
+            let out = self
+                .engine
+                .run_id(art, &[Arg::Cached(&wf), Arg::Cached(x), Arg::Cached(y)])?;
             correct += out[0].data[0];
             loss += out[1].data[0];
         }
@@ -100,40 +168,80 @@ impl<'a> FlContext<'a> {
     }
 }
 
+/// `REPRO_NO_CHUNK=1` disables the folded chunk dispatch (perf ablation).
+/// Read from the environment once, at first use — toggling the variable
+/// mid-process has no effect (the read was on the per-invocation hot path).
+static NO_CHUNK: OnceLock<bool> = OnceLock::new();
+
+pub fn no_chunk() -> bool {
+    *NO_CHUNK.get_or_init(|| std::env::var("REPRO_NO_CHUNK").map(|v| v == "1").unwrap_or(false))
+}
+
+/// Local updates folded into one `*_chunk` dispatch (1 = chunking off).
+pub fn effective_chunk(preset: &PresetManifest) -> usize {
+    if no_chunk() {
+        1
+    } else {
+        preset.chunk.max(1)
+    }
+}
+
 /// Run `e` local SGD steps of a `(params, a_t, b_t, lr) -> (params', loss)`
 /// step artifact, dispatching the scan-folded `*_chunk` variant for
 /// `floor(e/chunk)` iterations (one PJRT call per `chunk` updates — the §Perf
 /// optimization) and the single-step artifact for the remainder.
 ///
-/// `at(t)` supplies the two per-step batch tensors (cyclic over local data).
+/// `at(t)` supplies the two per-step batch tensors (cyclic over local data);
+/// `chunks` supplies their precomputed window stacks (same cyclic order) for
+/// the folded dispatch — without them the chunk path is skipped.
 /// Returns `(params, loss_sum, steps_counted)`.
 pub fn run_steps<'t>(
     ctx: &FlContext,
     single_role: &str,
     chunk_role: &str,
+    params: Tensor,
+    e: usize,
+    lr: &Frozen,
+    at: impl Fn(usize) -> (&'t Frozen, &'t Frozen),
+    chunks: Option<(&ChunkStacks, &ChunkStacks)>,
+) -> Result<(Tensor, f32, usize)> {
+    run_steps_with(ctx, single_role, chunk_role, params, e, lr, at, chunks, effective_chunk(ctx.preset))
+}
+
+/// [`run_steps`] with the chunk size pinned by the caller — the single-step
+/// path is `chunk = 1`. Exists so the chunk-parity test can compare both
+/// dispatch modes inside one process (the env switch is read only once).
+#[allow(clippy::too_many_arguments)]
+pub fn run_steps_with<'t>(
+    ctx: &FlContext,
+    single_role: &str,
+    chunk_role: &str,
     mut params: Tensor,
     e: usize,
-    lr: &Tensor,
-    at: impl Fn(usize) -> (&'t Tensor, &'t Tensor),
+    lr: &Frozen,
+    at: impl Fn(usize) -> (&'t Frozen, &'t Frozen),
+    chunks: Option<(&ChunkStacks, &ChunkStacks)>,
+    chunk: usize,
 ) -> Result<(Tensor, f32, usize)> {
-    let single = ctx.preset.artifact(single_role)?;
-    // REPRO_NO_CHUNK=1 disables the folded dispatch (perf ablation)
-    let chunk = if std::env::var("REPRO_NO_CHUNK").map(|v| v == "1").unwrap_or(false) {
-        1
-    } else {
-        ctx.preset.chunk.max(1)
-    };
+    let single = ctx.plan.role(single_role)?;
     let mut loss_sum = 0f32;
     let mut n = 0usize;
     let mut t = 0usize;
     if chunk > 1 {
-        if let Ok(chunk_art) = ctx.preset.artifact(chunk_role) {
+        if let (Some(chunk_id), Some((ca, cb))) = (ctx.plan.try_role(chunk_role), chunks) {
+            if ca.chunk() != chunk || cb.chunk() != chunk {
+                bail!(
+                    "chunk stacks built for chunk=({}, {}), dispatch wants {}",
+                    ca.chunk(), cb.chunk(), chunk
+                );
+            }
             while e - t >= chunk {
-                let aa: Vec<&Tensor> = (0..chunk).map(|i| at(t + i).0).collect();
-                let bb: Vec<&Tensor> = (0..chunk).map(|i| at(t + i).1).collect();
-                let xs = Tensor::stack(&aa)?;
-                let zs = Tensor::stack(&bb)?;
-                let out = ctx.engine.run(chunk_art, &[&params, &xs, &zs, lr])?;
+                let xs = ca.window(t)?;
+                let zs = cb.window(t)?;
+                let out = ctx.engine.run_id(
+                    chunk_id,
+                    &[Arg::Fresh(&params), Arg::Cached(xs), Arg::Cached(zs), Arg::Cached(lr)],
+                )?;
                 let mut it = out.into_iter();
                 params = it.next().expect("chunk step: params");
                 // artifact reports the chunk-mean loss
@@ -145,7 +253,10 @@ pub fn run_steps<'t>(
     }
     while t < e {
         let (a, b) = at(t);
-        let out = ctx.engine.run(single, &[&params, a, b, lr])?;
+        let out = ctx.engine.run_id(
+            single,
+            &[Arg::Fresh(&params), Arg::Cached(a), Arg::Cached(b), Arg::Cached(lr)],
+        )?;
         let mut it = out.into_iter();
         params = it.next().expect("step: params");
         loss_sum += it.next().expect("step: loss").data[0];

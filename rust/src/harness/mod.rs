@@ -6,8 +6,14 @@
 //! supports "experiment benches" that run a closure once and report derived
 //! metrics (the paper-figure regenerations, which are minutes-long and make
 //! no sense to repeat 100×).
+//!
+//! A [`Recorder`] additionally collects every [`Stats`] and emits the
+//! machine-readable `BENCH_perf.json` (schema documented in PERF.md) that
+//! tracks the repo's perf trajectory PR over PR.
 
 use std::time::{Duration, Instant};
+
+use crate::jsonio::Json;
 
 /// Result of a timed benchmark.
 #[derive(Debug, Clone)]
@@ -104,6 +110,72 @@ pub fn full_scale() -> bool {
     std::env::var("REPRO_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Collects bench results and writes the `BENCH_perf.json` perf-trajectory
+/// file (name/mean/p50 per bench; full schema in PERF.md).
+#[derive(Default)]
+pub struct Recorder {
+    stats: Vec<Stats>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// [`bench`] + record.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, warmup: usize, iters: usize, f: F) -> &Stats {
+        let s = bench(name, warmup, iters, f);
+        self.stats.push(s);
+        self.stats.last().expect("just pushed")
+    }
+
+    /// Record an externally produced measurement.
+    pub fn record(&mut self, stats: Stats) {
+        self.stats.push(stats);
+    }
+
+    pub fn stats(&self) -> &[Stats] {
+        &self.stats
+    }
+
+    pub fn to_json(&self) -> Json {
+        let benches: Vec<Json> = self
+            .stats
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::str(s.name.clone())),
+                    ("iters", Json::num(s.iters as f64)),
+                    ("mean_secs", Json::num(s.mean.as_secs_f64())),
+                    ("p50_secs", Json::num(s.median.as_secs_f64())),
+                    ("mad_secs", Json::num(s.mad.as_secs_f64())),
+                    ("min_secs", Json::num(s.min.as_secs_f64())),
+                    ("max_secs", Json::num(s.max.as_secs_f64())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("benches", Json::arr(benches)),
+        ])
+    }
+
+    /// Write `BENCH_perf.json`. Default target: `$REPRO_BENCH_JSON`, falling
+    /// back to `../BENCH_perf.json` relative to the process cwd — `cargo
+    /// bench` runs from the crate root (`rust/`), so that lands at the repo
+    /// root. Paths are resolved at runtime: no compile-time checkout paths
+    /// get baked into the binary.
+    pub fn write_json(&self, path: Option<&str>) -> std::io::Result<String> {
+        let path = match path {
+            Some(p) => p.to_string(),
+            None => std::env::var("REPRO_BENCH_JSON")
+                .unwrap_or_else(|_| "../BENCH_perf.json".to_string()),
+        };
+        std::fs::write(&path, self.to_json().to_string_pretty() + "\n")?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,5 +194,25 @@ mod tests {
     fn experiment_passes_value() {
         let v = experiment("three", || 3);
         assert_eq!(v, 3);
+    }
+
+    #[test]
+    fn recorder_emits_parseable_json() {
+        let mut rec = Recorder::new();
+        rec.bench("alpha", 0, 3, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        rec.bench("beta", 0, 3, || {});
+        let j = rec.to_json();
+        let back = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(back.get("schema").unwrap().as_usize().unwrap(), 1);
+        let benches = back.get("benches").unwrap().as_arr().unwrap();
+        assert_eq!(benches.len(), 2);
+        let first = &benches[0];
+        assert_eq!(first.get("name").unwrap().as_str().unwrap(), "alpha");
+        assert_eq!(first.get("iters").unwrap().as_usize().unwrap(), 3);
+        for key in ["mean_secs", "p50_secs", "mad_secs", "min_secs", "max_secs"] {
+            assert!(first.get(key).unwrap().as_f64().unwrap() >= 0.0, "{key}");
+        }
     }
 }

@@ -5,8 +5,18 @@
 //! ((d+1)×(d+1), d ≤ 1024) is done here in f64 Cholesky — pure rust, no
 //! LAPACK custom-calls, which the PJRT CPU plugin of xla_extension 0.5.1
 //! does not register (DESIGN.md §7).
+//!
+//! All kernels are cache-blocked and transpose-aware: inner loops only walk
+//! contiguous row slices of row-major storage (never strided columns), and
+//! working sets are tiled so the Step-4 shapes (gram over 2048×65 traces,
+//! the 1025-wide vision layer) stay inside L1/L2.
 
 use anyhow::{bail, Result};
+
+/// Row-panel height for [`gram`] / [`matmul`] (rows streamed per tile pass).
+const ROW_BLOCK: usize = 128;
+/// Column tile width: 64 f64 = 512 B per row segment, several rows fit L1.
+const COL_BLOCK: usize = 64;
 
 /// Dense row-major f64 matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -38,6 +48,11 @@ impl Mat {
         &mut self.data[r * self.cols + c]
     }
 
+    #[inline]
+    fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
     /// `self += alpha * other` (Gram all-reduce accumulation).
     pub fn axpy(&mut self, alpha: f64, other: &Mat) -> Result<()> {
         if self.rows != other.rows || self.cols != other.cols {
@@ -55,7 +70,10 @@ impl Mat {
 }
 
 /// In-place lower Cholesky of an SPD matrix. Returns the factor L (row-major,
-/// lower triangle; upper left untouched garbage is zeroed).
+/// lower triangle; the upper triangle is zero).
+///
+/// The `sum_k l[i,k] l[j,k]` inner products run over contiguous row
+/// prefixes of L — no strided column walks, no per-element bounds checks.
 pub fn cholesky(a: &Mat) -> Result<Mat> {
     if a.rows != a.cols {
         bail!("cholesky: matrix must be square");
@@ -63,18 +81,21 @@ pub fn cholesky(a: &Mat) -> Result<Mat> {
     let n = a.rows;
     let mut l = Mat::zeros(n, n);
     for i in 0..n {
+        // split so row i (being written) and rows < i (read) coexist
+        let (done, cur) = l.data.split_at_mut(i * n);
+        let ri = &mut cur[..n];
         for j in 0..=i {
             let mut sum = a.at(i, j);
-            for k in 0..j {
-                sum -= l.at(i, k) * l.at(j, k);
-            }
-            if i == j {
+            if j == i {
+                sum -= ri[..j].iter().map(|v| v * v).sum::<f64>();
                 if sum <= 0.0 {
                     bail!("cholesky: not positive definite at pivot {i} (sum={sum:.3e})");
                 }
-                *l.at_mut(i, j) = sum.sqrt();
+                ri[j] = sum.sqrt();
             } else {
-                *l.at_mut(i, j) = sum / l.at(j, j);
+                let rj = &done[j * n..j * n + j];
+                sum -= ri[..j].iter().zip(rj).map(|(x, y)| x * y).sum::<f64>();
+                ri[j] = sum / done[j * n + j];
             }
         }
     }
@@ -82,27 +103,51 @@ pub fn cholesky(a: &Mat) -> Result<Mat> {
 }
 
 /// Solve `L y = b` (forward) then `L^T x = y` (backward) for each column of B.
+///
+/// Loop order is row-oriented: every update is `B[i,:] -= l * B[k,:]`, a
+/// contiguous axpy over the right-hand-side row, instead of the naive
+/// per-column walk that strides through B's storage.
 fn cholesky_solve_inplace(l: &Mat, b: &mut Mat) {
     let n = l.rows;
     let m = b.cols;
-    // forward substitution
+    // forward substitution: row i consumes rows k < i
     for i in 0..n {
-        for c in 0..m {
-            let mut v = b.at(i, c);
-            for k in 0..i {
-                v -= l.at(i, k) * b.at(k, c);
+        let (head, tail) = b.data.split_at_mut(i * m);
+        let bi = &mut tail[..m];
+        let lrow = &l.data[i * n..i * n + i];
+        for (k, &lik) in lrow.iter().enumerate() {
+            if lik == 0.0 {
+                continue;
             }
-            *b.at_mut(i, c) = v / l.at(i, i);
+            let bk = &head[k * m..(k + 1) * m];
+            for (x, &y) in bi.iter_mut().zip(bk) {
+                *x -= lik * y;
+            }
+        }
+        let inv = 1.0 / l.at(i, i);
+        for x in bi.iter_mut() {
+            *x *= inv;
         }
     }
-    // backward substitution with L^T
+    // backward substitution with L^T: row i consumes rows k > i (the
+    // coefficients l[k,i] stride down L's column, but L is small and the
+    // B-row axpys stay contiguous)
     for i in (0..n).rev() {
-        for c in 0..m {
-            let mut v = b.at(i, c);
-            for k in (i + 1)..n {
-                v -= l.at(k, i) * b.at(k, c);
+        let (head, tail) = b.data.split_at_mut((i + 1) * m);
+        let bi = &mut head[i * m..];
+        for k in (i + 1)..n {
+            let lki = l.at(k, i);
+            if lki == 0.0 {
+                continue;
             }
-            *b.at_mut(i, c) = v / l.at(i, i);
+            let bk = &tail[(k - i - 1) * m..(k - i) * m];
+            for (x, &y) in bi.iter_mut().zip(bk) {
+                *x -= lki * y;
+            }
+        }
+        let inv = 1.0 / l.at(i, i);
+        for x in bi.iter_mut() {
+            *x *= inv;
         }
     }
 }
@@ -135,16 +180,44 @@ pub fn ridge_solve(a0: &Mat, a1: &Mat, gamma: f64) -> Result<Mat> {
     bail!("ridge_solve: matrix stayed indefinite up to gamma={g:.3e}")
 }
 
-/// `A^T A` helper (used by tests as an oracle for the Pallas gram path).
+/// `A^T A` (used as an oracle for the Pallas gram path and by the perf
+/// bench over 2048×65 traces).
+///
+/// Transpose-aware: A's rows are streamed once and accumulated into the
+/// upper triangle of G via contiguous rank-1 row updates — the naive
+/// `sum_r A[r,i] A[r,j]` double column walk is O(d²) strided passes over A.
+/// Tiled over row panels and symmetric column tiles so the G segments being
+/// accumulated stay cache-resident even for the 1025-wide vision layer.
 pub fn gram(a: &Mat) -> Mat {
-    let mut g = Mat::zeros(a.cols, a.cols);
-    for i in 0..a.cols {
-        for j in 0..a.cols {
-            let mut s = 0.0;
-            for r in 0..a.rows {
-                s += a.at(r, i) * a.at(r, j);
+    let d = a.cols;
+    let mut g = Mat::zeros(d, d);
+    for r0 in (0..a.rows).step_by(ROW_BLOCK) {
+        let r1 = (r0 + ROW_BLOCK).min(a.rows);
+        for i0 in (0..d).step_by(COL_BLOCK) {
+            let i1 = (i0 + COL_BLOCK).min(d);
+            // upper-triangle tiles only; the mirror fills the rest
+            for j0 in (i0..d).step_by(COL_BLOCK) {
+                let j1 = (j0 + COL_BLOCK).min(d);
+                for r in r0..r1 {
+                    let row = a.row(r);
+                    for i in i0..i1 {
+                        let av = row[i];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let lo = j0.max(i);
+                        let gi = &mut g.data[i * d + lo..i * d + j1];
+                        for (gij, &aj) in gi.iter_mut().zip(&row[lo..j1]) {
+                            *gij += av * aj;
+                        }
+                    }
+                }
             }
-            *g.at_mut(i, j) = s;
+        }
+    }
+    for i in 0..d {
+        for j in 0..i {
+            g.data[i * d + j] = g.data[j * d + i];
         }
     }
     g
@@ -154,15 +227,28 @@ pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
     if a.cols != b.rows {
         bail!("matmul shape mismatch");
     }
-    let mut out = Mat::zeros(a.rows, b.cols);
-    for i in 0..a.rows {
-        for k in 0..a.cols {
-            let av = a.at(i, k);
-            if av == 0.0 {
-                continue;
-            }
-            for j in 0..b.cols {
-                *out.at_mut(i, j) += av * b.at(k, j);
+    let (n, k, m) = (a.rows, a.cols, b.cols);
+    let mut out = Mat::zeros(n, m);
+    // i-blocked ikj order: a panel of B rows (COL_BLOCK x m) is reused by
+    // ROW_BLOCK output rows before moving on, and every inner update is a
+    // contiguous `out[i,:] += a[i,k] * b[k,:]` row axpy.
+    for i0 in (0..n).step_by(ROW_BLOCK) {
+        let i1 = (i0 + ROW_BLOCK).min(n);
+        for k0 in (0..k).step_by(COL_BLOCK) {
+            let k1 = (k0 + COL_BLOCK).min(k);
+            for i in i0..i1 {
+                let arow = a.row(i);
+                let orow = &mut out.data[i * m..(i + 1) * m];
+                for kk in k0..k1 {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * m..(kk + 1) * m];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
             }
         }
     }
@@ -181,6 +267,64 @@ mod tests {
         Mat::from_f32(rows, cols, &data).unwrap()
     }
 
+    /// Textbook references the blocked kernels are checked against.
+    fn naive_gram(a: &Mat) -> Mat {
+        let mut g = Mat::zeros(a.cols, a.cols);
+        for i in 0..a.cols {
+            for j in 0..a.cols {
+                let mut s = 0.0;
+                for r in 0..a.rows {
+                    s += a.at(r, i) * a.at(r, j);
+                }
+                *g.at_mut(i, j) = s;
+            }
+        }
+        g
+    }
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                *out.at_mut(i, j) = s;
+            }
+        }
+        out
+    }
+
+    fn assert_close(got: &Mat, want: &Mat) {
+        assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-9 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn blocked_gram_matches_naive_at_odd_sizes() {
+        // sizes straddling the ROW_BLOCK/COL_BLOCK boundaries
+        for &(rows, cols, seed) in
+            &[(1, 1, 10), (7, 5, 11), (130, 65, 12), (129, 64, 13), (64, 67, 14), (300, 1, 15)]
+        {
+            let a = random_mat(rows, cols, seed);
+            assert_close(&gram(&a), &naive_gram(&a));
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive_at_odd_sizes() {
+        for &(n, k, m, seed) in
+            &[(1, 1, 1, 20), (3, 7, 5, 21), (130, 65, 33, 22), (64, 129, 2, 23), (65, 64, 130, 24)]
+        {
+            let a = random_mat(n, k, seed);
+            let b = random_mat(k, m, seed + 100);
+            assert_close(&matmul(&a, &b).unwrap(), &naive_matmul(&a, &b));
+        }
+    }
+
     #[test]
     fn cholesky_roundtrip() {
         let a = random_mat(24, 12, 1);
@@ -196,6 +340,17 @@ mod tests {
         let rec = matmul(&l, &lt).unwrap();
         for (x, y) in rec.data.iter().zip(&g.data) {
             assert!((x - y).abs() < 1e-6 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn cholesky_upper_triangle_stays_zero() {
+        let a = random_mat(40, 9, 8);
+        let l = cholesky(&gram(&a)).unwrap();
+        for i in 0..l.rows {
+            for j in (i + 1)..l.cols {
+                assert_eq!(l.at(i, j), 0.0);
+            }
         }
     }
 

@@ -6,36 +6,55 @@
 //! HLO *text* is the interchange format — xla_extension 0.5.1 rejects
 //! jax≥0.5 serialized protos (64-bit instruction ids).
 //!
+//! Execution is two-tier (see [`plan`]):
+//! * [`Engine::run_id`] — the prepared hot path: interned [`ArtifactId`],
+//!   cached literals for immutable inputs, no name hashing or shape loops;
+//! * [`Engine::run`] — the name-keyed compatibility path that validates
+//!   arity and shapes against the manifest before delegating to `run_id`.
+//!
 //! The engine is deliberately single-threaded: the PJRT wrapper types are not
 //! `Send`/`Sync`, and the O-RAN "parallelism" of the paper is *simulated
 //! time* (sim::Clock), not host concurrency — all 50 near-RT-RICs share one
 //! process and one compiled executable per artifact.
 
 pub mod manifest;
+pub mod plan;
 pub mod tensor;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 pub use manifest::{ArtifactEntry, Manifest, PresetManifest, ServerLayer};
-pub use tensor::Tensor;
+pub use plan::{Arg, ArtifactId, ChunkStacks, LayerPlan, PresetPlan};
+pub use tensor::{Frozen, Tensor};
 
-/// Cumulative execution statistics, keyed by artifact name (perf pass input).
+/// Cumulative execution statistics per artifact (perf pass input).
 #[derive(Debug, Default, Clone)]
 pub struct ExecStats {
     pub calls: u64,
     pub total_secs: f64,
 }
 
-/// Compiled-executable cache over one PJRT CPU client.
+/// One compiled artifact: the executable plus the manifest facts the hot
+/// path needs (arity, output count) captured once at intern time.
+struct CompiledArtifact {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    n_inputs: usize,
+    n_outputs: usize,
+    stats: ExecStats,
+}
+
+/// Compiled-executable table over one PJRT CPU client, indexed by interned
+/// [`ArtifactId`]s.
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
-    execs: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
-    stats: RefCell<HashMap<String, ExecStats>>,
+    arts: RefCell<Vec<CompiledArtifact>>,
+    ids: RefCell<HashMap<String, ArtifactId>>,
 }
 
 impl Engine {
@@ -44,8 +63,8 @@ impl Engine {
         Ok(Self {
             client,
             manifest,
-            execs: RefCell::new(HashMap::new()),
-            stats: RefCell::new(HashMap::new()),
+            arts: RefCell::new(Vec::new()),
+            ids: RefCell::new(HashMap::new()),
         })
     }
 
@@ -61,11 +80,18 @@ impl Engine {
         self.manifest.preset(name)
     }
 
-    /// Compile (or fetch from cache) one artifact.
-    fn ensure_compiled(&self, name: &str) -> Result<()> {
-        if self.execs.borrow().contains_key(name) {
-            return Ok(());
+    /// Compile an artifact (or fetch it from the table) and return its
+    /// interned handle. Off the hot path: called at warmup / first use.
+    pub fn intern(&self, name: &str) -> Result<ArtifactId> {
+        if let Some(&id) = self.ids.borrow().get(name) {
+            return Ok(id);
         }
+        let entry = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?;
+        let (n_inputs, n_outputs) = (entry.inputs.len(), entry.outputs.len());
         let path = self.manifest.artifact_path(name)?;
         let path_str = path
             .to_str()
@@ -77,25 +103,118 @@ impl Engine {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling artifact {name}"))?;
-        self.execs.borrow_mut().insert(name.to_string(), exe);
-        Ok(())
+        let mut arts = self.arts.borrow_mut();
+        let id = ArtifactId(u32::try_from(arts.len()).expect("artifact table fits u32"));
+        arts.push(CompiledArtifact {
+            name: name.to_string(),
+            exe,
+            n_inputs,
+            n_outputs,
+            stats: ExecStats::default(),
+        });
+        self.ids.borrow_mut().insert(name.to_string(), id);
+        Ok(id)
     }
 
-    /// Eagerly compile every artifact a preset needs (startup, off hot path).
-    pub fn warmup_preset(&self, preset: &str) -> Result<()> {
+    /// Eagerly compile and intern every artifact a preset needs (startup,
+    /// off hot path) and return the prepared plan.
+    pub fn warmup_preset(&self, preset: &str) -> Result<PresetPlan> {
         let p = self.manifest.preset(preset)?.clone();
-        for art in p.artifacts.values() {
-            self.ensure_compiled(art)?;
+        let mut roles = HashMap::with_capacity(p.artifacts.len());
+        for (role, art) in &p.artifacts {
+            roles.insert(role.clone(), self.intern(art)?);
         }
+        let mut layers = Vec::with_capacity(p.server_layers.len());
         for l in &p.server_layers {
-            self.ensure_compiled(&l.gram)?;
-            self.ensure_compiled(&l.apply)?;
+            layers.push(LayerPlan {
+                d_in: l.d_in,
+                d_out: l.d_out,
+                act: l.act,
+                z_index: l.z_index,
+                gram: self.intern(&l.gram)?,
+                apply: self.intern(&l.apply)?,
+            });
         }
-        Ok(())
+        Ok(PresetPlan::new(preset, roles, layers))
     }
 
-    /// Execute an artifact. Inputs are checked against the manifest shapes;
-    /// outputs come back as host tensors (the lowered modules return tuples).
+    /// Artifact name for an interned id (error paths, stats reporting).
+    fn name_of(&self, id: ArtifactId) -> String {
+        self.arts
+            .borrow()
+            .get(id.index())
+            .map(|a| a.name.clone())
+            .unwrap_or_else(|| format!("<unknown ArtifactId {}>", id.index()))
+    }
+
+    /// Execute a prepared artifact — the hot path. Inputs were validated
+    /// when the plan was built; here the only host work is converting
+    /// `Arg::Fresh` tensors (mutable params) to literals.
+    pub fn run_id(&self, id: ArtifactId, args: &[Arg]) -> Result<Vec<Tensor>> {
+        let start = Instant::now();
+        // literals for the fresh (mutable) inputs, rebuilt every call
+        let mut fresh: Vec<Option<xla::Literal>> = Vec::with_capacity(args.len());
+        for a in args {
+            fresh.push(match a {
+                Arg::Fresh(t) => Some(t.to_literal()?),
+                Arg::Cached(_) => None,
+            });
+        }
+        let mut lits: Vec<&xla::Literal> = Vec::with_capacity(args.len());
+        for (a, f) in args.iter().zip(&fresh) {
+            lits.push(match a {
+                Arg::Fresh(_) => f.as_ref().expect("fresh literal built above"),
+                Arg::Cached(fz) => fz.literal()?,
+            });
+        }
+
+        let (lit, n_outputs) = {
+            let arts = self.arts.borrow();
+            let art = arts
+                .get(id.index())
+                .ok_or_else(|| anyhow!("ArtifactId {} not interned on this engine", id.index()))?;
+            if art.n_inputs != args.len() {
+                bail!(
+                    "artifact {}: expected {} inputs, got {}",
+                    art.name,
+                    art.n_inputs,
+                    args.len()
+                );
+            }
+            let outs = art
+                .exe
+                .execute::<&xla::Literal>(&lits)
+                .with_context(|| format!("executing artifact {}", art.name))?;
+            // single CPU device, return_tuple=True → one tuple buffer
+            let lit = outs[0][0]
+                .to_literal_sync()
+                .with_context(|| format!("fetching result of {}", art.name))?;
+            (lit, art.n_outputs)
+        };
+        let parts = lit.to_tuple()?;
+        let result: Vec<Tensor> = parts
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<_>>()?;
+        if result.len() != n_outputs {
+            bail!(
+                "artifact {}: manifest promises {} outputs, got {}",
+                self.name_of(id),
+                n_outputs,
+                result.len()
+            );
+        }
+
+        let mut arts = self.arts.borrow_mut();
+        let s = &mut arts[id.index()].stats;
+        s.calls += 1;
+        s.total_secs += start.elapsed().as_secs_f64();
+        Ok(result)
+    }
+
+    /// Execute an artifact by name — the validated compatibility path.
+    /// Inputs are checked against the manifest shapes (every call), then the
+    /// dispatch goes through [`Engine::run_id`] as fresh (uncached) inputs.
     pub fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         let entry = self
             .manifest
@@ -114,50 +233,20 @@ impl Engine {
                 bail!("artifact {name}: input {i} shape {:?} != manifest {:?}", t.dims, spec);
             }
         }
-        self.ensure_compiled(name)?;
-
-        let start = Instant::now();
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let outs = {
-            let execs = self.execs.borrow();
-            let exe = execs.get(name).expect("ensured above");
-            exe.execute::<xla::Literal>(&lits)
-                .with_context(|| format!("executing artifact {name}"))?
-        };
-        // single CPU device, return_tuple=True → one tuple buffer
-        let lit = outs[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching result of {name}"))?;
-        let parts = lit.to_tuple()?;
-        let result: Vec<Tensor> = parts
-            .iter()
-            .map(Tensor::from_literal)
-            .collect::<Result<_>>()?;
-        if result.len() != entry.outputs.len() {
-            bail!(
-                "artifact {name}: manifest promises {} outputs, got {}",
-                entry.outputs.len(),
-                result.len()
-            );
-        }
-
-        let mut stats = self.stats.borrow_mut();
-        let s = stats.entry(name.to_string()).or_default();
-        s.calls += 1;
-        s.total_secs += start.elapsed().as_secs_f64();
-        Ok(result)
+        let id = self.intern(name)?;
+        let args: Vec<Arg> = inputs.iter().map(|&t| Arg::Fresh(t)).collect();
+        self.run_id(id, &args)
     }
 
-    /// Per-artifact wallclock accounting for EXPERIMENTS.md §Perf.
+    /// Per-artifact wallclock accounting for EXPERIMENTS.md §Perf. Only
+    /// artifacts that actually executed are listed.
     pub fn stats(&self) -> Vec<(String, ExecStats)> {
         let mut v: Vec<_> = self
-            .stats
+            .arts
             .borrow()
             .iter()
-            .map(|(k, s)| (k.clone(), s.clone()))
+            .filter(|a| a.stats.calls > 0)
+            .map(|a| (a.name.clone(), a.stats.clone()))
             .collect();
         v.sort_by(|a, b| b.1.total_secs.total_cmp(&a.1.total_secs));
         v

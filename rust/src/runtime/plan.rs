@@ -1,0 +1,286 @@
+//! Prepared execution — the plan layer between the manifest and the PJRT
+//! dispatch loop.
+//!
+//! Design (see ISSUE 1 / ROADMAP §Perf):
+//!
+//! * **ArtifactId interning.** Every artifact a preset needs is compiled and
+//!   assigned a dense integer [`ArtifactId`] at `Engine::warmup_preset` time.
+//!   The hot path ([`Engine::run_id`](super::Engine::run_id)) indexes a
+//!   `Vec` — no per-call `String` hashing, no manifest lookup, no per-input
+//!   shape loop. Shapes are validated once when the plan and its frozen
+//!   inputs are built (`FlContext::new`), not on every dispatch; the
+//!   name-keyed [`Engine::run`](super::Engine::run) survives as the
+//!   validated compatibility path (tests, one-off calls).
+//!
+//! * **Literal caching.** Immutable inputs are wrapped in
+//!   [`Frozen`], which converts to `xla::Literal` exactly once. Invalidation
+//!   rule: there is none — `Frozen` exposes no mutation, so a cached literal
+//!   can never go stale. Anything that changes between calls (model
+//!   parameters) is passed as [`Arg::Fresh`] and re-converted every call.
+//!
+//! * **Chunk-stack precompute.** The scan-folded `*_chunk` artifacts take
+//!   `[chunk, batch, ...]` stacks of consecutive cyclic batches. Those
+//!   stacks depend only on `(start offset mod num_batches, chunk)`, so
+//!   [`ChunkStacks`] builds each distinct window once (and freezes it)
+//!   instead of re-stacking and re-copying inside every chunk iteration of
+//!   every client of every round.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::tensor::{Frozen, Tensor};
+
+/// Interned handle to a compiled artifact — a dense index into the engine's
+/// executable table. Valid only for the [`super::Engine`] that produced it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ArtifactId(pub(super) u32);
+
+impl ArtifactId {
+    pub(super) fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// One input to [`super::Engine::run_id`].
+#[derive(Clone, Copy)]
+pub enum Arg<'a> {
+    /// Mutable between calls (model parameters): the literal is rebuilt from
+    /// the current host data on every dispatch.
+    Fresh(&'a Tensor),
+    /// Immutable: the literal cached inside the [`Frozen`] is reused.
+    Cached(&'a Frozen),
+}
+
+impl<'a> Arg<'a> {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Arg::Fresh(t) => &t.dims,
+            Arg::Cached(f) => &f.dims,
+        }
+    }
+}
+
+impl<'a> From<&'a Tensor> for Arg<'a> {
+    fn from(t: &'a Tensor) -> Self {
+        Arg::Fresh(t)
+    }
+}
+
+impl<'a> From<&'a Frozen> for Arg<'a> {
+    fn from(f: &'a Frozen) -> Self {
+        Arg::Cached(f)
+    }
+}
+
+/// One server layer of the inversion table with its artifacts interned
+/// (plan-time view of [`super::manifest::ServerLayer`]).
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub d_in: usize,
+    pub d_out: usize,
+    pub act: bool,
+    /// index into the inv_acts output tuple supplying Z_l; -1 = the labels
+    pub z_index: i64,
+    pub gram: ArtifactId,
+    pub apply: ArtifactId,
+}
+
+/// Everything a preset needs, compiled and interned: role -> [`ArtifactId`]
+/// plus the inversion layer table. Built once by
+/// [`super::Engine::warmup_preset`]; lives in `FlContext` for the whole run.
+#[derive(Debug, Clone)]
+pub struct PresetPlan {
+    pub preset: String,
+    roles: HashMap<String, ArtifactId>,
+    pub layers: Vec<LayerPlan>,
+}
+
+impl PresetPlan {
+    pub(super) fn new(
+        preset: &str,
+        roles: HashMap<String, ArtifactId>,
+        layers: Vec<LayerPlan>,
+    ) -> Self {
+        Self { preset: preset.to_string(), roles, layers }
+    }
+
+    pub fn role(&self, role: &str) -> Result<ArtifactId> {
+        self.try_role(role)
+            .ok_or_else(|| anyhow!("preset {:?} has no artifact role {role:?}", self.preset))
+    }
+
+    pub fn try_role(&self, role: &str) -> Option<ArtifactId> {
+        self.roles.get(role).copied()
+    }
+
+    /// Whether any scan-folded `*_chunk` artifact exists — gates the
+    /// chunk-stack precompute in `FlContext::new`.
+    pub fn has_chunk_roles(&self) -> bool {
+        self.roles.keys().any(|r| r.ends_with("_chunk"))
+    }
+}
+
+/// Precomputed cyclic chunk-window stacks over a list of equally-shaped
+/// per-batch tensors.
+///
+/// The chunked dispatch of `fl::run_steps` consumes, at step `t`, the stack
+/// of `parts[(t + i) % n]` for `i in 0..chunk`, with `t` advancing by
+/// `chunk` from 0. Those windows repeat with period `n / gcd(n, chunk)`, so
+/// each distinct window is stacked once at construction and frozen (literal
+/// cached) — the per-iteration cost drops from
+/// stack-copy + literal-copy to a pointer lookup.
+///
+/// Memory tradeoff (deliberate): the `n/gcd(n,chunk)` windows of `chunk`
+/// batches each hold ~`chunk/gcd(n,chunk)`× the underlying data, and each
+/// window (like every `Frozen`) additionally keeps its literal alive for
+/// the stack's lifetime — host RAM is spent to delete per-round copies
+/// from the hot path. See PERF.md §memory for the sizing math.
+pub struct ChunkStacks {
+    chunk: usize,
+    period: usize,
+    /// indexed by start offset mod `period`; only offsets reachable from
+    /// t = 0 stepping by `chunk` are populated
+    windows: Vec<Option<Frozen>>,
+}
+
+impl ChunkStacks {
+    /// Precompute the full cycle of reachable windows (long-lived stacks:
+    /// the per-shard data caches built once in `FlContext::new`).
+    pub fn new(parts: &[&Tensor], chunk: usize) -> Result<Self> {
+        Self::with_limit(parts, chunk, usize::MAX)
+    }
+
+    /// Precompute at most `max_windows` windows, in dispatch order (t = 0
+    /// stepping by `chunk`). Per-round stacks over freshly computed tensors
+    /// use `max_windows = e / chunk` so no more windows are copied than the
+    /// round will actually dispatch.
+    pub fn with_limit(parts: &[&Tensor], chunk: usize, max_windows: usize) -> Result<Self> {
+        if parts.is_empty() {
+            bail!("ChunkStacks over zero tensors");
+        }
+        if chunk == 0 {
+            bail!("ChunkStacks needs chunk >= 1");
+        }
+        let n = parts.len();
+        for p in parts {
+            if p.dims != parts[0].dims {
+                bail!("ChunkStacks shape mismatch: {:?} vs {:?}", p.dims, parts[0].dims);
+            }
+        }
+        let mut windows: Vec<Option<Frozen>> = (0..n).map(|_| None).collect();
+        let mut s = 0usize;
+        let mut built = 0usize;
+        // walk the cycle of reachable start offsets; it closes back at 0
+        while built < max_windows && windows[s].is_none() {
+            let window: Vec<&Tensor> = (0..chunk).map(|i| parts[(s + i) % n]).collect();
+            windows[s] = Some(Frozen::new(
+                Tensor::stack(&window).context("stacking chunk window")?,
+            ));
+            built += 1;
+            s = (s + chunk) % n;
+        }
+        Ok(Self { chunk, period: n, windows })
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Number of per-batch tensors the stacks cycle over.
+    pub fn period(&self) -> usize {
+        self.period
+    }
+
+    /// The frozen `[chunk, ...]` stack for the window starting at step `t`.
+    pub fn window(&self, t: usize) -> Result<&Frozen> {
+        self.windows[t % self.period].as_ref().ok_or_else(|| {
+            anyhow!(
+                "chunk window at offset {} not precomputed (dispatch must start \
+                 at t=0 and step by chunk={})",
+                t % self.period,
+                self.chunk
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parts(n: usize, len: usize) -> Vec<Tensor> {
+        (0..n)
+            .map(|i| Tensor::new(vec![len], (0..len).map(|j| (i * 100 + j) as f32).collect()).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn windows_match_manual_stack() {
+        let ps = parts(6, 3);
+        let refs: Vec<&Tensor> = ps.iter().collect();
+        let cs = ChunkStacks::new(&refs, 2).unwrap();
+        // offsets 0, 2, 4 reachable; window at t=2 stacks parts[2], parts[3]
+        let w = cs.window(2).unwrap();
+        let manual = Tensor::stack(&[&ps[2], &ps[3]]).unwrap();
+        assert_eq!(w.tensor(), &manual);
+        // t advances by chunk: t=8 wraps to offset 2
+        assert_eq!(cs.window(8).unwrap().tensor(), &manual);
+    }
+
+    #[test]
+    fn windows_wrap_cyclically() {
+        let ps = parts(3, 2);
+        let refs: Vec<&Tensor> = ps.iter().collect();
+        // chunk 2 over period 3: offsets 0,2,1 all reachable; window at
+        // offset 2 wraps around to parts[0]
+        let cs = ChunkStacks::new(&refs, 2).unwrap();
+        let w = cs.window(2).unwrap();
+        assert_eq!(w.tensor(), &Tensor::stack(&[&ps[2], &ps[0]]).unwrap());
+    }
+
+    #[test]
+    fn chunk_larger_than_period_repeats_parts() {
+        let ps = parts(2, 2);
+        let refs: Vec<&Tensor> = ps.iter().collect();
+        let cs = ChunkStacks::new(&refs, 4).unwrap();
+        let w = cs.window(0).unwrap();
+        assert_eq!(w.dims, vec![4, 2]);
+        assert_eq!(
+            w.tensor(),
+            &Tensor::stack(&[&ps[0], &ps[1], &ps[0], &ps[1]]).unwrap()
+        );
+    }
+
+    #[test]
+    fn with_limit_builds_only_dispatched_windows() {
+        let ps = parts(6, 2);
+        let refs: Vec<&Tensor> = ps.iter().collect();
+        // e/chunk = 2 windows: offsets 0 and 2 built, offset 4 never visited
+        let cs = ChunkStacks::with_limit(&refs, 2, 2).unwrap();
+        assert!(cs.window(0).is_ok());
+        assert!(cs.window(2).is_ok());
+        assert!(cs.window(4).is_err());
+        // a zero cap still constructs (dispatch will simply never call it)
+        let none = ChunkStacks::with_limit(&refs, 2, 0).unwrap();
+        assert!(none.window(0).is_err());
+    }
+
+    #[test]
+    fn unreachable_offset_is_an_error() {
+        let ps = parts(4, 2);
+        let refs: Vec<&Tensor> = ps.iter().collect();
+        // chunk 2 over period 4: only offsets 0 and 2 reachable
+        let cs = ChunkStacks::new(&refs, 2).unwrap();
+        assert!(cs.window(0).is_ok());
+        assert!(cs.window(1).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_and_mismatched_parts() {
+        assert!(ChunkStacks::new(&[], 2).is_err());
+        let a = Tensor::zeros(&[2]);
+        let b = Tensor::zeros(&[3]);
+        assert!(ChunkStacks::new(&[&a, &b], 2).is_err());
+    }
+}

@@ -1,7 +1,12 @@
 //! Host-side f32 tensors and conversions to/from PJRT [`xla::Literal`]s.
 //!
 //! Everything crossing the artifact boundary is f32 (the AOT manifest only
-//! emits f32 shapes), so a flat `Vec<f32>` + dims is all we need.
+//! emits f32 shapes), so a flat `Vec<f32>` + dims is all we need. Immutable
+//! tensors that cross the boundary many times (data batches, labels, chunk
+//! stacks, lr scalars) are wrapped in [`Frozen`], which builds the literal
+//! once and reuses it on every dispatch.
+
+use std::cell::OnceCell;
 
 use anyhow::{bail, Context, Result};
 
@@ -89,5 +94,111 @@ impl Tensor {
         for a in &mut self.data {
             *a *= alpha;
         }
+    }
+
+    /// Freeze into a literal-cached immutable tensor.
+    pub fn freeze(self) -> Frozen {
+        Frozen::new(self)
+    }
+}
+
+/// An immutable [`Tensor`] whose PJRT literal is materialized at most once
+/// and reused across every dispatch that consumes it.
+///
+/// Correctness contract: the wrapped tensor is never mutated (no `&mut`
+/// accessor exists), so the cached literal can never go stale. Mutable
+/// inputs — model parameters updated every step — must stay plain `Tensor`s
+/// and enter the engine as [`super::Arg::Fresh`], which re-converts the
+/// current values on every call.
+pub struct Frozen {
+    tensor: Tensor,
+    lit: OnceCell<xla::Literal>,
+}
+
+impl Frozen {
+    pub fn new(tensor: Tensor) -> Self {
+        Self { tensor, lit: OnceCell::new() }
+    }
+
+    pub fn tensor(&self) -> &Tensor {
+        &self.tensor
+    }
+
+    /// The cached literal, built on first use (engine hot path).
+    pub fn literal(&self) -> Result<&xla::Literal> {
+        if self.lit.get().is_none() {
+            let lit = self.tensor.to_literal()?;
+            // the engine is single-threaded (see runtime/mod.rs): a lost
+            // set race is impossible, so a failed set is just "already there"
+            let _ = self.lit.set(lit);
+        }
+        Ok(self.lit.get().expect("literal initialized above"))
+    }
+
+    /// Recover the tensor, dropping the cached literal.
+    pub fn into_tensor(self) -> Tensor {
+        self.tensor
+    }
+}
+
+impl std::ops::Deref for Frozen {
+    type Target = Tensor;
+
+    fn deref(&self) -> &Tensor {
+        &self.tensor
+    }
+}
+
+impl From<Tensor> for Frozen {
+    fn from(tensor: Tensor) -> Self {
+        Self::new(tensor)
+    }
+}
+
+impl Clone for Frozen {
+    fn clone(&self) -> Self {
+        // the literal is not cloneable; the copy re-caches lazily
+        Self::new(self.tensor.clone())
+    }
+}
+
+impl std::fmt::Debug for Frozen {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Frozen")
+            .field("tensor", &self.tensor)
+            .field("cached", &self.lit.get().is_some())
+            .finish()
+    }
+}
+
+impl PartialEq for Frozen {
+    fn eq(&self, other: &Self) -> bool {
+        self.tensor == other.tensor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stack_concatenates_along_new_axis() {
+        let a = Tensor::new(vec![2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(vec![2], vec![3.0, 4.0]).unwrap();
+        let s = Tensor::stack(&[&a, &b]).unwrap();
+        assert_eq!(s.dims, vec![2, 2]);
+        assert_eq!(s.data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(Tensor::stack(&[&a, &Tensor::zeros(&[3])]).is_err());
+    }
+
+    #[test]
+    fn frozen_derefs_clones_and_compares_as_tensor() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let f = t.clone().freeze();
+        assert_eq!(f.dims, vec![2, 2]); // field access through Deref
+        assert_eq!(f.tensor(), &t);
+        let g = f.clone();
+        assert_eq!(f, g);
+        assert_eq!(g.into_tensor(), t);
     }
 }

@@ -12,30 +12,41 @@
 //!      rApps — the paper's one-communication-round GLOO step;
 //!   4. the centralized ridge solve `(A0 + gamma I)^{-1} A1` runs in
 //!      rust::linalg (f64 Cholesky with adaptive jitter).
+//!
+//! Dispatches go through the prepared plan: layer artifacts are interned
+//! [`ArtifactId`](crate::runtime::ArtifactId)s, shard labels reuse their
+//! cached literals, and the recovered `[W; b]` of each layer is frozen once
+//! and shared by every per-batch `apply` call.
 
 use anyhow::{bail, Result};
 
 use crate::fl::FlContext;
 use crate::linalg::{ridge_solve, Mat};
-use crate::runtime::Tensor;
+use crate::runtime::{Arg, Frozen, Tensor};
 
-/// Per-client inversion inputs: the label batches and the matching smashed
-/// activations produced by the CURRENT aggregated client model.
-pub struct ClientTrace {
+/// Per-client inversion inputs: the label batches (borrowed from the shard,
+/// literal-cached) and the matching smashed activations produced by the
+/// CURRENT aggregated client model.
+pub struct ClientTrace<'a> {
     /// one-hot label batches [B, classes]
-    pub labels: Vec<Tensor>,
+    pub labels: Vec<&'a Frozen>,
     /// smashed-data batches [B, split_dim], same order
-    pub smashed: Vec<Tensor>,
+    pub smashed: Vec<Frozen>,
 }
 
 /// Recover all server layers; returns the per-layer `[W; b]` matrices
 /// ((d_in+1) x d_out) in layer order.
-pub fn recover_server_layers(ctx: &FlContext, wsi: &Tensor, traces: &[ClientTrace]) -> Result<Vec<Tensor>> {
+pub fn recover_server_layers(
+    ctx: &FlContext,
+    wsi: &Tensor,
+    traces: &[ClientTrace],
+) -> Result<Vec<Tensor>> {
     if traces.is_empty() {
         bail!("inversion needs at least one participating rApp");
     }
-    let p = ctx.preset;
-    let inv_acts = p.artifact("inv_acts")?;
+    let inv_acts = ctx.plan.role("inv_acts")?;
+    // loop-invariant inverse model: one literal conversion for all batches
+    let wsi = wsi.clone().freeze();
 
     // (1) supervision: inverse-model activation stacks per client per batch
     //     acts[c][b][j] = u_{j+1} of client c's batch b
@@ -43,42 +54,53 @@ pub fn recover_server_layers(ctx: &FlContext, wsi: &Tensor, traces: &[ClientTrac
     for tr in traces {
         let mut per_batch = Vec::with_capacity(tr.labels.len());
         for y in &tr.labels {
-            per_batch.push(ctx.engine.run(inv_acts, &[wsi, y])?);
+            per_batch.push(ctx.engine.run_id(inv_acts, &[Arg::Cached(&wsi), Arg::Cached(y)])?);
         }
         acts.push(per_batch);
     }
 
     // (2)-(4): walk the layer table, carrying each batch's running input O
-    let mut o_cur: Vec<Vec<Tensor>> = traces.iter().map(|t| t.smashed.clone()).collect();
-    let mut recovered = Vec::with_capacity(p.server_layers.len());
-    for layer in &p.server_layers {
+    // (frozen: each O feeds one gram and one apply dispatch per layer)
+    let mut o_cur: Vec<Vec<Frozen>> = traces.iter().map(|t| t.smashed.clone()).collect();
+    let mut recovered = Vec::with_capacity(ctx.plan.layers.len());
+    for (li, layer) in ctx.plan.layers.iter().enumerate() {
         let n_aug = layer.d_in + 1;
         let mut a0 = Mat::zeros(n_aug, n_aug);
         let mut a1 = Mat::zeros(n_aug, layer.d_out);
         for (c, tr) in traces.iter().enumerate() {
             for b in 0..tr.labels.len() {
-                let z: &Tensor = if layer.z_index < 0 {
-                    &tr.labels[b]
+                let z: Arg = if layer.z_index < 0 {
+                    Arg::Cached(tr.labels[b])
                 } else {
-                    &acts[c][b][layer.z_index as usize]
+                    Arg::Fresh(&acts[c][b][layer.z_index as usize])
                 };
-                let out = ctx.engine.run(&layer.gram, &[&o_cur[c][b], z])?;
+                let out = ctx.engine.run_id(layer.gram, &[Arg::Cached(&o_cur[c][b]), z])?;
                 // all-reduce: sum the partial Grams across rApps/batches
                 a0.axpy(1.0, &Mat::from_f32(n_aug, n_aug, &out[0].data)?)?;
                 a1.axpy(1.0, &Mat::from_f32(n_aug, layer.d_out, &out[1].data)?)?;
             }
         }
         let w = ridge_solve(&a0, &a1, ctx.cfg.ridge_gamma)?;
-        let w_t = Tensor::new(vec![n_aug, layer.d_out], w.to_f32())?;
+        let w_t = Tensor::new(vec![n_aug, layer.d_out], w.to_f32())?.freeze();
 
         // advance every batch's running input through the recovered layer
-        for oc in o_cur.iter_mut() {
-            for o in oc.iter_mut() {
-                let out = ctx.engine.run(&layer.apply, &[&w_t, o])?;
-                *o = out.into_iter().next().expect("apply returns one output");
+        // (skipped after the final layer — nothing consumes it); the frozen
+        // w_t literal is converted once for all batches
+        if li + 1 < ctx.plan.layers.len() {
+            for oc in o_cur.iter_mut() {
+                for o in oc.iter_mut() {
+                    let out = ctx
+                        .engine
+                        .run_id(layer.apply, &[Arg::Cached(&w_t), Arg::Cached(o)])?;
+                    *o = out
+                        .into_iter()
+                        .next()
+                        .expect("apply returns one output")
+                        .freeze();
+                }
             }
         }
-        recovered.push(w_t);
+        recovered.push(w_t.into_tensor());
     }
     Ok(recovered)
 }

@@ -8,9 +8,9 @@ pub mod inversion;
 use anyhow::{Context, Result};
 
 use crate::allocation::solve_p2;
-use crate::fl::{aggregate, run_steps, FlContext, Framework, RoundOutcome};
+use crate::fl::{aggregate, effective_chunk, run_steps, FlContext, Framework, RoundOutcome};
 use crate::oran::{RicProfile, UploadSizes};
-use crate::runtime::Tensor;
+use crate::runtime::{Arg, ChunkStacks, Frozen, Tensor};
 use crate::selection::DeadlineSelector;
 use inversion::ClientTrace;
 
@@ -52,36 +52,54 @@ impl SplitMe {
 
     /// Generate the mutual-learning targets z = s^{-1}(Y) for one client's
     /// label batches (Step 1's "label download"; downlink is free per §IV-B).
-    fn z_targets(&self, ctx: &FlContext, m: usize) -> Result<Vec<Tensor>> {
-        let inv_acts = ctx.preset.artifact("inv_acts")?;
+    /// Frozen in, frozen out: `wsi` is loop-invariant (converted once by the
+    /// caller), and each target is immutable for the rest of the round, so
+    /// its literal is converted once and reused across all E local steps.
+    fn z_targets(ctx: &FlContext, m: usize, wsi: &Frozen) -> Result<Vec<Frozen>> {
+        let inv_acts = ctx.plan.role("inv_acts")?;
         let mut out = Vec::new();
         for (_, y) in &ctx.shards[m].data.batches {
-            let acts = ctx.engine.run(inv_acts, &[&self.wsi, y])?;
-            out.push(acts.into_iter().last().expect("inv_acts returns >=1 output"));
+            let acts = ctx
+                .engine
+                .run_id(inv_acts, &[Arg::Cached(wsi), Arg::Cached(y)])?;
+            out.push(
+                acts.into_iter()
+                    .last()
+                    .expect("inv_acts returns >=1 output")
+                    .freeze(),
+            );
         }
         Ok(out)
     }
 
-    /// Smashed activations of client m's whole shard under parameters `wc`.
-    fn smash_all(&self, ctx: &FlContext, m: usize, wc: &Tensor) -> Result<Vec<Tensor>> {
-        let fwd = ctx.preset.artifact("client_fwd")?;
+    /// Smashed activations of client m's whole shard under parameters `wc`
+    /// (frozen by the caller — loop-invariant across the shard's batches).
+    fn smash_all(ctx: &FlContext, m: usize, wc: &Frozen) -> Result<Vec<Frozen>> {
+        let fwd = ctx.plan.role("client_fwd")?;
         let mut out = Vec::new();
         for (x, _) in &ctx.shards[m].data.batches {
-            let r = ctx.engine.run(fwd, &[wc, x])?;
-            out.push(r.into_iter().next().expect("client_fwd returns one output"));
+            let r = ctx.engine.run_id(fwd, &[Arg::Cached(wc), Arg::Cached(x)])?;
+            out.push(
+                r.into_iter()
+                    .next()
+                    .expect("client_fwd returns one output")
+                    .freeze(),
+            );
         }
         Ok(out)
     }
 
     /// Collect inversion traces (labels + fresh smashed data) from the given
-    /// clients under the current aggregated client model.
-    fn traces(&self, ctx: &FlContext, clients: &[usize]) -> Result<Vec<ClientTrace>> {
+    /// clients under the current aggregated client model. Labels are
+    /// borrowed from the shards, so their cached literals are reused.
+    fn traces<'c>(&self, ctx: &'c FlContext, clients: &[usize]) -> Result<Vec<ClientTrace<'c>>> {
+        let wc = self.wc.clone().freeze();
         clients
             .iter()
             .map(|&m| {
-                let labels: Vec<Tensor> =
-                    ctx.shards[m].data.batches.iter().map(|(_, y)| y.clone()).collect();
-                let smashed = self.smash_all(ctx, m, &self.wc)?;
+                let labels: Vec<&Frozen> =
+                    ctx.shards[m].data.batches.iter().map(|(_, y)| y).collect();
+                let smashed = Self::smash_all(ctx, m, &wc)?;
                 Ok(ClientTrace { labels, smashed })
             })
             .collect()
@@ -92,17 +110,51 @@ impl SplitMe {
     /// rank even when few trainers were admitted.
     fn inversion_set(&self, ctx: &FlContext) -> Vec<usize> {
         let want = ctx.cfg.inversion_clients.clamp(1, ctx.topo.len());
-        let mut set = self.last_selected.clone();
-        set.truncate(want);
-        let mut m = 0usize;
-        while set.len() < want {
-            if !set.contains(&m) {
-                set.push(m);
-            }
-            m += 1;
-        }
-        set
+        top_up_round_robin(self.last_selected.clone(), want)
     }
+}
+
+/// Window stacks over freshly computed per-round tensors (z targets,
+/// smashed activations), built only when chunked dispatch is active for
+/// this shard (`enabled` = the shard has precomputed data-side stacks) and
+/// capped at the `e / chunk` windows this round will actually dispatch.
+fn round_stacks(
+    parts: &[Frozen],
+    chunk: usize,
+    e: usize,
+    enabled: bool,
+) -> Result<Option<ChunkStacks>> {
+    if !enabled || chunk <= 1 || e < chunk {
+        return Ok(None);
+    }
+    let refs: Vec<&Tensor> = parts.iter().map(|f| f.tensor()).collect();
+    Ok(Some(ChunkStacks::with_limit(&refs, chunk, e / chunk)?))
+}
+
+/// Keep the first `want` entries of `set` and top it up with the smallest
+/// client ids not already present. A seen-bitmap keeps this O(want + |set|)
+/// — the previous `Vec::contains` scan was O(want²).
+pub(crate) fn top_up_round_robin(mut set: Vec<usize>, want: usize) -> Vec<usize> {
+    set.truncate(want);
+    if set.len() >= want {
+        return set;
+    }
+    // every id the round-robin can visit is < want + set.len(): each probe
+    // either pushes a new id or skips one already in `set`
+    let mut seen = vec![false; want + set.len()];
+    for &m in &set {
+        if m < seen.len() {
+            seen[m] = true;
+        }
+    }
+    let mut m = 0usize;
+    while set.len() < want {
+        if !seen[m] {
+            set.push(m);
+        }
+        m += 1;
+    }
+    set
 }
 
 impl Framework for SplitMe {
@@ -150,8 +202,12 @@ impl Framework for SplitMe {
         // Corollary 2/3 schedule: eta ~ 1/sqrt(T) damps the mutual-learning
         // target drift so the late-round plateau is stable
         let decay = 1.0 / (1.0 + round as f32 / 8.0).sqrt();
-        let eta_c = Tensor::scalar1(ctx.eta_c().data[0] * decay);
-        let eta_s = Tensor::scalar1(ctx.eta_s().data[0] * decay);
+        let eta_c = Tensor::scalar1(ctx.eta_c().data[0] * decay).freeze();
+        let eta_s = Tensor::scalar1(ctx.eta_s().data[0] * decay).freeze();
+        let chunk = effective_chunk(ctx.preset);
+        // the aggregated wsi is loop-invariant across this round's clients:
+        // one literal conversion serves every z-target dispatch
+        let wsi_round = self.wsi.clone().freeze();
         let mut wc_parts = Vec::with_capacity(selected.len());
         let mut wsi_parts = Vec::with_capacity(selected.len());
         let mut loss_sum = 0f32;
@@ -160,8 +216,15 @@ impl Framework for SplitMe {
         for r in &selected {
             let m = r.id;
             // Step 1: download w_C and z = s^{-1}(Y_m)
-            let z = self.z_targets(ctx, m).context("generating z targets")?;
+            let z = Self::z_targets(ctx, m, &wsi_round).context("generating z targets")?;
             let shard = &ctx.shards[m].data;
+
+            // per-round window stacks over the z targets (the x side comes
+            // precomputed from FlContext)
+            let z_stacks = round_stacks(&z, chunk, e, ctx.shard_chunks(m).is_some())?;
+            let chunks_c = ctx
+                .shard_chunks(m)
+                .and_then(|(xs, _)| z_stacks.as_ref().map(|zs| (xs, zs)));
 
             // Step 2: E client-side KL steps over the reconstructed dataset
             let (wc_m, ls, ln) = run_steps(
@@ -172,12 +235,20 @@ impl Framework for SplitMe {
                 e,
                 &eta_c,
                 |t| (shard.batch(t).0, &z[t % z.len()]),
+                chunks_c,
             )?;
             loss_sum += ls;
             loss_n += ln;
 
             // upload: latest w_C,m + smashed c(X_m) of the WHOLE shard
-            let smashed = self.smash_all(ctx, m, &wc_m)?;
+            let wc_m = wc_m.freeze();
+            let smashed = Self::smash_all(ctx, m, &wc_m)?;
+
+            // per-round window stacks over the smashed activations
+            let s_stacks = round_stacks(&smashed, chunk, e, ctx.shard_chunks(m).is_some())?;
+            let chunks_i = ctx
+                .shard_chunks(m)
+                .and_then(|(_, ys)| s_stacks.as_ref().map(|ss| (ys, ss)));
 
             // Step 3: E inverse-server KL steps on (Y_m, c(X_m))
             let (wsi_m, ls, ln) = run_steps(
@@ -188,11 +259,12 @@ impl Framework for SplitMe {
                 e,
                 &eta_s,
                 |t| (shard.batch(t).1, &smashed[t % smashed.len()]),
+                chunks_i,
             )?;
             loss_sum += ls;
             loss_n += ln;
 
-            wc_parts.push(wc_m);
+            wc_parts.push(wc_m.into_tensor());
             wsi_parts.push(wsi_m);
         }
 
@@ -219,5 +291,37 @@ impl Framework for SplitMe {
         let layers = inversion::recover_server_layers(ctx, &self.wsi, &traces)?;
         let ws = ctx.init.server_from_layer_mats(&layers)?;
         ctx.init.concat_full(&self.wc, &ws)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::top_up_round_robin;
+
+    #[test]
+    fn top_up_truncates_oversized_sets() {
+        assert_eq!(top_up_round_robin(vec![9, 4, 7, 2, 5], 3), vec![9, 4, 7]);
+        assert_eq!(top_up_round_robin(vec![1, 2], 2), vec![1, 2]);
+    }
+
+    #[test]
+    fn top_up_fills_with_smallest_absent_ids() {
+        // keeps the selected prefix, then round-robins 0,1,2,... skipping
+        // ids already present
+        assert_eq!(top_up_round_robin(vec![1, 3], 5), vec![1, 3, 0, 2, 4]);
+        assert_eq!(top_up_round_robin(vec![], 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn top_up_handles_ids_beyond_the_bitmap_probe_range() {
+        // large ids can never collide with the probed low range
+        assert_eq!(top_up_round_robin(vec![49, 31], 4), vec![49, 31, 0, 1]);
+    }
+
+    #[test]
+    fn top_up_dense_prefix_probes_past_want() {
+        // every id < want is taken: the probe must walk past `want`
+        assert_eq!(top_up_round_robin(vec![0, 1, 2], 4), vec![0, 1, 2, 3]);
+        assert_eq!(top_up_round_robin(vec![2, 0, 1], 5), vec![2, 0, 1, 3, 4]);
     }
 }

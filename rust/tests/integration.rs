@@ -4,8 +4,8 @@
 
 use repro::config::{FrameworkKind, SimConfig};
 use repro::coordinator::Runner;
-use repro::fl::FlContext;
-use repro::runtime::{Engine, Manifest, Tensor};
+use repro::fl::{run_steps_with, FlContext};
+use repro::runtime::{Arg, ChunkStacks, Engine, Manifest, Tensor};
 use repro::sim::{fill_normal, RngPool};
 
 fn engine() -> Engine {
@@ -194,6 +194,89 @@ fn determinism_same_seed_same_history() {
     let c = run(8);
     assert_eq!(a, b, "same seed must reproduce exactly");
     assert!(a != c || a.1 == c.1, "different seed should usually differ");
+}
+
+#[test]
+fn chunked_dispatch_matches_single_step_exactly() {
+    // parity contract of the scan-folded artifacts: for any e, the chunked
+    // dispatch must reproduce the single-step path bit for bit
+    let engine = engine();
+    let cfg = tiny_cfg();
+    let ctx = FlContext::new(&engine, &cfg).unwrap();
+    let chunk = ctx.preset.chunk;
+    if chunk < 2 || ctx.plan.try_role("fedavg_step_chunk").is_none() {
+        return; // preset carries no folded artifact to compare against
+    }
+    let shard = &ctx.shards[0].data;
+    let xs: Vec<&Tensor> = shard.batches.iter().map(|(x, _)| x.tensor()).collect();
+    let ys: Vec<&Tensor> = shard.batches.iter().map(|(_, y)| y.tensor()).collect();
+    let cx = ChunkStacks::new(&xs, chunk).unwrap();
+    let cy = ChunkStacks::new(&ys, chunk).unwrap();
+    let c = ctx.init.client(&ctx.pool).unwrap();
+    let s = ctx.init.server(&ctx.pool).unwrap();
+    let w0 = ctx.init.concat_full(&c, &s).unwrap();
+    let lr = ctx.eta_c();
+
+    for e in [1, chunk - 1, chunk, 2 * chunk + 1] {
+        let (wa, la, na) = run_steps_with(
+            &ctx, "fedavg_step", "fedavg_step_chunk", w0.clone(), e, &lr,
+            |t| shard.batch(t), Some((&cx, &cy)), chunk,
+        )
+        .unwrap();
+        let (wb, lb, nb) = run_steps_with(
+            &ctx, "fedavg_step", "fedavg_step_chunk", w0.clone(), e, &lr,
+            |t| shard.batch(t), None, 1,
+        )
+        .unwrap();
+        assert_eq!(na, nb, "step count at e={e}");
+        assert_eq!(wa.data, wb.data, "params diverge at e={e}");
+        assert_eq!(la, lb, "loss sums diverge at e={e}: {la} vs {lb}");
+    }
+}
+
+#[test]
+fn literal_cache_never_serves_stale_params() {
+    // two "rounds" through the SAME cached immutable inputs: the fresh
+    // params of round 2 must take effect (a stale cached literal would
+    // replay round 1), while replaying round 1 must reproduce it exactly
+    let engine = engine();
+    let p = engine.preset("commag").unwrap().clone();
+    let plan = engine.warmup_preset("commag").unwrap();
+    let step = plan.role("client_step").unwrap();
+    let pool = RngPool::new(11);
+    let mut rng = pool.stream("t", 0);
+    let mk = |n: usize, rng: &mut repro::sim::Rng64| {
+        let mut v = vec![0f32; n];
+        fill_normal(rng, &mut v, 0.3);
+        v
+    };
+    let w0 = Tensor::new(vec![p.client_params], mk(p.client_params, &mut rng)).unwrap();
+    let x = Tensor::new(vec![p.batch, 32], mk(p.batch * 32, &mut rng)).unwrap().freeze();
+    let z = Tensor::new(vec![p.batch, p.split_dim], mk(p.batch * p.split_dim, &mut rng))
+        .unwrap()
+        .freeze();
+    let lr = Tensor::scalar1(0.05).freeze();
+
+    let args1 = [Arg::Fresh(&w0), Arg::Cached(&x), Arg::Cached(&z), Arg::Cached(&lr)];
+    let r1 = engine.run_id(step, &args1).unwrap();
+    let w1 = r1[0].clone();
+    // the prepared path must agree with the validated name-keyed path
+    let compat = engine
+        .run(p.artifact("client_step").unwrap(), &[&w0, x.tensor(), z.tensor(), lr.tensor()])
+        .unwrap();
+    assert_eq!(r1[0].data, compat[0].data);
+    assert_eq!(r1[1].data, compat[1].data);
+
+    // round 2: updated params, same cached inputs
+    let r2 = engine
+        .run_id(step, &[Arg::Fresh(&w1), Arg::Cached(&x), Arg::Cached(&z), Arg::Cached(&lr)])
+        .unwrap();
+    // round-1 replay is exact...
+    let r1b = engine.run_id(step, &args1).unwrap();
+    assert_eq!(r1[0].data, r1b[0].data);
+    assert_eq!(r1[1].data, r1b[1].data);
+    // ...and round 2 differs from it: the mutable input was re-converted
+    assert_ne!(r2[0].data, r1[0].data, "round-2 params were served stale");
 }
 
 #[test]
