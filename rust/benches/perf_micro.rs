@@ -1,7 +1,9 @@
 //! Performance microbenches (EXPERIMENTS.md §Perf input): per-artifact
 //! execution latency through the prepared path (interned ids + cached
 //! literals), the L3-only components (waterfill, selection, blocked gram,
-//! ridge solve, aggregation), and the end-to-end round step per framework.
+//! ridge solve, aggregation), the end-to-end round step per framework
+//! (shared-context runners), and the paired four-framework comparison
+//! sequential vs thread-parallel (the headline of the executor refactor).
 //!
 //! Writes the machine-readable perf trajectory to BENCH_perf.json
 //! (schema in PERF.md; override the path with REPRO_BENCH_JSON).
@@ -9,7 +11,7 @@
 use repro::allocation::waterfill;
 use repro::config::SimConfig;
 use repro::coordinator::Runner;
-use repro::fl::aggregate;
+use repro::fl::{aggregate, ExperimentContext};
 use repro::harness::Recorder;
 use repro::linalg::{gram, ridge_solve, Mat};
 use repro::oran::{Topology, UploadSizes};
@@ -122,17 +124,31 @@ fn main() {
     });
 
     // ---- end-to-end round step per framework ------------------------------
+    // one shared context for all four runners: shards/chunk stacks built once
     use repro::config::FrameworkKind;
+    use repro::experiments::{self, Budget};
+    let mut e2e_cfg = SimConfig::commag();
+    e2e_cfg.samples_per_client = 64;
+    e2e_cfg.test_samples = 96;
+    e2e_cfg.eval_every = 0;
+    let ctx = ExperimentContext::new(&engine, &e2e_cfg).unwrap();
     for kind in FrameworkKind::all() {
-        let mut cfg = SimConfig::commag();
-        cfg.samples_per_client = 64;
-        cfg.test_samples = 96;
-        cfg.eval_every = 0;
-        let mut runner = Runner::new(&engine, &cfg, kind).unwrap();
+        let mut runner = Runner::shared(&ctx, kind).unwrap();
         let mut round = 0usize;
         rec.bench(&format!("e2e/{}_round", kind.name()), 1, 5, || {
             runner.step(round).unwrap();
             round += 1;
+        });
+    }
+
+    // ---- paired comparison: sequential vs thread-parallel executor --------
+    // the tentpole speedup: identical work, fanned out over worker threads
+    // (jobs=0 resolves REPRO_JOBS / available cores — see harness::jobs)
+    println!("comparison worker threads (auto): {}", repro::harness::jobs());
+    let cmp_budget = Budget { splitme_rounds: 2, baseline_rounds: 2 };
+    for (tag, jobs) in [("seq", 1usize), ("par", 0usize)] {
+        rec.bench(&format!("e2e/comparison_4fw_{tag}"), 0, 3, || {
+            experiments::run_comparison_jobs(&engine, &e2e_cfg, cmp_budget, false, jobs).unwrap();
         });
     }
 

@@ -8,16 +8,17 @@
 
 use anyhow::Result;
 
-use crate::fl::{aggregate, run_steps, sample_clients, FlContext, Framework, RoundOutcome};
+use crate::fl::{aggregate, run_steps, sample_clients, ExperimentContext, Framework, RoundOutcome};
 use crate::oran::{self, RicProfile, UploadSizes};
 use crate::runtime::Tensor;
+use crate::sim::RngPool;
 
 pub struct FedAvg {
     wf: Tensor,
 }
 
 impl FedAvg {
-    pub fn new(ctx: &FlContext) -> Result<Self> {
+    pub fn new(ctx: &ExperimentContext) -> Result<Self> {
         let c = ctx.init.client(&ctx.pool)?;
         let s = ctx.init.server(&ctx.pool)?;
         Ok(Self { wf: ctx.init.concat_full(&c, &s)? })
@@ -26,7 +27,7 @@ impl FedAvg {
     /// Shared by O-RANFed: run E full-model SGD steps for each selected
     /// client from the global model and aggregate.
     pub(crate) fn train_selected(
-        ctx: &FlContext,
+        ctx: &ExperimentContext,
         wf: &Tensor,
         selected: &[usize],
         e: usize,
@@ -63,9 +64,14 @@ impl Framework for FedAvg {
         "fedavg"
     }
 
-    fn run_round(&mut self, ctx: &FlContext, round: usize) -> Result<RoundOutcome> {
+    fn run_round(
+        &mut self,
+        ctx: &ExperimentContext,
+        rng: &RngPool,
+        round: usize,
+    ) -> Result<RoundOutcome> {
         let cfg = &ctx.cfg;
-        let ids = sample_clients(&ctx.pool, "fedavg_select", round, ctx.topo.len(), cfg.fedavg_k);
+        let ids = sample_clients(rng, "fedavg_select", round, ctx.topo.len(), cfg.fedavg_k);
         let e = cfg.fedavg_e;
 
         let (wf, train_loss) = Self::train_selected(ctx, &self.wf, &ids, e)?;
@@ -98,7 +104,7 @@ impl Framework for FedAvg {
         })
     }
 
-    fn full_model(&mut self, _ctx: &FlContext) -> Result<Tensor> {
+    fn full_model(&mut self, _ctx: &ExperimentContext) -> Result<Tensor> {
         Ok(self.wf.clone())
     }
 }

@@ -12,11 +12,12 @@ pub use oranfed::OranFed;
 pub use sfl::VanillaSfl;
 
 use crate::config::FrameworkKind;
-use crate::fl::{FlContext, Framework};
+use crate::fl::{ExperimentContext, Framework};
 use anyhow::Result;
 
-/// Instantiate any framework by kind.
-pub fn build(kind: FrameworkKind, ctx: &FlContext) -> Result<Box<dyn Framework>> {
+/// Instantiate any framework by kind. Initialization draws from the shared
+/// context pool, so paired comparisons start from identical parameters.
+pub fn build(kind: FrameworkKind, ctx: &ExperimentContext) -> Result<Box<dyn Framework>> {
     Ok(match kind {
         FrameworkKind::SplitMe => Box::new(crate::splitme::SplitMe::new(ctx)?),
         FrameworkKind::FedAvg => Box::new(FedAvg::new(ctx)?),

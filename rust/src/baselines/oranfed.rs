@@ -7,10 +7,11 @@ use anyhow::Result;
 
 use crate::allocation::solve_p2;
 use crate::baselines::fedavg::FedAvg;
-use crate::fl::{FlContext, Framework, RoundOutcome};
+use crate::fl::{ExperimentContext, Framework, RoundOutcome};
 use crate::oran::{self, RicProfile, UploadSizes};
 use crate::runtime::Tensor;
 use crate::selection::DeadlineSelector;
+use crate::sim::RngPool;
 
 pub struct OranFed {
     wf: Tensor,
@@ -18,7 +19,7 @@ pub struct OranFed {
 }
 
 impl OranFed {
-    pub fn new(ctx: &FlContext) -> Result<Self> {
+    pub fn new(ctx: &ExperimentContext) -> Result<Self> {
         let c = ctx.init.client(&ctx.pool)?;
         let s = ctx.init.server(&ctx.pool)?;
         let sizes = vec![
@@ -37,7 +38,12 @@ impl Framework for OranFed {
         "oranfed"
     }
 
-    fn run_round(&mut self, ctx: &FlContext, _round: usize) -> Result<RoundOutcome> {
+    fn run_round(
+        &mut self,
+        ctx: &ExperimentContext,
+        _rng: &RngPool,
+        _round: usize,
+    ) -> Result<RoundOutcome> {
         let cfg = &ctx.cfg;
         let e = cfg.oranfed_e;
         let scale = 1.0 / cfg.omega; // full model on the weak edge
@@ -88,7 +94,7 @@ impl Framework for OranFed {
         })
     }
 
-    fn full_model(&mut self, _ctx: &FlContext) -> Result<Tensor> {
+    fn full_model(&mut self, _ctx: &ExperimentContext) -> Result<Tensor> {
         Ok(self.wf.clone())
     }
 }

@@ -14,9 +14,10 @@
 
 use anyhow::Result;
 
-use crate::fl::{aggregate, sample_clients, FlContext, Framework, RoundOutcome};
+use crate::fl::{aggregate, sample_clients, ExperimentContext, Framework, RoundOutcome};
 use crate::oran::{self, RicProfile, UploadSizes};
 use crate::runtime::{Arg, Tensor};
+use crate::sim::RngPool;
 
 pub struct VanillaSfl {
     wc: Tensor,
@@ -24,7 +25,7 @@ pub struct VanillaSfl {
 }
 
 impl VanillaSfl {
-    pub fn new(ctx: &FlContext) -> Result<Self> {
+    pub fn new(ctx: &ExperimentContext) -> Result<Self> {
         Ok(Self {
             wc: ctx.init.client(&ctx.pool)?,
             ws: ctx.init.server(&ctx.pool)?,
@@ -37,9 +38,14 @@ impl Framework for VanillaSfl {
         "sfl"
     }
 
-    fn run_round(&mut self, ctx: &FlContext, round: usize) -> Result<RoundOutcome> {
+    fn run_round(
+        &mut self,
+        ctx: &ExperimentContext,
+        rng: &RngPool,
+        round: usize,
+    ) -> Result<RoundOutcome> {
         let cfg = &ctx.cfg;
-        let ids = sample_clients(&ctx.pool, "sfl_select", round, ctx.topo.len(), cfg.sfl_k);
+        let ids = sample_clients(rng, "sfl_select", round, ctx.topo.len(), cfg.sfl_k);
         let e = cfg.sfl_e;
         let eta = ctx.eta_c();
         let fwd = ctx.plan.role("client_fwd")?;
@@ -107,7 +113,7 @@ impl Framework for VanillaSfl {
         })
     }
 
-    fn full_model(&mut self, ctx: &FlContext) -> Result<Tensor> {
+    fn full_model(&mut self, ctx: &ExperimentContext) -> Result<Tensor> {
         ctx.init.concat_full(&self.wc, &self.ws)
     }
 }

@@ -82,6 +82,13 @@ impl Args {
         matches!(self.raw(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// The shared `--jobs` parallelism knob of the experiment/sweep
+    /// subcommands: worker-thread count, 0 (the default) = auto-detect
+    /// (`REPRO_JOBS` env override, else available cores), 1 = sequential.
+    pub fn jobs(&self) -> Result<usize> {
+        self.usize_or("jobs", 0)
+    }
+
     /// Call after reading all known flags: errors on leftovers (typos).
     pub fn finish(&self) -> Result<()> {
         let seen = self.seen.borrow();
@@ -118,6 +125,14 @@ mod tests {
         let (_, a) = Args::parse(&argv("run")).unwrap();
         assert_eq!(a.usize_or("rounds", 7).unwrap(), 7);
         assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn jobs_knob_defaults_to_auto() {
+        let (_, a) = Args::parse(&argv("experiment --jobs 3")).unwrap();
+        assert_eq!(a.jobs().unwrap(), 3);
+        let (_, b) = Args::parse(&argv("experiment")).unwrap();
+        assert_eq!(b.jobs().unwrap(), 0); // 0 = auto-detect downstream
     }
 
     #[test]

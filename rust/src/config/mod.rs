@@ -101,6 +101,11 @@ pub struct SimConfig {
     /// learning-rate overrides (None -> manifest defaults, eta_c > eta_s)
     pub eta_c: Option<f32>,
     pub eta_s: Option<f32>,
+    /// cap (bytes) on the per-context chunk-stack precompute; 0 = unlimited.
+    /// When the projected stack size exceeds the cap, the precompute is
+    /// skipped and chunked dispatch falls back to the (slower, numerically
+    /// identical) single-step path — PERF.md §memory.
+    pub chunk_cache_cap_bytes: usize,
     /// fixed-K baselines (FedAvg K=10/E=10, SFL K=20/E=14 per §V)
     pub fedavg_k: usize,
     pub fedavg_e: usize,
@@ -139,6 +144,7 @@ impl SimConfig {
             stop_at_target: false,
             eta_c: Some(0.03),
             eta_s: Some(0.02),
+            chunk_cache_cap_bytes: 0,
             fedavg_k: 10,
             fedavg_e: 10,
             sfl_k: 20,
@@ -213,6 +219,7 @@ impl SimConfig {
             ("stop_at_target", Json::Bool(self.stop_at_target)),
             ("eta_c", opt(self.eta_c)),
             ("eta_s", opt(self.eta_s)),
+            ("chunk_cache_cap_bytes", Json::num(self.chunk_cache_cap_bytes as f64)),
             ("fedavg_k", Json::num(self.fedavg_k as f64)),
             ("fedavg_e", Json::num(self.fedavg_e as f64)),
             ("sfl_k", Json::num(self.sfl_k as f64)),
@@ -272,6 +279,7 @@ impl SimConfig {
                 other => Some(other.as_f64()? as f32),
             };
         }
+        if let Some(v) = j.opt("chunk_cache_cap_bytes") { cfg.chunk_cache_cap_bytes = v.as_usize()?; }
         if let Some(v) = j.opt("fedavg_k") { cfg.fedavg_k = v.as_usize()?; }
         if let Some(v) = j.opt("fedavg_e") { cfg.fedavg_e = v.as_usize()?; }
         if let Some(v) = j.opt("sfl_k") { cfg.sfl_k = v.as_usize()?; }
@@ -360,11 +368,13 @@ mod tests {
         c.num_clients = 7;
         c.b_min = 1.0 / 7.0;
         c.eta_c = Some(0.01);
+        c.chunk_cache_cap_bytes = 64 << 20;
         let s = c.to_json().to_string_pretty();
         let back = SimConfig::from_json(&Json::parse(&s).unwrap()).unwrap();
         assert_eq!(back.preset, "vision");
         assert_eq!(back.num_clients, 7);
         assert_eq!(back.eta_c, Some(0.01));
+        assert_eq!(back.chunk_cache_cap_bytes, 64 << 20);
         assert_eq!(back.sfl_e, c.sfl_e);
     }
 

@@ -1,40 +1,95 @@
 //! Round engine: drives any [`Framework`] over global training rounds,
 //! advancing the simulated O-RAN clock (Eq 18), accumulating resource costs
 //! (Eq 16/17/20), evaluating the test set, and recording per-round metrics.
+//!
+//! The runner is split along the shared/mutable axis (PERF.md §concurrency):
+//! the immutable [`ExperimentContext`] may be **owned** (single runs,
+//! [`Runner::new`]) or **borrowed** from a paired comparison that built it
+//! once ([`Runner::shared`]); everything mutable — framework params, the
+//! simulated clock, the round records, the per-framework RNG pool — lives in
+//! the thin [`RunState`].
 
 use anyhow::Result;
 
 use crate::baselines;
 use crate::config::{FrameworkKind, SimConfig};
-use crate::fl::{FlContext, Framework};
+use crate::fl::{ExperimentContext, Framework, MemoryStats};
 use crate::metrics::{RoundRecord, RunSummary};
 use crate::oran;
 use crate::runtime::Engine;
-use crate::sim::Clock;
+use crate::sim::{Clock, RngPool};
+
+/// The per-run mutable state: everything a runner changes while training.
+/// Deliberately thin — all heavy data (shards, stacks, plan) lives in the
+/// shared context.
+pub struct RunState {
+    pub kind: FrameworkKind,
+    pub clock: Clock,
+    pub records: Vec<RoundRecord>,
+    /// per-framework runtime streams, derived purely from (seed, framework)
+    /// in ONE place ([`RngPool::for_framework`]) so no sharing or thread
+    /// interleaving can perturb them
+    pub pool: RngPool,
+}
+
+impl RunState {
+    pub fn new(kind: FrameworkKind, cfg: &SimConfig) -> Self {
+        Self {
+            kind,
+            clock: Clock::new(),
+            records: Vec::new(),
+            pool: RngPool::for_framework(cfg.seed, kind.name()),
+        }
+    }
+}
+
+/// Owned-or-borrowed experiment context. `ExperimentContext` is covariant in
+/// its engine lifetime, so a longer-lived shared context coerces into the
+/// runner's borrow.
+enum CtxHandle<'e> {
+    Owned(Box<ExperimentContext<'e>>),
+    Shared(&'e ExperimentContext<'e>),
+}
+
+impl<'e> CtxHandle<'e> {
+    fn get(&self) -> &ExperimentContext<'e> {
+        match self {
+            CtxHandle::Owned(b) => b,
+            CtxHandle::Shared(r) => r,
+        }
+    }
+}
 
 /// A single-framework training run.
-pub struct Runner<'a> {
-    pub ctx: FlContext<'a>,
+pub struct Runner<'e> {
+    ctx: CtxHandle<'e>,
     framework: Box<dyn Framework>,
-    kind: FrameworkKind,
-    clock: Clock,
-    records: Vec<RoundRecord>,
+    state: RunState,
     /// optional live progress callback (round record) — used by the CLI
     pub progress: Option<Box<dyn Fn(&RoundRecord)>>,
 }
 
-impl<'a> Runner<'a> {
-    pub fn new(engine: &'a Engine, cfg: &SimConfig, kind: FrameworkKind) -> Result<Self> {
-        let ctx = FlContext::new(engine, cfg)?;
-        let framework = baselines::build(kind, &ctx)?;
-        Ok(Self {
-            ctx,
-            framework,
-            kind,
-            clock: Clock::new(),
-            records: Vec::new(),
-            progress: None,
-        })
+impl<'e> Runner<'e> {
+    /// Build a runner with its own private context (single-run CLI path).
+    pub fn new(engine: &'e Engine, cfg: &SimConfig, kind: FrameworkKind) -> Result<Self> {
+        let ctx = ExperimentContext::new(engine, cfg)?;
+        Self::assemble(CtxHandle::Owned(Box::new(ctx)), kind)
+    }
+
+    /// Build a runner over a context shared with other runners (the paired
+    /// comparison path: shards/stacks/test literals built exactly once).
+    pub fn shared(ctx: &'e ExperimentContext<'e>, kind: FrameworkKind) -> Result<Self> {
+        Self::assemble(CtxHandle::Shared(ctx), kind)
+    }
+
+    fn assemble(ctx: CtxHandle<'e>, kind: FrameworkKind) -> Result<Self> {
+        let framework = baselines::build(kind, ctx.get())?;
+        let state = RunState::new(kind, &ctx.get().cfg);
+        Ok(Self { ctx, framework, state, progress: None })
+    }
+
+    pub fn ctx(&self) -> &ExperimentContext<'e> {
+        self.ctx.get()
     }
 
     /// Run `rounds` global rounds (early-stopping at `target_accuracy` when
@@ -42,12 +97,13 @@ impl<'a> Runner<'a> {
     pub fn train(&mut self, rounds: usize) -> Result<RunSummary> {
         for round in 0..rounds {
             let rec = self.step(round)?;
-            let hit = !rec.accuracy.is_nan() && rec.accuracy >= self.ctx.cfg.target_accuracy;
+            let hit = !rec.accuracy.is_nan()
+                && rec.accuracy >= self.ctx.get().cfg.target_accuracy;
             if let Some(cb) = &self.progress {
                 cb(&rec);
             }
-            self.records.push(rec);
-            if hit && self.ctx.cfg.stop_at_target {
+            self.state.records.push(rec);
+            if hit && self.ctx.get().cfg.stop_at_target {
                 break;
             }
         }
@@ -57,13 +113,15 @@ impl<'a> Runner<'a> {
     /// One global round: train + clock + cost accounting + (periodic) eval.
     pub fn step(&mut self, round: usize) -> Result<RoundRecord> {
         let wall = std::time::Instant::now();
-        let out = self.framework.run_round(&self.ctx, round)?;
-        self.clock.advance(out.latency.total());
+        let Self { ctx, framework, state, .. } = self;
+        let ctx = ctx.get();
+        let out = framework.run_round(ctx, &state.pool, round)?;
+        state.clock.advance(out.latency.total());
 
-        let evaluate = self.ctx.cfg.eval_every > 0 && round % self.ctx.cfg.eval_every == 0;
+        let evaluate = ctx.cfg.eval_every > 0 && round % ctx.cfg.eval_every == 0;
         let (accuracy, test_loss) = if evaluate {
-            let wfull = self.framework.full_model(&self.ctx)?;
-            self.ctx.evaluate(&wfull)?
+            let wfull = framework.full_model(ctx)?;
+            ctx.evaluate(&wfull)?
         } else {
             (f32::NAN, f32::NAN)
         };
@@ -74,11 +132,11 @@ impl<'a> Runner<'a> {
             e: out.e,
             comm_bytes: out.comm_bytes,
             round_time: out.latency.total(),
-            sim_time: self.clock.now(),
+            sim_time: state.clock.now(),
             comm_cost: out.comm_cost,
             comp_cost: out.comp_cost,
             total_cost: oran::total_cost(
-                self.ctx.cfg.rho,
+                ctx.cfg.rho,
                 out.comm_cost,
                 out.comp_cost,
                 out.latency.total(),
@@ -92,30 +150,43 @@ impl<'a> Runner<'a> {
 
     /// Force an evaluation of the current model (outside the round cadence).
     pub fn evaluate_now(&mut self) -> Result<(f32, f32)> {
-        let wfull = self.framework.full_model(&self.ctx)?;
-        self.ctx.evaluate(&wfull)
+        let Self { ctx, framework, .. } = self;
+        let ctx = ctx.get();
+        let wfull = framework.full_model(ctx)?;
+        ctx.evaluate(&wfull)
     }
 
     pub fn summary(&self) -> RunSummary {
+        let ctx = self.ctx.get();
         RunSummary::from_records(
-            self.kind.name(),
-            &self.ctx.cfg.preset,
-            self.ctx.cfg.target_accuracy,
-            self.records.clone(),
+            self.state.kind.name(),
+            &ctx.cfg.preset,
+            ctx.cfg.target_accuracy,
+            self.state.records.clone(),
         )
     }
 
     pub fn records(&self) -> &[RoundRecord] {
-        &self.records
+        &self.state.records
     }
 
     pub fn sim_time(&self) -> f64 {
-        self.clock.now()
+        self.state.clock.now()
     }
 
     /// Per-artifact wallclock accounting of the underlying engine (the
-    /// §Perf profile; see `benches/perf_micro.rs`).
+    /// §Perf profile; see `benches/perf_micro.rs`). NOTE: engine-global —
+    /// runners sharing an engine accumulate into the same counters.
     pub fn exec_stats(&self) -> Vec<(String, crate::runtime::ExecStats)> {
-        self.ctx.engine.stats()
+        self.ctx.get().engine.stats()
+    }
+
+    /// Bytes held by the (possibly shared) context's literal/chunk caches
+    /// plus this runner's framework-private memos (PERF.md §memory).
+    /// Shared-context runners report the same context-side numbers.
+    pub fn memory_stats(&self) -> MemoryStats {
+        let mut ms = self.ctx.get().memory_stats();
+        ms.framework_cache_bytes = self.framework.cache_bytes();
+        ms
     }
 }

@@ -1,0 +1,120 @@
+//! Scoped thread-pool executor for the experiment layer: run N independent
+//! jobs on at most `jobs` worker threads with **deterministic result
+//! ordering** (results come back indexed, never in completion order).
+//!
+//! Used by [`super::run_comparison`] (one job per framework, sharing one
+//! `ExperimentContext`) and [`super::sweep::grid`] (one job per grid point).
+//! The worker count is the CLI `--jobs` knob; `0` means auto — the
+//! `REPRO_JOBS` environment variable if set, else the machine's available
+//! parallelism.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Resolved default worker count: `REPRO_JOBS` (if a positive integer),
+/// else `std::thread::available_parallelism()`. Read once per process.
+pub fn default_jobs() -> usize {
+    static JOBS: OnceLock<usize> = OnceLock::new();
+    *JOBS.get_or_init(|| {
+        std::env::var("REPRO_JOBS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&j| j > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// Turn a requested worker count (0 = auto) into an effective one for `n`
+/// jobs: auto-detected when 0, never more workers than jobs, never 0.
+pub fn resolve_jobs(requested: usize, n: usize) -> usize {
+    let j = if requested > 0 { requested } else { default_jobs() };
+    j.clamp(1, n.max(1))
+}
+
+/// Run `f(0..n)` on at most `jobs` scoped worker threads and return the
+/// results **in index order** regardless of scheduling. Workers pull the
+/// next index from a shared counter, so heterogeneous job costs balance
+/// automatically. `jobs <= 1` degenerates to a plain sequential loop on the
+/// calling thread (the bitwise reference path of the paired-determinism
+/// test). A panicking job propagates out of the scope join.
+pub fn run_indexed<T, F>(n: usize, jobs: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let jobs = jobs.clamp(1, n.max(1));
+    if jobs <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    // one slot per job: workers lock only their own result's mutex, so
+    // output order is fixed by index, not by completion
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let (f, next, slots_ref) = (&f, &next, &slots);
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(i);
+                *slots_ref[i].lock().expect("result slot poisoned") = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("result slot poisoned")
+                .expect("worker filled every slot")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_index_order_under_parallelism() {
+        let out = run_indexed(100, 8, |i| i * 3);
+        assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_and_parallel_agree() {
+        let work = |i: usize| (i, format!("job-{i}"));
+        assert_eq!(run_indexed(17, 1, work), run_indexed(17, 4, work));
+    }
+
+    #[test]
+    fn handles_empty_and_single_job_sets() {
+        assert_eq!(run_indexed(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(run_indexed(1, 4, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn resolve_jobs_clamps_to_job_count() {
+        assert_eq!(resolve_jobs(8, 4), 4);
+        assert_eq!(resolve_jobs(2, 4), 2);
+        assert_eq!(resolve_jobs(3, 0), 1);
+        // auto (0) resolves to something positive
+        assert!(resolve_jobs(0, 64) >= 1);
+    }
+
+    #[test]
+    fn balances_heterogeneous_jobs() {
+        // a slow first job must not serialize the rest behind it
+        let out = run_indexed(8, 4, |i| {
+            if i == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            i
+        });
+        assert_eq!(out, (0..8).collect::<Vec<_>>());
+    }
+}

@@ -5,7 +5,15 @@
 //! preset. Each `fig*` helper extracts exactly the series the paper plots
 //! and pretty-prints it; the raw per-round records are also written as CSV
 //! for external plotting.
+//!
+//! The paired comparison builds ONE shared [`ExperimentContext`] per
+//! (preset, seed) — shards, chunk stacks, and test literals are constructed
+//! exactly once — and runs the four frameworks concurrently on the scoped
+//! executor ([`executor::run_indexed`]). Per-framework RNG pools are pure
+//! functions of (seed, framework), so the parallel path is bitwise
+//! identical to the sequential one (`--jobs 1`).
 
+pub mod executor;
 pub mod sweep;
 
 use std::path::Path;
@@ -14,6 +22,7 @@ use anyhow::Result;
 
 use crate::config::{FrameworkKind, SimConfig};
 use crate::coordinator::Runner;
+use crate::fl::ExperimentContext;
 use crate::metrics::RunSummary;
 use crate::runtime::Engine;
 
@@ -31,34 +40,54 @@ impl Default for Budget {
     }
 }
 
-/// Run all four frameworks on identical topology/data (paired comparison).
+/// Run all four frameworks on identical topology/data (paired comparison)
+/// with the default worker count (`REPRO_JOBS` / available parallelism).
 pub fn run_comparison(
     engine: &Engine,
     cfg: &SimConfig,
     budget: Budget,
     verbose: bool,
 ) -> Result<Vec<RunSummary>> {
-    let mut out = Vec::new();
-    for kind in FrameworkKind::all() {
-        let rounds = match kind {
-            FrameworkKind::SplitMe => budget.splitme_rounds,
-            _ => budget.baseline_rounds,
-        };
-        let mut runner = Runner::new(engine, cfg, kind)?;
-        if verbose {
-            let name = kind.name().to_string();
-            runner.progress = Some(Box::new(move |r| {
-                eprintln!(
-                    "[{name}] round {:>3}: sel={:>2} E={:>2} acc={:.3} loss={:.4} t={:.2}s vol={:.2}MB",
-                    r.round, r.selected, r.e, r.accuracy, r.train_loss, r.sim_time,
-                    r.comm_bytes / 1e6
-                );
-            }));
-        }
-        let summary = runner.train(rounds)?;
-        out.push(summary);
-    }
-    Ok(out)
+    run_comparison_jobs(engine, cfg, budget, verbose, 0)
+}
+
+/// [`run_comparison`] with an explicit worker count (`jobs`; 0 = auto,
+/// 1 = strictly sequential). The shared context is built once; each worker
+/// borrows it and owns only its thin `RunState` + framework params. Result
+/// order is [`FrameworkKind::all`] order regardless of scheduling.
+pub fn run_comparison_jobs(
+    engine: &Engine,
+    cfg: &SimConfig,
+    budget: Budget,
+    verbose: bool,
+    jobs: usize,
+) -> Result<Vec<RunSummary>> {
+    let ctx = ExperimentContext::new(engine, cfg)?;
+    let kinds = FrameworkKind::all();
+    let results = executor::run_indexed(
+        kinds.len(),
+        executor::resolve_jobs(jobs, kinds.len()),
+        |i| -> Result<RunSummary> {
+            let kind = kinds[i];
+            let rounds = match kind {
+                FrameworkKind::SplitMe => budget.splitme_rounds,
+                _ => budget.baseline_rounds,
+            };
+            let mut runner = Runner::shared(&ctx, kind)?;
+            if verbose {
+                let name = kind.name().to_string();
+                runner.progress = Some(Box::new(move |r| {
+                    eprintln!(
+                        "[{name}] round {:>3}: sel={:>2} E={:>2} acc={:.3} loss={:.4} t={:.2}s vol={:.2}MB",
+                        r.round, r.selected, r.e, r.accuracy, r.train_loss, r.sim_time,
+                        r.comm_bytes / 1e6
+                    );
+                }));
+            }
+            runner.train(rounds)
+        },
+    );
+    results.into_iter().collect()
 }
 
 pub fn write_all(summaries: &[RunSummary], dir: impl AsRef<Path>) -> Result<()> {

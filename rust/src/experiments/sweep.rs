@@ -4,7 +4,11 @@
 //!
 //! Pure modeling (topology + Alg 1 + water-filling + K_eps), so a full grid
 //! evaluates in milliseconds; used by `repro sweep` and unit-tested below.
+//! Grid points are independent, so [`grid`] fans them out on the shared
+//! scoped executor ([`super::executor`]) with deterministic row-major
+//! ordering — large §IV surfaces scale with the worker count.
 
+use super::executor;
 use crate::allocation::{solve_p2, Allocation};
 use crate::config::SimConfig;
 use crate::oran::{Topology, UploadSizes};
@@ -12,7 +16,7 @@ use crate::selection::DeadlineSelector;
 
 /// One sweep point: the steady-state decision the optimizer reaches after
 /// `settle` rounds of selection/allocation feedback (no training).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SweepPoint {
     pub bandwidth_bps: f64,
     pub rho: f64,
@@ -67,7 +71,7 @@ pub fn settle(cfg: &SimConfig, split_dim: usize, client_params: usize, rounds: u
     }
 }
 
-/// Grid sweep over bandwidth budgets and rho values.
+/// Grid sweep over bandwidth budgets and rho values (auto worker count).
 pub fn grid(
     base: &SimConfig,
     bandwidths: &[f64],
@@ -75,16 +79,30 @@ pub fn grid(
     split_dim: usize,
     client_params: usize,
 ) -> Vec<SweepPoint> {
-    let mut out = Vec::new();
-    for &b in bandwidths {
-        for &rho in rhos {
-            let mut cfg = base.clone();
-            cfg.bandwidth_bps = b;
-            cfg.rho = rho;
-            out.push(settle(&cfg, split_dim, client_params, 10));
-        }
-    }
-    out
+    grid_jobs(base, bandwidths, rhos, split_dim, client_params, 0)
+}
+
+/// [`grid`] with an explicit worker count (0 = auto, 1 = sequential).
+/// Output stays in row-major (bandwidth, rho) order for any `jobs`.
+pub fn grid_jobs(
+    base: &SimConfig,
+    bandwidths: &[f64],
+    rhos: &[f64],
+    split_dim: usize,
+    client_params: usize,
+    jobs: usize,
+) -> Vec<SweepPoint> {
+    let points: Vec<(f64, f64)> = bandwidths
+        .iter()
+        .flat_map(|&b| rhos.iter().map(move |&rho| (b, rho)))
+        .collect();
+    executor::run_indexed(points.len(), executor::resolve_jobs(jobs, points.len()), |i| {
+        let (b, rho) = points[i];
+        let mut cfg = base.clone();
+        cfg.bandwidth_bps = b;
+        cfg.rho = rho;
+        settle(&cfg, split_dim, client_params, 10)
+    })
 }
 
 pub fn print_table(points: &[SweepPoint]) {
@@ -153,5 +171,20 @@ mod tests {
         assert_eq!(pts.len(), 4);
         // the K_eps-weighted P2 keeps E within bounds everywhere
         assert!(pts.iter().all(|p| p.e >= 1 && p.e <= 20));
+        // deterministic row-major ordering: (b, rho) varies rho fastest
+        assert_eq!(
+            pts.iter().map(|p| (p.bandwidth_bps, p.rho)).collect::<Vec<_>>(),
+            vec![(5e8, 0.2), (5e8, 0.8), (1e9, 0.2), (1e9, 0.8)]
+        );
+    }
+
+    #[test]
+    fn parallel_grid_matches_sequential() {
+        let base = SimConfig::commag();
+        let bw = [2.5e8, 5e8, 1e9];
+        let rhos = [0.2, 0.5, 0.8];
+        let seq = grid_jobs(&base, &bw, &rhos, SPLIT, CP, 1);
+        let par = grid_jobs(&base, &bw, &rhos, SPLIT, CP, 4);
+        assert_eq!(seq, par);
     }
 }

@@ -1,6 +1,17 @@
-//! Federated-learning core: the shared run context, the [`Framework`] trait
-//! every trainer (SplitMe + baselines) implements, parameter aggregation,
-//! and test-set evaluation.
+//! Federated-learning core: the shared experiment context, the
+//! [`Framework`] trait every trainer (SplitMe + baselines) implements,
+//! parameter aggregation, and test-set evaluation.
+//!
+//! # Shared context vs per-run state (PERF.md §concurrency)
+//!
+//! [`ExperimentContext`] holds everything that is identical across the
+//! frameworks of one paired comparison — engine handle, prepared plan,
+//! topology, data shards, precomputed chunk stacks, test set — and is built
+//! **once per (preset, seed)**. It is immutable and `Send + Sync`, so the
+//! parallel comparison/sweep executor shares one instance across runner
+//! threads by reference. Everything mutable (model params, clock, records,
+//! the per-framework RNG pool) lives in the runner side
+//! (`coordinator::RunState` + each `Framework` impl).
 
 use std::sync::OnceLock;
 
@@ -14,7 +25,8 @@ use crate::runtime::{Arg, ChunkStacks, Engine, Frozen, PresetManifest, PresetPla
 use crate::sim::RngPool;
 
 /// Precomputed chunk-window stacks over one shard's cyclic batches, built
-/// once in [`FlContext::new`] and reused by every framework on every round.
+/// once in [`ExperimentContext::new`] and reused by every framework on every
+/// round.
 pub struct ShardChunks {
     /// stacked input batches `[chunk, batch, ...input]`
     pub xs: ChunkStacks,
@@ -22,11 +34,42 @@ pub struct ShardChunks {
     pub ys: ChunkStacks,
 }
 
-/// Everything a framework needs for a run: the engine, the prepared
-/// execution plan, the O-RAN topology, the federated data shards, and the
-/// parameter initializer. Built once and shared by all frameworks for paired
-/// comparisons (same topology, same shards, same init streams).
-pub struct FlContext<'a> {
+/// Bytes held by the context's literal/chunk caches (PERF.md §memory).
+/// `*_host_bytes` count the tensors themselves; `*_literal_bytes` count the
+/// PJRT literals materialized so far (each roughly doubles its tensor).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct MemoryStats {
+    pub shard_host_bytes: usize,
+    pub shard_literal_bytes: usize,
+    pub chunk_host_bytes: usize,
+    pub chunk_literal_bytes: usize,
+    pub test_host_bytes: usize,
+    pub test_literal_bytes: usize,
+    /// framework-private caches (e.g. SplitMe's params-version memos);
+    /// 0 when reported from a bare context ([`Framework::cache_bytes`])
+    pub framework_cache_bytes: usize,
+}
+
+impl MemoryStats {
+    pub fn total_bytes(&self) -> usize {
+        self.shard_host_bytes
+            + self.shard_literal_bytes
+            + self.chunk_host_bytes
+            + self.chunk_literal_bytes
+            + self.test_host_bytes
+            + self.test_literal_bytes
+            + self.framework_cache_bytes
+    }
+}
+
+/// Everything a framework needs for a run and every framework of a paired
+/// comparison can share: the engine, the prepared execution plan, the O-RAN
+/// topology, the federated data shards (+ precomputed chunk stacks), the
+/// test set, and the parameter initializer. Built once per (preset, seed);
+/// immutable and `Send + Sync` afterwards, so concurrent runners dispatch
+/// against it without copies (same topology, same shards, same init
+/// streams — the paired-comparison contract).
+pub struct ExperimentContext<'a> {
     pub engine: &'a Engine,
     pub cfg: SimConfig,
     pub preset: &'a PresetManifest,
@@ -36,15 +79,23 @@ pub struct FlContext<'a> {
     pub topo: Topology,
     pub shards: Vec<ClientShard>,
     /// per-shard precomputed chunk stacks, parallel to `shards`; empty when
-    /// chunked dispatch is disabled or the preset has no `*_chunk` artifacts
+    /// chunked dispatch is disabled, the preset has no `*_chunk` artifacts,
+    /// or the projected size exceeds `cfg.chunk_cache_cap_bytes`
     pub chunks: Vec<ShardChunks>,
     pub test: Batched,
+    /// base pool (root seed only): data/topology/model-init streams. Shared
+    /// by all frameworks so paired init streams stay identical; per-runner
+    /// runtime streams come from [`RngPool::for_framework`] instead.
     pub pool: RngPool,
 }
 
-impl<'a> FlContext<'a> {
+/// Former name of [`ExperimentContext`], kept for downstream code.
+pub type FlContext<'a> = ExperimentContext<'a>;
+
+impl<'a> ExperimentContext<'a> {
     pub fn new(engine: &'a Engine, cfg: &SimConfig) -> Result<Self> {
         cfg.validate()?;
+        engine.note_context_build();
         let preset = engine.preset(&cfg.preset)?;
         let plan = engine
             .warmup_preset(&cfg.preset)
@@ -79,21 +130,35 @@ impl<'a> FlContext<'a> {
 
         // precompute the cyclic chunk stacks once per shard (§Perf): the
         // chunked dispatch then reuses one frozen stack per window instead
-        // of re-stacking + re-copying inside every chunk iteration
+        // of re-stacking + re-copying inside every chunk iteration. The
+        // precompute is skipped when its projected footprint exceeds the
+        // configured cap — dispatch falls back to the single-step path,
+        // which the chunk-parity test guarantees is numerically identical.
         let chunk = effective_chunk(preset);
         let chunks = if chunk > 1 && plan.has_chunk_roles() {
-            shards
-                .iter()
-                .map(|s| {
-                    let xs: Vec<&Tensor> = s.data.batches.iter().map(|(x, _)| x.tensor()).collect();
-                    let ys: Vec<&Tensor> = s.data.batches.iter().map(|(_, y)| y.tensor()).collect();
-                    Ok(ShardChunks {
-                        xs: ChunkStacks::new(&xs, chunk)?,
-                        ys: ChunkStacks::new(&ys, chunk)?,
+            let projected = projected_chunk_bytes(&shards, chunk);
+            let cap = cfg.chunk_cache_cap_bytes;
+            if cap > 0 && projected > cap {
+                eprintln!(
+                    "note: skipping chunk-stack precompute ({projected} B projected > cap {cap} B)"
+                );
+                Vec::new()
+            } else {
+                shards
+                    .iter()
+                    .map(|s| {
+                        let xs: Vec<&Tensor> =
+                            s.data.batches.iter().map(|(x, _)| x.tensor()).collect();
+                        let ys: Vec<&Tensor> =
+                            s.data.batches.iter().map(|(_, y)| y.tensor()).collect();
+                        Ok(ShardChunks {
+                            xs: ChunkStacks::new(&xs, chunk)?,
+                            ys: ChunkStacks::new(&ys, chunk)?,
+                        })
                     })
-                })
-                .collect::<Result<Vec<_>>>()
-                .context("precomputing chunk stacks")?
+                    .collect::<Result<Vec<_>>>()
+                    .context("precomputing chunk stacks")?
+            }
         } else {
             Vec::new()
         };
@@ -124,6 +189,26 @@ impl<'a> FlContext<'a> {
     /// Chunk stacks for shard `m`: `(xs, ys)` if precomputed.
     pub fn shard_chunks(&self, m: usize) -> Option<(&ChunkStacks, &ChunkStacks)> {
         self.chunks.get(m).map(|c| (&c.xs, &c.ys))
+    }
+
+    /// Bytes currently held by this context's literal/chunk caches.
+    pub fn memory_stats(&self) -> MemoryStats {
+        let mut ms = MemoryStats::default();
+        for s in &self.shards {
+            for (x, y) in &s.data.batches {
+                ms.shard_host_bytes += x.host_bytes() + y.host_bytes();
+                ms.shard_literal_bytes += x.literal_bytes() + y.literal_bytes();
+            }
+        }
+        for c in &self.chunks {
+            ms.chunk_host_bytes += c.xs.host_bytes() + c.ys.host_bytes();
+            ms.chunk_literal_bytes += c.xs.literal_bytes() + c.ys.literal_bytes();
+        }
+        for (x, y) in &self.test.batches {
+            ms.test_host_bytes += x.host_bytes() + y.host_bytes();
+            ms.test_literal_bytes += x.literal_bytes() + y.literal_bytes();
+        }
+        ms
     }
 
     /// Wire size of the client-side model (omega*d of Eq 19), bytes.
@@ -168,6 +253,30 @@ impl<'a> FlContext<'a> {
     }
 }
 
+fn gcd(mut a: usize, mut b: usize) -> usize {
+    while b != 0 {
+        (a, b) = (b, a % b);
+    }
+    a
+}
+
+/// Projected host bytes of the full chunk-stack precompute over `shards`:
+/// per shard, `n/gcd(n, chunk)` reachable windows of `chunk` batches each
+/// (x and y sides). Literals later built on dispatch roughly double this.
+pub fn projected_chunk_bytes(shards: &[ClientShard], chunk: usize) -> usize {
+    shards
+        .iter()
+        .map(|s| {
+            let n = s.data.num_batches();
+            let Some((x0, y0)) = s.data.batches.first() else {
+                return 0;
+            };
+            let windows = n / gcd(n, chunk);
+            windows * chunk * (x0.size_bytes() + y0.size_bytes())
+        })
+        .sum()
+}
+
 /// `REPRO_NO_CHUNK=1` disables the folded chunk dispatch (perf ablation).
 /// Read from the environment once, at first use — toggling the variable
 /// mid-process has no effect (the read was on the per-invocation hot path).
@@ -195,8 +304,9 @@ pub fn effective_chunk(preset: &PresetManifest) -> usize {
 /// `chunks` supplies their precomputed window stacks (same cyclic order) for
 /// the folded dispatch — without them the chunk path is skipped.
 /// Returns `(params, loss_sum, steps_counted)`.
+#[allow(clippy::too_many_arguments)]
 pub fn run_steps<'t>(
-    ctx: &FlContext,
+    ctx: &ExperimentContext,
     single_role: &str,
     chunk_role: &str,
     params: Tensor,
@@ -213,7 +323,7 @@ pub fn run_steps<'t>(
 /// dispatch modes inside one process (the env switch is read only once).
 #[allow(clippy::too_many_arguments)]
 pub fn run_steps_with<'t>(
-    ctx: &FlContext,
+    ctx: &ExperimentContext,
     single_role: &str,
     chunk_role: &str,
     mut params: Tensor,
@@ -292,18 +402,27 @@ pub struct RoundOutcome {
 }
 
 /// One FL framework (SplitMe or a baseline). Implementations hold their own
-/// global model state across rounds.
+/// global model state across rounds; everything in `ctx` is shared and
+/// immutable, and `rng` is the runner's own per-framework pool
+/// ([`RngPool::for_framework`]).
 pub trait Framework {
     fn name(&self) -> &'static str;
 
     /// Execute one global training round: select, allocate, train for real
     /// (PJRT), aggregate, and report the modeled costs/latency.
-    fn run_round(&mut self, ctx: &FlContext, round: usize) -> Result<RoundOutcome>;
+    fn run_round(&mut self, ctx: &ExperimentContext, rng: &RngPool, round: usize)
+        -> Result<RoundOutcome>;
 
     /// Materialize the current full model for evaluation. For SplitMe this
     /// triggers the Step-4 layer-wise inversion; for the baselines it is a
     /// concatenation.
-    fn full_model(&mut self, ctx: &FlContext) -> Result<Tensor>;
+    fn full_model(&mut self, ctx: &ExperimentContext) -> Result<Tensor>;
+
+    /// Bytes pinned by framework-private caches (SplitMe's params-version
+    /// memos); reported into [`MemoryStats::framework_cache_bytes`].
+    fn cache_bytes(&self) -> usize {
+        0
+    }
 }
 
 /// Draw K distinct client ids uniformly (FedAvg / vanilla-SFL selection).
@@ -319,6 +438,7 @@ pub fn sample_clients(pool: &RngPool, label: &str, round: usize, m: usize, k: us
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::pack_batches;
 
     #[test]
     fn aggregate_averages() {
@@ -331,6 +451,29 @@ mod tests {
     #[test]
     fn aggregate_rejects_empty() {
         assert!(aggregate(&[]).is_err());
+    }
+
+    #[test]
+    fn experiment_context_is_send_sync() {
+        // the whole point of the shared-context refactor: one context, many
+        // runner threads — enforced at compile time
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ExperimentContext<'static>>();
+        assert_send_sync::<MemoryStats>();
+    }
+
+    #[test]
+    fn projected_chunk_bytes_counts_reachable_windows() {
+        // 4 batches of ([2,3] x, [2,2] y) = 24 + 16 = 40 bytes per pair
+        let x: Vec<f32> = vec![0.0; 8 * 3];
+        let labels: Vec<u32> = vec![0; 8];
+        let data = pack_batches(&x, &labels, &[3], 2, 2);
+        assert_eq!(data.num_batches(), 4);
+        let shard = ClientShard { client_id: 0, slice_class: 0, data };
+        // chunk 2 over n=4: 4/gcd(4,2) = 2 windows of 2 batches each
+        assert_eq!(projected_chunk_bytes(std::slice::from_ref(&shard), 2), 2 * 2 * 40);
+        // chunk 3 over n=4: gcd=1 -> all 4 offsets reachable, 3 batches each
+        assert_eq!(projected_chunk_bytes(std::slice::from_ref(&shard), 3), 4 * 3 * 40);
     }
 
     #[test]

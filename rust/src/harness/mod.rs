@@ -110,6 +110,13 @@ pub fn full_scale() -> bool {
     std::env::var("REPRO_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Worker-thread knob shared by all benches: the comparison/sweep phases of
+/// the figure benches fan out on this many threads (`REPRO_JOBS=N`, default
+/// auto-detected — same resolution as the CLI's `--jobs 0`).
+pub fn jobs() -> usize {
+    crate::experiments::executor::default_jobs()
+}
+
 /// Collects bench results and writes the `BENCH_perf.json` perf-trajectory
 /// file (name/mean/p50 per bench; full schema in PERF.md).
 #[derive(Default)]

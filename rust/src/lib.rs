@@ -46,7 +46,8 @@ pub mod testkit;
 
 pub mod prelude {
     pub use crate::config::{FrameworkKind, SimConfig};
-    pub use crate::coordinator::Runner;
+    pub use crate::coordinator::{RunState, Runner};
+    pub use crate::fl::ExperimentContext;
     pub use crate::metrics::{RoundRecord, RunSummary};
     pub use crate::runtime::{Engine, Manifest, Tensor};
 }

@@ -27,9 +27,12 @@ USAGE:
             [--out DIR] [--seed N] [--eval-every K]
   repro experiment [fig3a|fig3b|fig4a|fig4b|fig5|all]
             [--splitme-rounds N] [--baseline-rounds N] [--out DIR]
-            [--seed N] [--verbose]
-  repro sweep   [--preset commag|vision]   # P2 trade-off surface, no training
+            [--seed N] [--verbose] [--jobs N]
+  repro sweep   [--preset commag|vision] [--jobs N]   # P2 surface, no training
   repro inspect
+
+--jobs N: worker threads for the paired comparison / sweep grid
+          (0 = auto: REPRO_JOBS env or available cores; 1 = sequential)
 ";
 
 fn main() {
@@ -97,7 +100,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         summary.total_sim_time,
         summary.total_comm_bytes / 1e6
     );
-    // perf visibility: hottest artifacts
+    // perf visibility: hottest artifacts + cache memory footprint
     for (name, s) in engine.stats().into_iter().take(5) {
         println!(
             "  artifact {:<28} calls={:>7} total={:>8.2}s mean={:>7.3}ms",
@@ -107,6 +110,19 @@ fn cmd_run(args: &Args) -> Result<()> {
             1e3 * s.total_secs / s.calls.max(1) as f64
         );
     }
+    let ms = runner.memory_stats();
+    println!(
+        "  cache memory: shards {:.1}MB (+{:.1}MB literals) chunks {:.1}MB (+{:.1}MB literals) \
+         test {:.1}MB (+{:.1}MB literals) framework memos {:.1}MB = {:.1}MB total",
+        ms.shard_host_bytes as f64 / 1e6,
+        ms.shard_literal_bytes as f64 / 1e6,
+        ms.chunk_host_bytes as f64 / 1e6,
+        ms.chunk_literal_bytes as f64 / 1e6,
+        ms.test_host_bytes as f64 / 1e6,
+        ms.test_literal_bytes as f64 / 1e6,
+        ms.framework_cache_bytes as f64 / 1e6,
+        ms.total_bytes() as f64 / 1e6,
+    );
     Ok(())
 }
 
@@ -119,12 +135,13 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let out = args.str_or("out", "results");
     let seed = args.u64_or("seed", 20250710)?;
     let verbose = args.flag("verbose");
+    let jobs = args.jobs()?;
     args.finish()?;
 
     let engine = Engine::from_default_manifest()?;
     let mut cfg = if which == "fig5" { SimConfig::vision() } else { SimConfig::commag() };
     cfg.seed = seed;
-    let summaries = experiments::run_comparison(&engine, &cfg, budget, verbose)?;
+    let summaries = experiments::run_comparison_jobs(&engine, &cfg, budget, verbose, jobs)?;
     experiments::write_all(&summaries, &out)?;
     match which.as_str() {
         "fig3a" => experiments::fig3a(&summaries),
@@ -148,13 +165,14 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 fn cmd_sweep(args: &Args) -> Result<()> {
     use repro::experiments::sweep;
     let preset = args.str_or("preset", "commag");
+    let jobs = args.jobs()?;
     args.finish()?;
     let base = SimConfig::preset_config(&preset)?;
     let m = Manifest::load_default()?;
     let p = m.preset(&preset)?;
     let bandwidths = [1e8, 2.5e8, 5e8, 1e9, 2e9, 4e9];
     let rhos = [0.2, 0.5, 0.8];
-    let pts = sweep::grid(&base, &bandwidths, &rhos, p.split_dim, p.client_params);
+    let pts = sweep::grid_jobs(&base, &bandwidths, &rhos, p.split_dim, p.client_params, jobs);
     println!("P1/P2 steady state over bandwidth x rho ({preset}, M={}):", base.num_clients);
     sweep::print_table(&pts);
     Ok(())

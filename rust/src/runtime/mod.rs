@@ -12,18 +12,32 @@
 //! * [`Engine::run`] — the name-keyed compatibility path that validates
 //!   arity and shapes against the manifest before delegating to `run_id`.
 //!
-//! The engine is deliberately single-threaded: the PJRT wrapper types are not
-//! `Send`/`Sync`, and the O-RAN "parallelism" of the paper is *simulated
-//! time* (sim::Clock), not host concurrency — all 50 near-RT-RICs share one
-//! process and one compiled executable per artifact.
+//! # Concurrency (PERF.md §concurrency)
+//!
+//! The engine is `Send + Sync` and may be shared by several runner threads
+//! (the parallel comparison/sweep executor of `experiments`):
+//!
+//! * the artifact table is **append-only**: slots are filled under the
+//!   intern lock during `warmup_preset` / first use, and the hot path
+//!   ([`Engine::run_id`]) reads them through per-slot [`OnceLock`]s —
+//!   a lock-free read after warmup;
+//! * per-artifact [`ExecStats`] are relaxed atomics, accumulated across
+//!   every thread that dispatches (engine-global, not per-runner);
+//! * the PJRT CPU client and its loaded executables are internally
+//!   synchronized (the PJRT C API contract): `compile` and `execute` may be
+//!   called concurrently from multiple threads.
+//!
+//! The O-RAN "parallelism" of the paper itself is still *simulated time*
+//! (sim::Clock); host concurrency only overlaps independent runs.
 
 pub mod manifest;
 pub mod plan;
 pub mod tensor;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::time::Instant;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock, RwLock};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -31,40 +45,121 @@ pub use manifest::{ArtifactEntry, Manifest, PresetManifest, ServerLayer};
 pub use plan::{Arg, ArtifactId, ChunkStacks, LayerPlan, PresetPlan};
 pub use tensor::{Frozen, Tensor};
 
-/// Cumulative execution statistics per artifact (perf pass input).
+/// Cumulative execution statistics per artifact (perf pass input) — a
+/// point-in-time snapshot of the engine's atomic counters.
 #[derive(Debug, Default, Clone)]
 pub struct ExecStats {
     pub calls: u64,
     pub total_secs: f64,
 }
 
+/// Atomic accumulator behind [`ExecStats`]: updated with relaxed ordering on
+/// the hot path (monotone counters — a slightly stale read is fine).
+#[derive(Debug, Default)]
+struct ArtifactStats {
+    calls: AtomicU64,
+    nanos: AtomicU64,
+}
+
+impl ArtifactStats {
+    fn record(&self, elapsed: Duration) {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.nanos.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> ExecStats {
+        ExecStats {
+            calls: self.calls.load(Ordering::Relaxed),
+            total_secs: self.nanos.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+}
+
+/// Thread-safety wrapper for the PJRT client handle — one of the two
+/// deliberately narrow `unsafe impl`s in the runtime (see [`SyncExecutable`]
+/// and `tensor::SyncLiteral`); everything else derives its auto traits, so
+/// the compiler keeps checking future fields.
+struct SyncClient(xla::PjRtClient);
+
+// SAFETY: the wrapper type is !Send/!Sync only because it holds raw
+// pointers to C++ objects; the PJRT C API specifies clients as internally
+// synchronized — compile and execute may be called from multiple threads.
+//
+// CAVEAT: the authoring containers carry no toolchain, so the claim about
+// the linked xla_extension build has not been exercised here. If a PJRT
+// build ever proves non-reentrant, set `REPRO_SERIAL_EXECUTE=1`: run_id
+// then serializes the execute call behind a process-wide mutex (host-side
+// literal conversion still overlaps), restoring the single-threaded
+// dispatch discipline without giving up the shared-context architecture.
+unsafe impl Send for SyncClient {}
+unsafe impl Sync for SyncClient {}
+
+/// Thread-safety wrapper for a loaded executable (immutable after
+/// compilation; PJRT executions are internally synchronized — same
+/// SAFETY/CAVEAT as [`SyncClient`]).
+struct SyncExecutable(xla::PjRtLoadedExecutable);
+
+// SAFETY: see SyncClient.
+unsafe impl Send for SyncExecutable {}
+unsafe impl Sync for SyncExecutable {}
+
 /// One compiled artifact: the executable plus the manifest facts the hot
 /// path needs (arity, output count) captured once at intern time.
 struct CompiledArtifact {
     name: String,
-    exe: xla::PjRtLoadedExecutable,
+    exe: SyncExecutable,
     n_inputs: usize,
     n_outputs: usize,
-    stats: ExecStats,
+    stats: ArtifactStats,
 }
 
 /// Compiled-executable table over one PJRT CPU client, indexed by interned
-/// [`ArtifactId`]s.
+/// [`ArtifactId`]s. `Send + Sync` by auto-derivation — the only `unsafe`
+/// vouching is scoped to the [`SyncClient`]/[`SyncExecutable`] handle
+/// wrappers, so any future non-thread-safe field breaks the build instead
+/// of silently riding a blanket impl.
 pub struct Engine {
-    client: xla::PjRtClient,
+    client: SyncClient,
     manifest: Manifest,
-    arts: RefCell<Vec<CompiledArtifact>>,
-    ids: RefCell<HashMap<String, ArtifactId>>,
+    /// append-only artifact table, one pre-allocated slot per manifest
+    /// artifact; a filled slot is immutable and read lock-free
+    slots: Box<[OnceLock<CompiledArtifact>]>,
+    /// name → id; written only under `intern_lock`, read briefly on intern
+    ids: RwLock<HashMap<String, ArtifactId>>,
+    /// serializes compilation so ids are assigned densely
+    intern_lock: Mutex<()>,
+    /// how many `ExperimentContext`s were built over this engine — lets
+    /// tests assert the shared-context path constructs shards exactly once
+    ctx_builds: AtomicU64,
+}
+
+/// `REPRO_SERIAL_EXECUTE=1` routes every PJRT execute through one mutex —
+/// the documented fallback if the linked PJRT build turns out not to be
+/// internally synchronized. Read once, at first dispatch.
+fn serial_execute_lock() -> Option<&'static Mutex<()>> {
+    static SERIAL: OnceLock<Option<Mutex<()>>> = OnceLock::new();
+    SERIAL
+        .get_or_init(|| {
+            std::env::var("REPRO_SERIAL_EXECUTE")
+                .map(|v| v == "1")
+                .unwrap_or(false)
+                .then(|| Mutex::new(()))
+        })
+        .as_ref()
 }
 
 impl Engine {
     pub fn new(manifest: Manifest) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let client = SyncClient(xla::PjRtClient::cpu().context("creating PJRT CPU client")?);
+        let slots: Vec<OnceLock<CompiledArtifact>> =
+            (0..manifest.artifacts.len()).map(|_| OnceLock::new()).collect();
         Ok(Self {
             client,
             manifest,
-            arts: RefCell::new(Vec::new()),
-            ids: RefCell::new(HashMap::new()),
+            slots: slots.into_boxed_slice(),
+            ids: RwLock::new(HashMap::new()),
+            intern_lock: Mutex::new(()),
+            ctx_builds: AtomicU64::new(0),
         })
     }
 
@@ -83,7 +178,13 @@ impl Engine {
     /// Compile an artifact (or fetch it from the table) and return its
     /// interned handle. Off the hot path: called at warmup / first use.
     pub fn intern(&self, name: &str) -> Result<ArtifactId> {
-        if let Some(&id) = self.ids.borrow().get(name) {
+        if let Some(&id) = self.ids.read().expect("ids lock").get(name) {
+            return Ok(id);
+        }
+        let _guard = self.intern_lock.lock().expect("intern lock");
+        // re-check: another thread may have finished compiling it while we
+        // waited for the intern lock
+        if let Some(&id) = self.ids.read().expect("ids lock").get(name) {
             return Ok(id);
         }
         let entry = self
@@ -99,20 +200,37 @@ impl Engine {
         let proto = xla::HloModuleProto::from_text_file(path_str)
             .with_context(|| format!("parsing HLO text {path:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {name}"))?;
-        let mut arts = self.arts.borrow_mut();
-        let id = ArtifactId(u32::try_from(arts.len()).expect("artifact table fits u32"));
-        arts.push(CompiledArtifact {
-            name: name.to_string(),
-            exe,
-            n_inputs,
-            n_outputs,
-            stats: ExecStats::default(),
-        });
-        self.ids.borrow_mut().insert(name.to_string(), id);
+        let exe = SyncExecutable(
+            self.client
+                .0
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?,
+        );
+        // dense id assignment: the table holds exactly the already-interned
+        // artifacts (ids map is only written here, under the intern lock)
+        let index = self.ids.read().expect("ids lock").len();
+        let id = ArtifactId(u32::try_from(index).expect("artifact table fits u32"));
+        let slot = self
+            .slots
+            .get(index)
+            .ok_or_else(|| anyhow!("artifact table full: {} slots", self.slots.len()))?;
+        if slot
+            .set(CompiledArtifact {
+                name: name.to_string(),
+                exe,
+                n_inputs,
+                n_outputs,
+                stats: ArtifactStats::default(),
+            })
+            .is_err()
+        {
+            bail!("artifact slot {index} filled twice (intern lock violated)");
+        }
+        // publish the name mapping only after the slot is readable
+        self.ids
+            .write()
+            .expect("ids lock")
+            .insert(name.to_string(), id);
         Ok(id)
     }
 
@@ -138,20 +256,28 @@ impl Engine {
         Ok(PresetPlan::new(preset, roles, layers))
     }
 
-    /// Artifact name for an interned id (error paths, stats reporting).
-    fn name_of(&self, id: ArtifactId) -> String {
-        self.arts
-            .borrow()
-            .get(id.index())
-            .map(|a| a.name.clone())
-            .unwrap_or_else(|| format!("<unknown ArtifactId {}>", id.index()))
+    /// The interned artifact for an id, if the slot has been filled.
+    fn artifact(&self, id: ArtifactId) -> Option<&CompiledArtifact> {
+        self.slots.get(id.index()).and_then(OnceLock::get)
     }
 
     /// Execute a prepared artifact — the hot path. Inputs were validated
     /// when the plan was built; here the only host work is converting
-    /// `Arg::Fresh` tensors (mutable params) to literals.
+    /// `Arg::Fresh` tensors (mutable params) to literals. Lock-free: the
+    /// slot read is a `OnceLock::get`, the stats update is atomic.
     pub fn run_id(&self, id: ArtifactId, args: &[Arg]) -> Result<Vec<Tensor>> {
         let start = Instant::now();
+        let art = self
+            .artifact(id)
+            .ok_or_else(|| anyhow!("ArtifactId {} not interned on this engine", id.index()))?;
+        if art.n_inputs != args.len() {
+            bail!(
+                "artifact {}: expected {} inputs, got {}",
+                art.name,
+                art.n_inputs,
+                args.len()
+            );
+        }
         // literals for the fresh (mutable) inputs, rebuilt every call
         let mut fresh: Vec<Option<xla::Literal>> = Vec::with_capacity(args.len());
         for a in args {
@@ -168,47 +294,31 @@ impl Engine {
             });
         }
 
-        let (lit, n_outputs) = {
-            let arts = self.arts.borrow();
-            let art = arts
-                .get(id.index())
-                .ok_or_else(|| anyhow!("ArtifactId {} not interned on this engine", id.index()))?;
-            if art.n_inputs != args.len() {
-                bail!(
-                    "artifact {}: expected {} inputs, got {}",
-                    art.name,
-                    art.n_inputs,
-                    args.len()
-                );
-            }
-            let outs = art
-                .exe
-                .execute::<&xla::Literal>(&lits)
-                .with_context(|| format!("executing artifact {}", art.name))?;
-            // single CPU device, return_tuple=True → one tuple buffer
-            let lit = outs[0][0]
-                .to_literal_sync()
-                .with_context(|| format!("fetching result of {}", art.name))?;
-            (lit, art.n_outputs)
-        };
+        let _serial = serial_execute_lock().map(|m| m.lock().expect("serial execute lock"));
+        let outs = art
+            .exe
+            .0
+            .execute::<&xla::Literal>(&lits)
+            .with_context(|| format!("executing artifact {}", art.name))?;
+        // single CPU device, return_tuple=True → one tuple buffer
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", art.name))?;
         let parts = lit.to_tuple()?;
         let result: Vec<Tensor> = parts
             .iter()
             .map(Tensor::from_literal)
             .collect::<Result<_>>()?;
-        if result.len() != n_outputs {
+        if result.len() != art.n_outputs {
             bail!(
                 "artifact {}: manifest promises {} outputs, got {}",
-                self.name_of(id),
-                n_outputs,
+                art.name,
+                art.n_outputs,
                 result.len()
             );
         }
 
-        let mut arts = self.arts.borrow_mut();
-        let s = &mut arts[id.index()].stats;
-        s.calls += 1;
-        s.total_secs += start.elapsed().as_secs_f64();
+        art.stats.record(start.elapsed());
         Ok(result)
     }
 
@@ -239,20 +349,43 @@ impl Engine {
     }
 
     /// Per-artifact wallclock accounting for EXPERIMENTS.md §Perf. Only
-    /// artifacts that actually executed are listed.
+    /// artifacts that actually executed are listed. NOTE: counters are
+    /// engine-global — when several runners share one engine (the parallel
+    /// comparison path), their dispatches accumulate into the same table.
     pub fn stats(&self) -> Vec<(String, ExecStats)> {
-        let mut v: Vec<_> = self
-            .arts
-            .borrow()
+        let mut v: Vec<(String, ExecStats)> = self
+            .slots
             .iter()
-            .filter(|a| a.stats.calls > 0)
-            .map(|a| (a.name.clone(), a.stats.clone()))
+            .filter_map(OnceLock::get)
+            .map(|a| (a.name.clone(), a.stats.snapshot()))
+            .filter(|(_, s)| s.calls > 0)
             .collect();
         v.sort_by(|a, b| b.1.total_secs.total_cmp(&a.1.total_secs));
         v
     }
 
+    /// Record that an `ExperimentContext` was built over this engine.
+    pub(crate) fn note_context_build(&self) {
+        self.ctx_builds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// How many `ExperimentContext`s (shard/chunk/test-set constructions)
+    /// this engine has seen — the paired comparison path must report exactly
+    /// one per (preset, seed).
+    pub fn context_builds(&self) -> u64 {
+        self.ctx_builds.load(Ordering::Relaxed)
+    }
+
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.client.0.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn engine_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<super::Engine>();
     }
 }

@@ -8,7 +8,7 @@
 //!   The hot path ([`Engine::run_id`](super::Engine::run_id)) indexes a
 //!   `Vec` — no per-call `String` hashing, no manifest lookup, no per-input
 //!   shape loop. Shapes are validated once when the plan and its frozen
-//!   inputs are built (`FlContext::new`), not on every dispatch; the
+//!   inputs are built (`ExperimentContext::new`), not on every dispatch; the
 //!   name-keyed [`Engine::run`](super::Engine::run) survives as the
 //!   validated compatibility path (tests, one-off calls).
 //!
@@ -88,7 +88,7 @@ pub struct LayerPlan {
 
 /// Everything a preset needs, compiled and interned: role -> [`ArtifactId`]
 /// plus the inversion layer table. Built once by
-/// [`super::Engine::warmup_preset`]; lives in `FlContext` for the whole run.
+/// [`super::Engine::warmup_preset`]; lives in the shared `ExperimentContext` for the whole experiment.
 #[derive(Debug, Clone)]
 pub struct PresetPlan {
     pub preset: String,
@@ -115,7 +115,7 @@ impl PresetPlan {
     }
 
     /// Whether any scan-folded `*_chunk` artifact exists — gates the
-    /// chunk-stack precompute in `FlContext::new`.
+    /// chunk-stack precompute in `ExperimentContext::new`.
     pub fn has_chunk_roles(&self) -> bool {
         self.roles.keys().any(|r| r.ends_with("_chunk"))
     }
@@ -146,7 +146,7 @@ pub struct ChunkStacks {
 
 impl ChunkStacks {
     /// Precompute the full cycle of reachable windows (long-lived stacks:
-    /// the per-shard data caches built once in `FlContext::new`).
+    /// the per-shard data caches built once in `ExperimentContext::new`).
     pub fn new(parts: &[&Tensor], chunk: usize) -> Result<Self> {
         Self::with_limit(parts, chunk, usize::MAX)
     }
@@ -190,6 +190,17 @@ impl ChunkStacks {
     /// Number of per-batch tensors the stacks cycle over.
     pub fn period(&self) -> usize {
         self.period
+    }
+
+    /// Host bytes held by the precomputed window stacks (memory accounting,
+    /// PERF.md §memory).
+    pub fn host_bytes(&self) -> usize {
+        self.windows.iter().flatten().map(Frozen::host_bytes).sum()
+    }
+
+    /// Bytes additionally pinned by window literals materialized so far.
+    pub fn literal_bytes(&self) -> usize {
+        self.windows.iter().flatten().map(Frozen::literal_bytes).sum()
     }
 
     /// The frozen `[chunk, ...]` stack for the window starting at step `t`.
@@ -274,6 +285,18 @@ mod tests {
         let cs = ChunkStacks::new(&refs, 2).unwrap();
         assert!(cs.window(0).is_ok());
         assert!(cs.window(1).is_err());
+    }
+
+    #[test]
+    fn chunk_stacks_account_bytes() {
+        // period 4, chunk 2 -> 2 reachable windows of [2, 2] = 16 bytes each
+        let ps = parts(4, 2);
+        let refs: Vec<&Tensor> = ps.iter().collect();
+        let cs = ChunkStacks::new(&refs, 2).unwrap();
+        assert_eq!(cs.host_bytes(), 32);
+        assert_eq!(cs.literal_bytes(), 0);
+        cs.window(0).unwrap().literal().unwrap();
+        assert_eq!(cs.literal_bytes(), 16);
     }
 
     #[test]

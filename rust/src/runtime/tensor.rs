@@ -4,9 +4,12 @@
 //! emits f32 shapes), so a flat `Vec<f32>` + dims is all we need. Immutable
 //! tensors that cross the boundary many times (data batches, labels, chunk
 //! stacks, lr scalars) are wrapped in [`Frozen`], which builds the literal
-//! once and reuses it on every dispatch.
+//! once and reuses it on every dispatch. `Frozen` is `Send + Sync` (the
+//! one-time literal build is synchronized by a [`OnceLock`]), so frozen data
+//! can live in the shared `ExperimentContext` and be dispatched from several
+//! runner threads at once.
 
-use std::cell::OnceCell;
+use std::sync::OnceLock;
 
 use anyhow::{bail, Context, Result};
 
@@ -102,6 +105,19 @@ impl Tensor {
     }
 }
 
+/// Thread-safety wrapper for the cached literal — the only `unsafe` in this
+/// module, deliberately scoped to the one xla handle so `Frozen` itself
+/// keeps auto-deriving `Send + Sync` (any future non-thread-safe field
+/// breaks the build instead of riding a blanket impl).
+struct SyncLiteral(xla::Literal);
+
+// SAFETY: the literal is immutable after construction and only ever read
+// (`execute` borrows it immutably). `xla::Literal` owns a plain host
+// buffer; xla-rs omits the Send/Sync declarations because its types wrap
+// raw pointers, not because the buffer is thread-affine.
+unsafe impl Send for SyncLiteral {}
+unsafe impl Sync for SyncLiteral {}
+
 /// An immutable [`Tensor`] whose PJRT literal is materialized at most once
 /// and reused across every dispatch that consumes it.
 ///
@@ -109,30 +125,49 @@ impl Tensor {
 /// accessor exists), so the cached literal can never go stale. Mutable
 /// inputs — model parameters updated every step — must stay plain `Tensor`s
 /// and enter the engine as [`super::Arg::Fresh`], which re-converts the
-/// current values on every call.
+/// current values on every call. The one-time literal build is synchronized
+/// by the `OnceLock`, so `Frozen` is `Send + Sync` (by auto-derivation over
+/// [`SyncLiteral`]).
 pub struct Frozen {
     tensor: Tensor,
-    lit: OnceCell<xla::Literal>,
+    lit: OnceLock<SyncLiteral>,
 }
 
 impl Frozen {
     pub fn new(tensor: Tensor) -> Self {
-        Self { tensor, lit: OnceCell::new() }
+        Self { tensor, lit: OnceLock::new() }
     }
 
     pub fn tensor(&self) -> &Tensor {
         &self.tensor
     }
 
-    /// The cached literal, built on first use (engine hot path).
+    /// The cached literal, built on first use (engine hot path). Concurrent
+    /// first uses may each build a literal; the first `set` wins and the
+    /// losers' copies are dropped — all are conversions of the same
+    /// immutable tensor, so every caller observes identical bytes.
     pub fn literal(&self) -> Result<&xla::Literal> {
-        if self.lit.get().is_none() {
-            let lit = self.tensor.to_literal()?;
-            // the engine is single-threaded (see runtime/mod.rs): a lost
-            // set race is impossible, so a failed set is just "already there"
-            let _ = self.lit.set(lit);
+        if let Some(lit) = self.lit.get() {
+            return Ok(&lit.0);
         }
-        Ok(self.lit.get().expect("literal initialized above"))
+        let lit = self.tensor.to_literal()?;
+        let _ = self.lit.set(SyncLiteral(lit));
+        Ok(&self.lit.get().expect("literal set above").0)
+    }
+
+    /// Host bytes of the wrapped tensor (memory accounting, PERF.md §memory).
+    pub fn host_bytes(&self) -> usize {
+        self.tensor.size_bytes()
+    }
+
+    /// Bytes additionally pinned by the cached literal: ~the tensor size
+    /// once the literal has been materialized, 0 before first dispatch.
+    pub fn literal_bytes(&self) -> usize {
+        if self.lit.get().is_some() {
+            self.tensor.size_bytes()
+        } else {
+            0
+        }
     }
 
     /// Recover the tensor, dropping the cached literal.
@@ -189,6 +224,17 @@ mod tests {
         assert_eq!(s.dims, vec![2, 2]);
         assert_eq!(s.data, vec![1.0, 2.0, 3.0, 4.0]);
         assert!(Tensor::stack(&[&a, &Tensor::zeros(&[3])]).is_err());
+    }
+
+    #[test]
+    fn frozen_is_send_sync_and_accounts_bytes() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Frozen>();
+        let f = Tensor::new(vec![2, 3], vec![0.0; 6]).unwrap().freeze();
+        assert_eq!(f.host_bytes(), 24);
+        assert_eq!(f.literal_bytes(), 0); // literal not materialized yet
+        f.literal().unwrap();
+        assert_eq!(f.literal_bytes(), 24);
     }
 
     #[test]

@@ -127,16 +127,40 @@ impl RngPool {
         Self { seed }
     }
 
+    /// THE one derivation of a per-runner pool: a pure function of
+    /// `(root seed, framework name)`, so a runner's streams depend on
+    /// nothing but its own identity — no amount of context sharing, runner
+    /// construction order, or thread interleaving can perturb them, and the
+    /// parallel comparison path reproduces the sequential one bit for bit.
+    ///
+    /// Paired-init contract: model initialization draws from the *shared*
+    /// `ExperimentContext` pool (`RngPool::new(seed)`), NOT from this one,
+    /// so all frameworks of a comparison still start from identical
+    /// parameters. This pool feeds only per-framework runtime streams
+    /// (client sampling etc.).
+    pub fn for_framework(seed: u64, framework: &str) -> Self {
+        let h = fnv1a(framework.as_bytes());
+        // mixing distinct from `stream` (rotate + golden-ratio multiply) so
+        // the framework namespace cannot collide with any label namespace
+        Self { seed: seed ^ h.rotate_left(17).wrapping_mul(0x9e37_79b9_7f4a_7c15) }
+    }
+
     /// A substream keyed by (label, index).
     pub fn stream(&self, label: &str, index: u64) -> Rng64 {
-        // FNV-1a over the label, mixed with the index — cheap + stable.
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in label.as_bytes() {
-            h ^= *b as u64;
-            h = h.wrapping_mul(0x1000_0000_01b3);
-        }
-        Rng64::seed_from_u64(self.seed ^ h ^ index.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+        Rng64::seed_from_u64(
+            self.seed ^ fnv1a(label.as_bytes()) ^ index.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        )
     }
+}
+
+/// FNV-1a — cheap + stable string hashing for stream derivation.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
 }
 
 /// `U(lo, hi)` draw.
@@ -190,6 +214,25 @@ mod tests {
         assert_eq!(a1, a2);
         assert_ne!(a1, b);
         assert_ne!(a1, c);
+    }
+
+    #[test]
+    fn framework_pools_are_stable_distinct_and_leave_base_streams_alone() {
+        // stable: pure function of (seed, framework)
+        let a1 = RngPool::for_framework(42, "splitme").stream("select", 0).next_u64();
+        let a2 = RngPool::for_framework(42, "splitme").stream("select", 0).next_u64();
+        assert_eq!(a1, a2);
+        // distinct per framework and per seed
+        let b = RngPool::for_framework(42, "fedavg").stream("select", 0).next_u64();
+        let c = RngPool::for_framework(43, "splitme").stream("select", 0).next_u64();
+        assert_ne!(a1, b);
+        assert_ne!(a1, c);
+        // deriving framework pools cannot perturb the shared base pool's
+        // (paired) init streams — both are stateless derivations
+        let base = RngPool::new(42);
+        let init_before = base.stream("init_client", 0).next_u64();
+        let _ = RngPool::for_framework(42, "sfl").stream("sfl_select", 7).next_u64();
+        assert_eq!(base.stream("init_client", 0).next_u64(), init_before);
     }
 
     #[test]

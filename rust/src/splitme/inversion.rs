@@ -4,7 +4,9 @@
 //! For each server layer `l` (in order):
 //!   1. every participating rApp feeds its labels through `s^{-1}` and takes
 //!      the mirrored activation `Z_l` (the supervision; the final layer's
-//!      target is the labels themselves) — the `inv_acts` artifact;
+//!      target is the labels themselves) — the `inv_acts` pass, computed
+//!      (and memoized per wsi-version) by the caller and carried in each
+//!      [`ClientTrace`];
 //!   2. the layer input `O_l` is the already-recovered prefix applied to the
 //!      client's smashed data `c(X_m)` — the `*_apply` artifacts;
 //!   3. per-batch Gram partial sums `(O~^T O~, O~^T act^{-1}(Z))` come from
@@ -14,67 +16,70 @@
 //!      rust::linalg (f64 Cholesky with adaptive jitter).
 //!
 //! Dispatches go through the prepared plan: layer artifacts are interned
-//! [`ArtifactId`](crate::runtime::ArtifactId)s, shard labels reuse their
-//! cached literals, and the recovered `[W; b]` of each layer is frozen once
-//! and shared by every per-batch `apply` call.
+//! [`ArtifactId`](crate::runtime::ArtifactId)s, shard labels and the (possibly
+//! cached) smashed batches reuse their frozen literals, and the recovered
+//! `[W; b]` of each layer is frozen once and shared by every per-batch
+//! `apply` call.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::fl::FlContext;
+use super::InvActsPass;
+use crate::fl::ExperimentContext;
 use crate::linalg::{ridge_solve, Mat};
 use crate::runtime::{Arg, Frozen, Tensor};
 
 /// Per-client inversion inputs: the label batches (borrowed from the shard,
-/// literal-cached) and the matching smashed activations produced by the
-/// CURRENT aggregated client model.
+/// literal-cached), the matching smashed activations produced by the CURRENT
+/// aggregated client model, and the inverse-model activation pass (the
+/// supervision) — the latter two shared out of the params-version memos in
+/// [`super::SplitMe`].
 pub struct ClientTrace<'a> {
     /// one-hot label batches [B, classes]
     pub labels: Vec<&'a Frozen>,
     /// smashed-data batches [B, split_dim], same order
-    pub smashed: Vec<Frozen>,
+    pub smashed: Arc<Vec<Frozen>>,
+    /// memoized `inv_acts` pass: `acts.tuples[b][j]` = u_{j+1} of batch b
+    pub acts: Arc<InvActsPass>,
 }
 
 /// Recover all server layers; returns the per-layer `[W; b]` matrices
 /// ((d_in+1) x d_out) in layer order.
 pub fn recover_server_layers(
-    ctx: &FlContext,
-    wsi: &Tensor,
+    ctx: &ExperimentContext,
     traces: &[ClientTrace],
 ) -> Result<Vec<Tensor>> {
     if traces.is_empty() {
         bail!("inversion needs at least one participating rApp");
     }
-    let inv_acts = ctx.plan.role("inv_acts")?;
-    // loop-invariant inverse model: one literal conversion for all batches
-    let wsi = wsi.clone().freeze();
 
-    // (1) supervision: inverse-model activation stacks per client per batch
-    //     acts[c][b][j] = u_{j+1} of client c's batch b
-    let mut acts: Vec<Vec<Vec<Tensor>>> = Vec::with_capacity(traces.len());
-    for tr in traces {
-        let mut per_batch = Vec::with_capacity(tr.labels.len());
-        for y in &tr.labels {
-            per_batch.push(ctx.engine.run_id(inv_acts, &[Arg::Cached(&wsi), Arg::Cached(y)])?);
-        }
-        acts.push(per_batch);
-    }
-
-    // (2)-(4): walk the layer table, carrying each batch's running input O
-    // (frozen: each O feeds one gram and one apply dispatch per layer)
-    let mut o_cur: Vec<Vec<Frozen>> = traces.iter().map(|t| t.smashed.clone()).collect();
+    // walk the layer table, carrying each batch's running input O. Layer 0
+    // reads straight from the traces' (cached) smashed batches — no clone,
+    // their frozen literals are reused across repeated evaluations.
+    let mut o_cur: Option<Vec<Vec<Frozen>>> = None;
     let mut recovered = Vec::with_capacity(ctx.plan.layers.len());
     for (li, layer) in ctx.plan.layers.iter().enumerate() {
+        // the layer input O of client c's batch b: the traces' (cached)
+        // smashed data for layer 0, the carried apply outputs afterwards —
+        // ONE definition shared by the gram and apply dispatches below
+        let input_of = |c: usize, b: usize| match &o_cur {
+            None => &traces[c].smashed[b],
+            Some(v) => &v[c][b],
+        };
         let n_aug = layer.d_in + 1;
         let mut a0 = Mat::zeros(n_aug, n_aug);
         let mut a1 = Mat::zeros(n_aug, layer.d_out);
         for (c, tr) in traces.iter().enumerate() {
             for b in 0..tr.labels.len() {
+                // supervision comes frozen out of the memo: cached literals
+                // are reused across batches AND across repeated evaluations
                 let z: Arg = if layer.z_index < 0 {
                     Arg::Cached(tr.labels[b])
                 } else {
-                    Arg::Fresh(&acts[c][b][layer.z_index as usize])
+                    Arg::Cached(&tr.acts.tuples[b][layer.z_index as usize])
                 };
-                let out = ctx.engine.run_id(layer.gram, &[Arg::Cached(&o_cur[c][b]), z])?;
+                let out = ctx.engine.run_id(layer.gram, &[Arg::Cached(input_of(c, b)), z])?;
                 // all-reduce: sum the partial Grams across rApps/batches
                 a0.axpy(1.0, &Mat::from_f32(n_aug, n_aug, &out[0].data)?)?;
                 a1.axpy(1.0, &Mat::from_f32(n_aug, layer.d_out, &out[1].data)?)?;
@@ -87,18 +92,23 @@ pub fn recover_server_layers(
         // (skipped after the final layer — nothing consumes it); the frozen
         // w_t literal is converted once for all batches
         if li + 1 < ctx.plan.layers.len() {
-            for oc in o_cur.iter_mut() {
-                for o in oc.iter_mut() {
+            let mut next: Vec<Vec<Frozen>> = Vec::with_capacity(traces.len());
+            for (c, tr) in traces.iter().enumerate() {
+                let mut per_batch = Vec::with_capacity(tr.labels.len());
+                for b in 0..tr.labels.len() {
                     let out = ctx
                         .engine
-                        .run_id(layer.apply, &[Arg::Cached(&w_t), Arg::Cached(o)])?;
-                    *o = out
-                        .into_iter()
-                        .next()
-                        .expect("apply returns one output")
-                        .freeze();
+                        .run_id(layer.apply, &[Arg::Cached(&w_t), Arg::Cached(input_of(c, b))])?;
+                    per_batch.push(
+                        out.into_iter()
+                            .next()
+                            .expect("apply returns one output")
+                            .freeze(),
+                    );
                 }
+                next.push(per_batch);
             }
+            o_cur = Some(next);
         }
         recovered.push(w_t.into_tensor());
     }
@@ -107,7 +117,7 @@ pub fn recover_server_layers(
 
 /// Bytes each rApp contributes to the Gram all-reduce (server-internal GLOO
 /// traffic — reported, but NOT billed on the m-plane uplink; DESIGN.md §7).
-pub fn allreduce_bytes(ctx: &FlContext) -> f64 {
+pub fn allreduce_bytes(ctx: &ExperimentContext) -> f64 {
     ctx.preset
         .server_layers
         .iter()

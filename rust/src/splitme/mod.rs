@@ -2,17 +2,98 @@
 //! client model and the inverse server model, one upload per global round,
 //! deadline-aware selection (Algorithm 1) + adaptive-E resource allocation
 //! (P2), and layer-wise inversion for the final model.
+//!
+//! # Params-version memoization (ROADMAP follow-up, landed here)
+//!
+//! The `inv_acts` pass (z-target generation AND Step-4 supervision) and the
+//! whole-shard smash pass depend only on `(wsi, shard m)` respectively
+//! `(wc, shard m)`. Both aggregates change at most once per round, so each
+//! carries a **version tag** bumped on reassignment; per-client results are
+//! cached under the current tag and invalidated by the bump. Wins: repeated
+//! evaluations with unchanged params skip both passes entirely, and each
+//! round's z-targets reuse the `inv_acts` outputs the previous round's
+//! evaluation computed for the overlapping inversion set.
 
 pub mod inversion;
+
+use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::allocation::solve_p2;
-use crate::fl::{aggregate, effective_chunk, run_steps, FlContext, Framework, RoundOutcome};
+use crate::fl::{
+    aggregate, effective_chunk, run_steps, ExperimentContext, Framework, RoundOutcome,
+};
 use crate::oran::{RicProfile, UploadSizes};
 use crate::runtime::{Arg, ChunkStacks, Frozen, Tensor};
 use crate::selection::DeadlineSelector;
+use crate::sim::RngPool;
 use inversion::ClientTrace;
+
+/// One memoized `inv_acts` pass over a client's labels, frozen at fill
+/// time: memo hits reuse the tensors AND their cached literals across
+/// rounds — the Step-4 gram dispatches take the supervision as
+/// `Arg::Cached`, and the z-targets of Step 1 are simply each tuple's last
+/// element (no duplicate copy).
+pub struct InvActsPass {
+    /// per-batch frozen output tuples: tuples[b][j] = u_{j+1} of batch b
+    pub tuples: Vec<Vec<Frozen>>,
+}
+
+impl InvActsPass {
+    /// The z-target of batch `b` (the last mirrored activation).
+    pub fn z(&self, b: usize) -> &Frozen {
+        self.tuples[b].last().expect("inv_acts returns >=1 output")
+    }
+
+    fn bytes(&self) -> usize {
+        self.tuples
+            .iter()
+            .flatten()
+            .map(|f| f.host_bytes() + f.literal_bytes())
+            .sum()
+    }
+}
+
+/// Per-client results of one artifact pass, valid for one params version.
+/// The frozen params copy is shared by every fill at this version, so the
+/// loop-invariant literal is still converted exactly once.
+struct VersionedCache<T> {
+    version: u64,
+    params: Option<Frozen>,
+    per_client: HashMap<usize, Arc<T>>,
+}
+
+impl<T> VersionedCache<T> {
+    fn new() -> Self {
+        Self { version: 0, params: None, per_client: HashMap::new() }
+    }
+
+    /// Drop everything if the tag moved past this cache's version.
+    fn sync(&mut self, version: u64) {
+        if self.version != version {
+            self.version = version;
+            self.params = None;
+            self.per_client.clear();
+        }
+    }
+
+    /// The frozen params for this version, freezing `current` on first use.
+    fn frozen_params(&mut self, current: &Tensor) -> &Frozen {
+        if self.params.is_none() {
+            self.params = Some(current.clone().freeze());
+        }
+        self.params.as_ref().expect("frozen above")
+    }
+
+    fn params_bytes(&self) -> usize {
+        self.params
+            .as_ref()
+            .map(|f| f.host_bytes() + f.literal_bytes())
+            .unwrap_or(0)
+    }
+}
 
 pub struct SplitMe {
     /// aggregated client model w_C
@@ -24,10 +105,17 @@ pub struct SplitMe {
     e_last: usize,
     /// selected set of the most recent round — the rApps that run Step 4
     last_selected: Vec<usize>,
+    /// params-version tags: bumped whenever the aggregate is reassigned
+    wc_version: u64,
+    wsi_version: u64,
+    /// per-client `inv_acts` passes (tuples + frozen z), keyed by `wsi_version`
+    acts: VersionedCache<InvActsPass>,
+    /// per-client whole-shard smashed activations, keyed by `wc_version`
+    smash: VersionedCache<Vec<Frozen>>,
 }
 
 impl SplitMe {
-    pub fn new(ctx: &FlContext) -> Result<Self> {
+    pub fn new(ctx: &ExperimentContext) -> Result<Self> {
         let sizes = Self::upload_sizes_all(ctx);
         Ok(Self {
             wc: ctx.init.client(&ctx.pool)?,
@@ -35,13 +123,17 @@ impl SplitMe {
             selector: DeadlineSelector::new(&ctx.topo, &sizes, ctx.cfg.alpha),
             e_last: ctx.cfg.e_initial,
             last_selected: Vec::new(),
+            wc_version: 0,
+            wsi_version: 0,
+            acts: VersionedCache::new(),
+            smash: VersionedCache::new(),
         })
     }
 
     /// Per-round uplink of client m: its client-side model (omega*d) plus the
     /// whole-dataset smashed activations S_m (§V-B: SplitMe "inputs all the
     /// local data ... to generate the labels for the server").
-    fn upload_sizes_all(ctx: &FlContext) -> Vec<UploadSizes> {
+    fn upload_sizes_all(ctx: &ExperimentContext) -> Vec<UploadSizes> {
         (0..ctx.topo.len())
             .map(|m| UploadSizes {
                 model_bytes: ctx.client_model_bytes(),
@@ -50,31 +142,68 @@ impl SplitMe {
             .collect()
     }
 
-    /// Generate the mutual-learning targets z = s^{-1}(Y) for one client's
-    /// label batches (Step 1's "label download"; downlink is free per §IV-B).
-    /// Frozen in, frozen out: `wsi` is loop-invariant (converted once by the
-    /// caller), and each target is immutable for the rest of the round, so
-    /// its literal is converted once and reused across all E local steps.
-    fn z_targets(ctx: &FlContext, m: usize, wsi: &Frozen) -> Result<Vec<Frozen>> {
-        let inv_acts = ctx.plan.role("inv_acts")?;
-        let mut out = Vec::new();
-        for (_, y) in &ctx.shards[m].data.batches {
-            let acts = ctx
-                .engine
-                .run_id(inv_acts, &[Arg::Cached(wsi), Arg::Cached(y)])?;
-            out.push(
-                acts.into_iter()
-                    .last()
-                    .expect("inv_acts returns >=1 output")
-                    .freeze(),
-            );
+    /// The `inv_acts` pass over client m's labels under the CURRENT `wsi`,
+    /// memoized per `(wsi_version, m)`. Serves both the z-target generation
+    /// of Step 1 (the frozen `z` side — literals cached across every round
+    /// at this version) and the Step-4 supervision (the `tuples` side).
+    fn inv_acts_for(&mut self, ctx: &ExperimentContext, m: usize) -> Result<Arc<InvActsPass>> {
+        self.acts.sync(self.wsi_version);
+        if let Some(a) = self.acts.per_client.get(&m) {
+            return Ok(a.clone());
         }
-        Ok(out)
+        let inv_acts = ctx.plan.role("inv_acts")?;
+        let wsi = self.acts.frozen_params(&self.wsi);
+        let batches = &ctx.shards[m].data.batches;
+        let mut tuples = Vec::with_capacity(batches.len());
+        for (_, y) in batches {
+            let outs = ctx.engine.run_id(inv_acts, &[Arg::Cached(wsi), Arg::Cached(y)])?;
+            tuples.push(outs.into_iter().map(Tensor::freeze).collect::<Vec<Frozen>>());
+        }
+        let arc = Arc::new(InvActsPass { tuples });
+        self.acts.per_client.insert(m, arc.clone());
+        Ok(arc)
+    }
+
+    /// The z-targets pass for Step 1 of one round. Reuses the memoized
+    /// `inv_acts` pass when the previous evaluation already computed it for
+    /// this client; on a miss it computes WITHOUT memoizing and keeps only
+    /// the final activations — the `wsi` bump at the end of this round
+    /// would discard a full fill unread, so retaining the intermediate
+    /// tuples for the whole round would be pure memory overhead.
+    fn z_pass(&mut self, ctx: &ExperimentContext, m: usize) -> Result<Arc<InvActsPass>> {
+        self.acts.sync(self.wsi_version);
+        if let Some(a) = self.acts.per_client.get(&m) {
+            return Ok(a.clone());
+        }
+        let inv_acts = ctx.plan.role("inv_acts")?;
+        let wsi = self.acts.frozen_params(&self.wsi);
+        let batches = &ctx.shards[m].data.batches;
+        let mut tuples = Vec::with_capacity(batches.len());
+        for (_, y) in batches {
+            let mut outs = ctx.engine.run_id(inv_acts, &[Arg::Cached(wsi), Arg::Cached(y)])?;
+            let last = outs.pop().expect("inv_acts returns >=1 output");
+            tuples.push(vec![last.freeze()]);
+        }
+        Ok(Arc::new(InvActsPass { tuples }))
+    }
+
+    /// Smashed activations of client m's whole shard under the CURRENT
+    /// aggregated `wc`, memoized per `(wc_version, m)`.
+    fn smashed_for(&mut self, ctx: &ExperimentContext, m: usize) -> Result<Arc<Vec<Frozen>>> {
+        self.smash.sync(self.wc_version);
+        if let Some(s) = self.smash.per_client.get(&m) {
+            return Ok(s.clone());
+        }
+        let wc = self.smash.frozen_params(&self.wc);
+        let out = Self::smash_all(ctx, m, wc)?;
+        let arc = Arc::new(out);
+        self.smash.per_client.insert(m, arc.clone());
+        Ok(arc)
     }
 
     /// Smashed activations of client m's whole shard under parameters `wc`
     /// (frozen by the caller — loop-invariant across the shard's batches).
-    fn smash_all(ctx: &FlContext, m: usize, wc: &Frozen) -> Result<Vec<Frozen>> {
+    fn smash_all(ctx: &ExperimentContext, m: usize, wc: &Frozen) -> Result<Vec<Frozen>> {
         let fwd = ctx.plan.role("client_fwd")?;
         let mut out = Vec::new();
         for (x, _) in &ctx.shards[m].data.batches {
@@ -89,26 +218,47 @@ impl SplitMe {
         Ok(out)
     }
 
-    /// Collect inversion traces (labels + fresh smashed data) from the given
-    /// clients under the current aggregated client model. Labels are
-    /// borrowed from the shards, so their cached literals are reused.
-    fn traces<'c>(&self, ctx: &'c FlContext, clients: &[usize]) -> Result<Vec<ClientTrace<'c>>> {
-        let wc = self.wc.clone().freeze();
+    /// Collect inversion traces (labels + smashed data + inverse-model
+    /// supervision) from the given clients under the current aggregates.
+    /// Labels are borrowed from the shards (cached literals reused); the
+    /// smashed/acts sides come from the params-version memos.
+    fn traces<'c>(
+        &mut self,
+        ctx: &'c ExperimentContext,
+        clients: &[usize],
+    ) -> Result<Vec<ClientTrace<'c>>> {
         clients
             .iter()
             .map(|&m| {
                 let labels: Vec<&Frozen> =
                     ctx.shards[m].data.batches.iter().map(|(_, y)| y).collect();
-                let smashed = Self::smash_all(ctx, m, &wc)?;
-                Ok(ClientTrace { labels, smashed })
+                let smashed = self.smashed_for(ctx, m)?;
+                let acts = self.inv_acts_for(ctx, m)?;
+                Ok(ClientTrace { labels, smashed, acts })
             })
             .collect()
+    }
+
+    /// Bytes pinned by the params-version memos (reported through
+    /// [`Framework::cache_bytes`] into `MemoryStats`). Bounded by one
+    /// version's inversion-set/selection footprint — the caches are cleared
+    /// at every version bump (once per round).
+    fn memo_bytes(&self) -> usize {
+        let acts: usize = self.acts.per_client.values().map(|p| p.bytes()).sum();
+        let smash: usize = self
+            .smash
+            .per_client
+            .values()
+            .flat_map(|v| v.iter())
+            .map(|f| f.host_bytes() + f.literal_bytes())
+            .sum();
+        acts + smash + self.acts.params_bytes() + self.smash.params_bytes()
     }
 
     /// Clients used for Step 4: the last round's selected rApps, topped up
     /// (round-robin) to `inversion_clients` so the pooled Gram stays full
     /// rank even when few trainers were admitted.
-    fn inversion_set(&self, ctx: &FlContext) -> Vec<usize> {
+    fn inversion_set(&self, ctx: &ExperimentContext) -> Vec<usize> {
         let want = ctx.cfg.inversion_clients.clamp(1, ctx.topo.len());
         top_up_round_robin(self.last_selected.clone(), want)
     }
@@ -119,7 +269,7 @@ impl SplitMe {
 /// this shard (`enabled` = the shard has precomputed data-side stacks) and
 /// capped at the `e / chunk` windows this round will actually dispatch.
 fn round_stacks(
-    parts: &[Frozen],
+    parts: &[&Tensor],
     chunk: usize,
     e: usize,
     enabled: bool,
@@ -127,8 +277,7 @@ fn round_stacks(
     if !enabled || chunk <= 1 || e < chunk {
         return Ok(None);
     }
-    let refs: Vec<&Tensor> = parts.iter().map(|f| f.tensor()).collect();
-    Ok(Some(ChunkStacks::with_limit(&refs, chunk, e / chunk)?))
+    Ok(Some(ChunkStacks::with_limit(parts, chunk, e / chunk)?))
 }
 
 /// Keep the first `want` entries of `set` and top it up with the smallest
@@ -162,7 +311,12 @@ impl Framework for SplitMe {
         "splitme"
     }
 
-    fn run_round(&mut self, ctx: &FlContext, round: usize) -> Result<RoundOutcome> {
+    fn run_round(
+        &mut self,
+        ctx: &ExperimentContext,
+        _rng: &RngPool,
+        round: usize,
+    ) -> Result<RoundOutcome> {
         let cfg = &ctx.cfg;
 
         // ---- P1: deadline-aware selection (Algorithm 1) ----
@@ -205,23 +359,25 @@ impl Framework for SplitMe {
         let eta_c = Tensor::scalar1(ctx.eta_c().data[0] * decay).freeze();
         let eta_s = Tensor::scalar1(ctx.eta_s().data[0] * decay).freeze();
         let chunk = effective_chunk(ctx.preset);
-        // the aggregated wsi is loop-invariant across this round's clients:
-        // one literal conversion serves every z-target dispatch
-        let wsi_round = self.wsi.clone().freeze();
+        let selected_ids: Vec<usize> = selected.iter().map(|r| r.id).collect();
         let mut wc_parts = Vec::with_capacity(selected.len());
         let mut wsi_parts = Vec::with_capacity(selected.len());
         let mut loss_sum = 0f32;
         let mut loss_n = 0usize;
 
-        for r in &selected {
-            let m = r.id;
-            // Step 1: download w_C and z = s^{-1}(Y_m)
-            let z = Self::z_targets(ctx, m, &wsi_round).context("generating z targets")?;
+        for &m in &selected_ids {
+            // Step 1: download w_C and z = s^{-1}(Y_m) — memoized per
+            // wsi-version, so clients the previous eval already passed
+            // through `inv_acts` skip the recompute (and reuse the frozen
+            // z literals)
+            let pass = self.z_pass(ctx, m).context("generating z targets")?;
+            let z: Vec<&Frozen> = (0..pass.tuples.len()).map(|b| pass.z(b)).collect();
             let shard = &ctx.shards[m].data;
 
             // per-round window stacks over the z targets (the x side comes
-            // precomputed from FlContext)
-            let z_stacks = round_stacks(&z, chunk, e, ctx.shard_chunks(m).is_some())?;
+            // precomputed from the shared context)
+            let z_tensors: Vec<&Tensor> = z.iter().map(|f| f.tensor()).collect();
+            let z_stacks = round_stacks(&z_tensors, chunk, e, ctx.shard_chunks(m).is_some())?;
             let chunks_c = ctx
                 .shard_chunks(m)
                 .and_then(|(xs, _)| z_stacks.as_ref().map(|zs| (xs, zs)));
@@ -234,7 +390,7 @@ impl Framework for SplitMe {
                 self.wc.clone(),
                 e,
                 &eta_c,
-                |t| (shard.batch(t).0, &z[t % z.len()]),
+                |t| (shard.batch(t).0, z[t % z.len()]),
                 chunks_c,
             )?;
             loss_sum += ls;
@@ -245,7 +401,8 @@ impl Framework for SplitMe {
             let smashed = Self::smash_all(ctx, m, &wc_m)?;
 
             // per-round window stacks over the smashed activations
-            let s_stacks = round_stacks(&smashed, chunk, e, ctx.shard_chunks(m).is_some())?;
+            let s_tensors: Vec<&Tensor> = smashed.iter().map(|f| f.tensor()).collect();
+            let s_stacks = round_stacks(&s_tensors, chunk, e, ctx.shard_chunks(m).is_some())?;
             let chunks_i = ctx
                 .shard_chunks(m)
                 .and_then(|(_, ys)| s_stacks.as_ref().map(|ss| (ys, ss)));
@@ -268,10 +425,13 @@ impl Framework for SplitMe {
             wsi_parts.push(wsi_m);
         }
 
-        // aggregation + broadcast (downlink free)
+        // aggregation + broadcast (downlink free); the aggregates changed,
+        // so bump the params-version tags to invalidate the memos
         self.wc = aggregate(&wc_parts)?;
         self.wsi = aggregate(&wsi_parts)?;
-        self.last_selected = selected.iter().map(|r| r.id).collect();
+        self.wc_version += 1;
+        self.wsi_version += 1;
+        self.last_selected = selected_ids;
 
         Ok(RoundOutcome {
             selected_ids: self.last_selected.clone(),
@@ -285,18 +445,35 @@ impl Framework for SplitMe {
     }
 
     /// Step 4: recover s(.) from s^{-1}(.) and concatenate with w_C.
-    fn full_model(&mut self, ctx: &FlContext) -> Result<Tensor> {
+    fn full_model(&mut self, ctx: &ExperimentContext) -> Result<Tensor> {
         let clients = self.inversion_set(ctx);
         let traces = self.traces(ctx, &clients)?;
-        let layers = inversion::recover_server_layers(ctx, &self.wsi, &traces)?;
+        let layers = inversion::recover_server_layers(ctx, &traces)?;
         let ws = ctx.init.server_from_layer_mats(&layers)?;
         ctx.init.concat_full(&self.wc, &ws)
+    }
+
+    fn cache_bytes(&self) -> usize {
+        self.memo_bytes()
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::top_up_round_robin;
+    use super::{top_up_round_robin, VersionedCache};
+    use std::sync::Arc;
+
+    #[test]
+    fn versioned_cache_invalidates_on_bump_only() {
+        let mut c: VersionedCache<u32> = VersionedCache::new();
+        c.sync(0);
+        c.per_client.insert(3, Arc::new(30));
+        c.sync(0); // same version: entries survive
+        assert_eq!(c.per_client.get(&3).map(|v| **v), Some(30));
+        c.sync(1); // bumped version: cache cleared
+        assert!(c.per_client.is_empty());
+        assert!(c.params.is_none());
+    }
 
     #[test]
     fn top_up_truncates_oversized_sets() {

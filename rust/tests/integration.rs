@@ -1,10 +1,14 @@
 //! Integration tests over the real runtime: artifact execution, training
 //! dynamics of all four frameworks, the Step-4 inversion end-to-end, and
-//! paired-comparison invariants. These require `make artifacts`.
+//! paired-comparison invariants (shared context, parallel-vs-sequential
+//! bitwise determinism, memoized eval passes). These require
+//! `make artifacts`.
 
 use repro::config::{FrameworkKind, SimConfig};
 use repro::coordinator::Runner;
-use repro::fl::{run_steps_with, FlContext};
+use repro::experiments::{self, Budget};
+use repro::fl::{run_steps_with, ExperimentContext};
+use repro::metrics::RoundRecord;
 use repro::runtime::{Arg, ChunkStacks, Engine, Manifest, Tensor};
 use repro::sim::{fill_normal, RngPool};
 
@@ -124,7 +128,7 @@ fn splitme_round_has_smaller_uplink_than_fedavg() {
     // at commag sizes (28KB + 16KB < 142KB)
     let engine = engine();
     let cfg = tiny_cfg();
-    let ctx = FlContext::new(&engine, &cfg).unwrap();
+    let ctx = ExperimentContext::new(&engine, &cfg).unwrap();
     let per_client_splitme = ctx.client_model_bytes() + ctx.smashed_bytes(0);
     let per_client_fedavg = ctx.full_model_bytes();
     assert!(
@@ -165,8 +169,8 @@ fn inversion_recovers_a_working_model() {
 fn paired_runs_share_topology_and_data() {
     let engine = engine();
     let cfg = tiny_cfg();
-    let a = FlContext::new(&engine, &cfg).unwrap();
-    let b = FlContext::new(&engine, &cfg).unwrap();
+    let a = ExperimentContext::new(&engine, &cfg).unwrap();
+    let b = ExperimentContext::new(&engine, &cfg).unwrap();
     assert_eq!(a.topo.rics[2].q_c, b.topo.rics[2].q_c);
     assert_eq!(
         a.shards[1].data.batches[0].0.data,
@@ -202,7 +206,7 @@ fn chunked_dispatch_matches_single_step_exactly() {
     // dispatch must reproduce the single-step path bit for bit
     let engine = engine();
     let cfg = tiny_cfg();
-    let ctx = FlContext::new(&engine, &cfg).unwrap();
+    let ctx = ExperimentContext::new(&engine, &cfg).unwrap();
     let chunk = ctx.preset.chunk;
     if chunk < 2 || ctx.plan.try_role("fedavg_step_chunk").is_none() {
         return; // preset carries no folded artifact to compare against
@@ -297,4 +301,159 @@ fn vision_preset_runs_end_to_end() {
     let mut runner = Runner::new(&engine, &cfg, FrameworkKind::SplitMe).unwrap();
     let summary = runner.train(2).unwrap();
     assert!(summary.final_accuracy.is_finite());
+}
+
+/// Bitwise comparison of every deterministic RoundRecord field (wall_secs is
+/// host wallclock and legitimately differs between runs).
+fn assert_records_bitwise_eq(a: &RoundRecord, b: &RoundRecord, what: &str) {
+    assert_eq!(a.round, b.round, "{what}: round");
+    assert_eq!(a.selected, b.selected, "{what}: selected @r{}", a.round);
+    assert_eq!(a.e, b.e, "{what}: e @r{}", a.round);
+    assert_eq!(a.comm_bytes.to_bits(), b.comm_bytes.to_bits(), "{what}: comm_bytes @r{}", a.round);
+    assert_eq!(a.round_time.to_bits(), b.round_time.to_bits(), "{what}: round_time @r{}", a.round);
+    assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "{what}: sim_time @r{}", a.round);
+    assert_eq!(a.comm_cost.to_bits(), b.comm_cost.to_bits(), "{what}: comm_cost @r{}", a.round);
+    assert_eq!(a.comp_cost.to_bits(), b.comp_cost.to_bits(), "{what}: comp_cost @r{}", a.round);
+    assert_eq!(a.total_cost.to_bits(), b.total_cost.to_bits(), "{what}: total_cost @r{}", a.round);
+    assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{what}: train_loss @r{}", a.round);
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{what}: accuracy @r{}", a.round);
+    assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "{what}: test_loss @r{}", a.round);
+}
+
+#[test]
+fn parallel_comparison_is_bitwise_identical_to_sequential() {
+    // the paired-determinism contract of the thread-parallel executor: for
+    // all four frameworks over 3+ evaluated rounds, --jobs 4 must reproduce
+    // --jobs 1 record for record, bit for bit
+    let engine = engine();
+    let cfg = tiny_cfg();
+    let budget = Budget { splitme_rounds: 3, baseline_rounds: 3 };
+    let seq = experiments::run_comparison_jobs(&engine, &cfg, budget, false, 1).unwrap();
+    let par = experiments::run_comparison_jobs(&engine, &cfg, budget, false, 4).unwrap();
+    assert_eq!(seq.len(), 4);
+    assert_eq!(par.len(), 4);
+    for (a, b) in seq.iter().zip(&par) {
+        assert_eq!(a.framework, b.framework, "deterministic result ordering");
+        assert_eq!(a.records.len(), b.records.len(), "{}", a.framework);
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_records_bitwise_eq(ra, rb, &a.framework);
+        }
+    }
+}
+
+#[test]
+fn comparison_builds_shared_context_exactly_once() {
+    // acceptance: run_comparison constructs shards/chunk-stacks/test
+    // literals exactly once per (preset, seed), not once per framework
+    let engine = engine();
+    let cfg = tiny_cfg();
+    let before = engine.context_builds();
+    let budget = Budget { splitme_rounds: 1, baseline_rounds: 1 };
+    let summaries = experiments::run_comparison_jobs(&engine, &cfg, budget, false, 4).unwrap();
+    assert_eq!(summaries.len(), 4);
+    assert_eq!(
+        engine.context_builds() - before,
+        1,
+        "paired comparison must share ONE ExperimentContext"
+    );
+}
+
+#[test]
+fn shared_runners_match_owned_runners() {
+    // Runner::shared over one context must reproduce Runner::new (private
+    // context) exactly — the shared data carries no run-specific state
+    let engine = engine();
+    let cfg = tiny_cfg();
+    let ctx = ExperimentContext::new(&engine, &cfg).unwrap();
+    for kind in FrameworkKind::all() {
+        let s_owned = Runner::new(&engine, &cfg, kind).unwrap().train(2).unwrap();
+        let s_shared = Runner::shared(&ctx, kind).unwrap().train(2).unwrap();
+        assert_eq!(s_owned.records.len(), s_shared.records.len(), "{kind:?}");
+        for (ra, rb) in s_owned.records.iter().zip(&s_shared.records) {
+            assert_records_bitwise_eq(ra, rb, kind.name());
+        }
+    }
+}
+
+#[test]
+fn repeated_eval_with_unchanged_params_skips_recompute() {
+    // params-version memo: a second evaluation without an intervening
+    // training round must not re-run the inv_acts or client_fwd passes,
+    // and must return the identical result
+    let engine = engine();
+    let mut cfg = tiny_cfg();
+    cfg.eval_every = 0; // evaluate only on demand
+    let p = engine.preset("commag").unwrap().clone();
+    let inv_acts = p.artifact("inv_acts").unwrap().to_string();
+    let client_fwd = p.artifact("client_fwd").unwrap().to_string();
+    let calls = |name: &str| {
+        engine
+            .stats()
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.calls)
+            .unwrap_or(0)
+    };
+
+    let mut runner = Runner::new(&engine, &cfg, FrameworkKind::SplitMe).unwrap();
+    runner.train(2).unwrap();
+    let (acc1, loss1) = runner.evaluate_now().unwrap();
+    let (ia1, cf1) = (calls(&inv_acts), calls(&client_fwd));
+    assert!(ia1 > 0, "first eval must run inv_acts");
+    assert!(
+        runner.memory_stats().framework_cache_bytes > 0,
+        "the filled memos must be visible in the memory accounting"
+    );
+
+    let (acc2, loss2) = runner.evaluate_now().unwrap();
+    assert_eq!(calls(&inv_acts), ia1, "second eval re-ran inv_acts despite unchanged wsi");
+    assert_eq!(calls(&client_fwd), cf1, "second eval re-smashed despite unchanged wc");
+    assert_eq!(acc1.to_bits(), acc2.to_bits());
+    assert_eq!(loss1.to_bits(), loss2.to_bits());
+
+    // ...and a training round invalidates the memo: the next eval recomputes
+    runner.step(2).unwrap();
+    runner.evaluate_now().unwrap();
+    assert!(calls(&inv_acts) > ia1, "post-round eval must recompute inv_acts");
+}
+
+#[test]
+fn chunk_cache_cap_disables_precompute_without_changing_results() {
+    let engine = engine();
+    let cfg = tiny_cfg();
+    let uncapped = ExperimentContext::new(&engine, &cfg).unwrap();
+    let mut capped_cfg = tiny_cfg();
+    capped_cfg.chunk_cache_cap_bytes = 1; // force the precompute off
+    let capped = ExperimentContext::new(&engine, &capped_cfg).unwrap();
+    if uncapped.chunks.is_empty() {
+        return; // preset carries no chunk artifacts: nothing to cap
+    }
+    assert!(capped.chunks.is_empty(), "cap must skip the chunk precompute");
+    assert_eq!(capped.memory_stats().chunk_host_bytes, 0);
+    assert!(uncapped.memory_stats().chunk_host_bytes > 0);
+
+    // same training history either way (chunk parity holds regardless)
+    let a = Runner::shared(&uncapped, FrameworkKind::SplitMe).unwrap().train(2).unwrap();
+    let b = Runner::shared(&capped, FrameworkKind::SplitMe).unwrap().train(2).unwrap();
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_records_bitwise_eq(ra, rb, "capped-vs-uncapped");
+    }
+}
+
+#[test]
+fn memory_stats_track_literal_materialization() {
+    let engine = engine();
+    let cfg = tiny_cfg();
+    let ctx = ExperimentContext::new(&engine, &cfg).unwrap();
+    let before = ctx.memory_stats();
+    assert!(before.shard_host_bytes > 0);
+    assert!(before.test_host_bytes > 0);
+    assert_eq!(before.test_literal_bytes, 0, "no dispatch yet");
+    // one training round + eval materializes shard/test literals lazily
+    let mut runner = Runner::shared(&ctx, FrameworkKind::FedAvg).unwrap();
+    runner.train(1).unwrap();
+    let after = ctx.memory_stats();
+    assert!(after.test_literal_bytes > 0, "eval must have built test literals");
+    assert!(after.total_bytes() >= before.total_bytes());
+    assert_eq!(after.shard_host_bytes, before.shard_host_bytes, "host side is fixed");
 }
