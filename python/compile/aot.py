@@ -141,6 +141,39 @@ def build_preset(b: Builder, p: Preset, quick: bool = False) -> dict:
         lambda wf, xs, ys, lr: M.fedavg_step_chunk(p, wf, xs, ys, scalar(lr)),
         [(nfp,), CIN, (CH, B, C), (1,)],
     )
+    # remainder folds (one dispatch for the E mod CHUNK leftover steps; the
+    # loss output is the (r,) per-step vector — see model.py)
+    for r in range(2, CH):
+        RIN = (r,) + IN
+        arts[f"client_step_chunk{r}"] = b.add(
+            f"{n}_client_step_r{r}",
+            lambda wc, xs, zs, lr: M.client_step_fold(p, wc, xs, zs, scalar(lr)),
+            [(ncp,), RIN, (r, B, D), (1,)],
+        )
+        arts[f"inv_step_chunk{r}"] = b.add(
+            f"{n}_inv_step_r{r}",
+            lambda wsi, ys, cs, lr: M.inv_step_fold(p, wsi, ys, cs, scalar(lr)),
+            [(nip,), (r, B, C), (r, B, D), (1,)],
+        )
+        arts[f"fedavg_step_chunk{r}"] = b.add(
+            f"{n}_fedavg_step_r{r}",
+            lambda wf, xs, ys, lr: M.fedavg_step_fold(p, wf, xs, ys, scalar(lr)),
+            [(nfp,), RIN, (r, B, C), (1,)],
+        )
+
+    # whole-shard smashed-data passes (perf: SplitMe's per-round smash_all
+    # upload folds NB per-batch client_fwd dispatches into ONE vmapped call).
+    # Emitted for the shard sizes the shipped configs reach: the Table III
+    # defaults (512/32 = 16 batches commag, 128/32 = 4 vision) plus the tiny
+    # test/bench shard sizes; rust falls back to the per-batch path when a
+    # shard's batch count has no matching artifact.
+    for nb in (2, 4, 8, 16):
+        arts[f"client_fwd_x{nb}"] = b.add(
+            f"{n}_client_fwd_x{nb}",
+            lambda wc, xs: M.client_fwd_all(p, wc, xs),
+            [(ncp,), (nb,) + IN],
+        )
+
     # pure-jnp ablation of the hottest step (perf measurement only)
     arts["inv_step_pure"] = b.add(
         f"{n}_inv_step_pure",
@@ -205,8 +238,10 @@ def build_preset(b: Builder, p: Preset, quick: bool = False) -> dict:
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="../artifacts/manifest.json",
-                    help="manifest path; artifacts land beside it")
+    ap.add_argument("--out", default="../rust/artifacts/manifest.json",
+                    help="manifest path (default: the rust crate's artifact "
+                         "dir, where runtime::Manifest::load_default reads); "
+                         "artifacts land beside it")
     ap.add_argument("--preset", default="all", choices=["all", *PRESETS])
     args = ap.parse_args()
 

@@ -258,6 +258,52 @@ def fedavg_step_chunk(preset: Preset, wfull_flat, xs, ys, lr):
 
 
 # --------------------------------------------------------------------------
+# remainder folds (perf: the rust E-loop used to fall back to one dispatch
+# per step for the E mod CHUNK remainder; these scan variants fold any
+# leading length r < CHUNK into one call). Unlike the *_chunk steps they
+# report the PER-STEP losses (shape (r,)) rather than a mean or sum: the
+# rust side folds them one `+=` at a time, replicating the single-step
+# oracle's f32 accumulation order exactly — any server-side reduction
+# (mean*r or even a sum) would regroup the adds and break bitwise parity.
+# --------------------------------------------------------------------------
+
+
+def client_step_fold(preset: Preset, wc_flat, xs, zs, lr):
+    def body(w, xz):
+        x, z = xz
+        w2, loss = client_step(preset, w, x, z, lr)
+        return w2, loss
+
+    return jax.lax.scan(body, wc_flat, (xs, zs))
+
+
+def inv_step_fold(preset: Preset, ws_inv_flat, ys, cs, lr):
+    def body(w, yc):
+        y, c = yc
+        w2, loss = inv_step(preset, w, y, c, lr)
+        return w2, loss
+
+    return jax.lax.scan(body, ws_inv_flat, (ys, cs))
+
+
+def fedavg_step_fold(preset: Preset, wfull_flat, xs, ys, lr):
+    def body(w, xy):
+        x, y = xy
+        w2, loss = fedavg_step(preset, w, x, y, lr)
+        return w2, loss
+
+    return jax.lax.scan(body, wfull_flat, (xs, ys))
+
+
+def client_fwd_all(preset: Preset, wc_flat, xs):
+    """Whole-shard smashed-data pass: vmap of :func:`client_fwd` over a
+    stacked ``[NB, B, ...]`` input — SplitMe's per-round upload computes the
+    smashed activations of EVERY local batch under one parameter vector, so
+    one dispatch replaces NB per-batch calls."""
+    return (jax.vmap(lambda xb: client_fwd(preset, wc_flat, xb))(xs),)
+
+
+# --------------------------------------------------------------------------
 # pure-jnp ablation of the hottest step (perf §: quantifies the Pallas
 # interpret-mode lowering tax on CPU; not used by the trainers)
 # --------------------------------------------------------------------------

@@ -10,7 +10,9 @@ import pytest
 
 from compile.specs import PRESETS
 
-ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+# `make artifacts` writes beside the rust crate (rust/artifacts) — the same
+# place runtime::Manifest::load_default reads from.
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "artifacts")
 MANIFEST = os.path.join(ART_DIR, "manifest.json")
 
 pytestmark = pytest.mark.skipif(

@@ -141,6 +141,23 @@ fn main() {
         });
     }
 
+    // ---- whole-shard smash batching vs the per-batch oracle ---------------
+    // ONE client_fwd_x{NB} dispatch per client-round vs num_batches calls
+    // (ISSUE 3; the differential suite proves the paths bitwise identical)
+    let wcf = ctx.init.client(&ctx.pool).unwrap().freeze();
+    if ctx.shard_whole(0).is_some() {
+        rec.bench("e2e/smash_shard_whole", 2, 20, || {
+            repro::splitme::smash_shard(&ctx, 0, &wcf).unwrap();
+        });
+    } else {
+        println!("note: no whole-shard artifact for this shard size — skipping whole bench");
+    }
+    let mut ctx_perbatch = ExperimentContext::new(&engine, &e2e_cfg).unwrap();
+    ctx_perbatch.shard_wholes.clear();
+    rec.bench("e2e/smash_shard_perbatch", 2, 20, || {
+        repro::splitme::smash_shard(&ctx_perbatch, 0, &wcf).unwrap();
+    });
+
     // ---- paired comparison: sequential vs thread-parallel executor --------
     // the tentpole speedup: identical work, fanned out over worker threads
     // (jobs=0 resolves REPRO_JOBS / available cores — see harness::jobs)
@@ -151,6 +168,13 @@ fn main() {
             experiments::run_comparison_jobs(&engine, &e2e_cfg, cmp_budget, false, jobs).unwrap();
         });
     }
+    // intra-round client parallelism stacked on top of the framework fan-out
+    // (client_jobs x jobs nesting — PERF.md §client-parallelism)
+    let mut cj_cfg = e2e_cfg.clone();
+    cj_cfg.client_jobs = 4;
+    rec.bench("e2e/comparison_4fw_par_cj4", 0, 3, || {
+        experiments::run_comparison_jobs(&engine, &cj_cfg, cmp_budget, false, 0).unwrap();
+    });
 
     // per-artifact cumulative profile
     println!("\nper-artifact cumulative profile:");

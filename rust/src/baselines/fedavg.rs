@@ -8,7 +8,10 @@
 
 use anyhow::Result;
 
-use crate::fl::{aggregate, run_steps, sample_clients, ExperimentContext, Framework, RoundOutcome};
+use crate::fl::{
+    aggregate_indexed, resolve_client_jobs, run_clients, run_steps, sample_clients,
+    ExperimentContext, Framework, RoundOutcome,
+};
 use crate::oran::{self, RicProfile, UploadSizes};
 use crate::runtime::Tensor;
 use crate::sim::RngPool;
@@ -25,7 +28,10 @@ impl FedAvg {
     }
 
     /// Shared by O-RANFed: run E full-model SGD steps for each selected
-    /// client from the global model and aggregate.
+    /// client from the global model (one independent job per client on the
+    /// scoped executor) and aggregate with the deterministic index-ordered
+    /// reduce — any `client_jobs` count reproduces the sequential path bit
+    /// for bit (tests/differential.rs).
     pub(crate) fn train_selected(
         ctx: &ExperimentContext,
         wf: &Tensor,
@@ -33,12 +39,11 @@ impl FedAvg {
         e: usize,
     ) -> Result<(Tensor, f32)> {
         let eta = ctx.eta_c();
-        let mut parts = Vec::with_capacity(selected.len());
-        let mut loss_sum = 0f32;
-        let mut loss_n = 0usize;
-        for &m in selected {
+        let jobs = resolve_client_jobs(ctx.cfg.client_jobs, selected.len());
+        let results = run_clients(selected.len(), jobs, |i| {
+            let m = selected[i];
             let shard = &ctx.shards[m].data;
-            let (w, ls, ln) = run_steps(
+            run_steps(
                 ctx,
                 "fedavg_step",
                 "fedavg_step_chunk",
@@ -50,12 +55,18 @@ impl FedAvg {
                     (x, y)
                 },
                 ctx.shard_chunks(m),
-            )?;
+            )
+        })?;
+
+        let mut parts = Vec::with_capacity(results.len());
+        let mut loss_sum = 0f32;
+        let mut loss_n = 0usize;
+        for (i, (w, ls, ln)) in results.into_iter().enumerate() {
             loss_sum += ls;
             loss_n += ln;
-            parts.push(w);
+            parts.push((i, w));
         }
-        Ok((aggregate(&parts)?, loss_sum / loss_n.max(1) as f32))
+        Ok((aggregate_indexed(parts)?, loss_sum / loss_n.max(1) as f32))
     }
 }
 

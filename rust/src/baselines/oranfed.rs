@@ -2,6 +2,10 @@
 //! deadline-aware trainer selection and water-filling bandwidth allocation
 //! over full-model uploads, fixed E (no adaptive local updates, the gap the
 //! paper's P2 closes).
+//!
+//! The per-selected-client training phase rides [`FedAvg::train_selected`],
+//! so it inherits the intra-round client parallelism and its deterministic
+//! index-ordered reduce (PERF.md §client-parallelism).
 
 use anyhow::Result;
 

@@ -14,7 +14,10 @@
 
 use anyhow::Result;
 
-use crate::fl::{aggregate, sample_clients, ExperimentContext, Framework, RoundOutcome};
+use crate::fl::{
+    aggregate_indexed, resolve_client_jobs, run_clients, sample_clients, ExperimentContext,
+    Framework, RoundOutcome,
+};
 use crate::oran::{self, RicProfile, UploadSizes};
 use crate::runtime::{Arg, Tensor};
 use crate::sim::RngPool;
@@ -22,6 +25,15 @@ use crate::sim::RngPool;
 pub struct VanillaSfl {
     wc: Tensor,
     ws: Tensor,
+}
+
+/// One client's independent round contribution: both trained half-models
+/// plus its loss partial, folded by the index-ordered reduce.
+struct ClientHalves {
+    wc: Tensor,
+    ws: Tensor,
+    loss: f32,
+    steps: usize,
 }
 
 impl VanillaSfl {
@@ -52,14 +64,19 @@ impl Framework for VanillaSfl {
         let server_step = ctx.plan.role("sfl_server_step")?;
         let client_bwd = ctx.plan.role("sfl_client_bwd")?;
 
-        let mut wc_parts = Vec::with_capacity(ids.len());
-        let mut ws_parts = Vec::with_capacity(ids.len());
-        let mut loss_sum = 0f32;
-        let mut loss_n = 0usize;
-        for &m in &ids {
+        // per-client phase: each job runs the whole E-step ping-pong for one
+        // client against the read-only round aggregates; the reduce folds in
+        // client-index order, so any `client_jobs` count is bitwise
+        // identical to the sequential path (tests/differential.rs)
+        let wc0 = &self.wc;
+        let ws0 = &self.ws;
+        let jobs = resolve_client_jobs(cfg.client_jobs, ids.len());
+        let halves = run_clients(ids.len(), jobs, |i| {
+            let m = ids[i];
             let shard = &ctx.shards[m].data;
-            let mut wc_m = self.wc.clone();
-            let mut ws_m = self.ws.clone();
+            let mut wc_m = wc0.clone();
+            let mut ws_m = ws0.clone();
+            let mut loss = 0f32;
             for t in 0..e {
                 let (x, y) = shard.batch(t);
                 let smash = ctx
@@ -73,8 +90,7 @@ impl Framework for VanillaSfl {
                 let mut it = out.into_iter();
                 ws_m = it.next().expect("sfl_server_step: params");
                 let gsm = it.next().expect("sfl_server_step: gsmash");
-                loss_sum += it.next().expect("sfl_server_step: loss").data[0];
-                loss_n += 1;
+                loss += it.next().expect("sfl_server_step: loss").data[0];
                 wc_m = ctx
                     .engine
                     .run_id(
@@ -83,11 +99,22 @@ impl Framework for VanillaSfl {
                     )?
                     .remove(0);
             }
-            wc_parts.push(wc_m);
-            ws_parts.push(ws_m);
+            Ok(ClientHalves { wc: wc_m, ws: ws_m, loss, steps: e })
+        })?;
+
+        // deterministic index-ordered reduce
+        let mut loss_sum = 0f32;
+        let mut loss_n = 0usize;
+        let mut wc_parts = Vec::with_capacity(halves.len());
+        let mut ws_parts = Vec::with_capacity(halves.len());
+        for (i, h) in halves.into_iter().enumerate() {
+            loss_sum += h.loss;
+            loss_n += h.steps;
+            wc_parts.push((i, h.wc));
+            ws_parts.push((i, h.ws));
         }
-        self.wc = aggregate(&wc_parts)?;
-        self.ws = aggregate(&ws_parts)?;
+        self.wc = aggregate_indexed(wc_parts)?;
+        self.ws = aggregate_indexed(ws_parts)?;
 
         // uniform bandwidth among K; uplink = E smashed batches + half-model
         let selected: Vec<&RicProfile> = ids.iter().map(|&m| &ctx.topo.rics[m]).collect();

@@ -89,6 +89,15 @@ impl Args {
         self.usize_or("jobs", 0)
     }
 
+    /// The `--client-jobs` intra-round parallelism knob: worker threads for
+    /// the per-selected-client phase inside every training round, 0 (the
+    /// default) = auto (`REPRO_CLIENT_JOBS` env override, else 1 —
+    /// sequential). Results are bitwise identical at any value; the knob
+    /// multiplies with `--jobs` (PERF.md §client-parallelism).
+    pub fn client_jobs(&self) -> Result<usize> {
+        self.usize_or("client-jobs", 0)
+    }
+
     /// Call after reading all known flags: errors on leftovers (typos).
     pub fn finish(&self) -> Result<()> {
         let seen = self.seen.borrow();
@@ -133,6 +142,15 @@ mod tests {
         assert_eq!(a.jobs().unwrap(), 3);
         let (_, b) = Args::parse(&argv("experiment")).unwrap();
         assert_eq!(b.jobs().unwrap(), 0); // 0 = auto-detect downstream
+    }
+
+    #[test]
+    fn client_jobs_knob_parses_independently_of_jobs() {
+        let (_, a) = Args::parse(&argv("run --jobs 2 --client-jobs 4")).unwrap();
+        assert_eq!(a.jobs().unwrap(), 2);
+        assert_eq!(a.client_jobs().unwrap(), 4);
+        let (_, b) = Args::parse(&argv("run")).unwrap();
+        assert_eq!(b.client_jobs().unwrap(), 0); // 0 = auto downstream
     }
 
     #[test]

@@ -104,8 +104,15 @@ pub struct SimConfig {
     /// cap (bytes) on the per-context chunk-stack precompute; 0 = unlimited.
     /// When the projected stack size exceeds the cap, the precompute is
     /// skipped and chunked dispatch falls back to the (slower, numerically
-    /// identical) single-step path — PERF.md §memory.
+    /// identical) single-step path — PERF.md §memory. The whole-shard smash
+    /// stacks share this budget.
     pub chunk_cache_cap_bytes: usize,
+    /// worker threads for the per-selected-client phase inside every round
+    /// (0 = auto: `REPRO_CLIENT_JOBS` env, else 1 — sequential). Purely an
+    /// execution knob: any value is bitwise identical (the differential
+    /// suite is the gate), total thread footprint multiplies with `--jobs`
+    /// — PERF.md §client-parallelism.
+    pub client_jobs: usize,
     /// fixed-K baselines (FedAvg K=10/E=10, SFL K=20/E=14 per §V)
     pub fedavg_k: usize,
     pub fedavg_e: usize,
@@ -145,6 +152,7 @@ impl SimConfig {
             eta_c: Some(0.03),
             eta_s: Some(0.02),
             chunk_cache_cap_bytes: 0,
+            client_jobs: 0,
             fedavg_k: 10,
             fedavg_e: 10,
             sfl_k: 20,
@@ -220,6 +228,7 @@ impl SimConfig {
             ("eta_c", opt(self.eta_c)),
             ("eta_s", opt(self.eta_s)),
             ("chunk_cache_cap_bytes", Json::num(self.chunk_cache_cap_bytes as f64)),
+            ("client_jobs", Json::num(self.client_jobs as f64)),
             ("fedavg_k", Json::num(self.fedavg_k as f64)),
             ("fedavg_e", Json::num(self.fedavg_e as f64)),
             ("sfl_k", Json::num(self.sfl_k as f64)),
@@ -280,6 +289,7 @@ impl SimConfig {
             };
         }
         if let Some(v) = j.opt("chunk_cache_cap_bytes") { cfg.chunk_cache_cap_bytes = v.as_usize()?; }
+        if let Some(v) = j.opt("client_jobs") { cfg.client_jobs = v.as_usize()?; }
         if let Some(v) = j.opt("fedavg_k") { cfg.fedavg_k = v.as_usize()?; }
         if let Some(v) = j.opt("fedavg_e") { cfg.fedavg_e = v.as_usize()?; }
         if let Some(v) = j.opt("sfl_k") { cfg.sfl_k = v.as_usize()?; }
@@ -369,12 +379,14 @@ mod tests {
         c.b_min = 1.0 / 7.0;
         c.eta_c = Some(0.01);
         c.chunk_cache_cap_bytes = 64 << 20;
+        c.client_jobs = 3;
         let s = c.to_json().to_string_pretty();
         let back = SimConfig::from_json(&Json::parse(&s).unwrap()).unwrap();
         assert_eq!(back.preset, "vision");
         assert_eq!(back.num_clients, 7);
         assert_eq!(back.eta_c, Some(0.01));
         assert_eq!(back.chunk_cache_cap_bytes, 64 << 20);
+        assert_eq!(back.client_jobs, 3);
         assert_eq!(back.sfl_e, c.sfl_e);
     }
 

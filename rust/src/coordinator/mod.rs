@@ -7,7 +7,11 @@
 //! [`Runner::new`]) or **borrowed** from a paired comparison that built it
 //! once ([`Runner::shared`]); everything mutable — framework params, the
 //! simulated clock, the round records, the per-framework RNG pool — lives in
-//! the thin [`RunState`].
+//! the thin [`RunState`]. Inside one round, each framework additionally fans
+//! its per-selected-client work out over `cfg.client_jobs` executor workers
+//! with a deterministic index-ordered reduce (PERF.md §client-parallelism),
+//! so the records this runner emits are bitwise independent of every
+//! parallelism knob.
 
 use anyhow::Result;
 

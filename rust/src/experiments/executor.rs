@@ -1,36 +1,50 @@
-//! Scoped thread-pool executor for the experiment layer: run N independent
-//! jobs on at most `jobs` worker threads with **deterministic result
-//! ordering** (results come back indexed, never in completion order).
+//! Scoped thread-pool executor: run N independent jobs on at most `jobs`
+//! worker threads with **deterministic result ordering** (results come back
+//! indexed, never in completion order).
 //!
 //! Used by [`super::run_comparison`] (one job per framework, sharing one
-//! `ExperimentContext`) and [`super::sweep::grid`] (one job per grid point).
-//! The worker count is the CLI `--jobs` knob; `0` means auto — the
-//! `REPRO_JOBS` environment variable if set, else the machine's available
-//! parallelism.
+//! `ExperimentContext`), [`super::sweep::grid`] (one job per grid point),
+//! and — through `fl::run_clients` — the per-selected-client phase inside
+//! every framework's training round (one job per client, knob
+//! `--client-jobs` / `REPRO_CLIENT_JOBS`). The run-level worker count is the
+//! CLI `--jobs` knob; `0` means auto — the `REPRO_JOBS` environment variable
+//! if set, else the machine's available parallelism. The two knobs nest:
+//! total worker threads approach `jobs x client_jobs` (PERF.md
+//! §client-parallelism has oversubscription guidance).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
+
+/// Positive-integer worker-count override from an environment variable,
+/// `None` when unset/unparsable/zero. Shared by every jobs knob
+/// (`REPRO_JOBS` here, `REPRO_CLIENT_JOBS` in `fl`) so the parsing rules
+/// cannot drift apart.
+pub fn env_jobs_override(var: &str) -> Option<usize> {
+    std::env::var(var).ok().and_then(|v| v.parse::<usize>().ok()).filter(|&j| j > 0)
+}
 
 /// Resolved default worker count: `REPRO_JOBS` (if a positive integer),
 /// else `std::thread::available_parallelism()`. Read once per process.
 pub fn default_jobs() -> usize {
     static JOBS: OnceLock<usize> = OnceLock::new();
     *JOBS.get_or_init(|| {
-        std::env::var("REPRO_JOBS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .filter(|&j| j > 0)
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-            })
+        env_jobs_override("REPRO_JOBS").unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
     })
+}
+
+/// The one resolution shape shared by every jobs knob: an explicit request
+/// wins, 0 falls back to `auto`, and the result is clamped to `[1, n]`.
+pub fn resolve_with(requested: usize, auto: usize, n: usize) -> usize {
+    let j = if requested > 0 { requested } else { auto };
+    j.clamp(1, n.max(1))
 }
 
 /// Turn a requested worker count (0 = auto) into an effective one for `n`
 /// jobs: auto-detected when 0, never more workers than jobs, never 0.
 pub fn resolve_jobs(requested: usize, n: usize) -> usize {
-    let j = if requested > 0 { requested } else { default_jobs() };
-    j.clamp(1, n.max(1))
+    resolve_with(requested, default_jobs(), n)
 }
 
 /// Run `f(0..n)` on at most `jobs` scoped worker threads and return the
@@ -104,6 +118,15 @@ mod tests {
         assert_eq!(resolve_jobs(3, 0), 1);
         // auto (0) resolves to something positive
         assert!(resolve_jobs(0, 64) >= 1);
+    }
+
+    #[test]
+    fn resolve_with_prefers_request_over_auto_and_clamps() {
+        assert_eq!(resolve_with(3, 8, 10), 3); // explicit request wins
+        assert_eq!(resolve_with(0, 8, 10), 8); // 0 falls back to auto
+        assert_eq!(resolve_with(0, 8, 5), 5); // never more workers than jobs
+        assert_eq!(resolve_with(0, 0, 5), 1); // never 0
+        assert_eq!(resolve_with(2, 8, 0), 1); // zero jobs still yields 1
     }
 
     #[test]

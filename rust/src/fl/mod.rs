@@ -12,6 +12,15 @@
 //! threads by reference. Everything mutable (model params, clock, records,
 //! the per-framework RNG pool) lives in the runner side
 //! (`coordinator::RunState` + each `Framework` impl).
+//!
+//! # Intra-round client parallelism (PERF.md §client-parallelism)
+//!
+//! Inside one round, every framework's per-selected-client phase is a set of
+//! independent jobs fanned out by [`run_clients`] over the scoped executor
+//! (`client_jobs` knob: CLI `--client-jobs`, env `REPRO_CLIENT_JOBS`) and
+//! folded back by a **deterministic index-ordered reduce**
+//! ([`aggregate_indexed`] + in-order loss accumulation), so any worker count
+//! is bitwise identical to the sequential path (tests/differential.rs).
 
 use std::sync::OnceLock;
 
@@ -19,9 +28,12 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::SimConfig;
 use crate::data::{commag, vision, Batched, ClientShard};
+use crate::experiments::executor;
 use crate::model::ModelInit;
 use crate::oran::{RoundLatency, Topology};
-use crate::runtime::{Arg, ChunkStacks, Engine, Frozen, PresetManifest, PresetPlan, Tensor};
+use crate::runtime::{
+    Arg, ArtifactId, ChunkStacks, Engine, Frozen, PresetManifest, PresetPlan, Tensor,
+};
 use crate::sim::RngPool;
 
 /// Precomputed chunk-window stacks over one shard's cyclic batches, built
@@ -32,6 +44,16 @@ pub struct ShardChunks {
     pub xs: ChunkStacks,
     /// stacked one-hot label batches `[chunk, batch, classes]`
     pub ys: ChunkStacks,
+}
+
+/// One shard's whole-shard smash input: the interned `client_fwd_x{NB}`
+/// artifact plus the lazily built frozen `[NB, B, ...]` stack of every x
+/// batch. The stack is materialized on first `smash_shard` use (OnceLock —
+/// concurrent client-job first uses race benignly, identical bytes), so
+/// runs that never smash (FedAvg/SFL/O-RANFed single runs) pay nothing.
+pub struct ShardWhole {
+    pub id: ArtifactId,
+    cell: OnceLock<Frozen>,
 }
 
 /// Bytes held by the context's literal/chunk caches (PERF.md §memory).
@@ -45,6 +67,10 @@ pub struct MemoryStats {
     pub chunk_literal_bytes: usize,
     pub test_host_bytes: usize,
     pub test_literal_bytes: usize,
+    /// whole-shard smash input stacks (one frozen `[NB, B, ...]` tensor per
+    /// shard with a matching `client_fwd_x{NB}` artifact — PERF.md §smash)
+    pub smash_stack_host_bytes: usize,
+    pub smash_stack_literal_bytes: usize,
     /// framework-private caches (e.g. SplitMe's params-version memos);
     /// 0 when reported from a bare context ([`Framework::cache_bytes`])
     pub framework_cache_bytes: usize,
@@ -58,6 +84,8 @@ impl MemoryStats {
             + self.chunk_literal_bytes
             + self.test_host_bytes
             + self.test_literal_bytes
+            + self.smash_stack_host_bytes
+            + self.smash_stack_literal_bytes
             + self.framework_cache_bytes
     }
 }
@@ -82,6 +110,13 @@ pub struct ExperimentContext<'a> {
     /// chunked dispatch is disabled, the preset has no `*_chunk` artifacts,
     /// or the projected size exceeds `cfg.chunk_cache_cap_bytes`
     pub chunks: Vec<ShardChunks>,
+    /// per-shard whole-shard smash inputs, parallel to `shards` ([`ShardWhole`]:
+    /// interned `client_fwd_x{NB}` artifact + lazily built frozen stack), so
+    /// SplitMe's per-round smash pass is ONE dispatch per client. `None` per
+    /// shard when the preset ships no matching artifact; empty/None everywhere
+    /// under `REPRO_NO_SHARD_BATCH` or past the `chunk_cache_cap_bytes`
+    /// budget (per-batch fallback — bitwise identical, tests/differential.rs).
+    pub shard_wholes: Vec<Option<ShardWhole>>,
     pub test: Batched,
     /// base pool (root seed only): data/topology/model-init streams. Shared
     /// by all frameworks so paired init streams stay identical; per-runner
@@ -163,6 +198,38 @@ impl<'a> ExperimentContext<'a> {
             Vec::new()
         };
 
+        // whole-shard smash slots (§Perf, ISSUE 3): one `client_fwd_x{NB}`
+        // handle per shard whose batch count has a matching artifact, so the
+        // per-round smash pass is one dispatch instead of NB. The frozen
+        // [NB, B, ...] input stack itself is built lazily on first
+        // `smash_shard` use — non-smashing frameworks pay nothing. Shares
+        // the chunk precompute's memory budget: the slots are dropped
+        // entirely (per-batch fallback, numerically identical) when the
+        // built chunk stacks plus the projected whole-shard bytes exceed
+        // the cap.
+        let mut shard_wholes: Vec<Option<ShardWhole>> = shards.iter().map(|_| None).collect();
+        if !no_shard_batch() {
+            let projected: usize = shards
+                .iter()
+                .filter(|s| plan.whole_shard_fwd(s.data.num_batches()).is_some())
+                .map(|s| s.data.batches.iter().map(|(x, _)| x.size_bytes()).sum::<usize>())
+                .sum();
+            let built_chunk: usize =
+                chunks.iter().map(|c| c.xs.host_bytes() + c.ys.host_bytes()).sum();
+            let cap = cfg.chunk_cache_cap_bytes;
+            if cap > 0 && built_chunk + projected > cap {
+                eprintln!(
+                    "note: skipping whole-shard smash stacks ({projected} B projected past cap {cap} B)"
+                );
+            } else {
+                for (slot, s) in shard_wholes.iter_mut().zip(&shards) {
+                    if let Some(id) = plan.whole_shard_fwd(s.data.num_batches()) {
+                        *slot = Some(ShardWhole { id, cell: OnceLock::new() });
+                    }
+                }
+            }
+        }
+
         Ok(Self {
             engine,
             cfg: cfg.clone(),
@@ -172,6 +239,7 @@ impl<'a> ExperimentContext<'a> {
             topo: Topology::build(cfg),
             shards,
             chunks,
+            shard_wholes,
             test,
             pool: RngPool::new(cfg.seed),
         })
@@ -191,6 +259,21 @@ impl<'a> ExperimentContext<'a> {
         self.chunks.get(m).map(|c| (&c.xs, &c.ys))
     }
 
+    /// Whole-shard smash input for shard `m`: the interned `client_fwd_x{NB}`
+    /// artifact plus the frozen `[NB, B, ...]` stack (materialized on first
+    /// use), if the context carries a slot for this shard size.
+    pub fn shard_whole(&self, m: usize) -> Option<(ArtifactId, &Frozen)> {
+        let w = self.shard_wholes.get(m)?.as_ref()?;
+        let stack = w.cell.get_or_init(|| {
+            let xs: Vec<&Tensor> =
+                self.shards[m].data.batches.iter().map(|(x, _)| x.tensor()).collect();
+            // cannot fail: num_batches >= 1 and uniform batch shapes were
+            // both validated when the context was built
+            Tensor::stack(&xs).expect("whole-shard stack over validated batches").freeze()
+        });
+        Some((w.id, stack))
+    }
+
     /// Bytes currently held by this context's literal/chunk caches.
     pub fn memory_stats(&self) -> MemoryStats {
         let mut ms = MemoryStats::default();
@@ -207,6 +290,12 @@ impl<'a> ExperimentContext<'a> {
         for (x, y) in &self.test.batches {
             ms.test_host_bytes += x.host_bytes() + y.host_bytes();
             ms.test_literal_bytes += x.literal_bytes() + y.literal_bytes();
+        }
+        for w in self.shard_wholes.iter().flatten() {
+            if let Some(stack) = w.cell.get() {
+                ms.smash_stack_host_bytes += stack.host_bytes();
+                ms.smash_stack_literal_bytes += stack.literal_bytes();
+            }
         }
         ms
     }
@@ -295,14 +384,64 @@ pub fn effective_chunk(preset: &PresetManifest) -> usize {
     }
 }
 
+/// `REPRO_NO_SHARD_BATCH=1` disables the whole-shard smash batching at
+/// context build (perf ablation / differential oracle): `smash_shard` then
+/// always walks the per-batch path. Read once, like [`no_chunk`].
+static NO_SHARD_BATCH: OnceLock<bool> = OnceLock::new();
+
+pub fn no_shard_batch() -> bool {
+    *NO_SHARD_BATCH
+        .get_or_init(|| std::env::var("REPRO_NO_SHARD_BATCH").map(|v| v == "1").unwrap_or(false))
+}
+
+/// Resolved default intra-round worker count: `REPRO_CLIENT_JOBS` (if a
+/// positive integer), else 1 — sequential. Deliberately NOT core count: the
+/// comparison/sweep executor (`--jobs`) already fans out whole runs, and the
+/// total thread footprint is the product of the two knobs (PERF.md
+/// §client-parallelism). Read once per process.
+pub fn default_client_jobs() -> usize {
+    static JOBS: OnceLock<usize> = OnceLock::new();
+    *JOBS.get_or_init(|| executor::env_jobs_override("REPRO_CLIENT_JOBS").unwrap_or(1))
+}
+
+/// Turn the `client_jobs` knob (0 = auto) into an effective worker count for
+/// `n` selected clients (the shared [`executor::resolve_with`] shape: auto
+/// resolves via [`default_client_jobs`], never more workers than clients,
+/// never 0). Any value yields bitwise-identical results
+/// (tests/differential.rs) — the knob only trades wall-clock.
+pub fn resolve_client_jobs(requested: usize, n: usize) -> usize {
+    executor::resolve_with(requested, default_client_jobs(), n)
+}
+
+/// Run one independent job per selected client on the scoped executor and
+/// return the per-client contributions **in client-index order** (never in
+/// completion order), failing on the first client error.
+///
+/// Determinism contract (PERF.md §client-parallelism): the closure must be a
+/// pure function of its index — shared state goes in by `&` reference, and
+/// any randomness must come from a pure `RngPool::stream(label, index)`
+/// derivation, never from a mutable RNG captured across clients — so the
+/// scheduling interleaving of `jobs > 1` is invisible and `client_jobs = 1`
+/// reproduces `client_jobs = N` bit for bit.
+pub fn run_clients<T, F>(n: usize, jobs: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    executor::run_indexed(n, jobs, f).into_iter().collect()
+}
+
 /// Run `e` local SGD steps of a `(params, a_t, b_t, lr) -> (params', loss)`
 /// step artifact, dispatching the scan-folded `*_chunk` variant for
 /// `floor(e/chunk)` iterations (one PJRT call per `chunk` updates — the §Perf
-/// optimization) and the single-step artifact for the remainder.
+/// optimization), then one `{chunk_role}{r}` remainder fold for the
+/// `r = e mod chunk` leftover when the preset ships one, and only then the
+/// single-step artifact — with both fold tiers available no per-step PJRT
+/// dispatch survives.
 ///
 /// `at(t)` supplies the two per-step batch tensors (cyclic over local data);
 /// `chunks` supplies their precomputed window stacks (same cyclic order) for
-/// the folded dispatch — without them the chunk path is skipped.
+/// the folded dispatch — without them both fold tiers are skipped.
 /// Returns `(params, loss_sum, steps_counted)`.
 #[allow(clippy::too_many_arguments)]
 pub fn run_steps<'t>(
@@ -361,6 +500,35 @@ pub fn run_steps_with<'t>(
             }
         }
     }
+    // remainder fold: the e mod chunk leftover used to dispatch one PJRT
+    // call per step; a `{chunk_role}{r}` artifact (scan of r steps) folds it
+    // into one call. The artifact reports the PER-STEP losses, folded below
+    // one `+=` at a time — exactly the single-step oracle's f32 accumulation
+    // order (a server-side mean or sum would regroup the adds and break
+    // bitwise parity). The window is stacked ad hoc — one transient copy per
+    // client-round, gated on the same `chunks` availability as the chunk
+    // loop so the capped/no-stack fallback keeps its pure single-step
+    // dispatch pattern.
+    if chunk > 1 && chunks.is_some() {
+        let r = e - t;
+        if let Some(rem_id) = ctx.plan.remainder_role(chunk_role, r) {
+            let aw: Vec<&Tensor> = (0..r).map(|i| at(t + i).0.tensor()).collect();
+            let bw: Vec<&Tensor> = (0..r).map(|i| at(t + i).1.tensor()).collect();
+            let ax = Tensor::stack(&aw).context("stacking remainder window")?.freeze();
+            let bx = Tensor::stack(&bw).context("stacking remainder window")?.freeze();
+            let out = ctx.engine.run_id(
+                rem_id,
+                &[Arg::Fresh(&params), Arg::Cached(&ax), Arg::Cached(&bx), Arg::Cached(lr)],
+            )?;
+            let mut it = out.into_iter();
+            params = it.next().expect("remainder fold: params");
+            for l in &it.next().expect("remainder fold: losses").data {
+                loss_sum += l;
+            }
+            n += r;
+            t += r;
+        }
+    }
     while t < e {
         let (a, b) = at(t);
         let out = ctx.engine.run_id(
@@ -387,6 +555,17 @@ pub fn aggregate(parts: &[Tensor]) -> Result<Tensor> {
         acc.axpy(w, p)?;
     }
     Ok(acc)
+}
+
+/// Deterministic reduce of keyed per-client contributions: sorts by the
+/// client's position in the selected set, then averages in that order. The
+/// result depends only on the keys — the arrival/scheduling order of a
+/// parallel per-client phase is bitwise invisible (f32 accumulation order is
+/// pinned by the sort; proptested in tests/proptests.rs).
+pub fn aggregate_indexed(mut parts: Vec<(usize, Tensor)>) -> Result<Tensor> {
+    parts.sort_by_key(|p| p.0);
+    let ordered: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
+    aggregate(&ordered)
 }
 
 /// What one global round produced (feeds metrics + the simulated clock).
@@ -451,6 +630,45 @@ mod tests {
     #[test]
     fn aggregate_rejects_empty() {
         assert!(aggregate(&[]).is_err());
+        assert!(aggregate_indexed(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn aggregate_indexed_ignores_arrival_order() {
+        let parts = vec![
+            (0, Tensor::new(vec![2], vec![1.0, -2.0]).unwrap()),
+            (1, Tensor::new(vec![2], vec![0.5, 4.0]).unwrap()),
+            (2, Tensor::new(vec![2], vec![-3.0, 1.0]).unwrap()),
+        ];
+        let mut shuffled = parts.clone();
+        shuffled.swap(0, 2);
+        shuffled.swap(1, 2);
+        let a = aggregate_indexed(parts).unwrap();
+        let b = aggregate_indexed(shuffled).unwrap();
+        let bits = |t: &Tensor| t.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b));
+    }
+
+    #[test]
+    fn resolve_client_jobs_clamps_to_client_count() {
+        assert_eq!(resolve_client_jobs(8, 3), 3);
+        assert_eq!(resolve_client_jobs(2, 5), 2);
+        assert_eq!(resolve_client_jobs(4, 0), 1);
+        // auto (0) resolves to something positive
+        assert!(resolve_client_jobs(0, 16) >= 1);
+    }
+
+    #[test]
+    fn run_clients_orders_results_and_propagates_errors() {
+        let ok = run_clients(5, 4, |i| Ok(i * 2)).unwrap();
+        assert_eq!(ok, vec![0, 2, 4, 6, 8]);
+        let err = run_clients(4, 2, |i| {
+            if i == 2 {
+                anyhow::bail!("client 2 exploded")
+            }
+            Ok(i)
+        });
+        assert!(err.is_err());
     }
 
     #[test]

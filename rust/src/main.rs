@@ -24,15 +24,18 @@ repro — SplitMe: split federated learning in O-RAN (paper reproduction)
 USAGE:
   repro run [--framework splitme|fedavg|sfl|oranfed] [--preset commag|vision]
             [--config file.json] [--rounds N] [--stop-at-target]
-            [--out DIR] [--seed N] [--eval-every K]
+            [--out DIR] [--seed N] [--eval-every K] [--client-jobs N]
   repro experiment [fig3a|fig3b|fig4a|fig4b|fig5|all]
             [--splitme-rounds N] [--baseline-rounds N] [--out DIR]
-            [--seed N] [--verbose] [--jobs N]
+            [--seed N] [--verbose] [--jobs N] [--client-jobs N]
   repro sweep   [--preset commag|vision] [--jobs N]   # P2 surface, no training
   repro inspect
 
---jobs N: worker threads for the paired comparison / sweep grid
-          (0 = auto: REPRO_JOBS env or available cores; 1 = sequential)
+--jobs N:        worker threads for the paired comparison / sweep grid
+                 (0 = auto: REPRO_JOBS env or available cores; 1 = sequential)
+--client-jobs N: worker threads for the per-selected-client phase inside each
+                 round (0 = auto: REPRO_CLIENT_JOBS env, else 1). Bitwise
+                 identical at any value; multiplies with --jobs.
 ";
 
 fn main() {
@@ -71,6 +74,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
     cfg.stop_at_target = args.flag("stop-at-target") || cfg.stop_at_target;
+    // preserve a --config file's client_jobs unless the flag overrides it
+    cfg.client_jobs = args.usize_or("client-jobs", cfg.client_jobs)?;
     let rounds = args.usize_or("rounds", 30)?;
     let out = args.str_or("out", "results");
     args.finish()?;
@@ -113,13 +118,16 @@ fn cmd_run(args: &Args) -> Result<()> {
     let ms = runner.memory_stats();
     println!(
         "  cache memory: shards {:.1}MB (+{:.1}MB literals) chunks {:.1}MB (+{:.1}MB literals) \
-         test {:.1}MB (+{:.1}MB literals) framework memos {:.1}MB = {:.1}MB total",
+         test {:.1}MB (+{:.1}MB literals) smash stacks {:.1}MB (+{:.1}MB literals) \
+         framework memos {:.1}MB = {:.1}MB total",
         ms.shard_host_bytes as f64 / 1e6,
         ms.shard_literal_bytes as f64 / 1e6,
         ms.chunk_host_bytes as f64 / 1e6,
         ms.chunk_literal_bytes as f64 / 1e6,
         ms.test_host_bytes as f64 / 1e6,
         ms.test_literal_bytes as f64 / 1e6,
+        ms.smash_stack_host_bytes as f64 / 1e6,
+        ms.smash_stack_literal_bytes as f64 / 1e6,
         ms.framework_cache_bytes as f64 / 1e6,
         ms.total_bytes() as f64 / 1e6,
     );
@@ -136,11 +144,13 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 20250710)?;
     let verbose = args.flag("verbose");
     let jobs = args.jobs()?;
+    let client_jobs = args.client_jobs()?;
     args.finish()?;
 
     let engine = Engine::from_default_manifest()?;
     let mut cfg = if which == "fig5" { SimConfig::vision() } else { SimConfig::commag() };
     cfg.seed = seed;
+    cfg.client_jobs = client_jobs;
     let summaries = experiments::run_comparison_jobs(&engine, &cfg, budget, verbose, jobs)?;
     experiments::write_all(&summaries, &out)?;
     match which.as_str() {

@@ -119,6 +119,28 @@ impl PresetPlan {
     pub fn has_chunk_roles(&self) -> bool {
         self.roles.keys().any(|r| r.ends_with("_chunk"))
     }
+
+    /// The whole-shard stacked client forward for an `nb`-batch shard
+    /// (role `client_fwd_x{nb}`), if the preset ships one. SplitMe's
+    /// per-round smash pass uses it to fold `nb` per-batch dispatches into
+    /// one; a shard whose batch count has no matching artifact falls back
+    /// to the per-batch path.
+    pub fn whole_shard_fwd(&self, nb: usize) -> Option<ArtifactId> {
+        self.try_role(&format!("client_fwd_x{nb}"))
+    }
+
+    /// The `r`-step remainder fold of a chunked step role
+    /// (role `{chunk_role}{r}`, e.g. `client_step_chunk3`): one dispatch for
+    /// the `E mod chunk` leftover steps of `fl::run_steps`. Remainder
+    /// artifacts report the PER-STEP losses (shape `[r]`, not the chunk
+    /// artifacts' mean) so the caller can replicate the single-step f32
+    /// accumulation order exactly.
+    pub fn remainder_role(&self, chunk_role: &str, r: usize) -> Option<ArtifactId> {
+        if r < 2 {
+            return None;
+        }
+        self.try_role(&format!("{chunk_role}{r}"))
+    }
 }
 
 /// Precomputed cyclic chunk-window stacks over a list of equally-shaped

@@ -82,6 +82,24 @@ impl Tensor {
         Tensor::new(dims, data)
     }
 
+    /// Split along the leading axis into `dims[0]` tensors — the inverse of
+    /// [`Tensor::stack`] (whole-shard artifact outputs back to per-batch).
+    pub fn unstack(self) -> Result<Vec<Tensor>> {
+        let Some((&n, rest)) = self.dims.split_first() else {
+            bail!("unstack needs rank >= 1");
+        };
+        let rest = rest.to_vec();
+        let elems: usize = rest.iter().product();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            out.push(Tensor {
+                dims: rest.clone(),
+                data: self.data[i * elems..(i + 1) * elems].to_vec(),
+            });
+        }
+        Ok(out)
+    }
+
     /// In-place axpy: `self += alpha * other` (used by the aggregator).
     pub fn axpy(&mut self, alpha: f32, other: &Tensor) -> Result<()> {
         if self.dims != other.dims {
@@ -224,6 +242,19 @@ mod tests {
         assert_eq!(s.dims, vec![2, 2]);
         assert_eq!(s.data, vec![1.0, 2.0, 3.0, 4.0]);
         assert!(Tensor::stack(&[&a, &Tensor::zeros(&[3])]).is_err());
+    }
+
+    #[test]
+    fn unstack_inverts_stack() {
+        let a = Tensor::new(vec![2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(vec![2], vec![3.0, 4.0]).unwrap();
+        let parts = Tensor::stack(&[&a, &b]).unwrap().unstack().unwrap();
+        assert_eq!(parts, vec![a, b]);
+        // rank-1 unstacks into scalars (rank-0 tensors)
+        let scalars = Tensor::new(vec![3], vec![5.0, 6.0, 7.0]).unwrap().unstack().unwrap();
+        assert_eq!(scalars.len(), 3);
+        assert_eq!(scalars[1].dims, Vec::<usize>::new());
+        assert_eq!(scalars[1].data, vec![6.0]);
     }
 
     #[test]

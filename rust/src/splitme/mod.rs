@@ -23,7 +23,8 @@ use anyhow::{Context, Result};
 
 use crate::allocation::solve_p2;
 use crate::fl::{
-    aggregate, effective_chunk, run_steps, ExperimentContext, Framework, RoundOutcome,
+    aggregate_indexed, effective_chunk, resolve_client_jobs, run_clients, run_steps,
+    ExperimentContext, Framework, RoundOutcome,
 };
 use crate::oran::{RicProfile, UploadSizes};
 use crate::runtime::{Arg, ChunkStacks, Frozen, Tensor};
@@ -57,11 +58,12 @@ impl InvActsPass {
 }
 
 /// Per-client results of one artifact pass, valid for one params version.
-/// The frozen params copy is shared by every fill at this version, so the
+/// The frozen params copy is shared (by `Arc`) by every fill at this version
+/// — including fills running concurrently on client-job workers — so the
 /// loop-invariant literal is still converted exactly once.
 struct VersionedCache<T> {
     version: u64,
-    params: Option<Frozen>,
+    params: Option<Arc<Frozen>>,
     per_client: HashMap<usize, Arc<T>>,
 }
 
@@ -80,11 +82,11 @@ impl<T> VersionedCache<T> {
     }
 
     /// The frozen params for this version, freezing `current` on first use.
-    fn frozen_params(&mut self, current: &Tensor) -> &Frozen {
+    fn frozen_params(&mut self, current: &Tensor) -> Arc<Frozen> {
         if self.params.is_none() {
-            self.params = Some(current.clone().freeze());
+            self.params = Some(Arc::new(current.clone().freeze()));
         }
-        self.params.as_ref().expect("frozen above")
+        self.params.as_ref().expect("frozen above").clone()
     }
 
     fn params_bytes(&self) -> usize {
@@ -156,35 +158,12 @@ impl SplitMe {
         let batches = &ctx.shards[m].data.batches;
         let mut tuples = Vec::with_capacity(batches.len());
         for (_, y) in batches {
-            let outs = ctx.engine.run_id(inv_acts, &[Arg::Cached(wsi), Arg::Cached(y)])?;
+            let outs = ctx.engine.run_id(inv_acts, &[Arg::Cached(wsi.as_ref()), Arg::Cached(y)])?;
             tuples.push(outs.into_iter().map(Tensor::freeze).collect::<Vec<Frozen>>());
         }
         let arc = Arc::new(InvActsPass { tuples });
         self.acts.per_client.insert(m, arc.clone());
         Ok(arc)
-    }
-
-    /// The z-targets pass for Step 1 of one round. Reuses the memoized
-    /// `inv_acts` pass when the previous evaluation already computed it for
-    /// this client; on a miss it computes WITHOUT memoizing and keeps only
-    /// the final activations — the `wsi` bump at the end of this round
-    /// would discard a full fill unread, so retaining the intermediate
-    /// tuples for the whole round would be pure memory overhead.
-    fn z_pass(&mut self, ctx: &ExperimentContext, m: usize) -> Result<Arc<InvActsPass>> {
-        self.acts.sync(self.wsi_version);
-        if let Some(a) = self.acts.per_client.get(&m) {
-            return Ok(a.clone());
-        }
-        let inv_acts = ctx.plan.role("inv_acts")?;
-        let wsi = self.acts.frozen_params(&self.wsi);
-        let batches = &ctx.shards[m].data.batches;
-        let mut tuples = Vec::with_capacity(batches.len());
-        for (_, y) in batches {
-            let mut outs = ctx.engine.run_id(inv_acts, &[Arg::Cached(wsi), Arg::Cached(y)])?;
-            let last = outs.pop().expect("inv_acts returns >=1 output");
-            tuples.push(vec![last.freeze()]);
-        }
-        Ok(Arc::new(InvActsPass { tuples }))
     }
 
     /// Smashed activations of client m's whole shard under the CURRENT
@@ -195,27 +174,10 @@ impl SplitMe {
             return Ok(s.clone());
         }
         let wc = self.smash.frozen_params(&self.wc);
-        let out = Self::smash_all(ctx, m, wc)?;
+        let out = smash_shard(ctx, m, wc.as_ref())?;
         let arc = Arc::new(out);
         self.smash.per_client.insert(m, arc.clone());
         Ok(arc)
-    }
-
-    /// Smashed activations of client m's whole shard under parameters `wc`
-    /// (frozen by the caller — loop-invariant across the shard's batches).
-    fn smash_all(ctx: &ExperimentContext, m: usize, wc: &Frozen) -> Result<Vec<Frozen>> {
-        let fwd = ctx.plan.role("client_fwd")?;
-        let mut out = Vec::new();
-        for (x, _) in &ctx.shards[m].data.batches {
-            let r = ctx.engine.run_id(fwd, &[Arg::Cached(wc), Arg::Cached(x)])?;
-            out.push(
-                r.into_iter()
-                    .next()
-                    .expect("client_fwd returns one output")
-                    .freeze(),
-            );
-        }
-        Ok(out)
     }
 
     /// Collect inversion traces (labels + smashed data + inverse-model
@@ -278,6 +240,65 @@ fn round_stacks(
         return Ok(None);
     }
     Ok(Some(ChunkStacks::with_limit(parts, chunk, e / chunk)?))
+}
+
+/// Smashed activations of client m's whole shard under parameters `wc`
+/// (frozen by the caller — loop-invariant across the shard's batches).
+///
+/// Dispatch count (tests/differential.rs): ONE `client_fwd_x{NB}` call when
+/// the shared context precomputed a whole-shard stack for this shard
+/// ([`ExperimentContext::shard_whole`]), else `num_batches` per-batch
+/// `client_fwd` calls — the bitwise-identical oracle path, forced globally
+/// by `REPRO_NO_SHARD_BATCH=1`.
+pub fn smash_shard(ctx: &ExperimentContext, m: usize, wc: &Frozen) -> Result<Vec<Frozen>> {
+    if let Some((id, stack)) = ctx.shard_whole(m) {
+        let out = ctx.engine.run_id(id, &[Arg::Cached(wc), Arg::Cached(stack)])?;
+        let stacked = out
+            .into_iter()
+            .next()
+            .expect("whole-shard client_fwd returns one output");
+        return Ok(stacked.unstack()?.into_iter().map(Tensor::freeze).collect());
+    }
+    let fwd = ctx.plan.role("client_fwd")?;
+    let mut out = Vec::with_capacity(ctx.shards[m].data.num_batches());
+    for (x, _) in &ctx.shards[m].data.batches {
+        let r = ctx.engine.run_id(fwd, &[Arg::Cached(wc), Arg::Cached(x)])?;
+        out.push(
+            r.into_iter()
+                .next()
+                .expect("client_fwd returns one output")
+                .freeze(),
+        );
+    }
+    Ok(out)
+}
+
+/// The z-targets pass of Step 1 for one client, computed fresh under the
+/// round's frozen `wsi` — the memo-miss path, callable from a client-job
+/// worker (no `&mut self`). Keeps only the final activations: the `wsi`
+/// bump at the end of the round would discard a full memo fill unread, so
+/// retaining the intermediate tuples would be pure memory overhead.
+fn z_pass_compute(ctx: &ExperimentContext, wsi: &Frozen, m: usize) -> Result<InvActsPass> {
+    let inv_acts = ctx.plan.role("inv_acts")?;
+    let batches = &ctx.shards[m].data.batches;
+    let mut tuples = Vec::with_capacity(batches.len());
+    for (_, y) in batches {
+        let mut outs = ctx.engine.run_id(inv_acts, &[Arg::Cached(wsi), Arg::Cached(y)])?;
+        let last = outs.pop().expect("inv_acts returns >=1 output");
+        tuples.push(vec![last.freeze()]);
+    }
+    Ok(InvActsPass { tuples })
+}
+
+/// One selected client's independent contribution to a round (Steps 1-3),
+/// produced on a client-job worker and folded by the index-ordered reduce.
+struct ClientUpdate {
+    wc: Tensor,
+    wsi: Tensor,
+    client_loss: f32,
+    client_steps: usize,
+    inv_loss: f32,
+    inv_steps: usize,
 }
 
 /// Keep the first `want` entries of `set` and top it up with the smallest
@@ -352,7 +373,7 @@ impl Framework for SplitMe {
         self.e_last = e;
         self.selector.observe(alloc.latency.max_uplink);
 
-        // ---- real training: Steps 1-3 ----
+        // ---- real training: Steps 1-3, one independent job per client ----
         // Corollary 2/3 schedule: eta ~ 1/sqrt(T) damps the mutual-learning
         // target drift so the late-round plateau is stable
         let decay = 1.0 / (1.0 + round as f32 / 8.0).sqrt();
@@ -360,17 +381,43 @@ impl Framework for SplitMe {
         let eta_s = Tensor::scalar1(ctx.eta_s().data[0] * decay).freeze();
         let chunk = effective_chunk(ctx.preset);
         let selected_ids: Vec<usize> = selected.iter().map(|r| r.id).collect();
-        let mut wc_parts = Vec::with_capacity(selected.len());
-        let mut wsi_parts = Vec::with_capacity(selected.len());
-        let mut loss_sum = 0f32;
-        let mut loss_n = 0usize;
 
-        for &m in &selected_ids {
+        // sequential prelude: snapshot the memo state the jobs may read —
+        // per-client `inv_acts` hits from the previous evaluation, plus ONE
+        // frozen wsi shared by every miss (its literal converts once)
+        self.acts.sync(self.wsi_version);
+        let hits: Vec<Option<Arc<InvActsPass>>> = selected_ids
+            .iter()
+            .map(|m| self.acts.per_client.get(m).cloned())
+            .collect();
+        let wsi_round = if hits.iter().any(Option::is_none) {
+            Some(self.acts.frozen_params(&self.wsi))
+        } else {
+            None
+        };
+
+        // per-client phase: jobs only read shared state (`ctx`, the round's
+        // aggregates, the memo snapshot); the reduce below folds results in
+        // client-index order, so any `client_jobs` worker count reproduces
+        // the sequential path bit for bit (tests/differential.rs)
+        let wc0 = &self.wc;
+        let wsi0 = &self.wsi;
+        let jobs = resolve_client_jobs(cfg.client_jobs, selected_ids.len());
+        let updates = run_clients(selected_ids.len(), jobs, |i| {
+            let m = selected_ids[i];
             // Step 1: download w_C and z = s^{-1}(Y_m) — memoized per
             // wsi-version, so clients the previous eval already passed
             // through `inv_acts` skip the recompute (and reuse the frozen
             // z literals)
-            let pass = self.z_pass(ctx, m).context("generating z targets")?;
+            let pass = match &hits[i] {
+                Some(p) => p.clone(),
+                None => {
+                    let wsi = wsi_round.as_ref().expect("miss implies round params");
+                    Arc::new(
+                        z_pass_compute(ctx, wsi.as_ref(), m).context("generating z targets")?,
+                    )
+                }
+            };
             let z: Vec<&Frozen> = (0..pass.tuples.len()).map(|b| pass.z(b)).collect();
             let shard = &ctx.shards[m].data;
 
@@ -383,22 +430,22 @@ impl Framework for SplitMe {
                 .and_then(|(xs, _)| z_stacks.as_ref().map(|zs| (xs, zs)));
 
             // Step 2: E client-side KL steps over the reconstructed dataset
-            let (wc_m, ls, ln) = run_steps(
+            let (wc_m, client_loss, client_steps) = run_steps(
                 ctx,
                 "client_step",
                 "client_step_chunk",
-                self.wc.clone(),
+                wc0.clone(),
                 e,
                 &eta_c,
                 |t| (shard.batch(t).0, z[t % z.len()]),
                 chunks_c,
             )?;
-            loss_sum += ls;
-            loss_n += ln;
 
-            // upload: latest w_C,m + smashed c(X_m) of the WHOLE shard
+            // upload: latest w_C,m + smashed c(X_m) of the WHOLE shard —
+            // one `client_fwd_x{NB}` dispatch when the context holds the
+            // precomputed whole-shard stack
             let wc_m = wc_m.freeze();
-            let smashed = Self::smash_all(ctx, m, &wc_m)?;
+            let smashed = smash_shard(ctx, m, &wc_m)?;
 
             // per-round window stacks over the smashed activations
             let s_tensors: Vec<&Tensor> = smashed.iter().map(|f| f.tensor()).collect();
@@ -408,27 +455,47 @@ impl Framework for SplitMe {
                 .and_then(|(_, ys)| s_stacks.as_ref().map(|ss| (ys, ss)));
 
             // Step 3: E inverse-server KL steps on (Y_m, c(X_m))
-            let (wsi_m, ls, ln) = run_steps(
+            let (wsi_m, inv_loss, inv_steps) = run_steps(
                 ctx,
                 "inv_step",
                 "inv_step_chunk",
-                self.wsi.clone(),
+                wsi0.clone(),
                 e,
                 &eta_s,
                 |t| (shard.batch(t).1, &smashed[t % smashed.len()]),
                 chunks_i,
             )?;
-            loss_sum += ls;
-            loss_n += ln;
 
-            wc_parts.push(wc_m.into_tensor());
-            wsi_parts.push(wsi_m);
+            Ok(ClientUpdate {
+                wc: wc_m.into_tensor(),
+                wsi: wsi_m,
+                client_loss,
+                client_steps,
+                inv_loss,
+                inv_steps,
+            })
+        })?;
+
+        // deterministic index-ordered reduce: losses fold client by client
+        // in selected order (Step 2 then Step 3, exactly the sequential
+        // accumulation), aggregates average in the same order
+        let mut loss_sum = 0f32;
+        let mut loss_n = 0usize;
+        let mut wc_parts = Vec::with_capacity(updates.len());
+        let mut wsi_parts = Vec::with_capacity(updates.len());
+        for (i, u) in updates.into_iter().enumerate() {
+            loss_sum += u.client_loss;
+            loss_n += u.client_steps;
+            loss_sum += u.inv_loss;
+            loss_n += u.inv_steps;
+            wc_parts.push((i, u.wc));
+            wsi_parts.push((i, u.wsi));
         }
 
         // aggregation + broadcast (downlink free); the aggregates changed,
         // so bump the params-version tags to invalidate the memos
-        self.wc = aggregate(&wc_parts)?;
-        self.wsi = aggregate(&wsi_parts)?;
+        self.wc = aggregate_indexed(wc_parts)?;
+        self.wsi = aggregate_indexed(wsi_parts)?;
         self.wc_version += 1;
         self.wsi_version += 1;
         self.last_selected = selected_ids;

@@ -1,0 +1,87 @@
+//! Shared helpers for the integration-test binaries (integration,
+//! differential, golden).
+//!
+//! Artifact-dependent tests SKIP (with a stderr note) instead of panicking
+//! when `make artifacts` has not run — the tier-1 gate then reflects the
+//! rust-side invariants that CAN be checked without the python toolchain,
+//! while any environment with artifacts exercises the full suite.
+#![allow(dead_code)]
+
+use repro::config::SimConfig;
+use repro::metrics::RoundRecord;
+use repro::runtime::{Engine, Manifest};
+
+/// The engine over the default manifest, or `None` (with a skip note) when
+/// artifacts are absent or the PJRT client cannot start.
+pub fn try_engine() -> Option<Engine> {
+    let manifest = match Manifest::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`): {e:#}");
+            return None;
+        }
+    };
+    match Engine::new(manifest) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP: PJRT CPU client unavailable: {e:#}");
+            None
+        }
+    }
+}
+
+/// Tiny-but-real commag config: all code paths, seconds not minutes. The
+/// 64-sample shards hold 2 batches, matching the `client_fwd_x2` whole-shard
+/// artifact.
+pub fn tiny_cfg() -> SimConfig {
+    let mut cfg = SimConfig::commag();
+    cfg.num_clients = 9;
+    cfg.b_min = 1.0 / 9.0;
+    cfg.samples_per_client = 64;
+    cfg.test_samples = 96;
+    cfg.e_initial = 6;
+    cfg.e_max = 6;
+    cfg.inversion_clients = 6;
+    cfg.fedavg_k = 3;
+    cfg.fedavg_e = 4;
+    cfg.sfl_k = 3;
+    cfg.sfl_e = 4;
+    cfg.oranfed_e = 4;
+    cfg
+}
+
+/// Tiny vision config (conv client): the second preset of the differential
+/// matrix.
+pub fn tiny_vision_cfg() -> SimConfig {
+    let mut cfg = SimConfig::vision();
+    cfg.num_clients = 4;
+    cfg.b_min = 0.25;
+    cfg.samples_per_client = 64;
+    cfg.test_samples = 64;
+    cfg.inversion_clients = 4;
+    cfg.e_initial = 3;
+    cfg.e_max = 3;
+    cfg.fedavg_k = 2;
+    cfg.fedavg_e = 2;
+    cfg.sfl_k = 2;
+    cfg.sfl_e = 2;
+    cfg.oranfed_e = 2;
+    cfg
+}
+
+/// Bitwise comparison of every deterministic RoundRecord field (wall_secs is
+/// host wallclock and legitimately differs between runs).
+pub fn assert_records_bitwise_eq(a: &RoundRecord, b: &RoundRecord, what: &str) {
+    assert_eq!(a.round, b.round, "{what}: round");
+    assert_eq!(a.selected, b.selected, "{what}: selected @r{}", a.round);
+    assert_eq!(a.e, b.e, "{what}: e @r{}", a.round);
+    assert_eq!(a.comm_bytes.to_bits(), b.comm_bytes.to_bits(), "{what}: comm_bytes @r{}", a.round);
+    assert_eq!(a.round_time.to_bits(), b.round_time.to_bits(), "{what}: round_time @r{}", a.round);
+    assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "{what}: sim_time @r{}", a.round);
+    assert_eq!(a.comm_cost.to_bits(), b.comm_cost.to_bits(), "{what}: comm_cost @r{}", a.round);
+    assert_eq!(a.comp_cost.to_bits(), b.comp_cost.to_bits(), "{what}: comp_cost @r{}", a.round);
+    assert_eq!(a.total_cost.to_bits(), b.total_cost.to_bits(), "{what}: total_cost @r{}", a.round);
+    assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{what}: train_loss @r{}", a.round);
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{what}: accuracy @r{}", a.round);
+    assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "{what}: test_loss @r{}", a.round);
+}

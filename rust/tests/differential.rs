@@ -1,0 +1,236 @@
+//! Differential hardening suite (ISSUE 3): proves the intra-round client
+//! parallelism and the whole-shard smash batching are **bitwise identical**
+//! to their sequential / per-batch oracle paths.
+//!
+//! * `client_jobs = 1` vs `client_jobs = 4`, all four frameworks, >= 3
+//!   rounds, on BOTH presets (commag + vision) — record-for-record bitwise.
+//! * whole-shard `smash_all` batching vs the old per-batch dispatch (the
+//!   oracle path, reachable in-process by clearing the context's
+//!   precomputed stacks, or globally via `REPRO_NO_SHARD_BATCH=1`), with
+//!   engine call counters proving the dispatch count drops from
+//!   `num_batches` to 1 per client.
+//! * the `{step}_chunk{r}` remainder folds vs the single-step path.
+//!
+//! Requires `make artifacts`; SKIPs (stderr note) without it.
+
+mod common;
+
+use common::{assert_records_bitwise_eq, tiny_cfg, tiny_vision_cfg, try_engine};
+use repro::config::{FrameworkKind, SimConfig};
+use repro::coordinator::Runner;
+use repro::fl::{run_steps_with, ExperimentContext};
+use repro::metrics::RoundRecord;
+use repro::runtime::{ChunkStacks, Engine, Tensor};
+use repro::splitme::smash_shard;
+
+fn train_records(
+    engine: &Engine,
+    cfg: &SimConfig,
+    kind: FrameworkKind,
+    rounds: usize,
+) -> Vec<RoundRecord> {
+    let mut runner = Runner::new(engine, cfg, kind).expect("runner");
+    runner.train(rounds).expect("train").records
+}
+
+/// All four frameworks x `rounds` rounds: client_jobs=4 must reproduce
+/// client_jobs=1 bit for bit.
+fn assert_client_jobs_parity(engine: &Engine, base: &SimConfig, rounds: usize) {
+    for kind in FrameworkKind::all() {
+        let mut seq_cfg = base.clone();
+        seq_cfg.client_jobs = 1;
+        let mut par_cfg = base.clone();
+        par_cfg.client_jobs = 4;
+        let seq = train_records(engine, &seq_cfg, kind, rounds);
+        let par = train_records(engine, &par_cfg, kind, rounds);
+        assert_eq!(seq.len(), par.len(), "{kind:?}: round count");
+        for (a, b) in seq.iter().zip(&par) {
+            assert_records_bitwise_eq(a, b, &format!("{}/client_jobs", kind.name()));
+        }
+    }
+}
+
+#[test]
+fn client_jobs_parity_commag_all_frameworks() {
+    let Some(engine) = try_engine() else { return };
+    assert_client_jobs_parity(&engine, &tiny_cfg(), 3);
+}
+
+#[test]
+fn client_jobs_parity_vision_all_frameworks() {
+    let Some(engine) = try_engine() else { return };
+    assert_client_jobs_parity(&engine, &tiny_vision_cfg(), 3);
+}
+
+#[test]
+fn client_jobs_nest_inside_parallel_comparison() {
+    // the two executor tiers compose: a 4-way framework fan-out whose
+    // runners each fan out 4 client jobs must still reproduce the fully
+    // sequential comparison bit for bit
+    use repro::experiments::{self, Budget};
+    let Some(engine) = try_engine() else { return };
+    let budget = Budget { splitme_rounds: 3, baseline_rounds: 3 };
+    let mut seq_cfg = tiny_cfg();
+    seq_cfg.client_jobs = 1;
+    let mut par_cfg = tiny_cfg();
+    par_cfg.client_jobs = 4;
+    let seq = experiments::run_comparison_jobs(&engine, &seq_cfg, budget, false, 1).unwrap();
+    let par = experiments::run_comparison_jobs(&engine, &par_cfg, budget, false, 4).unwrap();
+    assert_eq!(seq.len(), 4);
+    for (a, b) in seq.iter().zip(&par) {
+        assert_eq!(a.framework, b.framework, "deterministic result ordering");
+        assert_eq!(a.records.len(), b.records.len(), "{}", a.framework);
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_records_bitwise_eq(ra, rb, &format!("{}/nested", a.framework));
+        }
+    }
+}
+
+fn calls(engine: &Engine, name: &str) -> u64 {
+    engine
+        .stats()
+        .iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, s)| s.calls)
+        .unwrap_or(0)
+}
+
+#[test]
+fn whole_shard_smash_matches_per_batch_oracle() {
+    let Some(engine) = try_engine() else { return };
+    let cfg = tiny_cfg();
+    let mut ctx = ExperimentContext::new(&engine, &cfg).unwrap();
+    let nb = ctx.shards[0].data.num_batches();
+    if ctx.shard_whole(0).is_none() {
+        eprintln!("SKIP: preset ships no client_fwd_x{nb} whole-shard artifact");
+        return;
+    }
+    let p = engine.preset(&cfg.preset).unwrap();
+    let fwd_all = p.artifact(&format!("client_fwd_x{nb}")).unwrap().to_string();
+    let fwd = p.artifact("client_fwd").unwrap().to_string();
+    let wc = ctx.init.client(&ctx.pool).unwrap().freeze();
+
+    // whole-shard path: exactly ONE dispatch for the whole shard
+    let (all0, per0) = (calls(&engine, &fwd_all), calls(&engine, &fwd));
+    let whole = smash_shard(&ctx, 0, &wc).unwrap();
+    assert_eq!(calls(&engine, &fwd_all), all0 + 1, "whole-shard pass must be one dispatch");
+    assert_eq!(calls(&engine, &fwd), per0, "whole-shard pass must not touch client_fwd");
+
+    // oracle: clearing the precomputed stacks forces the per-batch path
+    ctx.shard_wholes.clear();
+    let oracle = smash_shard(&ctx, 0, &wc).unwrap();
+    assert_eq!(calls(&engine, &fwd), per0 + nb as u64, "oracle dispatches once per batch");
+    assert_eq!(calls(&engine, &fwd_all), all0 + 1, "oracle must not touch the whole-shard artifact");
+
+    assert_eq!(whole.len(), oracle.len(), "batch count");
+    for (b, (w, o)) in whole.iter().zip(&oracle).enumerate() {
+        assert_eq!(w.dims, o.dims, "batch {b} dims");
+        for (i, (x, y)) in w.data.iter().zip(&o.data).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "smashed value diverges at batch {b} elem {i}: {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn whole_shard_training_run_matches_per_batch_oracle_run() {
+    // end-to-end: the in-round smash uploads AND the memoized eval-side
+    // smash pass both ride the whole-shard artifact; a SplitMe run against
+    // a context without the stacks must be record-for-record identical
+    let Some(engine) = try_engine() else { return };
+    let cfg = tiny_cfg();
+    let batched = ExperimentContext::new(&engine, &cfg).unwrap();
+    if batched.shard_whole(0).is_none() {
+        eprintln!("SKIP: preset ships no whole-shard artifact for the tiny shard size");
+        return;
+    }
+    let mut oracle_ctx = ExperimentContext::new(&engine, &cfg).unwrap();
+    oracle_ctx.shard_wholes.clear();
+
+    let a = Runner::shared(&batched, FrameworkKind::SplitMe).unwrap().train(3).unwrap();
+    let b = Runner::shared(&oracle_ctx, FrameworkKind::SplitMe).unwrap().train(3).unwrap();
+    assert_eq!(a.records.len(), b.records.len());
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_records_bitwise_eq(ra, rb, "whole-shard-vs-per-batch");
+    }
+}
+
+#[test]
+fn remainder_folds_eliminate_single_step_dispatch() {
+    // e = chunk + r must dispatch 1 chunk window + 1 remainder fold and
+    // ZERO single-step calls, while staying bitwise equal to the
+    // single-step oracle (chunk = 1)
+    let Some(engine) = try_engine() else { return };
+    let cfg = tiny_cfg();
+    let ctx = ExperimentContext::new(&engine, &cfg).unwrap();
+    let chunk = ctx.preset.chunk;
+    if chunk < 4 || ctx.plan.try_role("fedavg_step_chunk").is_none() {
+        eprintln!("SKIP: preset has no chunk={chunk} fold to test remainders against");
+        return;
+    }
+    let p = engine.preset(&cfg.preset).unwrap();
+    let single_name = p.artifact("fedavg_step").unwrap().to_string();
+    let chunk_name = p.artifact("fedavg_step_chunk").unwrap().to_string();
+
+    let shard = &ctx.shards[0].data;
+    let xs: Vec<&Tensor> = shard.batches.iter().map(|(x, _)| x.tensor()).collect();
+    let ys: Vec<&Tensor> = shard.batches.iter().map(|(_, y)| y.tensor()).collect();
+    let cx = ChunkStacks::new(&xs, chunk).unwrap();
+    let cy = ChunkStacks::new(&ys, chunk).unwrap();
+    let c = ctx.init.client(&ctx.pool).unwrap();
+    let s = ctx.init.server(&ctx.pool).unwrap();
+    let w0 = ctx.init.concat_full(&c, &s).unwrap();
+    let lr = ctx.eta_c();
+
+    for r in 2..chunk {
+        let Some(rem_name) = p.artifacts.get(&format!("fedavg_step_chunk{r}")).cloned() else {
+            eprintln!("SKIP: no fedavg_step_chunk{r} remainder artifact");
+            continue;
+        };
+        let e = chunk + r;
+        let (s0, c0, r0) = (
+            calls(&engine, &single_name),
+            calls(&engine, &chunk_name),
+            calls(&engine, &rem_name),
+        );
+        let (wa, la, na) = run_steps_with(
+            &ctx, "fedavg_step", "fedavg_step_chunk", w0.clone(), e, &lr,
+            |t| shard.batch(t), Some((&cx, &cy)), chunk,
+        )
+        .unwrap();
+        assert_eq!(calls(&engine, &single_name), s0, "e={e}: single-step dispatch survived");
+        assert_eq!(calls(&engine, &chunk_name), c0 + 1, "e={e}: one chunk window expected");
+        assert_eq!(calls(&engine, &rem_name), r0 + 1, "e={e}: one remainder fold expected");
+
+        let (wb, lb, nb) = run_steps_with(
+            &ctx, "fedavg_step", "fedavg_step_chunk", w0.clone(), e, &lr,
+            |t| shard.batch(t), None, 1,
+        )
+        .unwrap();
+        assert_eq!(na, nb, "step count at e={e}");
+        assert_eq!(wa.data, wb.data, "params diverge at e={e}");
+        assert_eq!(la.to_bits(), lb.to_bits(), "loss sums diverge at e={e}: {la} vs {lb}");
+    }
+}
+
+#[test]
+fn memory_stats_report_whole_shard_stacks_lazily() {
+    let Some(engine) = try_engine() else { return };
+    let ctx = ExperimentContext::new(&engine, &tiny_cfg()).unwrap();
+    if ctx.shard_wholes.iter().all(Option::is_none) {
+        eprintln!("SKIP: no whole-shard slots for this shard size");
+        return;
+    }
+    // stacks are lazy: a fresh context pins NOTHING for them
+    let ms = ctx.memory_stats();
+    assert_eq!(ms.smash_stack_host_bytes, 0, "no smash yet — nothing materialized");
+    assert_eq!(ms.smash_stack_literal_bytes, 0, "no dispatch yet");
+    let wc = ctx.init.client(&ctx.pool).unwrap().freeze();
+    smash_shard(&ctx, 0, &wc).unwrap();
+    let after = ctx.memory_stats();
+    assert!(after.smash_stack_host_bytes > 0, "first smash must build shard 0's stack");
+    assert!(after.smash_stack_literal_bytes > 0, "dispatch must materialize the literal");
+}

@@ -1,0 +1,170 @@
+//! Golden-trace regression (ISSUE 3): a tiny-preset 3-round `RoundRecord`
+//! snapshot for all four frameworks, diffed **field by field, bit for bit**
+//! so future runtime refactors cannot silently drift the numerics — the
+//! first divergent field is named in the failure message.
+//!
+//! Floats are stored as hex bit patterns (f64/f32 `to_bits`), because a
+//! decimal JSON round-trip is allowed to lose the last ulp and would turn
+//! the bitwise diff into noise.
+//!
+//! Lifecycle: the authoring container cannot run PJRT, so no snapshot is
+//! committed yet — the FIRST artifact-equipped machine must bootstrap it
+//! explicitly with `REPRO_UPDATE_GOLDEN=1 cargo test --test golden` and
+//! commit the file (a missing snapshot FAILS rather than silently
+//! self-bootstrapping, so the gate can never pass vacuously); the same
+//! flag refreshes it after an INTENDED numeric change. Requires
+//! `make artifacts`; SKIPs without it — see tests/golden/README.md.
+
+mod common;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use common::{tiny_cfg, try_engine};
+use repro::config::FrameworkKind;
+use repro::coordinator::Runner;
+use repro::jsonio::Json;
+use repro::metrics::RoundRecord;
+
+const GOLDEN_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/commag_tiny_v1.json");
+const ROUNDS: usize = 3;
+
+/// f64 fields stored as 16-hex-digit bit patterns.
+const F64_FIELDS: [&str; 6] =
+    ["comm_bytes", "round_time", "sim_time", "comm_cost", "comp_cost", "total_cost"];
+/// f32 fields stored as 8-hex-digit bit patterns.
+const F32_FIELDS: [&str; 3] = ["train_loss", "accuracy", "test_loss"];
+
+fn record_json(r: &RoundRecord) -> Json {
+    let mut m: BTreeMap<String, Json> = BTreeMap::new();
+    m.insert("round".into(), Json::num(r.round as f64));
+    m.insert("selected".into(), Json::num(r.selected as f64));
+    m.insert("e".into(), Json::num(r.e as f64));
+    let f64s = [r.comm_bytes, r.round_time, r.sim_time, r.comm_cost, r.comp_cost, r.total_cost];
+    for (name, v) in F64_FIELDS.iter().zip(f64s) {
+        m.insert((*name).into(), Json::str(format!("{:016x}", v.to_bits())));
+    }
+    let f32s = [r.train_loss, r.accuracy, r.test_loss];
+    for (name, v) in F32_FIELDS.iter().zip(f32s) {
+        m.insert((*name).into(), Json::str(format!("{:08x}", v.to_bits())));
+    }
+    // wall_secs is host wallclock: deliberately NOT part of the snapshot
+    Json::Obj(m)
+}
+
+fn snapshot_json(engine: &repro::runtime::Engine) -> Json {
+    let cfg = tiny_cfg();
+    let mut frameworks: BTreeMap<String, Json> = BTreeMap::new();
+    for kind in FrameworkKind::all() {
+        let mut runner = Runner::new(engine, &cfg, kind).expect("runner");
+        let summary = runner.train(ROUNDS).expect("train");
+        frameworks.insert(
+            kind.name().into(),
+            Json::arr(summary.records.iter().map(record_json).collect()),
+        );
+    }
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    root.insert("schema".into(), Json::num(1.0));
+    root.insert("preset".into(), Json::str(cfg.preset.clone()));
+    root.insert("seed".into(), Json::num(cfg.seed as f64));
+    root.insert("rounds".into(), Json::num(ROUNDS as f64));
+    root.insert("frameworks".into(), Json::Obj(frameworks));
+    Json::Obj(root)
+}
+
+/// Flatten a snapshot into deterministic `(path, value)` pairs so the diff
+/// below can name the first divergent field.
+fn flatten(j: &Json) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    for key in ["schema", "preset", "seed", "rounds"] {
+        let v = j.get(key).expect("snapshot root field");
+        out.push((key.to_string(), leaf(v)));
+    }
+    let fws = j.get("frameworks").expect("frameworks").as_obj().expect("frameworks obj");
+    for kind in FrameworkKind::all() {
+        let name = kind.name();
+        let Some(records) = fws.get(name) else {
+            out.push((name.to_string(), "<missing framework>".into()));
+            continue;
+        };
+        let records = records.as_arr().expect("framework records");
+        out.push((format!("{name}/rounds"), records.len().to_string()));
+        for (i, rec) in records.iter().enumerate() {
+            for field in ["round", "selected", "e"] {
+                out.push((format!("{name}/round{i}/{field}"), leaf(rec.get(field).expect(field))));
+            }
+            for field in F64_FIELDS.iter().chain(F32_FIELDS.iter()) {
+                out.push((
+                    format!("{name}/round{i}/{field}"),
+                    leaf(rec.get(field).expect(field)),
+                ));
+            }
+        }
+    }
+    out
+}
+
+fn leaf(j: &Json) -> String {
+    match j {
+        Json::Str(s) => s.clone(),
+        other => other.to_string_compact(),
+    }
+}
+
+/// Decode a stored bit pattern back to its float for the failure message.
+fn decode(field: &str, hex: &str) -> String {
+    if F64_FIELDS.contains(&field) {
+        if let Ok(bits) = u64::from_str_radix(hex, 16) {
+            return format!("{}", f64::from_bits(bits));
+        }
+    }
+    if F32_FIELDS.contains(&field) {
+        if let Ok(bits) = u32::from_str_radix(hex, 16) {
+            return format!("{}", f32::from_bits(bits));
+        }
+    }
+    hex.to_string()
+}
+
+#[test]
+fn golden_trace_is_stable() {
+    let Some(engine) = try_engine() else { return };
+    let got = snapshot_json(&engine);
+    let path = Path::new(GOLDEN_PATH);
+    if std::env::var("REPRO_UPDATE_GOLDEN").map(|v| v == "1").unwrap_or(false) {
+        std::fs::create_dir_all(path.parent().expect("golden dir")).expect("mkdir golden");
+        std::fs::write(path, got.to_string_pretty() + "\n").expect("write golden");
+        eprintln!(
+            "golden snapshot refreshed at {} — commit it so future refactors diff against it",
+            path.display()
+        );
+        return;
+    }
+    // a MISSING snapshot is a failure, not a silent bootstrap: otherwise the
+    // first artifact-equipped CI run would snapshot already-drifted numerics
+    // and pass vacuously forever. Bootstrapping is explicit.
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        panic!(
+            "golden snapshot missing at {} ({e}); this environment can generate it — \
+             bootstrap with `REPRO_UPDATE_GOLDEN=1 cargo test --test golden` and COMMIT \
+             the file (see tests/golden/README.md)",
+            path.display()
+        )
+    });
+    let want = Json::parse(&text).expect("parse golden");
+
+    let got_flat = flatten(&got);
+    let want_flat = flatten(&want);
+    for ((gk, gv), (wk, wv)) in got_flat.iter().zip(&want_flat) {
+        assert_eq!(gk, wk, "golden field order diverged (schema change?): {gk} vs {wk}");
+        let field = gk.rsplit('/').next().unwrap_or(gk);
+        assert_eq!(
+            gv, wv,
+            "golden divergence at `{gk}`: got {gv} ({}) want {wv} ({}) — if this \
+             numeric change is INTENDED, refresh with REPRO_UPDATE_GOLDEN=1",
+            decode(field, gv),
+            decode(field, wv)
+        );
+    }
+    assert_eq!(got_flat.len(), want_flat.len(), "golden snapshot field count changed");
+}

@@ -2,42 +2,22 @@
 //! dynamics of all four frameworks, the Step-4 inversion end-to-end, and
 //! paired-comparison invariants (shared context, parallel-vs-sequential
 //! bitwise determinism, memoized eval passes). These require
-//! `make artifacts`.
+//! `make artifacts` — without it every test here SKIPs with a stderr note
+//! (common::try_engine), so the tier-1 gate still runs the pure-rust suite.
 
+mod common;
+
+use common::{assert_records_bitwise_eq, tiny_cfg, try_engine};
 use repro::config::{FrameworkKind, SimConfig};
 use repro::coordinator::Runner;
 use repro::experiments::{self, Budget};
 use repro::fl::{run_steps_with, ExperimentContext};
-use repro::metrics::RoundRecord;
-use repro::runtime::{Arg, ChunkStacks, Engine, Manifest, Tensor};
+use repro::runtime::{Arg, ChunkStacks, Tensor};
 use repro::sim::{fill_normal, RngPool};
-
-fn engine() -> Engine {
-    Engine::new(Manifest::load_default().expect("run `make artifacts` first"))
-        .expect("PJRT CPU client")
-}
-
-/// Tiny-but-real config: all code paths, seconds not minutes.
-fn tiny_cfg() -> SimConfig {
-    let mut cfg = SimConfig::commag();
-    cfg.num_clients = 9;
-    cfg.b_min = 1.0 / 9.0;
-    cfg.samples_per_client = 64;
-    cfg.test_samples = 96;
-    cfg.e_initial = 6;
-    cfg.e_max = 6;
-    cfg.inversion_clients = 6;
-    cfg.fedavg_k = 3;
-    cfg.fedavg_e = 4;
-    cfg.sfl_k = 3;
-    cfg.sfl_e = 4;
-    cfg.oranfed_e = 4;
-    cfg
-}
 
 #[test]
 fn artifact_shapes_round_trip() {
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let p = engine.preset("commag").unwrap().clone();
     let pool = RngPool::new(3);
     let mut rng = pool.stream("t", 0);
@@ -58,7 +38,7 @@ fn artifact_shapes_round_trip() {
 
 #[test]
 fn engine_rejects_bad_shapes() {
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let p = engine.preset("commag").unwrap().clone();
     let wc = Tensor::zeros(&[p.client_params]);
     let bad_x = Tensor::zeros(&[p.batch, 31]); // wrong feature dim
@@ -70,7 +50,7 @@ fn engine_rejects_bad_shapes() {
 
 #[test]
 fn client_step_reduces_its_loss() {
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let p = engine.preset("commag").unwrap().clone();
     let pool = RngPool::new(4);
     let mut rng = pool.stream("t", 1);
@@ -99,7 +79,7 @@ fn client_step_reduces_its_loss() {
 
 #[test]
 fn all_frameworks_run_and_learn_a_little() {
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     for kind in FrameworkKind::all() {
         let cfg = tiny_cfg();
         let mut runner = Runner::new(&engine, &cfg, kind).expect("runner");
@@ -126,7 +106,7 @@ fn all_frameworks_run_and_learn_a_little() {
 fn splitme_round_has_smaller_uplink_than_fedavg() {
     // the structural claim behind Fig 3b: omega*d + S_m < d per client-round
     // at commag sizes (28KB + 16KB < 142KB)
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let cfg = tiny_cfg();
     let ctx = ExperimentContext::new(&engine, &cfg).unwrap();
     let per_client_splitme = ctx.client_model_bytes() + ctx.smashed_bytes(0);
@@ -139,7 +119,7 @@ fn splitme_round_has_smaller_uplink_than_fedavg() {
 
 #[test]
 fn splitme_adapts_e_downward() {
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let mut cfg = tiny_cfg();
     cfg.e_initial = 20;
     cfg.e_max = 20;
@@ -155,7 +135,7 @@ fn splitme_adapts_e_downward() {
 fn inversion_recovers_a_working_model() {
     // after a few mutual-learning rounds the inverted full model must beat
     // random guessing on the test set — the core Step-4 functionality
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let mut cfg = tiny_cfg();
     cfg.eval_every = 0; // only evaluate manually at the end
     let mut runner = Runner::new(&engine, &cfg, FrameworkKind::SplitMe).unwrap();
@@ -167,7 +147,7 @@ fn inversion_recovers_a_working_model() {
 
 #[test]
 fn paired_runs_share_topology_and_data() {
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let cfg = tiny_cfg();
     let a = ExperimentContext::new(&engine, &cfg).unwrap();
     let b = ExperimentContext::new(&engine, &cfg).unwrap();
@@ -180,7 +160,7 @@ fn paired_runs_share_topology_and_data() {
 
 #[test]
 fn determinism_same_seed_same_history() {
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let cfg = tiny_cfg();
     let run = |seed: u64| {
         let mut c = cfg.clone();
@@ -204,7 +184,7 @@ fn determinism_same_seed_same_history() {
 fn chunked_dispatch_matches_single_step_exactly() {
     // parity contract of the scan-folded artifacts: for any e, the chunked
     // dispatch must reproduce the single-step path bit for bit
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let cfg = tiny_cfg();
     let ctx = ExperimentContext::new(&engine, &cfg).unwrap();
     let chunk = ctx.preset.chunk;
@@ -221,7 +201,9 @@ fn chunked_dispatch_matches_single_step_exactly() {
     let w0 = ctx.init.concat_full(&c, &s).unwrap();
     let lr = ctx.eta_c();
 
-    for e in [1, chunk - 1, chunk, 2 * chunk + 1] {
+    // e values hit: pure single-step, pure remainder folds (e < chunk), an
+    // exact chunk multiple, and chunk windows + each remainder length
+    for e in [1, chunk - 1, chunk, chunk + 2, chunk + 3, 2 * chunk + 1] {
         let (wa, la, na) = run_steps_with(
             &ctx, "fedavg_step", "fedavg_step_chunk", w0.clone(), e, &lr,
             |t| shard.batch(t), Some((&cx, &cy)), chunk,
@@ -243,7 +225,7 @@ fn literal_cache_never_serves_stale_params() {
     // two "rounds" through the SAME cached immutable inputs: the fresh
     // params of round 2 must take effect (a stale cached literal would
     // replay round 1), while replaying round 1 must reproduce it exactly
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let p = engine.preset("commag").unwrap().clone();
     let plan = engine.warmup_preset("commag").unwrap();
     let step = plan.role("client_step").unwrap();
@@ -285,7 +267,7 @@ fn literal_cache_never_serves_stale_params() {
 
 #[test]
 fn vision_preset_runs_end_to_end() {
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let mut cfg = SimConfig::vision();
     cfg.num_clients = 4;
     cfg.b_min = 0.25;
@@ -303,29 +285,12 @@ fn vision_preset_runs_end_to_end() {
     assert!(summary.final_accuracy.is_finite());
 }
 
-/// Bitwise comparison of every deterministic RoundRecord field (wall_secs is
-/// host wallclock and legitimately differs between runs).
-fn assert_records_bitwise_eq(a: &RoundRecord, b: &RoundRecord, what: &str) {
-    assert_eq!(a.round, b.round, "{what}: round");
-    assert_eq!(a.selected, b.selected, "{what}: selected @r{}", a.round);
-    assert_eq!(a.e, b.e, "{what}: e @r{}", a.round);
-    assert_eq!(a.comm_bytes.to_bits(), b.comm_bytes.to_bits(), "{what}: comm_bytes @r{}", a.round);
-    assert_eq!(a.round_time.to_bits(), b.round_time.to_bits(), "{what}: round_time @r{}", a.round);
-    assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "{what}: sim_time @r{}", a.round);
-    assert_eq!(a.comm_cost.to_bits(), b.comm_cost.to_bits(), "{what}: comm_cost @r{}", a.round);
-    assert_eq!(a.comp_cost.to_bits(), b.comp_cost.to_bits(), "{what}: comp_cost @r{}", a.round);
-    assert_eq!(a.total_cost.to_bits(), b.total_cost.to_bits(), "{what}: total_cost @r{}", a.round);
-    assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{what}: train_loss @r{}", a.round);
-    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{what}: accuracy @r{}", a.round);
-    assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "{what}: test_loss @r{}", a.round);
-}
-
 #[test]
 fn parallel_comparison_is_bitwise_identical_to_sequential() {
     // the paired-determinism contract of the thread-parallel executor: for
     // all four frameworks over 3+ evaluated rounds, --jobs 4 must reproduce
     // --jobs 1 record for record, bit for bit
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let cfg = tiny_cfg();
     let budget = Budget { splitme_rounds: 3, baseline_rounds: 3 };
     let seq = experiments::run_comparison_jobs(&engine, &cfg, budget, false, 1).unwrap();
@@ -345,7 +310,7 @@ fn parallel_comparison_is_bitwise_identical_to_sequential() {
 fn comparison_builds_shared_context_exactly_once() {
     // acceptance: run_comparison constructs shards/chunk-stacks/test
     // literals exactly once per (preset, seed), not once per framework
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let cfg = tiny_cfg();
     let before = engine.context_builds();
     let budget = Budget { splitme_rounds: 1, baseline_rounds: 1 };
@@ -362,7 +327,7 @@ fn comparison_builds_shared_context_exactly_once() {
 fn shared_runners_match_owned_runners() {
     // Runner::shared over one context must reproduce Runner::new (private
     // context) exactly — the shared data carries no run-specific state
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let cfg = tiny_cfg();
     let ctx = ExperimentContext::new(&engine, &cfg).unwrap();
     for kind in FrameworkKind::all() {
@@ -380,7 +345,7 @@ fn repeated_eval_with_unchanged_params_skips_recompute() {
     // params-version memo: a second evaluation without an intervening
     // training round must not re-run the inv_acts or client_fwd passes,
     // and must return the identical result
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let mut cfg = tiny_cfg();
     cfg.eval_every = 0; // evaluate only on demand
     let p = engine.preset("commag").unwrap().clone();
@@ -419,7 +384,7 @@ fn repeated_eval_with_unchanged_params_skips_recompute() {
 
 #[test]
 fn chunk_cache_cap_disables_precompute_without_changing_results() {
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let cfg = tiny_cfg();
     let uncapped = ExperimentContext::new(&engine, &cfg).unwrap();
     let mut capped_cfg = tiny_cfg();
@@ -442,7 +407,7 @@ fn chunk_cache_cap_disables_precompute_without_changing_results() {
 
 #[test]
 fn memory_stats_track_literal_materialization() {
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let cfg = tiny_cfg();
     let ctx = ExperimentContext::new(&engine, &cfg).unwrap();
     let before = ctx.memory_stats();

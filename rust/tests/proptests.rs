@@ -4,7 +4,7 @@
 
 use repro::allocation::{solve_p2, waterfill};
 use repro::config::SimConfig;
-use repro::fl::{aggregate, sample_clients};
+use repro::fl::{aggregate, aggregate_indexed, sample_clients};
 use repro::jsonio::Json;
 use repro::linalg::{gram, matmul, ridge_solve, Mat};
 use repro::oran::{self, Topology, UploadSizes};
@@ -140,6 +140,41 @@ fn random_selection_invariants() {
 }
 
 // -------------------------------------------------------------- aggregation
+
+#[test]
+fn aggregation_reduce_is_permutation_invariant() {
+    // the deterministic-reduce invariant behind the intra-round client
+    // parallelism (and the order-insensitive gradient aggregation of
+    // arXiv:2501.01078): per-client contributions may arrive in ANY
+    // scheduling order, yet the index-keyed reduce must be bitwise
+    // identical — this catches any accidental f32 reduce-order dependence
+    check("aggregate_indexed: shuffled arrival is bitwise invisible", 300, |g| {
+        let n = g.usize_in(1..=24);
+        let len = g.usize_in(1..=96);
+        let parts: Vec<(usize, Tensor)> = (0..n)
+            .map(|i| (i, Tensor::new(vec![len], g.vec_f32(len, -5.0..5.0)).unwrap()))
+            .collect();
+        let baseline =
+            aggregate_indexed(parts.clone()).map_err(|e| anyhow::anyhow!("{e:#}"))?;
+        let mut shuffled = parts.clone();
+        g.rng().shuffle(&mut shuffled);
+        let permuted = aggregate_indexed(shuffled).map_err(|e| anyhow::anyhow!("{e:#}"))?;
+        prop_assert!(baseline.dims == permuted.dims, "dims changed under permutation");
+        for (i, (a, b)) in baseline.data.iter().zip(&permuted.data).enumerate() {
+            prop_assert!(
+                a.to_bits() == b.to_bits(),
+                "reduce depends on arrival order at elem {i}: {a} vs {b} (n={n})"
+            );
+        }
+        // and the sorted reduce agrees with the plain in-order aggregate
+        let ordered: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
+        let plain = aggregate(&ordered).map_err(|e| anyhow::anyhow!("{e:#}"))?;
+        for (a, b) in baseline.data.iter().zip(&plain.data) {
+            prop_assert!(a.to_bits() == b.to_bits(), "indexed reduce != in-order aggregate");
+        }
+        Ok(())
+    });
+}
 
 #[test]
 fn aggregation_is_affine_invariant() {
