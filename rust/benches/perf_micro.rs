@@ -176,6 +176,24 @@ fn main() {
         experiments::run_comparison_jobs(&engine, &cj_cfg, cmp_budget, false, 0).unwrap();
     });
 
+    // ---- scenario engine (ISSUE 4) ----------------------------------------
+    // env derivation is a pure replay of the Markov chains from round 0 —
+    // this prices the worst round of a 150-round trace (O(round · M) draws)
+    let scen = repro::scenario::Scenario::from_parts(
+        repro::scenario::ScenarioKind::Churn,
+        e2e_cfg.seed,
+        50,
+    );
+    rec.bench("l3/scenario_env_replay_r150", 10, 200, || {
+        std::hint::black_box(scen.env(149));
+    });
+    // a full dynamic-environment comparison vs the static one above
+    let mut fade_cfg = e2e_cfg.clone();
+    fade_cfg.scenario = "fading".into();
+    rec.bench("e2e/comparison_4fw_fading", 0, 3, || {
+        experiments::run_comparison_jobs(&engine, &fade_cfg, cmp_budget, false, 0).unwrap();
+    });
+
     // per-artifact cumulative profile
     println!("\nper-artifact cumulative profile:");
     for (name, s) in engine.stats().into_iter().take(10) {

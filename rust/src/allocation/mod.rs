@@ -92,7 +92,12 @@ pub fn waterfill(
         .zip(bytes)
         .map(|(&t, &s)| (s * 8.0 / (bandwidth_bps * (tau - t))).max(b_min))
         .collect();
-    // normalize the residual rounding error onto the non-floored clients
+    // normalize the residual rounding error onto the non-floored clients.
+    // The bisection keeps `need(hi) <= 1`, so the excess here is <= 0 and
+    // both branches only ever ADD mass — but the floor clamp is enforced
+    // structurally anyway: constraint (22b) must hold for any input, not
+    // just the reachable ones. (The old all-floored branch subtracted
+    // `excess/k` unclamped, which could push floored clients below b_min.)
     let sum: f64 = fr.iter().sum();
     let excess = sum - 1.0;
     if excess.abs() > 1e-12 {
@@ -100,12 +105,16 @@ pub fn waterfill(
         if free > 0.0 {
             for f in fr.iter_mut() {
                 if *f > b_min + 1e-12 {
-                    *f -= excess * (*f / free);
+                    *f = (*f - excess * (*f / free)).max(b_min);
                 }
             }
         } else {
+            // every client sits at the floor: spread the residue uniformly,
+            // clamped so nobody drops under b_min (if the residue cannot be
+            // absorbed without violating (22b), the sum keeps a documented
+            // epsilon instead — floors win over exact normalization)
             for f in fr.iter_mut() {
-                *f -= excess / k as f64;
+                *f = (*f - excess / k as f64).max(b_min);
             }
         }
     }
@@ -118,9 +127,40 @@ pub fn waterfill(
 /// (1.0 for split frameworks; `1/omega` for unsplit O-RANFed, which runs all
 /// layers on the weak edge). `server_side` toggles the `E·Q_S` phase and the
 /// rApp half of R_cp (absent in unsplit frameworks).
+///
+/// Solves at the nominal `cfg.bandwidth_bps`; under a dynamic scenario use
+/// [`solve_p2_at`] with the round's effective bandwidth.
 #[allow(clippy::too_many_arguments)]
 pub fn solve_p2(
     cfg: &SimConfig,
+    selected: &[&RicProfile],
+    sizes: &[UploadSizes],
+    e_last: usize,
+    adapt_e: bool,
+    client_time_scale: f64,
+    server_side: bool,
+) -> Allocation {
+    solve_p2_at(
+        cfg,
+        cfg.bandwidth_bps,
+        selected,
+        sizes,
+        e_last,
+        adapt_e,
+        client_time_scale,
+        server_side,
+    )
+}
+
+/// [`solve_p2`] at an explicit uplink bandwidth — the scenario-engine entry
+/// point: the round's selection/allocation must see the round's effective
+/// `B` (e.g. Gilbert–Elliott fading), and the communication cost R_co is
+/// priced at that same effective bandwidth. `bandwidth_bps ==
+/// cfg.bandwidth_bps` reproduces [`solve_p2`] bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_p2_at(
+    cfg: &SimConfig,
+    bandwidth_bps: f64,
     selected: &[&RicProfile],
     sizes: &[UploadSizes],
     e_last: usize,
@@ -136,13 +176,13 @@ pub fn solve_p2(
             .iter()
             .map(|r| e as f64 * r.q_c * client_time_scale)
             .collect();
-        let fracs = waterfill(&ct, &bytes, cfg.bandwidth_bps, cfg.b_min);
+        let fracs = waterfill(&ct, &bytes, bandwidth_bps, cfg.b_min);
         let latency = oran::round_latency(
             selected,
             &fracs,
             sizes,
             e,
-            cfg.bandwidth_bps,
+            bandwidth_bps,
             0.0,
             client_time_scale,
         );
@@ -151,7 +191,7 @@ pub fn solve_p2(
         } else {
             latency.client_phase
         };
-        let r_co = oran::comm_cost(&fracs, cfg.bandwidth_bps, cfg.p_c);
+        let r_co = oran::comm_cost(&fracs, bandwidth_bps, cfg.p_c);
         let r_cp = if server_side {
             oran::comp_cost(selected, e, cfg.p_tr)
         } else {
@@ -195,7 +235,10 @@ mod tests {
     fn setup(k: usize) -> (SimConfig, Topology) {
         let mut cfg = SimConfig::commag();
         cfg.num_clients = k.max(10);
-        (cfg, Topology::build(&SimConfig::commag()))
+        // build from the MUTATED cfg (not the default) so the tests exercise
+        // the federation size they claim to
+        let topo = Topology::build(&cfg);
+        (cfg, topo)
     }
 
     fn sizes(k: usize) -> Vec<UploadSizes> {
@@ -245,6 +288,58 @@ mod tests {
                 .fold(0.0_f64, f64::max)
         };
         assert!(maxt(&fr) <= maxt(&[0.25; 4]) + 1e-12);
+    }
+
+    #[test]
+    fn setup_builds_topology_from_the_mutated_config() {
+        let (cfg, topo) = setup(20);
+        assert_eq!(cfg.num_clients, 20);
+        assert_eq!(topo.len(), 20, "topology must match the test's cfg, not the default");
+    }
+
+    #[test]
+    fn waterfill_floor_holds_at_boundary_and_for_tiny_transfers() {
+        // boundary federation: k*b_min == 1 exactly -> uniform floor point
+        let fr = waterfill(&[0.001; 5], &[1e4; 5], 1e9, 0.2);
+        assert!((fr.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(fr.iter().all(|&f| f >= 0.2 - 1e-12), "{fr:?}");
+        // near-boundary b_min with 1-byte transfers: almost everyone sits at
+        // the floor after the bisection; the renormalization residue must
+        // land without pushing any client below b_min (constraint 22b)
+        let b_min = 0.2 - 1e-6;
+        let fr = waterfill(&[0.002, 0.004, 0.001, 0.003, 0.002], &[1.0; 5], 1e9, b_min);
+        assert!((fr.iter().sum::<f64>() - 1.0).abs() < 1e-9, "{fr:?}");
+        assert!(fr.iter().all(|&f| f >= b_min - 1e-12), "{fr:?}");
+    }
+
+    #[test]
+    fn solve_p2_at_nominal_bandwidth_matches_solve_p2_bitwise() {
+        let (cfg, topo) = setup(50);
+        let sel: Vec<&RicProfile> = topo.rics.iter().take(12).collect();
+        let a = solve_p2(&cfg, &sel, &sizes(12), cfg.e_initial, true, 1.0, true);
+        let b = solve_p2_at(
+            &cfg, cfg.bandwidth_bps, &sel, &sizes(12), cfg.e_initial, true, 1.0, true,
+        );
+        assert_eq!(a.e, b.e);
+        assert_eq!(a.round_cost.to_bits(), b.round_cost.to_bits());
+        for (x, y) in a.fracs.iter().zip(&b.fracs) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn degraded_bandwidth_slows_rounds_and_can_shrink_e() {
+        // fading sanity: the same selection under a faded link costs more
+        // time; adaptive E never increases under degradation pressure
+        let (cfg, topo) = setup(50);
+        let sel: Vec<&RicProfile> = topo.rics.iter().take(10).collect();
+        let nominal =
+            solve_p2_at(&cfg, cfg.bandwidth_bps, &sel, &sizes(10), cfg.e_initial, true, 1.0, true);
+        let faded = solve_p2_at(
+            &cfg, 0.35 * cfg.bandwidth_bps, &sel, &sizes(10), cfg.e_initial, true, 1.0, true,
+        );
+        assert!(faded.latency.max_uplink > nominal.latency.max_uplink);
+        assert!((faded.fracs.iter().sum::<f64>() - 1.0).abs() < 1e-9);
     }
 
     #[test]

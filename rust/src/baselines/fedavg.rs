@@ -9,11 +9,12 @@
 use anyhow::Result;
 
 use crate::fl::{
-    aggregate_indexed, resolve_client_jobs, run_clients, run_steps, sample_clients,
+    aggregate_indexed, resolve_client_jobs, run_clients, run_steps, sample_from,
     ExperimentContext, Framework, RoundOutcome,
 };
 use crate::oran::{self, RicProfile, UploadSizes};
 use crate::runtime::Tensor;
+use crate::scenario::RoundEnv;
 use crate::sim::RngPool;
 
 pub struct FedAvg {
@@ -80,16 +81,23 @@ impl Framework for FedAvg {
         ctx: &ExperimentContext,
         rng: &RngPool,
         round: usize,
+        env: &RoundEnv,
     ) -> Result<RoundOutcome> {
         let cfg = &ctx.cfg;
-        let ids = sample_clients(rng, "fedavg_select", round, ctx.topo.len(), cfg.fedavg_k);
+        // FedAvg has no deadline awareness, but it can only draw clients
+        // that are actually reachable this round (scenario churn)
+        let topo_r = env.apply(&ctx.topo);
+        let ids = sample_from(rng, "fedavg_select", round, &env.available_ids(), cfg.fedavg_k);
         let e = cfg.fedavg_e;
 
         let (wf, train_loss) = Self::train_selected(ctx, &self.wf, &ids, e)?;
         self.wf = wf;
 
         // uniform bandwidth among the K selected; full-model upload each
-        let selected: Vec<&RicProfile> = ids.iter().map(|&m| &ctx.topo.rics[m]).collect();
+        let selected: Vec<&RicProfile> = ids
+            .iter()
+            .map(|&m| topo_r.by_id(m).expect("sampled from this round's candidates"))
+            .collect();
         let fracs = vec![1.0 / ids.len() as f64; ids.len()];
         let sizes = vec![
             UploadSizes { model_bytes: ctx.full_model_bytes(), feature_bytes: 0.0 };
@@ -97,7 +105,7 @@ impl Framework for FedAvg {
         ];
         let scale = 1.0 / cfg.omega; // full model on the weak edge
         let mut latency =
-            oran::round_latency(&selected, &fracs, &sizes, e, cfg.bandwidth_bps, 0.0, scale);
+            oran::round_latency(&selected, &fracs, &sizes, e, topo_r.bandwidth_bps, 0.0, scale);
         latency.server_phase = 0.0; // no rApp training in plain FL
 
         let comp_cost: f64 = selected
@@ -109,7 +117,7 @@ impl Framework for FedAvg {
             e,
             comm_bytes: sizes.iter().map(|s| s.total()).sum(),
             latency,
-            comm_cost: oran::comm_cost(&fracs, cfg.bandwidth_bps, cfg.p_c),
+            comm_cost: oran::comm_cost(&fracs, topo_r.bandwidth_bps, cfg.p_c),
             comp_cost,
             train_loss,
         })

@@ -9,11 +9,12 @@
 
 use anyhow::Result;
 
-use crate::allocation::solve_p2;
+use crate::allocation::solve_p2_at;
 use crate::baselines::fedavg::FedAvg;
 use crate::fl::{ExperimentContext, Framework, RoundOutcome};
 use crate::oran::{self, RicProfile, UploadSizes};
 use crate::runtime::Tensor;
+use crate::scenario::RoundEnv;
 use crate::selection::DeadlineSelector;
 use crate::sim::RngPool;
 
@@ -47,34 +48,31 @@ impl Framework for OranFed {
         ctx: &ExperimentContext,
         _rng: &RngPool,
         _round: usize,
+        env: &RoundEnv,
     ) -> Result<RoundOutcome> {
         let cfg = &ctx.cfg;
         let e = cfg.oranfed_e;
         let scale = 1.0 / cfg.omega; // full model on the weak edge
+        let topo_r = env.apply(&ctx.topo);
 
         // deadline-aware selection over FULL-model local compute
         let mut selected: Vec<&RicProfile> = self
             .selector
-            .select(&ctx.topo, |r| e as f64 * r.q_c * scale);
+            .select(&topo_r, |r| e as f64 * r.q_c * scale);
         if selected.is_empty() {
-            let best = ctx
-                .topo
-                .rics
-                .iter()
-                .max_by(|a, b| {
-                    let slack = |r: &RicProfile| r.t_round - e as f64 * r.q_c * scale;
-                    slack(a).total_cmp(&slack(b))
-                })
-                .expect("non-empty topology");
-            selected.push(best);
+            selected.push(
+                topo_r
+                    .most_slack(|r| e as f64 * r.q_c * scale)
+                    .expect("scenario engine keeps >= 1 candidate available"),
+            );
         }
         let sizes = vec![
             UploadSizes { model_bytes: ctx.full_model_bytes(), feature_bytes: 0.0 };
             selected.len()
         ];
 
-        // bandwidth allocation at fixed E, no server-side phase
-        let alloc = solve_p2(cfg, &selected, &sizes, e, false, scale, false);
+        // bandwidth allocation at fixed E (round-effective B), no server side
+        let alloc = solve_p2_at(cfg, topo_r.bandwidth_bps, &selected, &sizes, e, false, scale, false);
         self.selector.observe(alloc.latency.max_uplink);
 
         let ids: Vec<usize> = selected.iter().map(|r| r.id).collect();
@@ -92,7 +90,7 @@ impl Framework for OranFed {
             e,
             comm_bytes: sizes.iter().map(|s| s.total()).sum(),
             latency,
-            comm_cost: oran::comm_cost(&alloc.fracs, cfg.bandwidth_bps, cfg.p_c),
+            comm_cost: oran::comm_cost(&alloc.fracs, topo_r.bandwidth_bps, cfg.p_c),
             comp_cost,
             train_loss,
         })

@@ -15,11 +15,12 @@
 use anyhow::Result;
 
 use crate::fl::{
-    aggregate_indexed, resolve_client_jobs, run_clients, sample_clients, ExperimentContext,
+    aggregate_indexed, resolve_client_jobs, run_clients, sample_from, ExperimentContext,
     Framework, RoundOutcome,
 };
 use crate::oran::{self, RicProfile, UploadSizes};
 use crate::runtime::{Arg, Tensor};
+use crate::scenario::RoundEnv;
 use crate::sim::RngPool;
 
 pub struct VanillaSfl {
@@ -55,9 +56,13 @@ impl Framework for VanillaSfl {
         ctx: &ExperimentContext,
         rng: &RngPool,
         round: usize,
+        env: &RoundEnv,
     ) -> Result<RoundOutcome> {
         let cfg = &ctx.cfg;
-        let ids = sample_clients(rng, "sfl_select", round, ctx.topo.len(), cfg.sfl_k);
+        // like FedAvg: no deadline awareness, but only reachable clients
+        // (scenario churn) can join the per-batch ping-pong
+        let topo_r = env.apply(&ctx.topo);
+        let ids = sample_from(rng, "sfl_select", round, &env.available_ids(), cfg.sfl_k);
         let e = cfg.sfl_e;
         let eta = ctx.eta_c();
         let fwd = ctx.plan.role("client_fwd")?;
@@ -117,7 +122,10 @@ impl Framework for VanillaSfl {
         self.ws = aggregate_indexed(ws_parts)?;
 
         // uniform bandwidth among K; uplink = E smashed batches + half-model
-        let selected: Vec<&RicProfile> = ids.iter().map(|&m| &ctx.topo.rics[m]).collect();
+        let selected: Vec<&RicProfile> = ids
+            .iter()
+            .map(|&m| topo_r.by_id(m).expect("sampled from this round's candidates"))
+            .collect();
         let fracs = vec![1.0 / ids.len() as f64; ids.len()];
         let sizes = vec![
             UploadSizes { model_bytes: ctx.client_model_bytes(), feature_bytes: 0.0 };
@@ -125,7 +133,7 @@ impl Framework for VanillaSfl {
         ];
         let per_update = ctx.smashed_batch_bytes();
         let latency = oran::round_latency(
-            &selected, &fracs, &sizes, e, cfg.bandwidth_bps, per_update, 1.0,
+            &selected, &fracs, &sizes, e, topo_r.bandwidth_bps, per_update, 1.0,
         );
 
         Ok(RoundOutcome {
@@ -134,7 +142,7 @@ impl Framework for VanillaSfl {
             comm_bytes: sizes.iter().map(|s| s.total()).sum::<f64>()
                 + per_update * (e * ids.len()) as f64,
             latency,
-            comm_cost: oran::comm_cost(&fracs, cfg.bandwidth_bps, cfg.p_c),
+            comm_cost: oran::comm_cost(&fracs, topo_r.bandwidth_bps, cfg.p_c),
             comp_cost: oran::comp_cost(&selected, e, cfg.p_tr),
             train_loss: loss_sum / loss_n.max(1) as f32,
         })

@@ -88,6 +88,10 @@ pub struct SimConfig {
     pub data_difficulty: f64,
     /// root seed for every RNG stream
     pub seed: u64,
+    /// named environment preset of the dynamic scenario engine
+    /// (`static|fading|churn|rush_hour|stragglers`); `static` is today's
+    /// stationary substrate and the default — see `scenario::ScenarioKind`
+    pub scenario: String,
     /// evaluate every k rounds (1 = every round, figures need 1)
     pub eval_every: usize,
     /// ridge regularizer gamma of Eq 8 (Step-4 inversion)
@@ -144,6 +148,7 @@ impl SimConfig {
             test_samples: 1536,
             data_difficulty: 1.0,
             seed: 20250710,
+            scenario: "static".into(),
             eval_every: 1,
             ridge_gamma: 1.0,
             inversion_clients: 12,
@@ -220,6 +225,7 @@ impl SimConfig {
             ("test_samples", Json::num(self.test_samples as f64)),
             ("data_difficulty", Json::num(self.data_difficulty)),
             ("seed", Json::num(self.seed as f64)),
+            ("scenario", Json::str(self.scenario.clone())),
             ("eval_every", Json::num(self.eval_every as f64)),
             ("ridge_gamma", Json::num(self.ridge_gamma)),
             ("inversion_clients", Json::num(self.inversion_clients as f64)),
@@ -271,6 +277,7 @@ impl SimConfig {
         if let Some(v) = j.opt("test_samples") { cfg.test_samples = v.as_usize()?; }
         if let Some(v) = j.opt("data_difficulty") { cfg.data_difficulty = v.as_f64()?; }
         if let Some(v) = j.opt("seed") { cfg.seed = v.as_f64()? as u64; }
+        if let Some(v) = j.opt("scenario") { cfg.scenario = v.as_str()?.to_string(); }
         if let Some(v) = j.opt("eval_every") { cfg.eval_every = v.as_usize()?; }
         if let Some(v) = j.opt("ridge_gamma") { cfg.ridge_gamma = v.as_f64()?; }
         if let Some(v) = j.opt("inversion_clients") { cfg.inversion_clients = v.as_usize()?; }
@@ -323,6 +330,13 @@ impl SimConfig {
         if self.bandwidth_bps <= 0.0 {
             bail!("bandwidth must be positive");
         }
+        // fail early on a typo'd preset name (the scenario engine would
+        // reject it at context build anyway, but this keeps the error at
+        // config-load time with the other validation messages)
+        self.scenario
+            .parse::<crate::scenario::ScenarioKind>()
+            .map(|_| ())
+            .map_err(|e| anyhow::anyhow!("invalid scenario: {e}"))?;
         Ok(())
     }
 
@@ -370,6 +384,25 @@ mod tests {
         let mut c = SimConfig::commag();
         c.e_initial = 30;
         assert!(c.validate().is_err());
+        let mut c = SimConfig::commag();
+        c.scenario = "typo_hour".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn scenario_defaults_to_static_and_round_trips() {
+        let c = SimConfig::commag();
+        assert_eq!(c.scenario, "static");
+        assert!(c.validate().is_ok());
+        let mut c = SimConfig::vision();
+        c.scenario = "churn".into();
+        assert!(c.validate().is_ok());
+        let back = SimConfig::from_json(&Json::parse(&c.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back.scenario, "churn");
+        // partial override files keep the preset default
+        let j = Json::parse(r#"{"preset": "commag", "num_clients": 12, "b_min": 0.05}"#).unwrap();
+        assert_eq!(SimConfig::from_json(&j).unwrap().scenario, "static");
     }
 
     #[test]

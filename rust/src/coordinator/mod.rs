@@ -119,7 +119,11 @@ impl<'e> Runner<'e> {
         let wall = std::time::Instant::now();
         let Self { ctx, framework, state, .. } = self;
         let ctx = ctx.get();
-        let out = framework.run_round(ctx, &state.pool, round)?;
+        // the round's O-RAN environment: a pure function of (seed, scenario,
+        // round) from the SHARED context, so every framework at this round —
+        // on any thread, at any --jobs/--client-jobs — observes the same one
+        let env = ctx.scenario.env(round);
+        let out = framework.run_round(ctx, &state.pool, round, &env)?;
         state.clock.advance(out.latency.total());
 
         let evaluate = ctx.cfg.eval_every > 0 && round % ctx.cfg.eval_every == 0;
@@ -149,6 +153,10 @@ impl<'e> Runner<'e> {
             accuracy,
             test_loss,
             wall_secs: wall.elapsed().as_secs_f64(),
+            env_bw_scale: env.bandwidth_scale,
+            env_available: env.available_count(),
+            env_stragglers: env.straggler_count(),
+            env_deadline_scale: env.mean_deadline_scale(),
         })
     }
 

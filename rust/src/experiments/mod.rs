@@ -23,8 +23,9 @@ use anyhow::Result;
 use crate::config::{FrameworkKind, SimConfig};
 use crate::coordinator::Runner;
 use crate::fl::ExperimentContext;
-use crate::metrics::RunSummary;
+use crate::metrics::{RoundRecord, RunSummary};
 use crate::runtime::Engine;
+use crate::scenario::ScenarioKind;
 
 /// Rounds budget per framework (paper: SplitMe converges in ~30 rounds, the
 /// baselines are tracked for 150).
@@ -125,15 +126,8 @@ pub fn fig3a(summaries: &[RunSummary]) {
 pub fn fig3b(summaries: &[RunSummary]) {
     series_header("Fig 3b — accumulated communication volume (MB)");
     for s in summaries {
-        let mut acc = 0.0;
-        let series: Vec<f64> = s
-            .records
-            .iter()
-            .map(|r| {
-                acc += r.comm_bytes;
-                acc / 1e6
-            })
-            .collect();
+        let series: Vec<f64> =
+            cumulative(&s.records, |r| r.comm_bytes).into_iter().map(|v| v / 1e6).collect();
         println!(
             "{:>8}: total {:>8.1} MB over {} rounds",
             s.framework,
@@ -176,6 +170,21 @@ pub fn fig4a(summaries: &[RunSummary]) {
     }
 }
 
+/// Running cumulative sum of a per-round series over ALL records —
+/// `out[i] = sum of f(records[0..=i])`. Display sampling must happen on the
+/// cumulative series, never before it: accumulating over a `step_by`-sampled
+/// iterator undercounts every skipped round (the old fig4b bug).
+pub fn cumulative(records: &[RoundRecord], f: impl Fn(&RoundRecord) -> f64) -> Vec<f64> {
+    let mut acc = 0.0;
+    records
+        .iter()
+        .map(|r| {
+            acc += f(r);
+            acc
+        })
+        .collect()
+}
+
 /// Fig 4b: cumulative communication resource cost vs training time.
 pub fn fig4b(summaries: &[RunSummary]) {
     series_header("Fig 4b — communication resource cost vs training time");
@@ -184,10 +193,10 @@ pub fn fig4b(summaries: &[RunSummary]) {
             "{:>8}: total R_co {:>8.1}  (R_cp {:>8.3})  over {:.2}s",
             s.framework, s.total_comm_cost, s.total_comp_cost, s.total_sim_time
         );
-        let mut acc = 0.0;
+        // accumulate over EVERY round, sample only for display (like fig3b)
+        let cum = cumulative(&s.records, |r| r.comm_cost);
         print!("          (t,Rco):");
-        for r in s.records.iter().step_by((s.rounds / 8).max(1)) {
-            acc += r.comm_cost;
+        for (r, acc) in s.records.iter().zip(&cum).step_by((s.rounds / 8).max(1)) {
             print!(" ({:.1},{:.0})", r.sim_time, acc);
         }
         println!();
@@ -198,6 +207,72 @@ pub fn fig4b(summaries: &[RunSummary]) {
 pub fn fig5(summaries: &[RunSummary]) {
     series_header("Fig 5 — vision generality (synthetic CIFAR-like)");
     fig4a(summaries);
+}
+
+/// Scenario-matrix experiment: the paired four-framework comparison repeated
+/// under each named environment preset. Every scenario run builds its own
+/// shared context (same preset/seed, different environment process) and
+/// reuses the full `run_comparison_jobs` machinery, so the per-scenario
+/// results inherit the paired-determinism contract. Returns
+/// `(scenario, summaries)` in the order given.
+pub fn run_scenario_matrix(
+    engine: &Engine,
+    base: &SimConfig,
+    budget: Budget,
+    scenarios: &[String],
+    verbose: bool,
+    jobs: usize,
+) -> Result<Vec<(String, Vec<RunSummary>)>> {
+    let mut out = Vec::with_capacity(scenarios.len());
+    for name in scenarios {
+        // fail fast on a typo'd preset before spending a comparison on it,
+        // and canonicalize aliases ("rush-hour" -> "rush_hour") so output
+        // directories and config JSON never fork on spelling
+        let kind: ScenarioKind = name.parse()?;
+        let mut cfg = base.clone();
+        cfg.scenario = kind.name().to_string();
+        let summaries = run_comparison_jobs(engine, &cfg, budget, verbose, jobs)?;
+        out.push((kind.name().to_string(), summaries));
+    }
+    Ok(out)
+}
+
+/// Write the per-round CSVs/JSONs of a scenario matrix under
+/// `dir/scenario_<name>/` (one subdirectory per scenario, so the file names
+/// inside stay the usual `{preset}_{framework}.*`).
+pub fn write_matrix(
+    matrix: &[(String, Vec<RunSummary>)],
+    dir: impl AsRef<Path>,
+) -> Result<()> {
+    for (name, summaries) in matrix {
+        write_all(summaries, dir.as_ref().join(format!("scenario_{name}")))?;
+    }
+    Ok(())
+}
+
+/// Print the scenario × framework adaptation table: how selection, adaptive
+/// E, cost, and accuracy respond to each environment preset.
+pub fn scenario_table(matrix: &[(String, Vec<RunSummary>)]) {
+    series_header("Scenario matrix — selection/allocation adaptation");
+    println!(
+        "{:>12} {:>8} {:>7} {:>8} {:>9} {:>10} {:>10} {:>9}",
+        "scenario", "fw", "rounds", "best_acc", "mean|A_t|", "R_co", "R_cp", "sim_t(s)"
+    );
+    for (name, summaries) in matrix {
+        for s in summaries {
+            println!(
+                "{:>12} {:>8} {:>7} {:>8.3} {:>9.1} {:>10.1} {:>10.3} {:>9.2}",
+                name,
+                s.framework,
+                s.rounds,
+                s.best_accuracy,
+                s.mean_selected,
+                s.total_comm_cost,
+                s.total_comp_cost,
+                s.total_sim_time
+            );
+        }
+    }
 }
 
 /// Print the paper-vs-measured headline claims (EXPERIMENTS.md source).
@@ -222,5 +297,61 @@ pub fn headline(summaries: &[RunSummary]) {
             sm.total_comm_bytes / 1e6,
             best_other / 1e6
         );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, comm_cost: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            selected: 8,
+            e: 5,
+            comm_bytes: 1e6,
+            round_time: 0.05,
+            sim_time: 0.05 * (round + 1) as f64,
+            comm_cost,
+            comp_cost: 0.1,
+            total_cost: 0.0,
+            train_loss: 0.5,
+            accuracy: 0.5,
+            test_loss: 0.6,
+            wall_secs: 0.0,
+            env_bw_scale: 1.0,
+            env_available: 8,
+            env_stragglers: 0,
+            env_deadline_scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn cumulative_covers_every_record_not_just_sampled_ones() {
+        // 20 rounds of distinct costs: the fig4b bug accumulated only every
+        // step_by-th record — the cumulative series must see ALL of them
+        let records: Vec<RoundRecord> = (0..20).map(|r| rec(r, (r + 1) as f64)).collect();
+        let cum = cumulative(&records, |r| r.comm_cost);
+        assert_eq!(cum.len(), 20);
+        assert_eq!(cum[0], 1.0);
+        assert_eq!(cum[19], (1..=20).sum::<usize>() as f64);
+        // sampling AFTER accumulation keeps every sampled point a true
+        // running total (the last sampled index is 18 -> sum of 1..=19)
+        let sampled: Vec<f64> = cum.iter().copied().step_by(3).collect();
+        assert_eq!(*sampled.last().unwrap(), (1..=19).sum::<usize>() as f64);
+    }
+
+    #[test]
+    fn fig4b_last_cumulative_value_equals_total_comm_cost() {
+        let records: Vec<RoundRecord> =
+            (0..37).map(|r| rec(r, 0.25 + 0.5 * (r % 7) as f64)).collect();
+        let s = RunSummary::from_records("splitme", "commag", 0.83, records);
+        let cum = cumulative(&s.records, |r| r.comm_cost);
+        // the invariant the old fig4b display violated whenever rounds > 8:
+        // the cumulative series ends exactly at the summary's total R_co
+        assert_eq!(*cum.last().unwrap(), s.total_comm_cost);
+        // and the same helper reproduces fig3b's volume accumulation
+        let vol = cumulative(&s.records, |r| r.comm_bytes);
+        assert_eq!(*vol.last().unwrap(), s.total_comm_bytes);
     }
 }

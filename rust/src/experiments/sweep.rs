@@ -8,10 +8,13 @@
 //! scoped executor ([`super::executor`]) with deterministic row-major
 //! ordering — large §IV surfaces scale with the worker count.
 
+use anyhow::Result;
+
 use super::executor;
-use crate::allocation::{solve_p2, Allocation};
+use crate::allocation::{solve_p2_at, Allocation};
 use crate::config::SimConfig;
 use crate::oran::{Topology, UploadSizes};
+use crate::scenario::Scenario;
 use crate::selection::DeadlineSelector;
 
 /// One sweep point: the steady-state decision the optimizer reaches after
@@ -37,38 +40,51 @@ fn sizes(topo: &Topology, split_dim: usize, client_params: usize) -> Vec<UploadS
 }
 
 /// Iterate selection -> allocation -> observe until the admitted set is
-/// stable (the closed loop of Algorithm 2 lines 2-3).
-pub fn settle(cfg: &SimConfig, split_dim: usize, client_params: usize, rounds: usize) -> SweepPoint {
+/// stable (the closed loop of Algorithm 2 lines 2-3). Honors
+/// `cfg.scenario`: each iteration sees that round's environment (fading,
+/// churn, …), so the sweep explores the P1/P2 surface under the same
+/// dynamics the training loop would — `static` reproduces the stationary
+/// surface bit for bit. Errors (instead of panicking) on an invalid
+/// `cfg.scenario`, since library callers may pass unvalidated configs.
+pub fn settle(
+    cfg: &SimConfig,
+    split_dim: usize,
+    client_params: usize,
+    rounds: usize,
+) -> Result<SweepPoint> {
     let topo = Topology::build(cfg);
+    let scenario = Scenario::new(cfg)?;
     let all_sizes = sizes(&topo, split_dim, client_params);
     let mut selector = DeadlineSelector::new(&topo, &all_sizes, cfg.alpha);
     let mut e_last = cfg.e_initial;
     let mut last: Option<Allocation> = None;
     let mut selected_n = 0usize;
-    for _ in 0..rounds {
+    for round in 0..rounds {
+        let env = scenario.env(round);
+        let topo_r = env.apply(&topo);
         let mut selected: Vec<_> = selector
-            .select(&topo, |r| e_last as f64 * (r.q_c + r.q_s))
+            .select(&topo_r, |r| e_last as f64 * (r.q_c + r.q_s))
             .into_iter()
             .collect();
         if selected.is_empty() {
-            selected.push(&topo.rics[0]);
+            selected.push(&topo_r.rics[0]);
         }
         let sz: Vec<UploadSizes> = selected.iter().map(|r| all_sizes[r.id]).collect();
-        let alloc = solve_p2(cfg, &selected, &sz, e_last, true, 1.0, true);
+        let alloc = solve_p2_at(cfg, topo_r.bandwidth_bps, &selected, &sz, e_last, true, 1.0, true);
         e_last = alloc.e;
         selector.observe(alloc.latency.max_uplink);
         selected_n = selected.len();
         last = Some(alloc);
     }
     let alloc = last.expect("rounds > 0");
-    SweepPoint {
+    Ok(SweepPoint {
         bandwidth_bps: cfg.bandwidth_bps,
         rho: cfg.rho,
         selected: selected_n,
         e: alloc.e,
         round_latency: alloc.latency.total(),
         round_cost: alloc.round_cost,
-    }
+    })
 }
 
 /// Grid sweep over bandwidth budgets and rho values (auto worker count).
@@ -78,7 +94,7 @@ pub fn grid(
     rhos: &[f64],
     split_dim: usize,
     client_params: usize,
-) -> Vec<SweepPoint> {
+) -> Result<Vec<SweepPoint>> {
     grid_jobs(base, bandwidths, rhos, split_dim, client_params, 0)
 }
 
@@ -91,7 +107,7 @@ pub fn grid_jobs(
     split_dim: usize,
     client_params: usize,
     jobs: usize,
-) -> Vec<SweepPoint> {
+) -> Result<Vec<SweepPoint>> {
     let points: Vec<(f64, f64)> = bandwidths
         .iter()
         .flat_map(|&b| rhos.iter().map(move |&rho| (b, rho)))
@@ -103,6 +119,8 @@ pub fn grid_jobs(
         cfg.rho = rho;
         settle(&cfg, split_dim, client_params, 10)
     })
+    .into_iter()
+    .collect()
 }
 
 pub fn print_table(points: &[SweepPoint]) {
@@ -133,8 +151,8 @@ mod tests {
     #[test]
     fn settle_is_deterministic_and_feasible() {
         let cfg = SimConfig::commag();
-        let a = settle(&cfg, SPLIT, CP, 10);
-        let b = settle(&cfg, SPLIT, CP, 10);
+        let a = settle(&cfg, SPLIT, CP, 10).unwrap();
+        let b = settle(&cfg, SPLIT, CP, 10).unwrap();
         assert_eq!(a.selected, b.selected);
         assert_eq!(a.e, b.e);
         assert!(a.selected >= 1 && a.selected <= cfg.num_clients);
@@ -148,8 +166,8 @@ mod tests {
         lo.bandwidth_bps = 2e8;
         let mut hi = SimConfig::commag();
         hi.bandwidth_bps = 4e9;
-        let p_lo = settle(&lo, SPLIT, CP, 10);
-        let p_hi = settle(&hi, SPLIT, CP, 10);
+        let p_lo = settle(&lo, SPLIT, CP, 10).unwrap();
+        let p_hi = settle(&hi, SPLIT, CP, 10).unwrap();
         assert!(
             p_hi.selected >= p_lo.selected,
             "bandwidth up, admission down: {p_lo:?} vs {p_hi:?}"
@@ -167,7 +185,7 @@ mod tests {
 
     #[test]
     fn grid_covers_all_points() {
-        let pts = grid(&SimConfig::commag(), &[5e8, 1e9], &[0.2, 0.8], SPLIT, CP);
+        let pts = grid(&SimConfig::commag(), &[5e8, 1e9], &[0.2, 0.8], SPLIT, CP).unwrap();
         assert_eq!(pts.len(), 4);
         // the K_eps-weighted P2 keeps E within bounds everywhere
         assert!(pts.iter().all(|p| p.e >= 1 && p.e <= 20));
@@ -179,12 +197,44 @@ mod tests {
     }
 
     #[test]
+    fn grid_honors_scenario_presets_deterministically() {
+        let mut faded = SimConfig::commag();
+        faded.scenario = "fading".into();
+        let a = grid(&faded, &[5e8, 1e9], &[0.2, 0.8], SPLIT, CP).unwrap();
+        let b = grid(&faded, &[5e8, 1e9], &[0.2, 0.8], SPLIT, CP).unwrap();
+        assert_eq!(a, b, "scenario sweeps must be reproducible");
+        // rush_hour is deterministic and its window covers the settle loop's
+        // final rounds (8..10 of 10), so the surface is GUARANTEED to move
+        let mut rushed = SimConfig::commag();
+        rushed.scenario = "rush_hour".into();
+        let r = grid(&rushed, &[5e8, 1e9], &[0.2, 0.8], SPLIT, CP).unwrap();
+        let stat = grid(&SimConfig::commag(), &[5e8, 1e9], &[0.2, 0.8], SPLIT, CP).unwrap();
+        assert_ne!(r, stat, "rush_hour changed nothing in the P1/P2 surface");
+        for p in a.iter().chain(&r) {
+            assert!(p.selected >= 1 && p.e >= 1 && p.e <= 20);
+        }
+    }
+
+    #[test]
+    fn churn_settle_never_panics_on_empty_candidates() {
+        let mut cfg = SimConfig::commag();
+        cfg.scenario = "churn".into();
+        cfg.num_clients = 4;
+        cfg.b_min = 0.25;
+        for seed in 0..10 {
+            cfg.seed = seed;
+            let p = settle(&cfg, SPLIT, CP, 30).unwrap();
+            assert!(p.selected >= 1);
+        }
+    }
+
+    #[test]
     fn parallel_grid_matches_sequential() {
         let base = SimConfig::commag();
         let bw = [2.5e8, 5e8, 1e9];
         let rhos = [0.2, 0.5, 0.8];
-        let seq = grid_jobs(&base, &bw, &rhos, SPLIT, CP, 1);
-        let par = grid_jobs(&base, &bw, &rhos, SPLIT, CP, 4);
+        let seq = grid_jobs(&base, &bw, &rhos, SPLIT, CP, 1).unwrap();
+        let par = grid_jobs(&base, &bw, &rhos, SPLIT, CP, 4).unwrap();
         assert_eq!(seq, par);
     }
 }

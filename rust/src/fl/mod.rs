@@ -34,6 +34,7 @@ use crate::oran::{RoundLatency, Topology};
 use crate::runtime::{
     Arg, ArtifactId, ChunkStacks, Engine, Frozen, PresetManifest, PresetPlan, Tensor,
 };
+use crate::scenario::{RoundEnv, Scenario};
 use crate::sim::RngPool;
 
 /// Precomputed chunk-window stacks over one shard's cyclic batches, built
@@ -118,6 +119,11 @@ pub struct ExperimentContext<'a> {
     /// budget (per-batch fallback — bitwise identical, tests/differential.rs).
     pub shard_wholes: Vec<Option<ShardWhole>>,
     pub test: Batched,
+    /// the dynamic-environment process (`cfg.scenario` preset). Pure and
+    /// shared: every framework of a comparison derives the SAME per-round
+    /// [`RoundEnv`] from it, so the paired comparison stays fair under
+    /// non-stationary conditions (PERF.md §scenario-engine)
+    pub scenario: Scenario,
     /// base pool (root seed only): data/topology/model-init streams. Shared
     /// by all frameworks so paired init streams stay identical; per-runner
     /// runtime streams come from [`RngPool::for_framework`] instead.
@@ -241,6 +247,7 @@ impl<'a> ExperimentContext<'a> {
             chunks,
             shard_wholes,
             test,
+            scenario: Scenario::new(cfg)?,
             pool: RngPool::new(cfg.seed),
         })
     }
@@ -588,9 +595,18 @@ pub trait Framework {
     fn name(&self) -> &'static str;
 
     /// Execute one global training round: select, allocate, train for real
-    /// (PJRT), aggregate, and report the modeled costs/latency.
-    fn run_round(&mut self, ctx: &ExperimentContext, rng: &RngPool, round: usize)
-        -> Result<RoundOutcome>;
+    /// (PJRT), aggregate, and report the modeled costs/latency. `env` is the
+    /// round's O-RAN environment from the shared scenario engine — the same
+    /// instance is handed to every framework at the same round (fairness
+    /// invariant), and implementations must draw candidates/bandwidth/
+    /// deadlines from it, never from the nominal topology directly.
+    fn run_round(
+        &mut self,
+        ctx: &ExperimentContext,
+        rng: &RngPool,
+        round: usize,
+        env: &RoundEnv,
+    ) -> Result<RoundOutcome>;
 
     /// Materialize the current full model for evaluation. For SplitMe this
     /// triggers the Step-4 layer-wise inversion; for the baselines it is a
@@ -604,14 +620,32 @@ pub trait Framework {
     }
 }
 
-/// Draw K distinct client ids uniformly (FedAvg / vanilla-SFL selection).
-pub fn sample_clients(pool: &RngPool, label: &str, round: usize, m: usize, k: usize) -> Vec<usize> {
+/// Draw K distinct client ids uniformly from an explicit candidate list
+/// (FedAvg / vanilla-SFL selection under scenario availability churn). When
+/// `candidates` is the full `0..M` range this is bitwise identical to the
+/// historical all-clients draw — the shuffle consumes the same stream the
+/// same way — which is what keeps the `static` scenario's records equal to
+/// the pre-scenario-engine ones.
+pub fn sample_from(
+    pool: &RngPool,
+    label: &str,
+    round: usize,
+    candidates: &[usize],
+    k: usize,
+) -> Vec<usize> {
     let mut rng = pool.stream(label, round as u64);
-    let mut ids: Vec<usize> = (0..m).collect();
+    let mut ids = candidates.to_vec();
     rng.shuffle(&mut ids);
-    ids.truncate(k.min(m));
+    ids.truncate(k.min(candidates.len()));
     ids.sort_unstable();
     ids
+}
+
+/// Draw K distinct client ids uniformly over all M (the pre-scenario shape;
+/// kept for call sites without an environment).
+pub fn sample_clients(pool: &RngPool, label: &str, round: usize, m: usize, k: usize) -> Vec<usize> {
+    let all: Vec<usize> = (0..m).collect();
+    sample_from(pool, label, round, &all, k)
 }
 
 #[cfg(test)]
@@ -715,5 +749,33 @@ mod tests {
         let pool = RngPool::new(9);
         let a = sample_clients(&pool, "sel", 0, 5, 10);
         assert_eq!(a, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn sample_from_full_range_matches_sample_clients_bitwise() {
+        // the static-scenario parity hinge: a full 0..M candidate list must
+        // reproduce the historical draw exactly
+        let pool = RngPool::new(9);
+        let all: Vec<usize> = (0..50).collect();
+        for round in 0..8 {
+            assert_eq!(
+                sample_from(&pool, "sel", round, &all, 10),
+                sample_clients(&pool, "sel", round, 50, 10),
+                "round {round}"
+            );
+        }
+    }
+
+    #[test]
+    fn sample_from_respects_candidate_subset() {
+        let pool = RngPool::new(4);
+        let avail = vec![1usize, 4, 7, 9, 12];
+        let ids = sample_from(&pool, "sel", 3, &avail, 3);
+        assert_eq!(ids.len(), 3);
+        assert!(ids.iter().all(|i| avail.contains(i)), "{ids:?}");
+        assert!(ids.windows(2).all(|w| w[0] < w[1]));
+        // k past the candidate count returns everyone available
+        let all = sample_from(&pool, "sel", 3, &avail, 99);
+        assert_eq!(all, avail);
     }
 }

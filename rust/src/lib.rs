@@ -39,6 +39,7 @@ pub mod metrics;
 pub mod model;
 pub mod oran;
 pub mod runtime;
+pub mod scenario;
 pub mod selection;
 pub mod sim;
 pub mod splitme;
@@ -50,4 +51,5 @@ pub mod prelude {
     pub use crate::fl::ExperimentContext;
     pub use crate::metrics::{RoundRecord, RunSummary};
     pub use crate::runtime::{Engine, Manifest, Tensor};
+    pub use crate::scenario::{RoundEnv, Scenario, ScenarioKind};
 }

@@ -25,12 +25,19 @@ USAGE:
   repro run [--framework splitme|fedavg|sfl|oranfed] [--preset commag|vision]
             [--config file.json] [--rounds N] [--stop-at-target]
             [--out DIR] [--seed N] [--eval-every K] [--client-jobs N]
-  repro experiment [fig3a|fig3b|fig4a|fig4b|fig5|all]
+            [--scenario NAME]
+  repro experiment [fig3a|fig3b|fig4a|fig4b|fig5|scenarios|all]
             [--splitme-rounds N] [--baseline-rounds N] [--out DIR]
             [--seed N] [--verbose] [--jobs N] [--client-jobs N]
-  repro sweep   [--preset commag|vision] [--jobs N]   # P2 surface, no training
+            [--scenario NAME] [--scenarios a,b,c]
+  repro sweep   [--preset commag|vision] [--jobs N] [--scenario NAME]
   repro inspect
 
+--scenario NAME: dynamic O-RAN environment preset applied to every round
+                 (static|fading|churn|rush_hour|stragglers; default static =
+                 today's stationary substrate, bitwise identical to before).
+                 All frameworks of a comparison see the identical trace.
+--scenarios a,b: comma list for `experiment scenarios` (default: all presets)
 --jobs N:        worker threads for the paired comparison / sweep grid
                  (0 = auto: REPRO_JOBS env or available cores; 1 = sequential)
 --client-jobs N: worker threads for the per-selected-client phase inside each
@@ -74,8 +81,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
     cfg.stop_at_target = args.flag("stop-at-target") || cfg.stop_at_target;
-    // preserve a --config file's client_jobs unless the flag overrides it
+    // preserve a --config file's client_jobs/scenario unless a flag overrides
     cfg.client_jobs = args.usize_or("client-jobs", cfg.client_jobs)?;
+    cfg.scenario = args.str_or("scenario", &cfg.scenario);
+    cfg.validate()?;
     let rounds = args.usize_or("rounds", 30)?;
     let out = args.str_or("out", "results");
     args.finish()?;
@@ -145,12 +154,48 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let verbose = args.flag("verbose");
     let jobs = args.jobs()?;
     let client_jobs = args.client_jobs()?;
+    let scenario = args.opt_str("scenario");
+    let scenario_list = args.opt_str("scenarios");
     args.finish()?;
 
     let engine = Engine::from_default_manifest()?;
     let mut cfg = if which == "fig5" { SimConfig::vision() } else { SimConfig::commag() };
     cfg.seed = seed;
     cfg.client_jobs = client_jobs;
+    if let Some(s) = &scenario {
+        cfg.scenario = s.clone();
+    }
+    cfg.validate()?;
+
+    if which == "scenarios" {
+        // the scenario-matrix experiment: run_comparison × environment
+        // preset. A bare --scenario X narrows the matrix to that one preset
+        // (it must not be silently ignored); --scenarios wins when given,
+        // and giving both conflicting knobs is an error.
+        let list = match (&scenario, scenario_list) {
+            (Some(_), Some(_)) => anyhow::bail!(
+                "pass either --scenario or --scenarios to `experiment scenarios`, not both"
+            ),
+            (Some(one), None) => one.clone(),
+            (None, Some(list)) => list,
+            (None, None) => "static,fading,churn,rush_hour,stragglers".to_string(),
+        };
+        let names: Vec<String> = list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        if names.is_empty() {
+            anyhow::bail!("--scenarios {list:?} names no scenarios — nothing to run");
+        }
+        let matrix =
+            experiments::run_scenario_matrix(&engine, &cfg, budget, &names, verbose, jobs)?;
+        experiments::write_matrix(&matrix, &out)?;
+        experiments::scenario_table(&matrix);
+        println!("\nraw per-round CSVs in {out}/scenario_<name>/");
+        return Ok(());
+    }
+
     let summaries = experiments::run_comparison_jobs(&engine, &cfg, budget, verbose, jobs)?;
     experiments::write_all(&summaries, &out)?;
     match which.as_str() {
@@ -166,7 +211,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             experiments::fig4b(&summaries);
             experiments::headline(&summaries);
         }
-        other => anyhow::bail!("unknown experiment {other:?} (fig3a|fig3b|fig4a|fig4b|fig5|all)"),
+        other => anyhow::bail!(
+            "unknown experiment {other:?} (fig3a|fig3b|fig4a|fig4b|fig5|scenarios|all)"
+        ),
     }
     println!("\nraw per-round CSVs in {out}/");
     Ok(())
@@ -176,13 +223,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     use repro::experiments::sweep;
     let preset = args.str_or("preset", "commag");
     let jobs = args.jobs()?;
+    let scenario = args.opt_str("scenario");
     args.finish()?;
-    let base = SimConfig::preset_config(&preset)?;
+    let mut base = SimConfig::preset_config(&preset)?;
+    if let Some(s) = scenario {
+        base.scenario = s;
+    }
+    base.validate()?;
     let m = Manifest::load_default()?;
     let p = m.preset(&preset)?;
     let bandwidths = [1e8, 2.5e8, 5e8, 1e9, 2e9, 4e9];
     let rhos = [0.2, 0.5, 0.8];
-    let pts = sweep::grid_jobs(&base, &bandwidths, &rhos, p.split_dim, p.client_params, jobs);
+    let pts = sweep::grid_jobs(&base, &bandwidths, &rhos, p.split_dim, p.client_params, jobs)?;
     println!("P1/P2 steady state over bandwidth x rho ({preset}, M={}):", base.num_clients);
     sweep::print_table(&pts);
     Ok(())

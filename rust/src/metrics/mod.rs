@@ -36,6 +36,17 @@ pub struct RoundRecord {
     pub test_loss: f32,
     /// host wallclock spent on the real numerics this round (perf §)
     pub wall_secs: f64,
+    /// scenario engine: the round's uplink bandwidth factor (1.0 = nominal)
+    pub env_bw_scale: f64,
+    /// scenario engine: clients in the candidate set this round (= M when
+    /// the scenario has no churn)
+    pub env_available: usize,
+    /// scenario engine: clients in a straggler episode this round (compute
+    /// inflated past `scenario::STRAGGLER_THRESHOLD`; mild broadcast
+    /// congestion like rush_hour's 1.25x does not count)
+    pub env_stragglers: usize,
+    /// scenario engine: mean deadline factor over all clients (1.0 nominal)
+    pub env_deadline_scale: f64,
 }
 
 /// Aggregated outcome of a run.
@@ -101,14 +112,15 @@ impl RunSummary {
             .with_context(|| format!("creating {:?}", path.as_ref()))?;
         writeln!(
             f,
-            "round,selected,e,comm_bytes,round_time,sim_time,comm_cost,comp_cost,total_cost,train_loss,accuracy,test_loss"
+            "round,selected,e,comm_bytes,round_time,sim_time,comm_cost,comp_cost,total_cost,train_loss,accuracy,test_loss,env_bw_scale,env_available,env_stragglers,env_deadline_scale"
         )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{},{},{},{:.1},{:.6},{:.6},{:.4},{:.6},{:.6},{:.5},{:.4},{:.5}",
+                "{},{},{},{:.1},{:.6},{:.6},{:.4},{:.6},{:.6},{:.5},{:.4},{:.5},{:.4},{},{},{:.4}",
                 r.round, r.selected, r.e, r.comm_bytes, r.round_time, r.sim_time,
-                r.comm_cost, r.comp_cost, r.total_cost, r.train_loss, r.accuracy, r.test_loss
+                r.comm_cost, r.comp_cost, r.total_cost, r.train_loss, r.accuracy, r.test_loss,
+                r.env_bw_scale, r.env_available, r.env_stragglers, r.env_deadline_scale
             )?;
         }
         Ok(())
@@ -133,6 +145,10 @@ impl RunSummary {
                     ("accuracy", Json::num(r.accuracy as f64)),
                     ("test_loss", Json::num(r.test_loss as f64)),
                     ("wall_secs", Json::num(r.wall_secs)),
+                    ("env_bw_scale", Json::num(r.env_bw_scale)),
+                    ("env_available", Json::num(r.env_available as f64)),
+                    ("env_stragglers", Json::num(r.env_stragglers as f64)),
+                    ("env_deadline_scale", Json::num(r.env_deadline_scale)),
                 ])
             })
             .collect();
@@ -185,6 +201,10 @@ mod tests {
             accuracy: acc,
             test_loss: 0.6,
             wall_secs: 0.0,
+            env_bw_scale: 1.0,
+            env_available: 50,
+            env_stragglers: 0,
+            env_deadline_scale: 1.0,
         }
     }
 
@@ -218,6 +238,12 @@ mod tests {
         s.write_csv(&dir).unwrap();
         let text = std::fs::read_to_string(&dir).unwrap();
         assert_eq!(text.lines().count(), 3);
+        let header = text.lines().next().unwrap();
+        assert!(
+            header.ends_with("env_bw_scale,env_available,env_stragglers,env_deadline_scale"),
+            "env columns missing from CSV: {header}"
+        );
+        assert!(text.lines().nth(1).unwrap().ends_with("1.0000,50,0,1.0000"));
         std::fs::remove_file(dir).ok();
     }
 }

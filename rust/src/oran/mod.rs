@@ -64,6 +64,31 @@ impl Topology {
     pub fn is_empty(&self) -> bool {
         self.rics.is_empty()
     }
+
+    /// The candidate with the largest deadline slack `t_round -
+    /// compute_time(r)` — the empty-selection fallback shared by the
+    /// deadline-aware frameworks (SplitMe, O-RANFed): when no RIC meets its
+    /// deadline, the least-bad one still trains so the round progresses and
+    /// the t_estimate feedback can relax.
+    pub fn most_slack<F: Fn(&RicProfile) -> f64>(&self, compute_time: F) -> Option<&RicProfile> {
+        self.rics.iter().max_by(|a, b| {
+            let slack = |r: &RicProfile| r.t_round - compute_time(r);
+            slack(a).total_cmp(&slack(b))
+        })
+    }
+
+    /// Profile of client `id`. On the full topology ids are positions; on a
+    /// scenario-filtered effective topology (`RoundEnv::apply`) positions
+    /// shift, so look up by the preserved id. Linear scan — M is tens.
+    pub fn by_id(&self, id: usize) -> Option<&RicProfile> {
+        // fast path: on an unfiltered topology rics[id].id == id
+        if let Some(r) = self.rics.get(id) {
+            if r.id == id {
+                return Some(r);
+            }
+        }
+        self.rics.iter().find(|r| r.id == id)
+    }
 }
 
 /// Per-round wire sizes (bytes) of one framework's uplink traffic.
@@ -184,6 +209,32 @@ mod tests {
         let b = topo();
         assert_eq!(a.rics[3].q_c, b.rics[3].q_c);
         assert_eq!(a.rics[5].t_round, b.rics[5].t_round);
+    }
+
+    #[test]
+    fn most_slack_picks_the_least_bad_candidate() {
+        let t = topo();
+        let ct = |r: &RicProfile| 20.0 * (r.q_c + r.q_s);
+        let best = t.most_slack(ct).unwrap();
+        for r in &t.rics {
+            assert!(r.t_round - ct(r) <= best.t_round - ct(best) + 1e-15);
+        }
+        let empty = Topology { rics: Vec::new(), bandwidth_bps: 1e9 };
+        assert!(empty.most_slack(ct).is_none());
+    }
+
+    #[test]
+    fn by_id_survives_candidate_filtering() {
+        let t = topo();
+        assert_eq!(t.by_id(5).unwrap().id, 5);
+        assert!(t.by_id(99).is_none());
+        // a filtered topology (scenario churn) keeps ids but shifts positions
+        let filtered = Topology {
+            rics: t.rics.iter().filter(|r| r.id % 2 == 1).cloned().collect(),
+            bandwidth_bps: t.bandwidth_bps,
+        };
+        assert_eq!(filtered.by_id(5).unwrap().q_c, t.rics[5].q_c);
+        assert!(filtered.by_id(4).is_none());
     }
 
     #[test]

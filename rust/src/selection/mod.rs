@@ -120,6 +120,30 @@ mod tests {
     }
 
     #[test]
+    fn tightened_deadlines_admit_no_more_trainers() {
+        // scenario-engine contract: selection over an effective topology
+        // with scaled deadlines (rush-hour re-prioritization) is just
+        // Algorithm 1 over different numbers — tightening can only shrink
+        // the admitted set
+        use crate::scenario::RoundEnv;
+        let (topo, sizes) = setup(50);
+        let mut sel = DeadlineSelector::new(&topo, &sizes, 0.7);
+        sel.observe(5e-3);
+        sel.observe(5e-3);
+        let ct = |r: &RicProfile| 10.0 * (r.q_c + r.q_s);
+        let mut env = RoundEnv::identity(0, 50);
+        env.deadline_scale = vec![0.6; 50];
+        let tight = env.apply(&topo);
+        let n_nominal = sel.select(&topo, ct).len();
+        let n_tight = sel.select(&tight, ct).len();
+        assert!(n_tight <= n_nominal, "tightening admitted more: {n_tight} > {n_nominal}");
+        for r in sel.select(&tight, ct) {
+            assert!(ct(r) + sel.t_estimate() <= r.t_round);
+            assert!((r.t_round - 0.6 * topo.rics[r.id].t_round).abs() < 1e-15);
+        }
+    }
+
+    #[test]
     fn observe_keeps_two_round_window() {
         let (topo, sizes) = setup(10);
         let mut sel = DeadlineSelector::new(&topo, &sizes, 0.7);

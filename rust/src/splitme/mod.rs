@@ -21,13 +21,14 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::allocation::solve_p2;
+use crate::allocation::solve_p2_at;
 use crate::fl::{
     aggregate_indexed, effective_chunk, resolve_client_jobs, run_clients, run_steps,
     ExperimentContext, Framework, RoundOutcome,
 };
 use crate::oran::{RicProfile, UploadSizes};
 use crate::runtime::{Arg, ChunkStacks, Frozen, Tensor};
+use crate::scenario::RoundEnv;
 use crate::selection::DeadlineSelector;
 use crate::sim::RngPool;
 use inversion::ClientTrace;
@@ -337,27 +338,29 @@ impl Framework for SplitMe {
         ctx: &ExperimentContext,
         _rng: &RngPool,
         round: usize,
+        env: &RoundEnv,
     ) -> Result<RoundOutcome> {
         let cfg = &ctx.cfg;
+
+        // ---- the round's O-RAN substrate: availability-filtered candidate
+        // set with this round's Q/deadline/bandwidth factors applied. Under
+        // the static scenario this reproduces ctx.topo bit for bit.
+        let topo_r = env.apply(&ctx.topo);
 
         // ---- P1: deadline-aware selection (Algorithm 1) ----
         let e_sel = self.e_last;
         let mut selected: Vec<&RicProfile> = self
             .selector
-            .select(&ctx.topo, |r| e_sel as f64 * (r.q_c + r.q_s));
+            .select(&topo_r, |r| e_sel as f64 * (r.q_c + r.q_s));
         if selected.is_empty() {
-            // degenerate deadline draw: admit the single most-slack RIC so
-            // training always progresses (and the estimate can relax)
-            let best = ctx
-                .topo
-                .rics
-                .iter()
-                .max_by(|a, b| {
-                    let slack = |r: &RicProfile| r.t_round - e_sel as f64 * (r.q_c + r.q_s);
-                    slack(a).total_cmp(&slack(b))
-                })
-                .expect("non-empty topology");
-            selected.push(best);
+            // degenerate deadline draw (or a churn round where no available
+            // RIC fits): admit the single most-slack candidate so training
+            // always progresses (and the estimate can relax)
+            selected.push(
+                topo_r
+                    .most_slack(|r| e_sel as f64 * (r.q_c + r.q_s))
+                    .expect("scenario engine keeps >= 1 candidate available"),
+            );
         }
         let sizes: Vec<UploadSizes> = selected
             .iter()
@@ -367,8 +370,9 @@ impl Framework for SplitMe {
             })
             .collect();
 
-        // ---- P2: bandwidth + adaptive E ----
-        let alloc = solve_p2(cfg, &selected, &sizes, self.e_last, true, 1.0, true);
+        // ---- P2: bandwidth + adaptive E, at the round's effective B ----
+        let alloc =
+            solve_p2_at(cfg, topo_r.bandwidth_bps, &selected, &sizes, self.e_last, true, 1.0, true);
         let e = alloc.e;
         self.e_last = e;
         self.selector.observe(alloc.latency.max_uplink);
@@ -505,7 +509,7 @@ impl Framework for SplitMe {
             e,
             comm_bytes: sizes.iter().map(|s| s.total()).sum(),
             latency: alloc.latency,
-            comm_cost: crate::oran::comm_cost(&alloc.fracs, cfg.bandwidth_bps, cfg.p_c),
+            comm_cost: crate::oran::comm_cost(&alloc.fracs, topo_r.bandwidth_bps, cfg.p_c),
             comp_cost: crate::oran::comp_cost(&selected, e, cfg.p_tr),
             train_loss: if loss_n > 0 { loss_sum / loss_n as f32 } else { f32::NAN },
         })

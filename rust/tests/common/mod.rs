@@ -84,4 +84,18 @@ pub fn assert_records_bitwise_eq(a: &RoundRecord, b: &RoundRecord, what: &str) {
     assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{what}: train_loss @r{}", a.round);
     assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{what}: accuracy @r{}", a.round);
     assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "{what}: test_loss @r{}", a.round);
+    assert_eq!(
+        a.env_bw_scale.to_bits(),
+        b.env_bw_scale.to_bits(),
+        "{what}: env_bw_scale @r{}",
+        a.round
+    );
+    assert_eq!(a.env_available, b.env_available, "{what}: env_available @r{}", a.round);
+    assert_eq!(a.env_stragglers, b.env_stragglers, "{what}: env_stragglers @r{}", a.round);
+    assert_eq!(
+        a.env_deadline_scale.to_bits(),
+        b.env_deadline_scale.to_bits(),
+        "{what}: env_deadline_scale @r{}",
+        a.round
+    );
 }

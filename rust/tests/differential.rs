@@ -10,6 +10,11 @@
 //!   engine call counters proving the dispatch count drops from
 //!   `num_batches` to 1 per client.
 //! * the `{step}_chunk{r}` remainder folds vs the single-step path.
+//! * scenario engine (ISSUE 4): same (seed, scenario) ⇒ bitwise-identical
+//!   environment trace across all four frameworks and across `--jobs` /
+//!   `--client-jobs`; the `static` preset leaves every record bitwise
+//!   identical to a run with no scenario configured at all (the
+//!   pre-scenario-engine default path).
 //!
 //! Requires `make artifacts`; SKIPs (stderr note) without it.
 
@@ -57,6 +62,19 @@ fn client_jobs_parity_commag_all_frameworks() {
 }
 
 #[test]
+fn client_jobs_parity_under_dynamic_scenarios() {
+    // the scenario engine must stay bitwise invisible to the parallelism
+    // knobs: its draws are pure functions of (seed, scenario, round), never
+    // of scheduling. One stochastic preset + the deterministic one.
+    let Some(engine) = try_engine() else { return };
+    for scenario in ["fading", "rush_hour"] {
+        let mut cfg = tiny_cfg();
+        cfg.scenario = scenario.into();
+        assert_client_jobs_parity(&engine, &cfg, 3);
+    }
+}
+
+#[test]
 fn client_jobs_parity_vision_all_frameworks() {
     let Some(engine) = try_engine() else { return };
     assert_client_jobs_parity(&engine, &tiny_vision_cfg(), 3);
@@ -82,6 +100,132 @@ fn client_jobs_nest_inside_parallel_comparison() {
         assert_eq!(a.records.len(), b.records.len(), "{}", a.framework);
         for (ra, rb) in a.records.iter().zip(&b.records) {
             assert_records_bitwise_eq(ra, rb, &format!("{}/nested", a.framework));
+        }
+    }
+}
+
+#[test]
+fn all_frameworks_observe_the_identical_environment_trace() {
+    // the fairness invariant of the scenario engine: for a given (seed,
+    // scenario), every framework's RoundRecords carry the SAME per-round
+    // environment — and it matches the trace computed directly from a
+    // bare Scenario (no context, no training)
+    use repro::scenario::Scenario;
+    let Some(engine) = try_engine() else { return };
+    for scenario in ["churn", "stragglers"] {
+        let mut cfg = tiny_cfg();
+        cfg.scenario = scenario.into();
+        let rounds = 4;
+        let oracle = Scenario::new(&cfg).unwrap().trace(rounds);
+        let per_fw: Vec<Vec<RoundRecord>> = FrameworkKind::all()
+            .into_iter()
+            .map(|kind| train_records(&engine, &cfg, kind, rounds))
+            .collect();
+        for (records, kind) in per_fw.iter().zip(FrameworkKind::all()) {
+            assert_eq!(records.len(), rounds);
+            for (r, env) in records.iter().zip(&oracle) {
+                let what = format!("{scenario}/{}", kind.name());
+                assert_eq!(
+                    r.env_bw_scale.to_bits(),
+                    env.bandwidth_scale.to_bits(),
+                    "{what}: bw @r{}",
+                    r.round
+                );
+                assert_eq!(r.env_available, env.available_count(), "{what}: avail @r{}", r.round);
+                assert_eq!(
+                    r.env_stragglers,
+                    env.straggler_count(),
+                    "{what}: stragglers @r{}",
+                    r.round
+                );
+                assert_eq!(
+                    r.env_deadline_scale.to_bits(),
+                    env.mean_deadline_scale().to_bits(),
+                    "{what}: deadline @r{}",
+                    r.round
+                );
+                // selection can only ever admit available candidates
+                assert!(
+                    r.selected <= env.available_count(),
+                    "{what}: selected {} > available {} @r{}",
+                    r.selected,
+                    env.available_count(),
+                    r.round
+                );
+            }
+        }
+        // and the four frameworks agree with each other field-for-field
+        for records in &per_fw[1..] {
+            for (a, b) in per_fw[0].iter().zip(records.iter()) {
+                assert_eq!(a.env_bw_scale.to_bits(), b.env_bw_scale.to_bits());
+                assert_eq!(a.env_available, b.env_available);
+                assert_eq!(a.env_stragglers, b.env_stragglers);
+                assert_eq!(a.env_deadline_scale.to_bits(), b.env_deadline_scale.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn static_scenario_is_bitwise_identical_to_unconfigured_default() {
+    // Guards two things: (a) the default config keeps scenario == "static"
+    // (so nobody silently changes the out-of-the-box behavior), and (b) an
+    // explicit `--scenario static` takes the same code path as the default
+    // and records the stationary identity environment. NOTE this cannot by
+    // itself prove parity with PRE-scenario-engine numerics — both runs
+    // execute the new code; that cross-version gate is the golden snapshot
+    // (tests/golden.rs), whose bootstrap on the first toolchain-equipped
+    // machine must predate any intentional numeric change (README there).
+    let Some(engine) = try_engine() else { return };
+    let default_cfg = tiny_cfg();
+    assert_eq!(default_cfg.scenario, "static", "default must be static");
+    let mut explicit = tiny_cfg();
+    explicit.scenario = "static".into();
+    for kind in FrameworkKind::all() {
+        let a = train_records(&engine, &default_cfg, kind, 3);
+        let b = train_records(&engine, &explicit, kind, 3);
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_records_bitwise_eq(ra, rb, &format!("{}/static-default", kind.name()));
+        }
+        // and the static env is recorded as the stationary identity
+        for r in &a {
+            assert_eq!(r.env_bw_scale, 1.0);
+            assert_eq!(r.env_available, default_cfg.num_clients);
+            assert_eq!(r.env_stragglers, 0);
+            assert_eq!(r.env_deadline_scale, 1.0);
+        }
+    }
+}
+
+#[test]
+fn dynamic_scenarios_run_end_to_end_and_actually_perturb() {
+    // every named dynamic preset drives the full four-framework comparison
+    // through run_comparison_jobs (parallel), stays deterministic under
+    // --jobs, and visibly moves the environment columns somewhere in the
+    // trace
+    use repro::experiments::{self, Budget};
+    use repro::scenario::ScenarioKind;
+    let Some(engine) = try_engine() else { return };
+    let budget = Budget { splitme_rounds: 3, baseline_rounds: 3 };
+    for kind in ScenarioKind::dynamic() {
+        let mut cfg = tiny_cfg();
+        cfg.scenario = kind.name().into();
+        // rush_hour's first perturbed round is RUSH_START; keep the seed
+        // cheap by checking perturbation on the raw trace instead
+        let trace = repro::scenario::Scenario::new(&cfg).unwrap().trace(40);
+        assert!(
+            trace.iter().any(|e| !e.is_identity()),
+            "{}: 40 rounds of identity environment",
+            kind.name()
+        );
+        let seq = experiments::run_comparison_jobs(&engine, &cfg, budget, false, 1).unwrap();
+        let par = experiments::run_comparison_jobs(&engine, &cfg, budget, false, 4).unwrap();
+        assert_eq!(seq.len(), 4);
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.framework, b.framework);
+            for (ra, rb) in a.records.iter().zip(&b.records) {
+                assert_records_bitwise_eq(ra, rb, &format!("{}/{}", kind.name(), a.framework));
+            }
         }
     }
 }

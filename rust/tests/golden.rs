@@ -30,8 +30,16 @@ const GOLDEN_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/com
 const ROUNDS: usize = 3;
 
 /// f64 fields stored as 16-hex-digit bit patterns.
-const F64_FIELDS: [&str; 6] =
-    ["comm_bytes", "round_time", "sim_time", "comm_cost", "comp_cost", "total_cost"];
+const F64_FIELDS: [&str; 8] = [
+    "comm_bytes",
+    "round_time",
+    "sim_time",
+    "comm_cost",
+    "comp_cost",
+    "total_cost",
+    "env_bw_scale",
+    "env_deadline_scale",
+];
 /// f32 fields stored as 8-hex-digit bit patterns.
 const F32_FIELDS: [&str; 3] = ["train_loss", "accuracy", "test_loss"];
 
@@ -40,7 +48,18 @@ fn record_json(r: &RoundRecord) -> Json {
     m.insert("round".into(), Json::num(r.round as f64));
     m.insert("selected".into(), Json::num(r.selected as f64));
     m.insert("e".into(), Json::num(r.e as f64));
-    let f64s = [r.comm_bytes, r.round_time, r.sim_time, r.comm_cost, r.comp_cost, r.total_cost];
+    m.insert("env_available".into(), Json::num(r.env_available as f64));
+    m.insert("env_stragglers".into(), Json::num(r.env_stragglers as f64));
+    let f64s = [
+        r.comm_bytes,
+        r.round_time,
+        r.sim_time,
+        r.comm_cost,
+        r.comp_cost,
+        r.total_cost,
+        r.env_bw_scale,
+        r.env_deadline_scale,
+    ];
     for (name, v) in F64_FIELDS.iter().zip(f64s) {
         m.insert((*name).into(), Json::str(format!("{:016x}", v.to_bits())));
     }
@@ -90,7 +109,7 @@ fn flatten(j: &Json) -> Vec<(String, String)> {
         let records = records.as_arr().expect("framework records");
         out.push((format!("{name}/rounds"), records.len().to_string()));
         for (i, rec) in records.iter().enumerate() {
-            for field in ["round", "selected", "e"] {
+            for field in ["round", "selected", "e", "env_available", "env_stragglers"] {
                 out.push((format!("{name}/round{i}/{field}"), leaf(rec.get(field).expect(field))));
             }
             for field in F64_FIELDS.iter().chain(F32_FIELDS.iter()) {

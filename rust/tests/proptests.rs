@@ -10,6 +10,7 @@ use repro::linalg::{gram, matmul, ridge_solve, Mat};
 use repro::oran::{self, Topology, UploadSizes};
 use repro::prop_assert;
 use repro::runtime::Tensor;
+use repro::scenario::{Scenario, ScenarioKind};
 use repro::selection::DeadlineSelector;
 use repro::sim::{fill_normal, RngPool};
 use repro::testkit::{check, close};
@@ -18,15 +19,34 @@ use repro::testkit::{check, close};
 
 #[test]
 fn waterfill_simplex_and_floor_invariants() {
-    check("waterfill: sum=1, floor respected", 300, |g| {
+    // ISSUE-4 hardening: for ANY feasible input — including b_min right at
+    // the 1/k boundary and degenerate transfer sizes — the simplex holds to
+    // 1e-9 and constraint (22b) to 1e-12 (the old all-floored
+    // renormalization branch could push floored clients below b_min)
+    check("waterfill: sum=1±1e-9, floor-1e-12 respected", 500, |g| {
         let k = g.usize_in(1..=45);
-        let b_min = g.f64_in(0.001..(1.0 / k as f64).min(0.02));
+        // spread the floor over the whole feasible range (0, 1/k], with the
+        // exact boundary b_min = 1/k hit explicitly every few cases
+        let b_min = if g.usize_in(0..=9) == 0 {
+            1.0 / k as f64
+        } else {
+            g.f64_in(0.0001..1.0).min(0.9999) / k as f64
+        };
         let ct = g.vec_f64(k, 0.0..0.05);
-        let by = g.vec_f64(k, 1e3..5e6);
+        // include pathologically tiny transfers (everyone floored)
+        let by = if g.usize_in(0..=4) == 0 {
+            g.vec_f64(k, 0.5..10.0)
+        } else {
+            g.vec_f64(k, 1e3..5e6)
+        };
         let fr = waterfill(&ct, &by, 1e9, b_min);
-        close(fr.iter().sum::<f64>(), 1.0, 1e-7)?;
+        prop_assert!(
+            (fr.iter().sum::<f64>() - 1.0).abs() <= 1e-9,
+            "sum {} != 1 (k={k}, b_min={b_min})",
+            fr.iter().sum::<f64>()
+        );
         for &f in &fr {
-            prop_assert!(f >= b_min - 1e-9, "frac {f} below floor {b_min}");
+            prop_assert!(f >= b_min - 1e-12, "frac {f} below floor {b_min} (k={k})");
         }
         Ok(())
     });
@@ -87,6 +107,78 @@ fn p2_invariants() {
         close(alloc.fracs.iter().sum::<f64>(), 1.0, 1e-7)?;
         prop_assert!(alloc.latency.total() > 0.0);
         prop_assert!(alloc.objective >= alloc.round_cost, "K_eps >= 1 must hold");
+        Ok(())
+    });
+}
+
+// ----------------------------------------------------------------- scenario
+
+#[test]
+fn scenario_envs_are_pure_and_well_formed() {
+    // the determinism contract of the scenario engine, over random (kind,
+    // seed, M, round): env() is a pure function, vectors are M-long, scales
+    // are positive/finite, and at least one candidate is always available
+    check("scenario env purity + well-formedness", 150, |g| {
+        let kind = *g.choose(&ScenarioKind::all());
+        let seed = g.usize_in(0..=100_000) as u64;
+        let m = g.usize_in(1..=40);
+        let s = Scenario::from_parts(kind, seed, m);
+        let round = g.usize_in(0..=60);
+        let a = s.env(round);
+        let b = Scenario::from_parts(kind, seed, m).env(round);
+        prop_assert!(a == b, "{kind:?} env not reproducible at round {round}");
+        prop_assert!(a.round == round);
+        prop_assert!(a.available.len() == m && a.compute_scale.len() == m);
+        prop_assert!(a.deadline_scale.len() == m);
+        prop_assert!(a.available_count() >= 1, "{kind:?}: empty candidate set");
+        prop_assert!(a.bandwidth_scale > 0.0 && a.bandwidth_scale <= 1.0);
+        for &c in &a.compute_scale {
+            prop_assert!(c.is_finite() && c >= 1.0, "compute scale {c}");
+        }
+        for &d in &a.deadline_scale {
+            prop_assert!(d.is_finite() && d > 0.0 && d <= 1.0, "deadline scale {d}");
+        }
+        if kind == ScenarioKind::Static {
+            prop_assert!(a.is_identity(), "static env must be the identity");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn scenario_effective_topology_respects_selection_invariants() {
+    // Algorithm 1 over a scenario-perturbed topology still never violates
+    // the (scaled) deadlines, and the effective candidate set matches the
+    // env's availability
+    check("Alg 1 under dynamic environments", 80, |g| {
+        let mut cfg = SimConfig::commag();
+        cfg.num_clients = g.usize_in(2..=40);
+        cfg.b_min = 1.0 / cfg.num_clients as f64;
+        cfg.seed = g.usize_in(0..=9_999) as u64;
+        let kind = *g.choose(&ScenarioKind::all());
+        cfg.scenario = kind.name().to_string();
+        let topo = Topology::build(&cfg);
+        let env = Scenario::new(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?
+            .env(g.usize_in(0..=50));
+        let topo_r = env.apply(&topo);
+        prop_assert!(topo_r.len() == env.available_count());
+        let sizes = vec![
+            UploadSizes { model_bytes: 28e3, feature_bytes: 65e3 };
+            topo.len()
+        ];
+        let mut sel = DeadlineSelector::new(&topo, &sizes, cfg.alpha);
+        for _ in 0..g.usize_in(0..=4) {
+            sel.observe(g.f64_in(0.0..0.05));
+        }
+        let e = g.usize_in(1..=20);
+        for r in sel.select(&topo_r, |r| e as f64 * (r.q_c + r.q_s)) {
+            prop_assert!(
+                e as f64 * (r.q_c + r.q_s) + sel.t_estimate() <= r.t_round + 1e-12,
+                "client {} violates its scenario-scaled deadline",
+                r.id
+            );
+            prop_assert!(env.available[r.id], "selected an unavailable client {}", r.id);
+        }
         Ok(())
     });
 }
