@@ -183,9 +183,17 @@ fn main() {
         repro::scenario::ScenarioKind::Churn,
         e2e_cfg.seed,
         50,
-    );
+    )
+    .expect("synthetic preset");
     rec.bench("l3/scenario_env_replay_r150", 10, 200, || {
         std::hint::black_box(scen.env(149));
+    });
+    // trace replay is chain-free (binary search + clone): the same worst
+    // round priced against the Markov replay above
+    let trace = repro::scenario::ScenarioTrace::from_envs(&scen.trace(150), 50)
+        .expect("record churn trace");
+    rec.bench("l3/trace_env_replay_r150", 10, 200, || {
+        std::hint::black_box(trace.env(149));
     });
     // a full dynamic-environment comparison vs the static one above
     let mut fade_cfg = e2e_cfg.clone();

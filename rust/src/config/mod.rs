@@ -88,9 +88,11 @@ pub struct SimConfig {
     pub data_difficulty: f64,
     /// root seed for every RNG stream
     pub seed: u64,
-    /// named environment preset of the dynamic scenario engine
-    /// (`static|fading|churn|rush_hour|stragglers`); `static` is today's
-    /// stationary substrate and the default — see `scenario::ScenarioKind`
+    /// environment source of the dynamic scenario engine: a named preset
+    /// (`static|fading|churn|rush_hour|stragglers|slice_fading`) or a
+    /// trace replay (`trace:<path.csv|.json>` — the file schema is in
+    /// `scenario::trace`). `static` is today's stationary substrate and
+    /// the default — see `scenario::ScenarioKind`
     pub scenario: String,
     /// evaluate every k rounds (1 = every round, figures need 1)
     pub eval_every: usize,
@@ -387,6 +389,24 @@ mod tests {
         let mut c = SimConfig::commag();
         c.scenario = "typo_hour".into();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn trace_scenario_specs_validate_syntactically() {
+        // validate() checks the SPELLING only — file existence is a
+        // context-build (Scenario::new) concern, so configs stay portable
+        let mut c = SimConfig::commag();
+        c.scenario = "trace:examples/traces/oran_diurnal_load.csv".into();
+        assert!(c.validate().is_ok());
+        c.scenario = "slice_fading".into();
+        assert!(c.validate().is_ok());
+        c.scenario = "trace:".into();
+        assert!(c.validate().is_err(), "empty trace path must fail validation");
+        // and the spec round-trips through config JSON like any string
+        c.scenario = "trace:/tmp/t.json".into();
+        let back =
+            SimConfig::from_json(&Json::parse(&c.to_json().to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back.scenario, "trace:/tmp/t.json");
     }
 
     #[test]

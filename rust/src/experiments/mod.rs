@@ -209,6 +209,26 @@ pub fn fig5(summaries: &[RunSummary]) {
     fig4a(summaries);
 }
 
+/// Fig 3a under churn (the ROADMAP follow-up): selected trainers per round
+/// against that round's candidate-set size, showing Algorithm 1 tracking a
+/// shrinking/growing candidate set instead of a fixed M. Meaningful for any
+/// dynamic scenario with availability churn (`churn`, or a trace with an
+/// `available` column); under `static` the avail series is constant M.
+pub fn fig3a_churn(summaries: &[RunSummary]) {
+    series_header("Fig 3a under churn — selected trainers vs candidate set");
+    for s in summaries {
+        println!(
+            "{:>8}: mean sel {:>5.1} of mean avail {:>5.1}  (rounds {})",
+            s.framework, s.mean_selected, s.mean_available, s.rounds
+        );
+        print!("          (avail,sel):");
+        for r in s.records.iter().step_by((s.rounds / 12).max(1)) {
+            print!(" ({},{})", r.env_available, r.selected);
+        }
+        println!();
+    }
+}
+
 /// Scenario-matrix experiment: the paired four-framework comparison repeated
 /// under each named environment preset. Every scenario run builds its own
 /// shared context (same preset/seed, different environment process) and
@@ -223,16 +243,28 @@ pub fn run_scenario_matrix(
     verbose: bool,
     jobs: usize,
 ) -> Result<Vec<(String, Vec<RunSummary>)>> {
-    let mut out = Vec::with_capacity(scenarios.len());
+    let mut out: Vec<(String, Vec<RunSummary>)> = Vec::with_capacity(scenarios.len());
     for name in scenarios {
         // fail fast on a typo'd preset before spending a comparison on it,
         // and canonicalize aliases ("rush-hour" -> "rush_hour") so output
-        // directories and config JSON never fork on spelling
+        // directories and config JSON never fork on spelling. Trace specs
+        // (`trace:<file>`) keep their path in the config (spec) but name
+        // their output directory after the file stem (label); labels that
+        // still collide — two traces with the same stem, or a repeated
+        // preset — get a numeric suffix so write_matrix never overwrites
+        // one scenario's CSVs with another's.
         let kind: ScenarioKind = name.parse()?;
         let mut cfg = base.clone();
-        cfg.scenario = kind.name().to_string();
+        cfg.scenario = kind.spec();
+        let base_label = kind.label();
+        let mut label = base_label.clone();
+        let mut n = 2usize;
+        while out.iter().any(|(l, _)| *l == label) {
+            label = format!("{base_label}_{n}");
+            n += 1;
+        }
         let summaries = run_comparison_jobs(engine, &cfg, budget, verbose, jobs)?;
-        out.push((kind.name().to_string(), summaries));
+        out.push((label, summaries));
     }
     Ok(out)
 }
@@ -255,18 +287,19 @@ pub fn write_matrix(
 pub fn scenario_table(matrix: &[(String, Vec<RunSummary>)]) {
     series_header("Scenario matrix — selection/allocation adaptation");
     println!(
-        "{:>12} {:>8} {:>7} {:>8} {:>9} {:>10} {:>10} {:>9}",
-        "scenario", "fw", "rounds", "best_acc", "mean|A_t|", "R_co", "R_cp", "sim_t(s)"
+        "{:>16} {:>8} {:>7} {:>8} {:>9} {:>9} {:>10} {:>10} {:>9}",
+        "scenario", "fw", "rounds", "best_acc", "mean|A_t|", "mean|M_t|", "R_co", "R_cp", "sim_t(s)"
     );
     for (name, summaries) in matrix {
         for s in summaries {
             println!(
-                "{:>12} {:>8} {:>7} {:>8.3} {:>9.1} {:>10.1} {:>10.3} {:>9.2}",
+                "{:>16} {:>8} {:>7} {:>8.3} {:>9.1} {:>9.1} {:>10.1} {:>10.3} {:>9.2}",
                 name,
                 s.framework,
                 s.rounds,
                 s.best_accuracy,
                 s.mean_selected,
+                s.mean_available,
                 s.total_comm_cost,
                 s.total_comp_cost,
                 s.total_sim_time

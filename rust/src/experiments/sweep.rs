@@ -216,6 +216,30 @@ mod tests {
     }
 
     #[test]
+    fn grid_replays_recorded_trace_identically() {
+        // record the fading env stream and replay it via `trace:` — the
+        // settle surface must be identical point for point (same envs over
+        // the same topology), which is the sweep-side record→replay gate
+        use crate::scenario::{Scenario, ScenarioTrace};
+        let mut faded = SimConfig::commag();
+        faded.scenario = "fading".into();
+        let envs = Scenario::new(&faded).unwrap().trace(10); // settle runs 10 rounds
+        let tr = ScenarioTrace::from_envs(&envs, faded.num_clients).unwrap();
+        let path = std::env::temp_dir().join("repro_sweep_trace.csv");
+        tr.write(&path, Some(("fading", faded.seed))).unwrap();
+        let mut replay = faded.clone();
+        replay.scenario = format!("trace:{}", path.display());
+        let a = grid(&faded, &[5e8, 1e9], &[0.2, 0.8], SPLIT, CP).unwrap();
+        let b = grid(&replay, &[5e8, 1e9], &[0.2, 0.8], SPLIT, CP).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(a, b, "trace replay must reproduce the recorded scenario's sweep surface");
+        // and a missing trace file is a typed sweep error, not a panic
+        let mut missing = SimConfig::commag();
+        missing.scenario = "trace:/nonexistent/trace.csv".into();
+        assert!(settle(&missing, SPLIT, CP, 5).is_err());
+    }
+
+    #[test]
     fn churn_settle_never_panics_on_empty_candidates() {
         let mut cfg = SimConfig::commag();
         cfg.scenario = "churn".into();

@@ -98,6 +98,12 @@ impl Json {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
 
+    /// `[1.0, 0.5]` -> `Vec<f64>` (per-client scale lists in scenario
+    /// trace files).
+    pub fn as_f64_vec(&self) -> Result<Vec<f64>> {
+        self.as_arr()?.iter().map(|v| v.as_f64()).collect()
+    }
+
     // ----------------------------------------------------------- builders
 
     pub fn obj(entries: Vec<(&str, Json)>) -> Json {
@@ -449,6 +455,14 @@ mod tests {
             .get("a").unwrap()
             .get("inputs").unwrap();
         assert_eq!(inputs.as_arr().unwrap()[0].as_usize_vec().unwrap(), vec![32, 64]);
+    }
+
+    #[test]
+    fn f64_vec_accessor() {
+        let j = Json::parse("[1, 0.5, 3.25]").unwrap();
+        assert_eq!(j.as_f64_vec().unwrap(), vec![1.0, 0.5, 3.25]);
+        assert!(Json::parse("[1, \"x\"]").unwrap().as_f64_vec().is_err());
+        assert!(Json::parse("1").unwrap().as_f64_vec().is_err());
     }
 
     #[test]

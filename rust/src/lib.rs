@@ -51,5 +51,5 @@ pub mod prelude {
     pub use crate::fl::ExperimentContext;
     pub use crate::metrics::{RoundRecord, RunSummary};
     pub use crate::runtime::{Engine, Manifest, Tensor};
-    pub use crate::scenario::{RoundEnv, Scenario, ScenarioKind};
+    pub use crate::scenario::{RoundEnv, Scenario, ScenarioKind, ScenarioTrace};
 }

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   * `run`        — train one framework on one preset, CSV/JSON out
 //!   * `experiment` — regenerate a paper figure (fig3a/fig3b/fig4a/fig4b/fig5/all)
+//!   * `scenario`   — record a synthetic preset's realized environment
+//!                    stream to a replayable trace file (`scenario record`)
 //!   * `inspect`    — list presets + artifacts of the AOT manifest
 //!
 //! The binary is self-contained after `make artifacts`: python never runs on
@@ -26,18 +28,29 @@ USAGE:
             [--config file.json] [--rounds N] [--stop-at-target]
             [--out DIR] [--seed N] [--eval-every K] [--client-jobs N]
             [--scenario NAME]
-  repro experiment [fig3a|fig3b|fig4a|fig4b|fig5|scenarios|all]
+  repro experiment [fig3a|fig3b|fig3a_churn|fig4a|fig4b|fig5|scenarios|all]
             [--splitme-rounds N] [--baseline-rounds N] [--out DIR]
             [--seed N] [--verbose] [--jobs N] [--client-jobs N]
             [--scenario NAME] [--scenarios a,b,c]
+  repro scenario record [--scenario NAME] [--rounds N] [--out FILE.csv|.json]
+            [--preset commag|vision] [--seed N] [--clients M]
   repro sweep   [--preset commag|vision] [--jobs N] [--scenario NAME]
   repro inspect
 
---scenario NAME: dynamic O-RAN environment preset applied to every round
-                 (static|fading|churn|rush_hour|stragglers; default static =
-                 today's stationary substrate, bitwise identical to before).
-                 All frameworks of a comparison see the identical trace.
---scenarios a,b: comma list for `experiment scenarios` (default: all presets)
+--scenario NAME: dynamic O-RAN environment applied to every round: a preset
+                 (static|fading|churn|rush_hour|stragglers|slice_fading;
+                 default static = today's stationary substrate, bitwise
+                 identical to before) or a trace replay (trace:<file.csv|
+                 .json> — schema in PERF.md #scenario-engine; rounds past
+                 the trace end hold its last row). All frameworks of a
+                 comparison see the identical environment stream.
+--scenarios a,b: comma list for `experiment scenarios` (default: all
+                 presets); trace:<file> entries are allowed
+scenario record: export the realized RoundEnv stream of any preset (or
+                 re-resolve an existing trace) to a file that
+                 `--scenario trace:FILE` replays bit-for-bit identically
+fig3a_churn:     Fig 3a rerun under churn (default --scenario churn):
+                 selection tracking the shrinking/growing candidate set
 --jobs N:        worker threads for the paired comparison / sweep grid
                  (0 = auto: REPRO_JOBS env or available cores; 1 = sequential)
 --client-jobs N: worker threads for the per-selected-client phase inside each
@@ -62,6 +75,7 @@ fn real_main(argv: &[String]) -> Result<()> {
     match cmd.as_str() {
         "run" => cmd_run(&args),
         "experiment" => cmd_experiment(&args),
+        "scenario" => cmd_scenario(&args),
         "sweep" => cmd_sweep(&args),
         "inspect" => cmd_inspect(),
         other => {
@@ -164,6 +178,11 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     cfg.client_jobs = client_jobs;
     if let Some(s) = &scenario {
         cfg.scenario = s.clone();
+    } else if which == "fig3a_churn" {
+        // the figure exists to show selection tracking the candidate set —
+        // default to the churn preset, overridable with --scenario (e.g. a
+        // measured trace with an `available` column)
+        cfg.scenario = "churn".into();
     }
     cfg.validate()?;
 
@@ -178,7 +197,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             ),
             (Some(one), None) => one.clone(),
             (None, Some(list)) => list,
-            (None, None) => "static,fading,churn,rush_hour,stragglers".to_string(),
+            (None, None) => "static,fading,churn,rush_hour,stragglers,slice_fading".to_string(),
         };
         let names: Vec<String> = list
             .split(',')
@@ -201,6 +220,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     match which.as_str() {
         "fig3a" => experiments::fig3a(&summaries),
         "fig3b" => experiments::fig3b(&summaries),
+        "fig3a_churn" => experiments::fig3a_churn(&summaries),
         "fig4a" => experiments::fig4a(&summaries),
         "fig4b" => experiments::fig4b(&summaries),
         "fig5" => experiments::fig5(&summaries),
@@ -212,10 +232,50 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             experiments::headline(&summaries);
         }
         other => anyhow::bail!(
-            "unknown experiment {other:?} (fig3a|fig3b|fig4a|fig4b|fig5|scenarios|all)"
+            "unknown experiment {other:?} \
+             (fig3a|fig3b|fig3a_churn|fig4a|fig4b|fig5|scenarios|all)"
         ),
     }
     println!("\nraw per-round CSVs in {out}/");
+    Ok(())
+}
+
+fn cmd_scenario(args: &Args) -> Result<()> {
+    use repro::scenario::{Scenario, ScenarioKind, ScenarioTrace};
+    let action = args.positional.first().cloned().unwrap_or_default();
+    if action != "record" {
+        anyhow::bail!(
+            "unknown scenario action {action:?} — usage: repro scenario record \
+             [--scenario NAME] [--rounds N] [--out FILE.csv|.json] \
+             [--preset commag|vision] [--seed N] [--clients M]"
+        );
+    }
+    let preset = args.str_or("preset", "commag");
+    let base = SimConfig::preset_config(&preset)?;
+    let seed = args.u64_or("seed", base.seed)?;
+    let m = args.usize_or("clients", base.num_clients)?;
+    let spec = args.str_or("scenario", "fading");
+    let rounds = args.usize_or("rounds", 150)?;
+    let out = args.str_or("out", "trace.csv");
+    args.finish()?;
+
+    let kind: ScenarioKind = spec.parse()?;
+    // recording never runs PJRT — the environment process is pure L3, so
+    // this works in artifact-less environments too
+    let scenario = Scenario::from_parts(kind.clone(), seed, m)?;
+    let envs = scenario.trace(rounds);
+    let trace = ScenarioTrace::from_envs(&envs, m)?;
+    trace.write(std::path::Path::new(&out), Some((&kind.spec(), seed)))?;
+    println!(
+        "recorded {rounds} rounds of `{}` (M={m}, seed={seed}) -> {out}",
+        kind.spec()
+    );
+    println!(
+        "replay with: repro run --scenario trace:{out}   (bitwise-identical env \
+         stream for every framework at any --jobs/--client-jobs; rounds past \
+         {} hold the last row)",
+        rounds.saturating_sub(1)
+    );
     Ok(())
 }
 

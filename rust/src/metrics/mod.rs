@@ -66,6 +66,9 @@ pub struct RunSummary {
     pub total_comm_cost: f64,
     pub total_comp_cost: f64,
     pub mean_selected: f64,
+    /// mean candidate-set size over the run (= M under a static scenario);
+    /// the denominator Fig-3a-under-churn tracks selection against
+    pub mean_available: f64,
     pub records: Vec<RoundRecord>,
 }
 
@@ -99,6 +102,11 @@ impl RunSummary {
             total_comp_cost: records.iter().map(|r| r.comp_cost).sum(),
             mean_selected: if rounds > 0 {
                 records.iter().map(|r| r.selected as f64).sum::<f64>() / rounds as f64
+            } else {
+                0.0
+            },
+            mean_available: if rounds > 0 {
+                records.iter().map(|r| r.env_available as f64).sum::<f64>() / rounds as f64
             } else {
                 0.0
             },
@@ -171,6 +179,7 @@ impl RunSummary {
             ("total_comm_cost", Json::num(self.total_comm_cost)),
             ("total_comp_cost", Json::num(self.total_comp_cost)),
             ("mean_selected", Json::num(self.mean_selected)),
+            ("mean_available", Json::num(self.mean_available)),
             ("records", Json::arr(recs)),
         ])
     }
@@ -218,6 +227,7 @@ mod tests {
         assert_eq!(s.final_accuracy, 0.8);
         assert_eq!(s.total_comm_bytes, 4e6);
         assert_eq!(s.mean_selected, 10.0);
+        assert_eq!(s.mean_available, 50.0);
     }
 
     #[test]

@@ -26,16 +26,29 @@
 //!   and every client available, and applying it to a topology reproduces
 //!   the input bit for bit (`f64 × 1.0` is exact), so the default path is
 //!   bitwise identical to the pre-scenario-engine behavior.
+//!
+//! Beyond the synthetic presets, [`ScenarioKind::Trace`] (config spelling
+//! `trace:<path.csv|.json>`) replays a **recorded or measured** per-round
+//! environment stream from a file — see [`trace`] for the schema, the hold
+//! semantics, and the record→replay bitwise guarantee. `repro scenario
+//! record` exports any preset's realized stream in the same schema, making
+//! every environment round-trippable.
+
+pub mod trace;
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+pub use trace::ScenarioTrace;
+
 use crate::config::SimConfig;
 use crate::oran::{RicProfile, Topology};
-use crate::sim::RngPool;
+use crate::sim::{uniform, RngPool};
 
 /// Named environment presets selectable via `SimConfig.scenario` /
-/// `--scenario`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// `--scenario`, plus the trace-driven replay source.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ScenarioKind {
     /// today's behavior (the default): a stationary substrate
     Static,
@@ -48,9 +61,19 @@ pub enum ScenarioKind {
     RushHour,
     /// transient stragglers: rounds-long Q_C/Q_S inflation on a subset
     Stragglers,
+    /// correlated fading across slice classes: one Gilbert–Elliott chain
+    /// per slice, shared by every client of that slice — a faded slice
+    /// tightens all its clients' deadlines together and each bad slice
+    /// takes a bite out of the shared uplink
+    SliceFading,
+    /// replay a recorded/measured per-round environment stream from a file
+    /// (config spelling `trace:<path>`; schema in [`trace`])
+    Trace(String),
 }
 
 impl ScenarioKind {
+    /// The preset family name (`"trace"` for any trace, path elided);
+    /// see [`Self::spec`] for the round-trippable config spelling.
     pub fn name(&self) -> &'static str {
         match self {
             Self::Static => "static",
@@ -58,16 +81,55 @@ impl ScenarioKind {
             Self::Churn => "churn",
             Self::RushHour => "rush_hour",
             Self::Stragglers => "stragglers",
+            Self::SliceFading => "slice_fading",
+            Self::Trace(_) => "trace",
         }
     }
 
-    pub fn all() -> [ScenarioKind; 5] {
-        [Self::Static, Self::Fading, Self::Churn, Self::RushHour, Self::Stragglers]
+    /// Canonical config spelling: parses back to `self` via `FromStr`.
+    pub fn spec(&self) -> String {
+        match self {
+            Self::Trace(path) => format!("trace:{path}"),
+            other => other.name().to_string(),
+        }
     }
 
-    /// The dynamic presets (everything but `static`).
-    pub fn dynamic() -> [ScenarioKind; 4] {
-        [Self::Fading, Self::Churn, Self::RushHour, Self::Stragglers]
+    /// Filesystem-safe label for output directories / table rows: the
+    /// preset name, or `trace_<file stem>` so traces from different files
+    /// stay distinguishable (the scenario matrix additionally suffixes
+    /// labels that still collide, e.g. two traces sharing a stem).
+    pub fn label(&self) -> String {
+        match self {
+            Self::Trace(path) => {
+                let stem = std::path::Path::new(path)
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .unwrap_or("file");
+                let safe: String = stem
+                    .chars()
+                    .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+                    .collect();
+                format!("trace_{safe}")
+            }
+            other => other.name().to_string(),
+        }
+    }
+
+    /// The synthetic presets (a trace is a file, not a preset).
+    pub fn all() -> [ScenarioKind; 6] {
+        [
+            Self::Static,
+            Self::Fading,
+            Self::Churn,
+            Self::RushHour,
+            Self::Stragglers,
+            Self::SliceFading,
+        ]
+    }
+
+    /// The dynamic presets (everything synthetic but `static`).
+    pub fn dynamic() -> [ScenarioKind; 5] {
+        [Self::Fading, Self::Churn, Self::RushHour, Self::Stragglers, Self::SliceFading]
     }
 }
 
@@ -75,14 +137,24 @@ impl std::str::FromStr for ScenarioKind {
     type Err = anyhow::Error;
 
     fn from_str(s: &str) -> Result<Self> {
+        // the trace path must keep its case — strip the prefix before any
+        // lowercasing
+        if let Some(path) = s.strip_prefix("trace:") {
+            if path.trim().is_empty() {
+                bail!("trace scenario needs a file: trace:<path.csv|.json>");
+            }
+            return Ok(Self::Trace(path.to_string()));
+        }
         match s.to_ascii_lowercase().as_str() {
             "static" => Ok(Self::Static),
             "fading" => Ok(Self::Fading),
             "churn" => Ok(Self::Churn),
             "rush_hour" | "rush-hour" | "rushhour" => Ok(Self::RushHour),
             "stragglers" | "straggler" => Ok(Self::Stragglers),
+            "slice_fading" | "slice-fading" | "slicefading" => Ok(Self::SliceFading),
             other => bail!(
-                "unknown scenario {other:?} (static|fading|churn|rush_hour|stragglers)"
+                "unknown scenario {other:?} \
+                 (static|fading|churn|rush_hour|stragglers|slice_fading|trace:<file>)"
             ),
         }
     }
@@ -112,6 +184,20 @@ const RUSH_COMPUTE_SCALE: f64 = 1.25;
 const STRAGGLE_P_ON: f64 = 0.06;
 const STRAGGLE_P_OFF: f64 = 0.3;
 const STRAGGLE_SCALE: f64 = 3.5;
+
+/// slice_fading: one Gilbert–Elliott chain per slice class (shared by all
+/// its clients — `oran::Topology` assigns `slice_class = id % 3`). A bad
+/// slice multiplies the shared uplink by `SLICE_BW_BAD` (compounding over
+/// bad slices) and tightens every member's deadline by a per-(round, slice)
+/// uniform draw in `[SLICE_DL_LO, SLICE_DL_HI]` — the draw is shared within
+/// the slice, which is exactly the cross-client correlation the preset
+/// models.
+const SLICE_CLASSES: usize = 3;
+const SLICE_P_GB: f64 = 0.12;
+const SLICE_P_BG: f64 = 0.45;
+const SLICE_BW_BAD: f64 = 0.8;
+const SLICE_DL_LO: f64 = 0.55;
+const SLICE_DL_HI: f64 = 0.9;
 
 /// compute inflation at or above this factor counts as a straggler episode
 /// in [`RoundEnv::straggler_count`]; mild broadcast congestion (rush_hour's
@@ -221,20 +307,42 @@ pub struct Scenario {
     /// root-seed pool: scenario streams live in the `"scenario/…"` label
     /// namespace, disjoint from topology/init/framework streams
     pool: RngPool,
+    /// loaded trace for `ScenarioKind::Trace`: read ONCE at construction
+    /// into immutable shared context, so every framework and worker thread
+    /// of an experiment replays the identical file contents even if the
+    /// file changes on disk mid-run
+    trace: Option<Arc<ScenarioTrace>>,
 }
 
 impl Scenario {
     pub fn new(cfg: &SimConfig) -> Result<Self> {
-        let kind: ScenarioKind = cfg.scenario.parse()?;
-        Ok(Self::from_parts(kind, cfg.seed, cfg.num_clients))
+        Self::from_parts(cfg.scenario.parse()?, cfg.seed, cfg.num_clients)
     }
 
-    pub fn from_parts(kind: ScenarioKind, seed: u64, m: usize) -> Self {
-        Self { kind, m, pool: RngPool::new(seed) }
+    /// Errors only for `ScenarioKind::Trace` (file load/validation); the
+    /// synthetic presets cannot fail.
+    pub fn from_parts(kind: ScenarioKind, seed: u64, m: usize) -> Result<Self> {
+        let trace = match &kind {
+            ScenarioKind::Trace(path) => Some(Arc::new(ScenarioTrace::load(path, m)?)),
+            _ => None,
+        };
+        Ok(Self { kind, m, pool: RngPool::new(seed), trace })
+    }
+
+    /// Wrap an already-built trace (no file involved) — the in-memory
+    /// record→replay path used by tests and round-trip checks.
+    pub fn from_trace(trace: ScenarioTrace) -> Self {
+        let m = trace.m();
+        Self {
+            kind: ScenarioKind::Trace("<memory>".into()),
+            m,
+            pool: RngPool::new(0),
+            trace: Some(Arc::new(trace)),
+        }
     }
 
     pub fn kind(&self) -> ScenarioKind {
-        self.kind
+        self.kind.clone()
     }
 
     /// True for the `static` preset (callers may skip env bookkeeping).
@@ -244,14 +352,19 @@ impl Scenario {
 
     /// The environment of `round`: a pure function of
     /// `(seed, scenario, M, round)` — see the module docs for why replaying
-    /// the Markov chains from round 0 is the right trade.
+    /// the Markov chains from round 0 is the right trade. For a trace the
+    /// seed is irrelevant: replay draws no randomness at all.
     pub fn env(&self, round: usize) -> RoundEnv {
-        match self.kind {
+        match &self.kind {
             ScenarioKind::Static => RoundEnv::identity(round, self.m),
             ScenarioKind::Fading => self.fading(round),
             ScenarioKind::Churn => self.churn(round),
             ScenarioKind::RushHour => self.rush_hour(round),
             ScenarioKind::Stragglers => self.stragglers(round),
+            ScenarioKind::SliceFading => self.slice_fading(round),
+            ScenarioKind::Trace(_) => {
+                self.trace.as_ref().expect("trace loaded at construction").env(round)
+            }
         }
     }
 
@@ -328,6 +441,43 @@ impl Scenario {
             .collect();
         env
     }
+
+    /// Correlated fading across slice classes: one Gilbert–Elliott chain
+    /// per slice (state shared by every client of that slice, replayed from
+    /// round 0 like the other chains). A bad slice compounds a
+    /// `SLICE_BW_BAD` hit on the shared uplink and tightens all its
+    /// members' deadlines by ONE per-(round, slice) draw — so clients of a
+    /// faded slice move together, which independent per-client chains
+    /// cannot express.
+    fn slice_fading(&self, round: usize) -> RoundEnv {
+        let mut bad = [false; SLICE_CLASSES];
+        for r in 0..=round {
+            let mut rng = self.pool.stream("scenario/slice_fading", r as u64);
+            for b in bad.iter_mut() {
+                let u = rng.f64();
+                *b = if *b { u >= SLICE_P_BG } else { u < SLICE_P_GB };
+            }
+        }
+        let mut env = RoundEnv::identity(round, self.m);
+        let n_bad = bad.iter().filter(|&&b| b).count();
+        if n_bad > 0 {
+            env.bandwidth_scale = SLICE_BW_BAD.powi(n_bad as i32);
+            // per-class tightening draws, keyed by round only — pure; the
+            // same draw serves every client of the slice (the correlation)
+            let mut rng = self.pool.stream("scenario/slice_fading_scale", round as u64);
+            let mut dl = [1.0f64; SLICE_CLASSES];
+            for d in dl.iter_mut() {
+                *d = uniform(&mut rng, SLICE_DL_LO, SLICE_DL_HI);
+            }
+            for (m, d) in env.deadline_scale.iter_mut().enumerate() {
+                let class = m % SLICE_CLASSES;
+                if bad[class] {
+                    *d = dl[class];
+                }
+            }
+        }
+        env
+    }
 }
 
 #[cfg(test)]
@@ -335,7 +485,7 @@ mod tests {
     use super::*;
 
     fn scen(kind: ScenarioKind, seed: u64, m: usize) -> Scenario {
-        Scenario::from_parts(kind, seed, m)
+        Scenario::from_parts(kind, seed, m).expect("synthetic presets cannot fail")
     }
 
     fn topo(m: usize) -> Topology {
@@ -350,9 +500,27 @@ mod tests {
         for kind in ScenarioKind::all() {
             let back: ScenarioKind = kind.name().parse().unwrap();
             assert_eq!(back, kind);
+            // spec() is the canonical round-trippable spelling for ALL kinds
+            assert_eq!(kind.spec().parse::<ScenarioKind>().unwrap(), kind);
+            assert_eq!(kind.label(), kind.name());
         }
         assert!("nope".parse::<ScenarioKind>().is_err());
         assert_eq!("rush-hour".parse::<ScenarioKind>().unwrap(), ScenarioKind::RushHour);
+        assert_eq!("slice-fading".parse::<ScenarioKind>().unwrap(), ScenarioKind::SliceFading);
+    }
+
+    #[test]
+    fn trace_kind_parses_specs_and_labels() {
+        let k: ScenarioKind = "trace:examples/traces/Mixed-Case.csv".parse().unwrap();
+        // the path keeps its case (no lowercasing) and round-trips via spec
+        assert_eq!(k, ScenarioKind::Trace("examples/traces/Mixed-Case.csv".into()));
+        assert_eq!(k.name(), "trace");
+        assert_eq!(k.spec(), "trace:examples/traces/Mixed-Case.csv");
+        assert_eq!(k.spec().parse::<ScenarioKind>().unwrap(), k);
+        // labels are filesystem-safe and distinct per file stem
+        assert_eq!(k.label(), "trace_Mixed_Case");
+        assert!("trace:".parse::<ScenarioKind>().is_err(), "empty path must error");
+        assert!("trace".parse::<ScenarioKind>().is_err(), "bare `trace` needs a file");
     }
 
     #[test]
@@ -377,18 +545,23 @@ mod tests {
     #[test]
     fn traces_are_pure_functions_of_seed_kind_round() {
         for kind in ScenarioKind::all() {
-            let a = scen(kind, 42, 10).trace(25);
-            let b = scen(kind, 42, 10).trace(25);
+            let a = scen(kind.clone(), 42, 10).trace(25);
+            let b = scen(kind.clone(), 42, 10).trace(25);
             assert_eq!(a, b, "{kind:?}: trace must be reproducible");
             // calling env() out of order must agree with the trace
-            let s = scen(kind, 42, 10);
+            let s = scen(kind.clone(), 42, 10);
             assert_eq!(s.env(17), a[17], "{kind:?}: random access != replay");
             assert_eq!(s.env(3), a[3]);
         }
         // a different seed moves the stochastic presets
-        for kind in [ScenarioKind::Fading, ScenarioKind::Churn, ScenarioKind::Stragglers] {
-            let a = scen(kind, 42, 10).trace(60);
-            let b = scen(kind, 43, 10).trace(60);
+        for kind in [
+            ScenarioKind::Fading,
+            ScenarioKind::Churn,
+            ScenarioKind::Stragglers,
+            ScenarioKind::SliceFading,
+        ] {
+            let a = scen(kind.clone(), 42, 10).trace(60);
+            let b = scen(kind.clone(), 43, 10).trace(60);
             assert_ne!(a, b, "{kind:?}: seed must matter");
         }
     }
@@ -459,6 +632,98 @@ mod tests {
                 assert!(c == 1.0 || c == STRAGGLE_SCALE);
             }
         }
+    }
+
+    #[test]
+    fn slice_fading_is_correlated_within_slices() {
+        // 9 clients over 3 slices: ids {0,3,6} share slice 0, {1,4,7} slice
+        // 1, {2,5,8} slice 2 (oran::Topology's id % 3 mapping)
+        let s = scen(ScenarioKind::SliceFading, 13, 9);
+        let tr = s.trace(120);
+        let mut saw_fade = false;
+        let mut saw_partial = false;
+        for e in &tr {
+            assert!(e.bandwidth_scale > 0.0 && e.bandwidth_scale <= 1.0);
+            assert_eq!(e.available_count(), 9, "slice fading must not touch availability");
+            assert_eq!(e.straggler_count(), 0, "slice fading must not inflate compute");
+            for class in 0..SLICE_CLASSES {
+                // the correlation: every member of a slice shares ONE draw
+                let d0 = e.deadline_scale[class];
+                for m in (class..9).step_by(SLICE_CLASSES) {
+                    assert_eq!(
+                        e.deadline_scale[m].to_bits(),
+                        d0.to_bits(),
+                        "round {}: slice {class} members diverged",
+                        e.round
+                    );
+                }
+                if d0 < 1.0 {
+                    saw_fade = true;
+                    assert!((SLICE_DL_LO..=SLICE_DL_HI).contains(&d0), "draw {d0} out of range");
+                }
+            }
+            // partial fades exist: some round has one slice bad, another good
+            let tight: Vec<bool> =
+                (0..SLICE_CLASSES).map(|c| e.deadline_scale[c] < 1.0).collect();
+            saw_partial |= tight.iter().any(|&t| t) && tight.iter().any(|&t| !t);
+            // bandwidth compounds with the number of bad slices
+            let n_bad = tight.iter().filter(|&&t| t).count();
+            assert_eq!(
+                e.bandwidth_scale.to_bits(),
+                if n_bad == 0 { 1.0f64 } else { SLICE_BW_BAD.powi(n_bad as i32) }.to_bits(),
+                "round {}: bw must track bad-slice count",
+                e.round
+            );
+        }
+        assert!(saw_fade, "no slice ever faded in 120 rounds");
+        assert!(saw_partial, "slices never faded independently");
+    }
+
+    #[test]
+    fn recorded_trace_replays_identically_in_memory() {
+        // the record→replay hinge, without files: capture a preset's stream
+        // and a Trace scenario built from it must reproduce it bit for bit
+        let envs = scen(ScenarioKind::Fading, 9, 6).trace(12);
+        let t = ScenarioTrace::from_envs(&envs, 6).unwrap();
+        let replay = Scenario::from_trace(t);
+        assert!(!replay.is_static());
+        assert_eq!(replay.kind().name(), "trace");
+        for e in &envs {
+            assert_eq!(replay.env(e.round), *e, "round {}", e.round);
+        }
+        // hold-last past the recorded horizon
+        let held = replay.env(40);
+        let last = envs.last().unwrap();
+        assert_eq!(held.bandwidth_scale.to_bits(), last.bandwidth_scale.to_bits());
+        assert_eq!(held.available, last.available);
+        assert_eq!(held.round, 40);
+    }
+
+    #[test]
+    fn trace_scenario_via_config_loads_and_errors_cleanly() {
+        let envs = scen(ScenarioKind::RushHour, 1, 4).trace(30);
+        let t = ScenarioTrace::from_envs(&envs, 4).unwrap();
+        let path = std::env::temp_dir().join("repro_scenario_cfg_trace.json");
+        t.write(&path, Some(("rush_hour", 1))).unwrap();
+        let mut cfg = SimConfig::commag();
+        cfg.num_clients = 4;
+        cfg.b_min = 0.25;
+        cfg.scenario = format!("trace:{}", path.display());
+        let s = Scenario::new(&cfg).unwrap();
+        assert_eq!(s.env(9), envs[9]);
+        std::fs::remove_file(&path).ok();
+        // a missing file is a load-time error, not a panic
+        cfg.scenario = "trace:/nonexistent/x.csv".into();
+        assert!(Scenario::new(&cfg).is_err());
+        // and a federation-size mismatch is caught at load
+        let path2 = std::env::temp_dir().join("repro_scenario_cfg_trace_m.json");
+        t.write(&path2, None).unwrap();
+        cfg.num_clients = 7;
+        cfg.b_min = 1.0 / 7.0;
+        cfg.scenario = format!("trace:{}", path2.display());
+        let err = Scenario::new(&cfg).unwrap_err().to_string();
+        assert!(err.contains("trace"), "{err}");
+        std::fs::remove_file(&path2).ok();
     }
 
     #[test]

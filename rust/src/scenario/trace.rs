@@ -1,0 +1,689 @@
+//! Trace-driven scenario replay: load a per-round O-RAN environment stream
+//! from a file (`ScenarioKind::Trace`, config spelling `trace:<path>`) and
+//! export any synthetic preset's realized stream in the same schema
+//! (`repro scenario record`). This is how measured RIC load traces (the
+//! FedORA / EcoFL evaluation style, PAPERS.md) replace the stationary
+//! Markov presets: the trace file IS the environment process.
+//!
+//! # Schema (PERF.md §scenario-engine)
+//!
+//! Both formats carry the same five columns; only `round` is required, the
+//! rest default to the stationary identity:
+//!
+//! * **CSV** — a header line then one row per traced round. `#` lines and
+//!   blank lines are skipped. Per-client columns (`available`, `q_scale`,
+//!   `deadline_scale`) hold either ONE value (broadcast to all M clients)
+//!   or M `;`-separated values. `bw_scale` is global-only — the uplink
+//!   budget `B` is shared, per-client bandwidth is not representable.
+//!
+//!   ```text
+//!   round,bw_scale,available,q_scale,deadline_scale
+//!   0,1,1,1,1
+//!   4,0.35,1;1;0;1,1;1;1;3.5,0.8
+//!   ```
+//!
+//! * **JSON** — `{"schema": 1, "m": M, "rounds": [{"round": 0, ...}]}`
+//!   with the same per-round keys; per-client fields are scalars
+//!   (broadcast) or M-long arrays. `m`, `source`, `seed`, and `note` are
+//!   optional provenance; `m` (when present) must match the replaying
+//!   federation size.
+//!
+//! # Replay semantics
+//!
+//! * rows must be **strictly ascending** in `round` (sorted, no
+//!   duplicates) — anything else is a typed load error, never a panic;
+//! * a round WITH a row replays that row; a round WITHOUT one replays the
+//!   last row before it (**hold** — this covers both gaps inside a sparse
+//!   trace and every round past the trace end);
+//! * rounds before the first row replay the stationary identity;
+//! * every row must keep at least one client available (the engine-wide
+//!   invariant all synthetic presets also maintain), and every scale must
+//!   be finite and positive.
+//!
+//! Replay draws NO randomness: `env(round)` is a pure function of the
+//! loaded trace, so the (seed, scenario, M, round) purity contract — and
+//! with it every `--jobs` / `--client-jobs` bitwise guarantee — holds
+//! trivially. The record→replay round trip is bitwise: floats are written
+//! with Rust's shortest round-trip formatting, so replaying a recorded
+//! preset reproduces its `RoundRecord`s bit for bit
+//! (tests/differential.rs `trace_record_replay_is_bitwise_identical...`).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::RoundEnv;
+use crate::jsonio::Json;
+
+/// The five trace columns; only `round` is required.
+pub const COLUMNS: [&str; 5] = ["round", "bw_scale", "available", "q_scale", "deadline_scale"];
+
+/// Root-level JSON keys: the columns' container plus optional provenance.
+const ROOT_KEYS: [&str; 6] = ["schema", "m", "source", "seed", "note", "rounds"];
+
+/// One traced round, fully resolved to federation size M.
+#[derive(Debug, Clone, PartialEq)]
+struct TraceRow {
+    round: usize,
+    bw_scale: f64,
+    available: Vec<bool>,
+    q_scale: Vec<f64>,
+    deadline_scale: Vec<f64>,
+}
+
+/// A loaded (or recorded) per-round environment stream. Immutable after
+/// construction; `Scenario` shares it behind an `Arc` inside the
+/// `ExperimentContext`, so all four frameworks and every worker thread
+/// replay the identical trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioTrace {
+    m: usize,
+    /// strictly ascending by round (validated at construction)
+    rows: Vec<TraceRow>,
+}
+
+impl ScenarioTrace {
+    /// Load from `path` (`.json` → JSON, anything else → CSV), resolving
+    /// per-client columns against federation size `m`.
+    pub fn load(path: &str, m: usize) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario trace {path:?}"))?;
+        let json = Path::new(path)
+            .extension()
+            .map(|e| e.eq_ignore_ascii_case("json"))
+            .unwrap_or(false);
+        let parsed = if json { Self::from_json_text(&text, m) } else { Self::from_csv(&text, m) };
+        parsed.with_context(|| format!("loading scenario trace {path:?}"))
+    }
+
+    /// Parse the CSV form (see module docs for the schema).
+    pub fn from_csv(text: &str, m: usize) -> Result<Self> {
+        let mut lines = text
+            .lines()
+            .enumerate()
+            .map(|(i, l)| (i + 1, l.trim()))
+            .filter(|(_, l)| !l.is_empty() && !l.starts_with('#'));
+        let Some((_, header)) = lines.next() else {
+            bail!("scenario trace is empty (no header line)");
+        };
+        let cols: Vec<&str> = header.split(',').map(str::trim).collect();
+        for (i, c) in cols.iter().enumerate() {
+            if !COLUMNS.contains(c) {
+                bail!("unknown trace column {c:?} (known: {})", COLUMNS.join(", "));
+            }
+            if cols[..i].contains(c) {
+                bail!("duplicate trace column {c:?}");
+            }
+        }
+        let col = |name: &str| cols.iter().position(|c| *c == name);
+        let Some(round_at) = col("round") else {
+            bail!("trace header has no `round` column");
+        };
+        let (bw_at, avail_at, q_at, dl_at) =
+            (col("bw_scale"), col("available"), col("q_scale"), col("deadline_scale"));
+
+        let mut rows = Vec::new();
+        for (ln, line) in lines {
+            let cells: Vec<&str> = line.split(',').map(str::trim).collect();
+            if cells.len() != cols.len() {
+                bail!("line {ln}: {} cells for {} header columns", cells.len(), cols.len());
+            }
+            let round: usize = cells[round_at]
+                .parse()
+                .with_context(|| format!("line {ln}: bad round {:?}", cells[round_at]))?;
+            let bw_scale = match bw_at {
+                None => 1.0,
+                Some(i) => {
+                    if cells[i].contains(';') {
+                        bail!(
+                            "line {ln}: bw_scale must be a single global value — the uplink \
+                             budget B is shared, per-client bandwidth is not representable"
+                        );
+                    }
+                    parse_scale(cells[i], "bw_scale", ln)?
+                }
+            };
+            let available = match avail_at {
+                None => vec![true; m],
+                Some(i) => parse_bool_list(cells[i], ln, m)?,
+            };
+            let q_scale = match q_at {
+                None => vec![1.0; m],
+                Some(i) => parse_scale_list(cells[i], "q_scale", ln, m)?,
+            };
+            let deadline_scale = match dl_at {
+                None => vec![1.0; m],
+                Some(i) => parse_scale_list(cells[i], "deadline_scale", ln, m)?,
+            };
+            rows.push(TraceRow { round, bw_scale, available, q_scale, deadline_scale });
+        }
+        Self::from_rows(rows, m)
+    }
+
+    /// Parse the JSON form (see module docs for the schema).
+    pub fn from_json_text(text: &str, m: usize) -> Result<Self> {
+        let j = Json::parse(text).context("parsing trace JSON")?;
+        let root = j.as_obj().context("trace JSON root must be an object")?;
+        for k in root.keys() {
+            if !ROOT_KEYS.contains(&k.as_str()) {
+                bail!("unknown trace field {k:?} (known: {})", ROOT_KEYS.join(", "));
+            }
+        }
+        if let Some(s) = j.opt("schema") {
+            let v = s.as_usize()?;
+            if v != 1 {
+                bail!("unsupported trace schema {v} (this build reads schema 1)");
+            }
+        }
+        if let Some(tm) = j.opt("m") {
+            let tm = tm.as_usize()?;
+            if tm != m {
+                bail!("trace recorded for M={tm}, replaying with M={m}");
+            }
+        }
+        let entries = j.get("rounds")?.as_arr().context("`rounds` must be an array")?;
+        let mut rows = Vec::with_capacity(entries.len());
+        for (i, entry) in entries.iter().enumerate() {
+            let obj = entry.as_obj().with_context(|| format!("rounds[{i}] must be an object"))?;
+            for k in obj.keys() {
+                if !COLUMNS.contains(&k.as_str()) {
+                    bail!(
+                        "rounds[{i}]: unknown trace column {k:?} (known: {})",
+                        COLUMNS.join(", ")
+                    );
+                }
+            }
+            let round = entry.get("round").with_context(|| format!("rounds[{i}]"))?.as_usize()?;
+            let bw_scale = match entry.opt("bw_scale") {
+                None => 1.0,
+                Some(v) => check_scale(v.as_f64()?, "bw_scale", round)?,
+            };
+            let available = match entry.opt("available") {
+                None => vec![true; m],
+                Some(Json::Bool(b)) => vec![*b; m],
+                Some(v) => {
+                    let vals: Vec<bool> = v
+                        .as_arr()
+                        .with_context(|| format!("round {round}: available"))?
+                        .iter()
+                        .map(|b| b.as_bool())
+                        .collect::<Result<_>>()?;
+                    if vals.len() != m {
+                        bail!(
+                            "round {round}: available has {} per-client values, federation has M={m}",
+                            vals.len()
+                        );
+                    }
+                    vals
+                }
+            };
+            let q_scale = json_scale_list(entry.opt("q_scale"), "q_scale", round, m)?;
+            let deadline_scale =
+                json_scale_list(entry.opt("deadline_scale"), "deadline_scale", round, m)?;
+            rows.push(TraceRow { round, bw_scale, available, q_scale, deadline_scale });
+        }
+        Self::from_rows(rows, m)
+    }
+
+    /// Build a trace from realized environments — the `record` path:
+    /// `ScenarioTrace::from_envs(&scenario.trace(rounds), m)` captures any
+    /// synthetic preset's stream in replayable form.
+    pub fn from_envs(envs: &[RoundEnv], m: usize) -> Result<Self> {
+        let rows = envs
+            .iter()
+            .map(|e| {
+                if e.available.len() != m
+                    || e.compute_scale.len() != m
+                    || e.deadline_scale.len() != m
+                {
+                    bail!(
+                        "env at round {} is for a different federation size (want M={m})",
+                        e.round
+                    );
+                }
+                Ok(TraceRow {
+                    round: e.round,
+                    bw_scale: e.bandwidth_scale,
+                    available: e.available.clone(),
+                    q_scale: e.compute_scale.clone(),
+                    deadline_scale: e.deadline_scale.clone(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Self::from_rows(rows, m)
+    }
+
+    /// Shared validation: non-empty, strictly ascending, well-formed.
+    fn from_rows(rows: Vec<TraceRow>, m: usize) -> Result<Self> {
+        if m == 0 {
+            bail!("scenario trace needs a federation of M >= 1 clients");
+        }
+        if rows.is_empty() {
+            bail!("scenario trace has no rounds");
+        }
+        for w in rows.windows(2) {
+            if w[1].round <= w[0].round {
+                bail!(
+                    "trace rounds must be strictly ascending: round {} follows round {}",
+                    w[1].round,
+                    w[0].round
+                );
+            }
+        }
+        for r in &rows {
+            if !r.available.iter().any(|&a| a) {
+                bail!(
+                    "round {}: no client is available — every round needs at least one candidate",
+                    r.round
+                );
+            }
+        }
+        Ok(Self { m, rows })
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Number of traced rows (NOT the replayable horizon — hold semantics
+    /// extend the trace to every round past [`Self::last_round`]).
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Never true — construction rejects empty traces; exists for the
+    /// `len`/`is_empty` API convention.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn first_round(&self) -> usize {
+        self.rows[0].round
+    }
+
+    pub fn last_round(&self) -> usize {
+        self.rows[self.rows.len() - 1].round
+    }
+
+    /// The environment replayed at `round`: the row at `round` if present,
+    /// else the last row before it (hold), else — before the first row —
+    /// the stationary identity. Pure and RNG-free.
+    pub fn env(&self, round: usize) -> RoundEnv {
+        let idx = match self.rows.binary_search_by_key(&round, |r| r.round) {
+            Ok(i) => i,
+            Err(0) => return RoundEnv::identity(round, self.m),
+            Err(i) => i - 1,
+        };
+        let row = &self.rows[idx];
+        RoundEnv {
+            round,
+            bandwidth_scale: row.bw_scale,
+            available: row.available.clone(),
+            compute_scale: row.q_scale.clone(),
+            deadline_scale: row.deadline_scale.clone(),
+        }
+    }
+
+    /// CSV serialization (always the full five-column header; floats in
+    /// shortest round-trip form, so parse(to_csv(t)) == t bitwise).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("round,bw_scale,available,q_scale,deadline_scale\n");
+        for r in &self.rows {
+            let avail: Vec<&str> = r.available.iter().map(|&a| if a { "1" } else { "0" }).collect();
+            out.push_str(&format!(
+                "{},{},{},{},{}\n",
+                r.round,
+                r.bw_scale,
+                avail.join(";"),
+                fmt_f64_list(&r.q_scale),
+                fmt_f64_list(&r.deadline_scale)
+            ));
+        }
+        out
+    }
+
+    /// JSON serialization (schema 1, with the recording federation size).
+    pub fn to_json(&self) -> Json {
+        let rounds = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("round", Json::num(r.round as f64)),
+                    ("bw_scale", Json::num(r.bw_scale)),
+                    ("available", Json::arr(r.available.iter().map(|&b| Json::Bool(b)).collect())),
+                    ("q_scale", Json::arr(r.q_scale.iter().map(|&v| Json::num(v)).collect())),
+                    (
+                        "deadline_scale",
+                        Json::arr(r.deadline_scale.iter().map(|&v| Json::num(v)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("m", Json::num(self.m as f64)),
+            ("rounds", Json::arr(rounds)),
+        ])
+    }
+
+    /// Write to `path` (format by extension, like [`Self::load`]);
+    /// `provenance` = `(scenario spec, seed)` annotates the file so a
+    /// recorded trace names what produced it.
+    pub fn write(&self, path: &Path, provenance: Option<(&str, u64)>) -> Result<()> {
+        let json = path.extension().map(|e| e.eq_ignore_ascii_case("json")).unwrap_or(false);
+        let text = if json {
+            let mut j = self.to_json();
+            if let (Json::Obj(map), Some((source, seed))) = (&mut j, provenance) {
+                map.insert("source".to_string(), Json::str(source));
+                map.insert("seed".to_string(), Json::num(seed as f64));
+            }
+            j.to_string_pretty() + "\n"
+        } else {
+            match provenance {
+                Some((source, seed)) => format!(
+                    "# recorded scenario={source} seed={seed} m={}\n{}",
+                    self.m,
+                    self.to_csv()
+                ),
+                None => self.to_csv(),
+            }
+        };
+        std::fs::write(path, text).with_context(|| format!("writing scenario trace {path:?}"))
+    }
+}
+
+fn fmt_f64_list(vals: &[f64]) -> String {
+    vals.iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(";")
+}
+
+fn parse_scale(cell: &str, col: &str, ln: usize) -> Result<f64> {
+    let v: f64 = cell
+        .parse()
+        .with_context(|| format!("line {ln}: {col} expects a number, got {cell:?}"))?;
+    if !v.is_finite() || v <= 0.0 {
+        bail!("line {ln}: {col} must be finite and > 0, got {v}");
+    }
+    Ok(v)
+}
+
+fn parse_scale_list(cell: &str, col: &str, ln: usize, m: usize) -> Result<Vec<f64>> {
+    if !cell.contains(';') {
+        return Ok(vec![parse_scale(cell, col, ln)?; m]);
+    }
+    let vals: Vec<f64> =
+        cell.split(';').map(|t| parse_scale(t.trim(), col, ln)).collect::<Result<_>>()?;
+    if vals.len() != m {
+        bail!("line {ln}: {col} has {} per-client values, federation has M={m}", vals.len());
+    }
+    Ok(vals)
+}
+
+fn parse_bool_token(tok: &str, ln: usize) -> Result<bool> {
+    match tok {
+        "1" | "true" => Ok(true),
+        "0" | "false" => Ok(false),
+        other => bail!("line {ln}: available expects 1/0/true/false, got {other:?}"),
+    }
+}
+
+fn parse_bool_list(cell: &str, ln: usize, m: usize) -> Result<Vec<bool>> {
+    if !cell.contains(';') {
+        return Ok(vec![parse_bool_token(cell.trim(), ln)?; m]);
+    }
+    let vals: Vec<bool> =
+        cell.split(';').map(|t| parse_bool_token(t.trim(), ln)).collect::<Result<_>>()?;
+    if vals.len() != m {
+        bail!("line {ln}: available has {} per-client values, federation has M={m}", vals.len());
+    }
+    Ok(vals)
+}
+
+fn json_scale_list(v: Option<&Json>, col: &str, round: usize, m: usize) -> Result<Vec<f64>> {
+    match v {
+        None => Ok(vec![1.0; m]),
+        Some(Json::Num(x)) => Ok(vec![check_scale(*x, col, round)?; m]),
+        Some(arr) => {
+            let vals = arr.as_f64_vec().with_context(|| format!("round {round}: {col}"))?;
+            if vals.len() != m {
+                bail!(
+                    "round {round}: {col} has {} per-client values, federation has M={m}",
+                    vals.len()
+                );
+            }
+            for &x in &vals {
+                check_scale(x, col, round)?;
+            }
+            Ok(vals)
+        }
+    }
+}
+
+fn check_scale(v: f64, col: &str, round: usize) -> Result<f64> {
+    if !v.is_finite() || v <= 0.0 {
+        bail!("round {round}: {col} must be finite and > 0, got {v}");
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{Scenario, ScenarioKind};
+
+    const BUNDLED: &str =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/traces/oran_diurnal_load.csv");
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn csv_parses_globals_per_client_and_comments() {
+        let text = "\
+# comment line
+round,bw_scale,available,q_scale,deadline_scale
+
+0,1,1,1,1
+3,0.35,1;0;1,1;1;3.5,0.8
+";
+        let t = ScenarioTrace::from_csv(text, 3).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.m(), 3);
+        assert_eq!((t.first_round(), t.last_round()), (0, 3));
+        let e0 = t.env(0);
+        assert!(e0.is_identity());
+        let e3 = t.env(3);
+        assert_eq!(e3.bandwidth_scale, 0.35);
+        assert_eq!(e3.available, vec![true, false, true]);
+        assert_eq!(e3.compute_scale, vec![1.0, 1.0, 3.5]);
+        assert_eq!(e3.deadline_scale, vec![0.8; 3]); // scalar broadcast
+    }
+
+    #[test]
+    fn hold_semantics_cover_gaps_and_past_end() {
+        let text = "round,bw_scale\n0,1\n5,0.5\n";
+        let t = ScenarioTrace::from_csv(text, 4).unwrap();
+        // gap inside the trace holds the previous row
+        assert_eq!(t.env(3).bandwidth_scale, 1.0);
+        // rounds past the end hold the last row forever
+        for r in [5usize, 6, 50] {
+            let e = t.env(r);
+            assert_eq!(e.bandwidth_scale, 0.5, "round {r}");
+            assert_eq!(e.round, r);
+            assert_eq!(e.available_count(), 4);
+        }
+    }
+
+    #[test]
+    fn rounds_before_the_first_row_are_identity() {
+        let text = "round,bw_scale\n4,0.5\n";
+        let t = ScenarioTrace::from_csv(text, 2).unwrap();
+        assert!(t.env(0).is_identity());
+        assert!(t.env(3).is_identity());
+        assert_eq!(t.env(4).bandwidth_scale, 0.5);
+    }
+
+    #[test]
+    fn missing_columns_default_to_identity() {
+        let t = ScenarioTrace::from_csv("round\n0\n7\n", 5).unwrap();
+        assert!(t.env(7).is_identity());
+    }
+
+    #[test]
+    fn empty_and_header_only_traces_error() {
+        assert!(ScenarioTrace::from_csv("", 3).is_err());
+        assert!(ScenarioTrace::from_csv("# only a comment\n", 3).is_err());
+        let e = ScenarioTrace::from_csv("round,bw_scale\n", 3).unwrap_err();
+        assert!(e.to_string().contains("no rounds"), "{e:#}");
+        let e = ScenarioTrace::from_json_text(r#"{"schema":1,"rounds":[]}"#, 3).unwrap_err();
+        assert!(e.to_string().contains("no rounds"), "{e:#}");
+    }
+
+    #[test]
+    fn unsorted_and_duplicate_rounds_error() {
+        let e = ScenarioTrace::from_csv("round\n5\n3\n", 2).unwrap_err();
+        assert!(e.to_string().contains("strictly ascending"), "{e:#}");
+        let e = ScenarioTrace::from_csv("round\n3\n3\n", 2).unwrap_err();
+        assert!(e.to_string().contains("strictly ascending"), "{e:#}");
+        let e = ScenarioTrace::from_json_text(
+            r#"{"rounds":[{"round":2},{"round":1}]}"#,
+            2,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("strictly ascending"), "{e:#}");
+    }
+
+    #[test]
+    fn unknown_columns_error() {
+        let e = ScenarioTrace::from_csv("round,bandwidth\n0,1\n", 2).unwrap_err();
+        assert!(e.to_string().contains("unknown trace column"), "{e:#}");
+        let e = ScenarioTrace::from_csv("round,round\n0,0\n", 2).unwrap_err();
+        assert!(e.to_string().contains("duplicate trace column"), "{e:#}");
+        let e = ScenarioTrace::from_json_text(
+            r#"{"rounds":[{"round":0,"bw":0.5}]}"#,
+            2,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("unknown trace column"), "{e:#}");
+        let e = ScenarioTrace::from_json_text(r#"{"bogus":1,"rounds":[{"round":0}]}"#, 2)
+            .unwrap_err();
+        assert!(e.to_string().contains("unknown trace field"), "{e:#}");
+    }
+
+    #[test]
+    fn per_client_count_mismatch_errors() {
+        let e = ScenarioTrace::from_csv("round,q_scale\n0,1;2\n", 3).unwrap_err();
+        assert!(e.to_string().contains("per-client values"), "{e:#}");
+        let e = ScenarioTrace::from_csv("round,available\n0,1;0;1;1\n", 3).unwrap_err();
+        assert!(e.to_string().contains("per-client values"), "{e:#}");
+        let e = ScenarioTrace::from_json_text(
+            r#"{"rounds":[{"round":0,"deadline_scale":[0.5,0.5]}]}"#,
+            3,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("per-client values"), "{e:#}");
+        // declared M must match the replaying federation
+        let e = ScenarioTrace::from_json_text(r#"{"m":9,"rounds":[{"round":0}]}"#, 4)
+            .unwrap_err();
+        assert!(e.to_string().contains("recorded for M=9"), "{e:#}");
+    }
+
+    #[test]
+    fn malformed_values_error_not_panic() {
+        assert!(ScenarioTrace::from_csv("round,bw_scale\nzero,1\n", 2).is_err());
+        assert!(ScenarioTrace::from_csv("round,bw_scale\n0,nope\n", 2).is_err());
+        assert!(ScenarioTrace::from_csv("round,bw_scale\n0,-1\n", 2).is_err());
+        assert!(ScenarioTrace::from_csv("round,bw_scale\n0,inf\n", 2).is_err());
+        assert!(ScenarioTrace::from_csv("round,q_scale\n0,0\n", 2).is_err());
+        assert!(ScenarioTrace::from_csv("round,available\n0,maybe\n", 2).is_err());
+        // ragged row
+        assert!(ScenarioTrace::from_csv("round,bw_scale\n0\n", 2).is_err());
+        // per-client bandwidth is not representable
+        let e = ScenarioTrace::from_csv("round,bw_scale\n0,0.5;0.5\n", 2).unwrap_err();
+        assert!(e.to_string().contains("single global value"), "{e:#}");
+        // a round with nobody available can never train
+        let e = ScenarioTrace::from_csv("round,available\n0,0;0\n", 2).unwrap_err();
+        assert!(e.to_string().contains("at least one candidate"), "{e:#}");
+    }
+
+    #[test]
+    fn record_roundtrips_bitwise_through_both_formats() {
+        for kind in ScenarioKind::all() {
+            let s = Scenario::from_parts(kind.clone(), 77, 6).unwrap();
+            let envs = s.trace(20);
+            let t = ScenarioTrace::from_envs(&envs, 6).unwrap();
+            let from_csv = ScenarioTrace::from_csv(&t.to_csv(), 6).unwrap();
+            let from_json =
+                ScenarioTrace::from_json_text(&t.to_json().to_string_pretty(), 6).unwrap();
+            for back in [&from_csv, &from_json] {
+                for e in &envs {
+                    let r = back.env(e.round);
+                    assert_eq!(
+                        r.bandwidth_scale.to_bits(),
+                        e.bandwidth_scale.to_bits(),
+                        "{kind:?} r{}: bw",
+                        e.round
+                    );
+                    assert_eq!(r.available, e.available, "{kind:?} r{}", e.round);
+                    assert_eq!(
+                        bits(&r.compute_scale),
+                        bits(&e.compute_scale),
+                        "{kind:?} r{}: q",
+                        e.round
+                    );
+                    assert_eq!(
+                        bits(&r.deadline_scale),
+                        bits(&e.deadline_scale),
+                        "{kind:?} r{}: deadline",
+                        e.round
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_envs_rejects_foreign_federation_sizes() {
+        let envs = Scenario::from_parts(ScenarioKind::Fading, 1, 4).unwrap().trace(3);
+        assert!(ScenarioTrace::from_envs(&envs, 4).is_ok());
+        assert!(ScenarioTrace::from_envs(&envs, 5).is_err());
+        assert!(ScenarioTrace::from_envs(&[], 4).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_with_provenance() {
+        let envs = Scenario::from_parts(ScenarioKind::Stragglers, 5, 3).unwrap().trace(8);
+        let t = ScenarioTrace::from_envs(&envs, 3).unwrap();
+        for ext in ["csv", "json"] {
+            let path = std::env::temp_dir().join(format!("repro_trace_unit.{ext}"));
+            t.write(&path, Some(("stragglers", 5))).unwrap();
+            let back = ScenarioTrace::load(path.to_str().unwrap(), 3).unwrap();
+            assert_eq!(back, t, "{ext} file roundtrip");
+            std::fs::remove_file(&path).ok();
+        }
+        assert!(ScenarioTrace::load("/nonexistent/trace.csv", 3).is_err());
+    }
+
+    #[test]
+    fn bundled_example_trace_loads_at_any_federation_size() {
+        // the example under examples/traces/ uses global columns only, so
+        // it replays for the commag (M=50) and tiny-test (M=9) federations
+        for m in [50usize, 9, 1] {
+            let t = ScenarioTrace::load(BUNDLED, m)
+                .expect("bundled example trace must stay loadable");
+            assert_eq!(t.m(), m);
+            assert_eq!(t.first_round(), 0);
+            assert!(t.last_round() >= 40, "diurnal example should span 40+ rounds");
+            // the flash-crowd dip exists and every env is well-formed
+            let mut saw_dip = false;
+            for r in 0..=t.last_round() + 5 {
+                let e = t.env(r);
+                assert!(e.bandwidth_scale > 0.0 && e.bandwidth_scale <= 1.0);
+                assert_eq!(e.available_count(), m);
+                saw_dip |= e.bandwidth_scale < 0.5;
+            }
+            assert!(saw_dip, "example trace lost its load dip");
+        }
+    }
+}

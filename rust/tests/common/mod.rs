@@ -13,10 +13,21 @@ use repro::runtime::{Engine, Manifest};
 
 /// The engine over the default manifest, or `None` (with a skip note) when
 /// artifacts are absent or the PJRT client cannot start.
+///
+/// `REPRO_REQUIRE_ARTIFACTS=1` turns every would-be SKIP into a hard
+/// failure — the CI artifacts-equipped lane sets it so the differential /
+/// golden suites can never silently degrade back to skipping.
 pub fn try_engine() -> Option<Engine> {
+    let require = std::env::var("REPRO_REQUIRE_ARTIFACTS").map(|v| v == "1").unwrap_or(false);
     let manifest = match Manifest::load_default() {
         Ok(m) => m,
         Err(e) => {
+            if require {
+                panic!(
+                    "REPRO_REQUIRE_ARTIFACTS=1 but artifacts are missing \
+                     (run `make artifacts`): {e:#}"
+                );
+            }
             eprintln!("SKIP: artifacts not built (run `make artifacts`): {e:#}");
             return None;
         }
@@ -24,6 +35,9 @@ pub fn try_engine() -> Option<Engine> {
     match Engine::new(manifest) {
         Ok(e) => Some(e),
         Err(e) => {
+            if require {
+                panic!("REPRO_REQUIRE_ARTIFACTS=1 but the PJRT CPU client cannot start: {e:#}");
+            }
             eprintln!("SKIP: PJRT CPU client unavailable: {e:#}");
             None
         }

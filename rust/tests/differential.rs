@@ -15,8 +15,15 @@
 //!   `--client-jobs`; the `static` preset leaves every record bitwise
 //!   identical to a run with no scenario configured at all (the
 //!   pre-scenario-engine default path).
+//! * trace replay (ISSUE 5): exporting a synthetic preset's realized env
+//!   stream (`ScenarioTrace::from_envs` / `repro scenario record`) and
+//!   replaying it via `ScenarioKind::Trace` yields bitwise-identical
+//!   `RoundRecord`s across all four frameworks at `--jobs 2
+//!   --client-jobs 4`, through BOTH file formats.
 //!
-//! Requires `make artifacts`; SKIPs (stderr note) without it.
+//! Requires `make artifacts`; SKIPs (stderr note) without it —
+//! `REPRO_REQUIRE_ARTIFACTS=1` (the CI artifacts lane) turns any SKIP into
+//! a failure.
 
 mod common;
 
@@ -227,6 +234,73 @@ fn dynamic_scenarios_run_end_to_end_and_actually_perturb() {
                 assert_records_bitwise_eq(ra, rb, &format!("{}/{}", kind.name(), a.framework));
             }
         }
+    }
+}
+
+#[test]
+fn trace_record_replay_is_bitwise_identical_across_frameworks() {
+    // the ISSUE-5 acceptance gate: record the realized environment stream
+    // of a synthetic preset, replay it from a file via ScenarioKind::Trace,
+    // and every framework's records must be bitwise identical to the
+    // original run — at --jobs 2 --client-jobs 4, in both trace formats
+    use repro::experiments::{self, Budget};
+    use repro::scenario::{Scenario, ScenarioTrace};
+    let Some(engine) = try_engine() else { return };
+    let budget = Budget { splitme_rounds: 3, baseline_rounds: 3 };
+    let mut fading = tiny_cfg();
+    fading.scenario = "fading".into();
+    fading.client_jobs = 4;
+    let envs = Scenario::new(&fading).unwrap().trace(3);
+    let trace = ScenarioTrace::from_envs(&envs, fading.num_clients).unwrap();
+    let base = experiments::run_comparison_jobs(&engine, &fading, budget, false, 2).unwrap();
+    assert_eq!(base.len(), 4);
+    for ext in ["csv", "json"] {
+        let path = std::env::temp_dir().join(format!("repro_diff_trace_roundtrip.{ext}"));
+        trace.write(&path, Some(("fading", fading.seed))).unwrap();
+        let mut replay = fading.clone();
+        replay.scenario = format!("trace:{}", path.display());
+        let got = experiments::run_comparison_jobs(&engine, &replay, budget, false, 2).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(base.len(), got.len());
+        for (a, b) in base.iter().zip(&got) {
+            assert_eq!(a.framework, b.framework, "{ext}: deterministic ordering");
+            assert_eq!(a.records.len(), b.records.len(), "{ext}/{}", a.framework);
+            for (ra, rb) in a.records.iter().zip(&b.records) {
+                assert_records_bitwise_eq(
+                    ra,
+                    rb,
+                    &format!("trace-replay/{ext}/{}", a.framework),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn trace_shorter_than_run_holds_its_last_environment() {
+    // hold-last semantics end to end: a 2-round trace driving a 4-round run
+    // keeps replaying round 1's environment, and the records say so
+    use repro::scenario::{Scenario, ScenarioTrace};
+    let Some(engine) = try_engine() else { return };
+    let mut fading = tiny_cfg();
+    fading.scenario = "fading".into();
+    let envs = Scenario::new(&fading).unwrap().trace(2);
+    let trace = ScenarioTrace::from_envs(&envs, fading.num_clients).unwrap();
+    let path = std::env::temp_dir().join("repro_diff_trace_hold.csv");
+    trace.write(&path, None).unwrap();
+    let mut cfg = tiny_cfg();
+    cfg.scenario = format!("trace:{}", path.display());
+    let records = train_records(&engine, &cfg, FrameworkKind::SplitMe, 4);
+    std::fs::remove_file(&path).ok();
+    assert_eq!(records.len(), 4);
+    let last = envs.last().unwrap();
+    for r in &records[1..] {
+        assert_eq!(
+            r.env_bw_scale.to_bits(),
+            last.bandwidth_scale.to_bits(),
+            "round {} must hold the trace's final environment",
+            r.round
+        );
     }
 }
 

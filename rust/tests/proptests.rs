@@ -119,13 +119,16 @@ fn scenario_envs_are_pure_and_well_formed() {
     // seed, M, round): env() is a pure function, vectors are M-long, scales
     // are positive/finite, and at least one candidate is always available
     check("scenario env purity + well-formedness", 150, |g| {
-        let kind = *g.choose(&ScenarioKind::all());
+        let kind = g.choose(&ScenarioKind::all()).clone();
         let seed = g.usize_in(0..=100_000) as u64;
         let m = g.usize_in(1..=40);
-        let s = Scenario::from_parts(kind, seed, m);
+        let s = Scenario::from_parts(kind.clone(), seed, m)
+            .map_err(|e| anyhow::anyhow!("{e:#}"))?;
         let round = g.usize_in(0..=60);
         let a = s.env(round);
-        let b = Scenario::from_parts(kind, seed, m).env(round);
+        let b = Scenario::from_parts(kind.clone(), seed, m)
+            .map_err(|e| anyhow::anyhow!("{e:#}"))?
+            .env(round);
         prop_assert!(a == b, "{kind:?} env not reproducible at round {round}");
         prop_assert!(a.round == round);
         prop_assert!(a.available.len() == m && a.compute_scale.len() == m);
@@ -155,7 +158,7 @@ fn scenario_effective_topology_respects_selection_invariants() {
         cfg.num_clients = g.usize_in(2..=40);
         cfg.b_min = 1.0 / cfg.num_clients as f64;
         cfg.seed = g.usize_in(0..=9_999) as u64;
-        let kind = *g.choose(&ScenarioKind::all());
+        let kind = g.choose(&ScenarioKind::all()).clone();
         cfg.scenario = kind.name().to_string();
         let topo = Topology::build(&cfg);
         let env = Scenario::new(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?
@@ -178,6 +181,66 @@ fn scenario_effective_topology_respects_selection_invariants() {
                 r.id
             );
             prop_assert!(env.available[r.id], "selected an unavailable client {}", r.id);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn trace_record_replay_roundtrips_bitwise() {
+    // the record→replay contract of the trace engine (ISSUE 5): serialize
+    // any preset's realized env stream through BOTH formats, parse it back,
+    // and every replayed round — plus the held rounds past the end — must
+    // be bitwise identical to the recording
+    use repro::scenario::ScenarioTrace;
+    check("trace: record -> serialize -> parse -> env is bitwise", 60, |g| {
+        let kind = g.choose(&ScenarioKind::all()).clone();
+        let seed = g.usize_in(0..=50_000) as u64;
+        let m = g.usize_in(1..=25);
+        let rounds = g.usize_in(1..=40);
+        let s = Scenario::from_parts(kind.clone(), seed, m)
+            .map_err(|e| anyhow::anyhow!("{e:#}"))?;
+        let envs = s.trace(rounds);
+        let tr = ScenarioTrace::from_envs(&envs, m).map_err(|e| anyhow::anyhow!("{e:#}"))?;
+        let back_csv =
+            ScenarioTrace::from_csv(&tr.to_csv(), m).map_err(|e| anyhow::anyhow!("csv: {e:#}"))?;
+        let back_json = ScenarioTrace::from_json_text(&tr.to_json().to_string_pretty(), m)
+            .map_err(|e| anyhow::anyhow!("json: {e:#}"))?;
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for (tag, back) in [("csv", &back_csv), ("json", &back_json)] {
+            for e in &envs {
+                let r = back.env(e.round);
+                prop_assert!(
+                    r.bandwidth_scale.to_bits() == e.bandwidth_scale.to_bits(),
+                    "{kind:?}/{tag} r{}: bw {} != {}",
+                    e.round,
+                    r.bandwidth_scale,
+                    e.bandwidth_scale
+                );
+                prop_assert!(r.available == e.available, "{kind:?}/{tag} r{}: avail", e.round);
+                prop_assert!(
+                    bits(&r.compute_scale) == bits(&e.compute_scale),
+                    "{kind:?}/{tag} r{}: q_scale",
+                    e.round
+                );
+                prop_assert!(
+                    bits(&r.deadline_scale) == bits(&e.deadline_scale),
+                    "{kind:?}/{tag} r{}: deadline_scale",
+                    e.round
+                );
+            }
+            // hold-last past the recorded horizon
+            let held = back.env(rounds + g.usize_in(1..=20));
+            let last = envs.last().expect("rounds >= 1");
+            prop_assert!(
+                held.bandwidth_scale.to_bits() == last.bandwidth_scale.to_bits(),
+                "{kind:?}/{tag}: held bw"
+            );
+            prop_assert!(held.available == last.available, "{kind:?}/{tag}: held avail");
+            prop_assert!(
+                bits(&held.compute_scale) == bits(&last.compute_scale),
+                "{kind:?}/{tag}: held q"
+            );
         }
         Ok(())
     });
