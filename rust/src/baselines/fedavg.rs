@@ -9,9 +9,10 @@
 use anyhow::Result;
 
 use crate::fl::{
-    aggregate_indexed, resolve_client_jobs, run_clients, run_steps, sample_from,
+    aggregate_indexed, resolve_client_jobs, run_clients, run_steps, sample_from, state,
     ExperimentContext, Framework, RoundOutcome,
 };
+use crate::jsonio::Json;
 use crate::oran::{self, RicProfile, UploadSizes};
 use crate::runtime::Tensor;
 use crate::scenario::RoundEnv;
@@ -90,9 +91,6 @@ impl Framework for FedAvg {
         let ids = sample_from(rng, "fedavg_select", round, &env.available_ids(), cfg.fedavg_k);
         let e = cfg.fedavg_e;
 
-        let (wf, train_loss) = Self::train_selected(ctx, &self.wf, &ids, e)?;
-        self.wf = wf;
-
         // uniform bandwidth among the K selected; full-model upload each
         let selected: Vec<&RicProfile> = ids
             .iter()
@@ -108,22 +106,76 @@ impl Framework for FedAvg {
             oran::round_latency(&selected, &fracs, &sizes, e, topo_r.bandwidth_bps, 0.0, scale);
         latency.server_phase = 0.0; // no rApp training in plain FL
 
-        let comp_cost: f64 = selected
-            .iter()
-            .map(|r| e as f64 * r.q_c * scale * cfg.p_tr)
-            .sum();
+        // fault layer: resolve the shared per-round events against this
+        // round's selection; the uniform uplink time bounds each client's
+        // retry budget (slack = deadline - compute - uplink)
+        let uplink = sizes[0].total() * 8.0 / (fracs[0] * topo_r.bandwidth_bps);
+        let fate = ctx.faults.round(round).resolve(
+            &ids,
+            |m| {
+                let r = topo_r.by_id(m).expect("resolved from this round's selection");
+                r.t_round - e as f64 * r.q_c * scale - uplink
+            },
+            cfg.retry_backoff_s,
+        );
+        let survivors = fate.survivors();
+        let quorum_miss = survivors.len() < cfg.fault_quorum;
+        let train_loss = if quorum_miss {
+            // sub-quorum: skip the aggregation, keep the global model — the
+            // round is recorded (costs paid), never a panic
+            f32::NAN
+        } else {
+            let (wf, loss) = Self::train_selected(ctx, &self.wf, &survivors, e)?;
+            self.wf = wf;
+            loss
+        };
+
+        // a clean round keeps the historical accounting expressions (the
+        // bitwise `faults=none` gate); faulty rounds charge per-fate: each
+        // performed attempt resends the payload, only computing clients
+        // burn compute, and the slowest retry backoff stretches the round
+        let comm_bytes: f64 = if fate.is_clean() {
+            sizes.iter().map(|s| s.total()).sum()
+        } else {
+            fate.fates.iter().zip(&sizes).map(|(f, s)| f.attempts as f64 * s.total()).sum()
+        };
+        let comp_cost: f64 = if fate.is_clean() {
+            selected.iter().map(|r| e as f64 * r.q_c * scale * cfg.p_tr).sum()
+        } else {
+            selected
+                .iter()
+                .zip(&fate.fates)
+                .filter(|(_, f)| f.computed)
+                .map(|(r, _)| e as f64 * r.q_c * scale * cfg.p_tr)
+                .sum()
+        };
+        if fate.max_backoff > 0.0 {
+            latency.max_uplink += fate.max_backoff;
+        }
         Ok(RoundOutcome {
             selected_ids: ids.clone(),
             e,
-            comm_bytes: sizes.iter().map(|s| s.total()).sum(),
+            comm_bytes,
             latency,
             comm_cost: oran::comm_cost(&fracs, topo_r.bandwidth_bps, cfg.p_c),
             comp_cost,
             train_loss,
+            dropouts: fate.dropouts,
+            retries: fate.retries,
+            quorum_miss,
         })
     }
 
     fn full_model(&mut self, _ctx: &ExperimentContext) -> Result<Tensor> {
         Ok(self.wf.clone())
+    }
+
+    fn save_state(&self) -> Json {
+        Json::obj(vec![("wf", state::tensor_json(&self.wf))])
+    }
+
+    fn load_state(&mut self, s: &Json) -> Result<()> {
+        self.wf = state::tensor_from(s.get("wf")?)?;
+        Ok(())
     }
 }

@@ -11,7 +11,8 @@ use anyhow::Result;
 
 use crate::allocation::solve_p2_at;
 use crate::baselines::fedavg::FedAvg;
-use crate::fl::{ExperimentContext, Framework, RoundOutcome};
+use crate::fl::{state, ExperimentContext, Framework, RoundOutcome};
+use crate::jsonio::Json;
 use crate::oran::{self, RicProfile, UploadSizes};
 use crate::runtime::Tensor;
 use crate::scenario::RoundEnv;
@@ -47,7 +48,7 @@ impl Framework for OranFed {
         &mut self,
         ctx: &ExperimentContext,
         _rng: &RngPool,
-        _round: usize,
+        round: usize,
         env: &RoundEnv,
     ) -> Result<RoundOutcome> {
         let cfg = &ctx.cfg;
@@ -73,30 +74,101 @@ impl Framework for OranFed {
 
         // bandwidth allocation at fixed E (round-effective B), no server side
         let alloc = solve_p2_at(cfg, topo_r.bandwidth_bps, &selected, &sizes, e, false, scale, false);
-        self.selector.observe(alloc.latency.max_uplink);
 
+        // fault layer: each selected client's retry budget is its deadline
+        // slack after compute + its ALLOCATED uplink time (water-filling
+        // fractions, not uniform shares)
         let ids: Vec<usize> = selected.iter().map(|r| r.id).collect();
-        let (wf, train_loss) = FedAvg::train_selected(ctx, &self.wf, &ids, e)?;
-        self.wf = wf;
+        let fate = ctx.faults.round(round).resolve(
+            &ids,
+            |m| {
+                let i = ids.iter().position(|&x| x == m).expect("resolved from this selection");
+                let r = selected[i];
+                let uplink = sizes[i].total() * 8.0 / (alloc.fracs[i] * topo_r.bandwidth_bps);
+                r.t_round - e as f64 * r.q_c * scale - uplink
+            },
+            cfg.retry_backoff_s,
+        );
+        let survivors = fate.survivors();
+        let quorum_miss = survivors.len() < cfg.fault_quorum;
+
+        // failure history feedback: deprioritize repeatedly-failing RICs in
+        // the next selection (all-success rounds keep the history empty and
+        // the selection bitwise identical to the history-free path)
+        for f in &fate.fates {
+            if f.delivered {
+                self.selector.record_success(f.id);
+            } else {
+                self.selector.record_failure(f.id);
+            }
+        }
+        // the measured uplink the estimator sees includes any retry backoff
+        // the round actually suffered
+        let measured = if fate.max_backoff > 0.0 {
+            alloc.latency.max_uplink + fate.max_backoff
+        } else {
+            alloc.latency.max_uplink
+        };
+        self.selector.observe(measured);
+
+        let train_loss = if quorum_miss {
+            f32::NAN
+        } else {
+            let (wf, loss) = FedAvg::train_selected(ctx, &self.wf, &survivors, e)?;
+            self.wf = wf;
+            loss
+        };
 
         let mut latency = alloc.latency;
         latency.server_phase = 0.0;
-        let comp_cost: f64 = selected
-            .iter()
-            .map(|r| e as f64 * r.q_c * scale * cfg.p_tr)
-            .sum();
+        if fate.max_backoff > 0.0 {
+            latency.max_uplink += fate.max_backoff;
+        }
+        // clean rounds keep the historical accounting expressions verbatim
+        // (the bitwise `faults=none` gate)
+        let comm_bytes: f64 = if fate.is_clean() {
+            sizes.iter().map(|s| s.total()).sum()
+        } else {
+            fate.fates.iter().zip(&sizes).map(|(f, s)| f.attempts as f64 * s.total()).sum()
+        };
+        let comp_cost: f64 = if fate.is_clean() {
+            selected.iter().map(|r| e as f64 * r.q_c * scale * cfg.p_tr).sum()
+        } else {
+            selected
+                .iter()
+                .zip(&fate.fates)
+                .filter(|(_, f)| f.computed)
+                .map(|(r, _)| e as f64 * r.q_c * scale * cfg.p_tr)
+                .sum()
+        };
         Ok(RoundOutcome {
             selected_ids: ids,
             e,
-            comm_bytes: sizes.iter().map(|s| s.total()).sum(),
+            comm_bytes,
             latency,
             comm_cost: oran::comm_cost(&alloc.fracs, topo_r.bandwidth_bps, cfg.p_c),
             comp_cost,
             train_loss,
+            dropouts: fate.dropouts,
+            retries: fate.retries,
+            quorum_miss,
         })
     }
 
     fn full_model(&mut self, _ctx: &ExperimentContext) -> Result<Tensor> {
         Ok(self.wf.clone())
+    }
+
+    fn save_state(&self) -> Json {
+        Json::obj(vec![
+            ("wf", state::tensor_json(&self.wf)),
+            ("selector", state::selector_json(&self.selector)),
+        ])
+    }
+
+    fn load_state(&mut self, s: &Json) -> Result<()> {
+        self.wf = state::tensor_from(s.get("wf")?)?;
+        state::selector_load(&mut self.selector, s.get("selector")?)?;
+        Ok(())
     }
 }

@@ -15,9 +15,10 @@
 use anyhow::Result;
 
 use crate::fl::{
-    aggregate_indexed, resolve_client_jobs, run_clients, sample_from, ExperimentContext,
+    aggregate_indexed, resolve_client_jobs, run_clients, sample_from, state, ExperimentContext,
     Framework, RoundOutcome,
 };
+use crate::jsonio::Json;
 use crate::oran::{self, RicProfile, UploadSizes};
 use crate::runtime::{Arg, Tensor};
 use crate::scenario::RoundEnv;
@@ -64,6 +65,24 @@ impl Framework for VanillaSfl {
         let topo_r = env.apply(&ctx.topo);
         let ids = sample_from(rng, "sfl_select", round, &env.available_ids(), cfg.sfl_k);
         let e = cfg.sfl_e;
+
+        // fault layer: resolve the shared per-round events before the real
+        // compute so non-surviving clients' discarded work is never
+        // dispatched. Uniform-bandwidth uplink of the half-model bounds the
+        // retry budget (slack = deadline - compute - uplink)
+        let half_bytes = ctx.client_model_bytes();
+        let uplink = half_bytes * 8.0 / ((1.0 / ids.len() as f64) * topo_r.bandwidth_bps);
+        let fate = ctx.faults.round(round).resolve(
+            &ids,
+            |m| {
+                let r = topo_r.by_id(m).expect("resolved from this round's selection");
+                r.t_round - e as f64 * (r.q_c + r.q_s) - uplink
+            },
+            cfg.retry_backoff_s,
+        );
+        let survivors = fate.survivors();
+        let quorum_miss = survivors.len() < cfg.fault_quorum;
+
         let eta = ctx.eta_c();
         let fwd = ctx.plan.role("client_fwd")?;
         let server_step = ctx.plan.role("sfl_server_step")?;
@@ -75,9 +94,11 @@ impl Framework for VanillaSfl {
         // identical to the sequential path (tests/differential.rs)
         let wc0 = &self.wc;
         let ws0 = &self.ws;
-        let jobs = resolve_client_jobs(cfg.client_jobs, ids.len());
-        let halves = run_clients(ids.len(), jobs, |i| {
-            let m = ids[i];
+        let jobs = resolve_client_jobs(cfg.client_jobs, survivors.len());
+        // sub-quorum: the round is skipped — no training dispatch at all
+        let train_n = if quorum_miss { 0 } else { survivors.len() };
+        let halves = run_clients(train_n, jobs, |i| {
+            let m = survivors[i];
             let shard = &ctx.shards[m].data;
             let mut wc_m = wc0.clone();
             let mut ws_m = ws0.clone();
@@ -107,7 +128,9 @@ impl Framework for VanillaSfl {
             Ok(ClientHalves { wc: wc_m, ws: ws_m, loss, steps: e })
         })?;
 
-        // deterministic index-ordered reduce
+        // deterministic index-ordered reduce over the survivors; a
+        // sub-quorum round keeps both global halves untouched (skip, not
+        // panic)
         let mut loss_sum = 0f32;
         let mut loss_n = 0usize;
         let mut wc_parts = Vec::with_capacity(halves.len());
@@ -118,8 +141,13 @@ impl Framework for VanillaSfl {
             wc_parts.push((i, h.wc));
             ws_parts.push((i, h.ws));
         }
-        self.wc = aggregate_indexed(wc_parts)?;
-        self.ws = aggregate_indexed(ws_parts)?;
+        let train_loss = if quorum_miss {
+            f32::NAN
+        } else {
+            self.wc = aggregate_indexed(wc_parts)?;
+            self.ws = aggregate_indexed(ws_parts)?;
+            loss_sum / loss_n.max(1) as f32
+        };
 
         // uniform bandwidth among K; uplink = E smashed batches + half-model
         let selected: Vec<&RicProfile> = ids
@@ -132,23 +160,71 @@ impl Framework for VanillaSfl {
             ids.len()
         ];
         let per_update = ctx.smashed_batch_bytes();
-        let latency = oran::round_latency(
+        let mut latency = oran::round_latency(
             &selected, &fracs, &sizes, e, topo_r.bandwidth_bps, per_update, 1.0,
         );
+
+        // clean rounds keep the historical accounting expressions verbatim
+        // (the bitwise `faults=none` gate); faulty rounds charge per fate —
+        // computing clients' E smashed-batch pings happened even when their
+        // half-model upload was lost, each performed upload attempt resends
+        // the half-model, crashed clients burn nothing, and the slowest
+        // retry backoff stretches the round
+        let comm_bytes: f64 = if fate.is_clean() {
+            sizes.iter().map(|s| s.total()).sum::<f64>() + per_update * (e * ids.len()) as f64
+        } else {
+            fate.fates
+                .iter()
+                .zip(&sizes)
+                .map(|(f, s)| {
+                    let pings = if f.computed { per_update * e as f64 } else { 0.0 };
+                    pings + f.attempts as f64 * s.total()
+                })
+                .sum()
+        };
+        let comp_cost = if fate.is_clean() {
+            oran::comp_cost(&selected, e, cfg.p_tr)
+        } else {
+            let computed: Vec<&RicProfile> = selected
+                .iter()
+                .zip(&fate.fates)
+                .filter(|(_, f)| f.computed)
+                .map(|(r, _)| *r)
+                .collect();
+            oran::comp_cost(&computed, e, cfg.p_tr)
+        };
+        if fate.max_backoff > 0.0 {
+            latency.max_uplink += fate.max_backoff;
+        }
 
         Ok(RoundOutcome {
             selected_ids: ids.clone(),
             e,
-            comm_bytes: sizes.iter().map(|s| s.total()).sum::<f64>()
-                + per_update * (e * ids.len()) as f64,
+            comm_bytes,
             latency,
             comm_cost: oran::comm_cost(&fracs, topo_r.bandwidth_bps, cfg.p_c),
-            comp_cost: oran::comp_cost(&selected, e, cfg.p_tr),
-            train_loss: loss_sum / loss_n.max(1) as f32,
+            comp_cost,
+            train_loss,
+            dropouts: fate.dropouts,
+            retries: fate.retries,
+            quorum_miss,
         })
     }
 
     fn full_model(&mut self, ctx: &ExperimentContext) -> Result<Tensor> {
         ctx.init.concat_full(&self.wc, &self.ws)
+    }
+
+    fn save_state(&self) -> Json {
+        Json::obj(vec![
+            ("wc", state::tensor_json(&self.wc)),
+            ("ws", state::tensor_json(&self.ws)),
+        ])
+    }
+
+    fn load_state(&mut self, s: &Json) -> Result<()> {
+        self.wc = state::tensor_from(s.get("wc")?)?;
+        self.ws = state::tensor_from(s.get("ws")?)?;
+        Ok(())
     }
 }

@@ -1,10 +1,18 @@
 //! Tiny CLI substrate (the offline environment has no `clap`): positional
 //! subcommand + `--flag[=| ]value` options with typed accessors and
-//! "unknown flag" errors.
+//! "unknown flag" errors. Every malformed-argv failure carries
+//! [`ReproError::InvalidInput`], so `main` exits with code 2 (not the
+//! generic 1) on user mistakes.
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
+
+use crate::errors::ReproError;
+
+fn invalid(msg: String) -> anyhow::Error {
+    anyhow::Error::new(ReproError::InvalidInput(msg))
+}
 
 #[derive(Debug, Clone)]
 pub struct Args {
@@ -39,7 +47,7 @@ impl Args {
             }
         }
         if cmd.is_empty() {
-            bail!("missing subcommand");
+            return Err(invalid("missing subcommand".into()));
         }
         Ok((cmd, Args { positional, flags, seen: Default::default() }))
     }
@@ -60,21 +68,38 @@ impl Args {
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.raw(key) {
             None => Ok(default),
-            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| invalid(format!("--{key} expects an integer, got {v:?}"))),
+        }
+    }
+
+    /// `usize_or` without a default: `None` when the flag is absent.
+    pub fn opt_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.raw(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| invalid(format!("--{key} expects an integer, got {v:?}"))),
         }
     }
 
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.raw(key) {
             None => Ok(default),
-            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| invalid(format!("--{key} expects an integer, got {v:?}"))),
         }
     }
 
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
         match self.raw(key) {
             None => Ok(default),
-            Some(v) => v.parse().with_context(|| format!("--{key} expects a number, got {v:?}")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| invalid(format!("--{key} expects a number, got {v:?}"))),
         }
     }
 
@@ -103,7 +128,7 @@ impl Args {
         let seen = self.seen.borrow();
         for k in self.flags.keys() {
             if !seen.contains(k) {
-                bail!("unknown flag --{k}");
+                return Err(invalid(format!("unknown flag --{k}")));
             }
         }
         Ok(())
@@ -157,13 +182,28 @@ mod tests {
     fn unknown_flag_detected() {
         let (_, a) = Args::parse(&argv("run --typo 3")).unwrap();
         let _ = a.usize_or("rounds", 1);
-        assert!(a.finish().is_err());
+        let e = a.finish().unwrap_err();
+        assert_eq!(ReproError::exit_code_of(&e), 2);
     }
 
     #[test]
-    fn bad_value_errors() {
-        let (_, a) = Args::parse(&argv("run --rounds abc")).unwrap();
-        assert!(a.usize_or("rounds", 1).is_err());
+    fn bad_value_errors_are_typed_invalid_input() {
+        let (_, a) = Args::parse(&argv("run --rounds abc --seed x --rho y")).unwrap();
+        for e in [
+            a.usize_or("rounds", 1).unwrap_err(),
+            a.opt_usize("rounds").unwrap_err(),
+            a.u64_or("seed", 1).unwrap_err(),
+            a.f64_or("rho", 0.5).unwrap_err(),
+        ] {
+            assert_eq!(ReproError::exit_code_of(&e), 2, "untyped: {e:#}");
+        }
+    }
+
+    #[test]
+    fn opt_usize_distinguishes_absent_from_given() {
+        let (_, a) = Args::parse(&argv("experiment --rounds 5")).unwrap();
+        assert_eq!(a.opt_usize("rounds").unwrap(), Some(5));
+        assert_eq!(a.opt_usize("splitme-rounds").unwrap(), None);
     }
 
     #[test]

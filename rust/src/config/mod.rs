@@ -94,6 +94,21 @@ pub struct SimConfig {
     /// `scenario::trace`). `static` is today's stationary substrate and
     /// the default — see `scenario::ScenarioKind`
     pub scenario: String,
+    /// fault-injection preset (`none|dropout|flaky_uplink|crash_loop`).
+    /// `none` (the default) draws no randomness and keeps the historical
+    /// bitwise-identical code path — see `faults::FaultKind` and
+    /// PERF.md §fault-model
+    pub faults: String,
+    /// minimum surviving clients for a round's aggregation to proceed;
+    /// below it the round is recorded as a quorum miss (skipped), never a
+    /// panic. Must be >= 1 (an empty aggregation is undefined)
+    pub fault_quorum: usize,
+    /// base retry backoff (s): upload retry k waits retry_backoff_s·2^(k-1),
+    /// budgeted against the client's remaining deadline slack
+    pub retry_backoff_s: f64,
+    /// snapshot RunState to disk every K rounds (0 = disabled); the path is
+    /// a CLI concern (`repro run --checkpoint`)
+    pub checkpoint_every: usize,
     /// evaluate every k rounds (1 = every round, figures need 1)
     pub eval_every: usize,
     /// ridge regularizer gamma of Eq 8 (Step-4 inversion)
@@ -151,6 +166,10 @@ impl SimConfig {
             data_difficulty: 1.0,
             seed: 20250710,
             scenario: "static".into(),
+            faults: "none".into(),
+            fault_quorum: 1,
+            retry_backoff_s: 0.05,
+            checkpoint_every: 0,
             eval_every: 1,
             ridge_gamma: 1.0,
             inversion_clients: 12,
@@ -196,9 +215,16 @@ impl SimConfig {
         }
     }
 
+    /// Load a user-supplied config file: unreadable paths carry
+    /// [`crate::errors::ReproError::Io`], malformed JSON
+    /// [`crate::errors::ReproError::InvalidInput`] (CLI exit codes 3/2).
     pub fn from_json_file(path: &str) -> Result<Self> {
-        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        let cfg = Self::from_json(&Json::parse(&text).context("parsing SimConfig json")?)?;
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::Error::new(crate::errors::ReproError::io(path, e)))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::Error::new(crate::errors::ReproError::invalid(format!("{e:#}"))))
+            .with_context(|| format!("parsing SimConfig json {path}"))?;
+        let cfg = Self::from_json(&j)?;
         cfg.validate()?;
         Ok(cfg)
     }
@@ -228,6 +254,10 @@ impl SimConfig {
             ("data_difficulty", Json::num(self.data_difficulty)),
             ("seed", Json::num(self.seed as f64)),
             ("scenario", Json::str(self.scenario.clone())),
+            ("faults", Json::str(self.faults.clone())),
+            ("fault_quorum", Json::num(self.fault_quorum as f64)),
+            ("retry_backoff_s", Json::num(self.retry_backoff_s)),
+            ("checkpoint_every", Json::num(self.checkpoint_every as f64)),
             ("eval_every", Json::num(self.eval_every as f64)),
             ("ridge_gamma", Json::num(self.ridge_gamma)),
             ("inversion_clients", Json::num(self.inversion_clients as f64)),
@@ -280,6 +310,10 @@ impl SimConfig {
         if let Some(v) = j.opt("data_difficulty") { cfg.data_difficulty = v.as_f64()?; }
         if let Some(v) = j.opt("seed") { cfg.seed = v.as_f64()? as u64; }
         if let Some(v) = j.opt("scenario") { cfg.scenario = v.as_str()?.to_string(); }
+        if let Some(v) = j.opt("faults") { cfg.faults = v.as_str()?.to_string(); }
+        if let Some(v) = j.opt("fault_quorum") { cfg.fault_quorum = v.as_usize()?; }
+        if let Some(v) = j.opt("retry_backoff_s") { cfg.retry_backoff_s = v.as_f64()?; }
+        if let Some(v) = j.opt("checkpoint_every") { cfg.checkpoint_every = v.as_usize()?; }
         if let Some(v) = j.opt("eval_every") { cfg.eval_every = v.as_usize()?; }
         if let Some(v) = j.opt("ridge_gamma") { cfg.ridge_gamma = v.as_f64()?; }
         if let Some(v) = j.opt("inversion_clients") { cfg.inversion_clients = v.as_usize()?; }
@@ -339,6 +373,17 @@ impl SimConfig {
             .parse::<crate::scenario::ScenarioKind>()
             .map(|_| ())
             .map_err(|e| anyhow::anyhow!("invalid scenario: {e}"))?;
+        // same early-failure treatment for the fault preset spelling
+        self.faults
+            .parse::<crate::faults::FaultKind>()
+            .map(|_| ())
+            .map_err(|e| anyhow::anyhow!("invalid faults: {e}"))?;
+        if self.fault_quorum == 0 {
+            bail!("fault_quorum must be >= 1 (an empty aggregation is undefined)");
+        }
+        if !(self.retry_backoff_s.is_finite() && self.retry_backoff_s >= 0.0) {
+            bail!("retry_backoff_s must be finite and >= 0; got {}", self.retry_backoff_s);
+        }
         Ok(())
     }
 
@@ -389,6 +434,43 @@ mod tests {
         let mut c = SimConfig::commag();
         c.scenario = "typo_hour".into();
         assert!(c.validate().is_err());
+        let mut c = SimConfig::commag();
+        c.faults = "typo_loop".into();
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::commag();
+        c.fault_quorum = 0;
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::commag();
+        c.retry_backoff_s = f64::NAN;
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::commag();
+        c.retry_backoff_s = -1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn fault_fields_default_off_and_round_trip() {
+        let c = SimConfig::commag();
+        assert_eq!(c.faults, "none");
+        assert_eq!(c.fault_quorum, 1);
+        assert_eq!(c.checkpoint_every, 0);
+        let mut c = SimConfig::commag();
+        c.faults = "flaky_uplink".into();
+        c.fault_quorum = 3;
+        c.retry_backoff_s = 0.02;
+        c.checkpoint_every = 10;
+        assert!(c.validate().is_ok());
+        let back =
+            SimConfig::from_json(&Json::parse(&c.to_json().to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back.faults, "flaky_uplink");
+        assert_eq!(back.fault_quorum, 3);
+        assert_eq!(back.retry_backoff_s, 0.02);
+        assert_eq!(back.checkpoint_every, 10);
+        // partial override files keep the quiet defaults
+        let j = Json::parse(r#"{"preset": "commag", "num_clients": 12, "b_min": 0.05}"#).unwrap();
+        let c = SimConfig::from_json(&j).unwrap();
+        assert_eq!(c.faults, "none");
+        assert_eq!(c.fault_quorum, 1);
     }
 
     #[test]

@@ -1,0 +1,286 @@
+//! Checkpoint/resume: periodic `RunState` snapshots (PERF.md §fault-model).
+//!
+//! A checkpoint freezes everything a resumed run needs to continue **bitwise
+//! identically** to the uninterrupted run: the full config, the framework
+//! kind, the next round index (the RNG "cursor" — every stream in the crate
+//! is a pure function of `(seed, label, round)`, so no generator state needs
+//! saving), the simulated clock, every emitted `RoundRecord`, and the
+//! framework's own parameter blob ([`Framework::save_state`]). All floats are
+//! serialized as bit-pattern hex (the golden-snapshot convention) so the
+//! round trip is exact, NaN included.
+//!
+//! Derived caches (params-version memos, frozen literals) are deliberately
+//! NOT snapshotted: memo reuse is bitwise identical to recompute, so a cold
+//! cache reproduces warm-cache records bit for bit.
+//!
+//! [`Framework::save_state`]: crate::fl::Framework::save_state
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::{FrameworkKind, SimConfig};
+use crate::errors::ReproError;
+use crate::fl::state;
+use crate::jsonio::Json;
+use crate::metrics::RoundRecord;
+
+/// Bumped on any incompatible change to the checkpoint layout; loaders
+/// reject other versions instead of misreading them.
+pub const SCHEMA_VERSION: usize = 1;
+
+/// A loaded (or about-to-be-written) run snapshot.
+pub struct Checkpoint {
+    pub cfg: SimConfig,
+    pub kind: FrameworkKind,
+    /// the first round the resumed run executes (rounds 0..next_round are
+    /// already in `records`)
+    pub next_round: usize,
+    /// simulated clock at the snapshot, bit-exact
+    pub clock: f64,
+    pub records: Vec<RoundRecord>,
+    /// the framework's parameter blob, passed through verbatim
+    pub framework_state: Json,
+}
+
+/// One `RoundRecord` with every float bit-hexed (`wall_secs` included — the
+/// resumed run must reproduce the record VECTOR exactly, and wall_secs is
+/// part of it even though bitwise comparisons elsewhere exclude it).
+pub fn record_to_json(r: &RoundRecord) -> Json {
+    Json::obj(vec![
+        ("round", Json::num(r.round as f64)),
+        ("selected", Json::num(r.selected as f64)),
+        ("e", Json::num(r.e as f64)),
+        ("comm_bytes", state::f64_json(r.comm_bytes)),
+        ("round_time", state::f64_json(r.round_time)),
+        ("sim_time", state::f64_json(r.sim_time)),
+        ("comm_cost", state::f64_json(r.comm_cost)),
+        ("comp_cost", state::f64_json(r.comp_cost)),
+        ("total_cost", state::f64_json(r.total_cost)),
+        ("train_loss", state::f32_json(r.train_loss)),
+        ("accuracy", state::f32_json(r.accuracy)),
+        ("test_loss", state::f32_json(r.test_loss)),
+        ("wall_secs", state::f64_json(r.wall_secs)),
+        ("env_bw_scale", state::f64_json(r.env_bw_scale)),
+        ("env_available", Json::num(r.env_available as f64)),
+        ("env_stragglers", Json::num(r.env_stragglers as f64)),
+        ("env_deadline_scale", state::f64_json(r.env_deadline_scale)),
+        ("env_dropouts", Json::num(r.env_dropouts as f64)),
+        ("retries", Json::num(r.retries as f64)),
+        ("quorum_miss", Json::num(r.quorum_miss as f64)),
+    ])
+}
+
+pub fn record_from_json(j: &Json) -> Result<RoundRecord> {
+    Ok(RoundRecord {
+        round: j.get("round")?.as_usize()?,
+        selected: j.get("selected")?.as_usize()?,
+        e: j.get("e")?.as_usize()?,
+        comm_bytes: state::f64_from(j.get("comm_bytes")?)?,
+        round_time: state::f64_from(j.get("round_time")?)?,
+        sim_time: state::f64_from(j.get("sim_time")?)?,
+        comm_cost: state::f64_from(j.get("comm_cost")?)?,
+        comp_cost: state::f64_from(j.get("comp_cost")?)?,
+        total_cost: state::f64_from(j.get("total_cost")?)?,
+        train_loss: state::f32_from(j.get("train_loss")?)?,
+        accuracy: state::f32_from(j.get("accuracy")?)?,
+        test_loss: state::f32_from(j.get("test_loss")?)?,
+        wall_secs: state::f64_from(j.get("wall_secs")?)?,
+        env_bw_scale: state::f64_from(j.get("env_bw_scale")?)?,
+        env_available: j.get("env_available")?.as_usize()?,
+        env_stragglers: j.get("env_stragglers")?.as_usize()?,
+        env_deadline_scale: state::f64_from(j.get("env_deadline_scale")?)?,
+        env_dropouts: j.get("env_dropouts")?.as_usize()?,
+        retries: j.get("retries")?.as_usize()?,
+        quorum_miss: j.get("quorum_miss")?.as_usize()?,
+    })
+}
+
+impl Checkpoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::num(SCHEMA_VERSION as f64)),
+            ("framework", Json::str(self.kind.name())),
+            ("config", self.cfg.to_json()),
+            ("next_round", Json::num(self.next_round as f64)),
+            ("clock", state::f64_json(self.clock)),
+            ("records", Json::arr(self.records.iter().map(record_to_json).collect())),
+            ("state", self.framework_state.clone()),
+        ])
+    }
+
+    /// Parse a checkpoint document. Malformed content carries
+    /// [`ReproError::InvalidInput`] (CLI exit code 2).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let schema = j.get("schema")?.as_usize()?;
+        if schema != SCHEMA_VERSION {
+            return Err(anyhow::Error::new(ReproError::invalid(format!(
+                "checkpoint schema {schema} (this build reads {SCHEMA_VERSION})"
+            ))));
+        }
+        let kind: FrameworkKind = j.get("framework")?.as_str()?.parse()?;
+        let cfg = SimConfig::from_json(j.get("config")?)?;
+        cfg.validate()?;
+        let next_round = j.get("next_round")?.as_usize()?;
+        let clock = state::f64_from(j.get("clock")?)?;
+        if !clock.is_finite() || clock < 0.0 {
+            return Err(anyhow::Error::new(ReproError::invalid(format!(
+                "checkpoint clock must be finite >= 0, got {clock}"
+            ))));
+        }
+        let records: Vec<RoundRecord> = j
+            .get("records")?
+            .as_arr()?
+            .iter()
+            .map(record_from_json)
+            .collect::<Result<_>>()?;
+        if records.len() != next_round {
+            return Err(anyhow::Error::new(ReproError::invalid(format!(
+                "checkpoint holds {} records but claims next_round {next_round}",
+                records.len()
+            ))));
+        }
+        Ok(Self {
+            cfg,
+            kind,
+            next_round,
+            clock,
+            records,
+            framework_state: j.get("state")?.clone(),
+        })
+    }
+
+    /// Write the snapshot; filesystem failures carry [`ReproError::Io`]
+    /// (CLI exit code 3).
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .map_err(|e| anyhow::Error::new(ReproError::io(path.display(), e)))
+            .with_context(|| format!("writing checkpoint {path:?}"))
+    }
+
+    /// Read + parse a snapshot from disk: unreadable paths carry
+    /// [`ReproError::Io`], malformed content [`ReproError::InvalidInput`].
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::Error::new(ReproError::io(path.display(), e)))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::Error::new(ReproError::invalid(format!("{e:#}"))))
+            .with_context(|| format!("parsing checkpoint {path:?}"))?;
+        Self::from_json(&j).with_context(|| format!("loading checkpoint {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            selected: 7,
+            e: 3,
+            comm_bytes: 1.5e6,
+            round_time: 0.062_500_000_000_000_01, // not representable in decimal text
+            sim_time: 0.1875,
+            comm_cost: 2.0,
+            comp_cost: 0.75,
+            total_cost: 2.75,
+            train_loss: 0.5,
+            accuracy: f32::NAN, // skipped eval survives the round trip
+            test_loss: f32::NAN,
+            wall_secs: 0.031_25,
+            env_bw_scale: 0.9,
+            env_available: 40,
+            env_stragglers: 2,
+            env_deadline_scale: 1.1,
+            env_dropouts: 1,
+            retries: 4,
+            quorum_miss: 0,
+        }
+    }
+
+    fn bits(r: &RoundRecord) -> Vec<u64> {
+        vec![
+            r.comm_bytes.to_bits(),
+            r.round_time.to_bits(),
+            r.sim_time.to_bits(),
+            r.comm_cost.to_bits(),
+            r.comp_cost.to_bits(),
+            r.total_cost.to_bits(),
+            r.train_loss.to_bits() as u64,
+            r.accuracy.to_bits() as u64,
+            r.test_loss.to_bits() as u64,
+            r.wall_secs.to_bits(),
+            r.env_bw_scale.to_bits(),
+            r.env_deadline_scale.to_bits(),
+        ]
+    }
+
+    #[test]
+    fn records_round_trip_bitwise_through_text() {
+        let r = rec(5);
+        // full text cycle: the on-disk form, not just the Json tree
+        let text = record_to_json(&r).to_string_pretty();
+        let back = record_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(bits(&back), bits(&r));
+        assert_eq!(
+            (back.round, back.selected, back.e, back.env_available),
+            (r.round, r.selected, r.e, r.env_available)
+        );
+        assert_eq!(
+            (back.env_stragglers, back.env_dropouts, back.retries, back.quorum_miss),
+            (r.env_stragglers, r.env_dropouts, r.retries, r.quorum_miss)
+        );
+    }
+
+    #[test]
+    fn checkpoint_round_trips_and_validates() {
+        let ck = Checkpoint {
+            cfg: SimConfig::commag(),
+            kind: FrameworkKind::Sfl,
+            next_round: 2,
+            clock: 0.375,
+            records: vec![rec(0), rec(1)],
+            framework_state: Json::obj(vec![("wc", Json::str("deadbeef"))]),
+        };
+        let back = Checkpoint::from_json(&Json::parse(&ck.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back.kind.name(), "sfl");
+        assert_eq!(back.next_round, 2);
+        assert_eq!(back.clock.to_bits(), ck.clock.to_bits());
+        assert_eq!(back.records.len(), 2);
+        assert_eq!(back.framework_state.get("wc").unwrap().as_str().unwrap(), "deadbeef");
+    }
+
+    #[test]
+    fn loader_rejects_corrupt_checkpoints_with_typed_errors() {
+        let ck = Checkpoint {
+            cfg: SimConfig::commag(),
+            kind: FrameworkKind::FedAvg,
+            next_round: 1,
+            records: vec![rec(0)],
+            clock: 0.1,
+            framework_state: Json::obj(vec![]),
+        };
+        // wrong schema
+        let mut j = ck.to_json();
+        if let Json::Obj(entries) = &mut j {
+            entries[0].1 = Json::num(99.0);
+        }
+        let e = Checkpoint::from_json(&j).unwrap_err();
+        assert_eq!(ReproError::exit_code_of(&e), 2);
+        // record count / cursor mismatch
+        let mut j = ck.to_json();
+        if let Json::Obj(entries) = &mut j {
+            let slot = entries.iter_mut().find(|(k, _)| k == "next_round").unwrap();
+            slot.1 = Json::num(3.0);
+        }
+        let e = Checkpoint::from_json(&j).unwrap_err();
+        assert_eq!(ReproError::exit_code_of(&e), 2);
+        // missing file -> Io
+        let e = Checkpoint::load("/nonexistent/dir/ck.json").unwrap_err();
+        assert_eq!(ReproError::exit_code_of(&e), 3);
+    }
+}

@@ -13,6 +13,10 @@
 //! so the records this runner emits are bitwise independent of every
 //! parallelism knob.
 
+pub mod checkpoint;
+
+use std::path::{Path, PathBuf};
+
 use anyhow::Result;
 
 use crate::baselines;
@@ -34,6 +38,11 @@ pub struct RunState {
     /// in ONE place ([`RngPool::for_framework`]) so no sharing or thread
     /// interleaving can perturb them
     pub pool: RngPool,
+    /// the first round [`Runner::train`] executes — 0 for fresh runs, the
+    /// snapshot cursor after a resume. Doubles as the run's RNG "cursor":
+    /// every stream is a pure function of `(seed, label, round)`, so no
+    /// generator state needs checkpointing
+    pub next_round: usize,
 }
 
 impl RunState {
@@ -43,6 +52,7 @@ impl RunState {
             clock: Clock::new(),
             records: Vec::new(),
             pool: RngPool::for_framework(cfg.seed, kind.name()),
+            next_round: 0,
         }
     }
 }
@@ -71,6 +81,9 @@ pub struct Runner<'e> {
     state: RunState,
     /// optional live progress callback (round record) — used by the CLI
     pub progress: Option<Box<dyn Fn(&RoundRecord)>>,
+    /// when set, [`Runner::train`] snapshots the run here every
+    /// `cfg.checkpoint_every` rounds (and `resume` continues from it)
+    pub checkpoint: Option<PathBuf>,
 }
 
 impl<'e> Runner<'e> {
@@ -89,17 +102,37 @@ impl<'e> Runner<'e> {
     fn assemble(ctx: CtxHandle<'e>, kind: FrameworkKind) -> Result<Self> {
         let framework = baselines::build(kind, ctx.get())?;
         let state = RunState::new(kind, &ctx.get().cfg);
-        Ok(Self { ctx, framework, state, progress: None })
+        Ok(Self { ctx, framework, state, progress: None, checkpoint: None })
+    }
+
+    /// Rebuild a runner from a [`checkpoint::Checkpoint`] on disk. The
+    /// snapshot carries its own config, so the caller supplies only the
+    /// engine; training continues at the saved round, bitwise identically
+    /// to the uninterrupted run (tests/differential.rs).
+    pub fn resume(engine: &'e Engine, path: impl AsRef<Path>) -> Result<Self> {
+        let ck = checkpoint::Checkpoint::load(path.as_ref())?;
+        let ctx = ExperimentContext::new(engine, &ck.cfg)?;
+        let mut runner = Self::assemble(CtxHandle::Owned(Box::new(ctx)), ck.kind)?;
+        runner.framework.load_state(&ck.framework_state)?;
+        runner.state.next_round = ck.next_round;
+        runner.state.clock.restore(ck.clock);
+        runner.state.records = ck.records;
+        runner.checkpoint = Some(path.as_ref().to_path_buf());
+        Ok(runner)
     }
 
     pub fn ctx(&self) -> &ExperimentContext<'e> {
         self.ctx.get()
     }
 
+    pub fn kind(&self) -> FrameworkKind {
+        self.state.kind
+    }
+
     /// Run `rounds` global rounds (early-stopping at `target_accuracy` when
     /// `stop_at_target` is set). Returns the run summary with all records.
     pub fn train(&mut self, rounds: usize) -> Result<RunSummary> {
-        for round in 0..rounds {
+        for round in self.state.next_round..rounds {
             let rec = self.step(round)?;
             let hit = !rec.accuracy.is_nan()
                 && rec.accuracy >= self.ctx.get().cfg.target_accuracy;
@@ -107,11 +140,37 @@ impl<'e> Runner<'e> {
                 cb(&rec);
             }
             self.state.records.push(rec);
+            self.state.next_round = round + 1;
+            self.maybe_checkpoint()?;
             if hit && self.ctx.get().cfg.stop_at_target {
                 break;
             }
         }
         Ok(self.summary())
+    }
+
+    /// Snapshot after rounds K, 2K, ... when a checkpoint path is set and
+    /// `cfg.checkpoint_every = K > 0`.
+    fn maybe_checkpoint(&self) -> Result<()> {
+        let Some(path) = &self.checkpoint else { return Ok(()) };
+        let every = self.ctx.get().cfg.checkpoint_every;
+        if every == 0 || self.state.next_round % every != 0 {
+            return Ok(());
+        }
+        self.write_checkpoint(path)
+    }
+
+    /// Write the current run snapshot unconditionally.
+    pub fn write_checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
+        checkpoint::Checkpoint {
+            cfg: self.ctx.get().cfg.clone(),
+            kind: self.state.kind,
+            next_round: self.state.next_round,
+            clock: self.state.clock.now(),
+            records: self.state.records.clone(),
+            framework_state: self.framework.save_state(),
+        }
+        .write(path)
     }
 
     /// One global round: train + clock + cost accounting + (periodic) eval.
@@ -157,6 +216,9 @@ impl<'e> Runner<'e> {
             env_available: env.available_count(),
             env_stragglers: env.straggler_count(),
             env_deadline_scale: env.mean_deadline_scale(),
+            env_dropouts: out.dropouts,
+            retries: out.retries,
+            quorum_miss: out.quorum_miss as usize,
         })
     }
 

@@ -1,0 +1,104 @@
+//! Typed error taxonomy (`ReproError`) threaded to CLI exit codes.
+//!
+//! The crate keeps `anyhow` for ergonomic context chains, but failures that
+//! callers (CI, sweep drivers, the xApp harness) need to *classify* — bad
+//! user input, I/O on user-supplied paths, a panic captured inside an
+//! executor job — carry a `ReproError` somewhere in the chain.
+//! `main()` walks the chain with [`ReproError::exit_code_of`] and maps the
+//! first typed error to a distinct nonzero exit code:
+//!
+//! | code | meaning                                              |
+//! |------|------------------------------------------------------|
+//! | 1    | unclassified error (anyhow chain without a ReproError) |
+//! | 2    | invalid user input: CLI flag, config/trace/checkpoint content |
+//! | 3    | I/O failure on a user-supplied path                  |
+//! | 4    | a job panicked inside the executor (panic-isolated)  |
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReproError {
+    /// Malformed user input: an unparseable CLI flag, an invalid config
+    /// field, a trace/checkpoint file whose *content* is bad.
+    InvalidInput(String),
+    /// Filesystem I/O failed on a user-supplied path.
+    Io { path: String, message: String },
+    /// A panic captured inside an executor job (`executor::try_run_indexed`):
+    /// the job failed, the rest of the batch completed.
+    JobPanic { index: usize, message: String },
+}
+
+impl ReproError {
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            Self::InvalidInput(_) => 2,
+            Self::Io { .. } => 3,
+            Self::JobPanic { .. } => 4,
+        }
+    }
+
+    /// The exit code for an anyhow chain: the first `ReproError` found wins;
+    /// an untyped chain maps to the generic failure code 1.
+    pub fn exit_code_of(e: &anyhow::Error) -> i32 {
+        e.chain()
+            .find_map(|c| c.downcast_ref::<ReproError>())
+            .map(|r| r.exit_code())
+            .unwrap_or(1)
+    }
+
+    /// Wrap a `std::io::Result` context into the typed taxonomy.
+    pub fn io(path: impl fmt::Display, err: impl fmt::Display) -> Self {
+        Self::Io { path: path.to_string(), message: err.to_string() }
+    }
+
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Self::InvalidInput(msg.into())
+    }
+}
+
+impl fmt::Display for ReproError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::InvalidInput(msg) => write!(f, "invalid input: {msg}"),
+            Self::Io { path, message } => write!(f, "io error on {path}: {message}"),
+            Self::JobPanic { index, message } => {
+                write!(f, "job {index} panicked: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ReproError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::Context;
+
+    #[test]
+    fn exit_codes_are_distinct_and_stable() {
+        assert_eq!(ReproError::invalid("x").exit_code(), 2);
+        assert_eq!(ReproError::io("p", "e").exit_code(), 3);
+        assert_eq!(ReproError::JobPanic { index: 0, message: "boom".into() }.exit_code(), 4);
+    }
+
+    #[test]
+    fn exit_code_of_walks_context_chains() {
+        let e = anyhow::Error::new(ReproError::invalid("bad flag")).context("parsing argv");
+        assert_eq!(ReproError::exit_code_of(&e), 2);
+        let e = anyhow::anyhow!("plain untyped failure");
+        assert_eq!(ReproError::exit_code_of(&e), 1);
+        let e = anyhow::Error::new(ReproError::JobPanic { index: 3, message: "x".into() })
+            .context("running comparison")
+            .context("experiment all");
+        assert_eq!(ReproError::exit_code_of(&e), 4);
+    }
+
+    #[test]
+    fn display_messages_are_actionable() {
+        let msg = ReproError::io("/tmp/x.json", "No such file or directory").to_string();
+        assert!(msg.contains("/tmp/x.json"));
+        let msg = ReproError::JobPanic { index: 7, message: "index out of bounds".into() }.to_string();
+        assert!(msg.contains("job 7"));
+    }
+}

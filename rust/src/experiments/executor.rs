@@ -12,8 +12,13 @@
 //! total worker threads approach `jobs x client_jobs` (PERF.md
 //! §client-parallelism has oversubscription guidance).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
+
+use anyhow::Result;
+
+use crate::errors::ReproError;
 
 /// Positive-integer worker-count override from an environment variable,
 /// `None` when unset/unparsable/zero. Shared by every jobs knob
@@ -52,7 +57,9 @@ pub fn resolve_jobs(requested: usize, n: usize) -> usize {
 /// next index from a shared counter, so heterogeneous job costs balance
 /// automatically. `jobs <= 1` degenerates to a plain sequential loop on the
 /// calling thread (the bitwise reference path of the paired-determinism
-/// test). A panicking job propagates out of the scope join.
+/// test). A panicking job propagates out of the scope join — fallible
+/// batch work should go through [`try_run_indexed`], which panic-isolates
+/// each job instead.
 pub fn run_indexed<T, F>(n: usize, jobs: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -87,6 +94,37 @@ where
                 .expect("worker filled every slot")
         })
         .collect()
+}
+
+/// Best-effort description of a captured panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Panic-isolated [`run_indexed`] for fallible jobs: a job that panics
+/// yields `Err(ReproError::JobPanic { index, .. })` in its own slot instead
+/// of tearing down the whole scope, so one poisoned client/grid point fails
+/// only itself — every other job still runs to completion and returns its
+/// result. Ordering and scheduling semantics are exactly `run_indexed`'s.
+pub fn try_run_indexed<T, F>(n: usize, jobs: usize, f: F) -> Vec<Result<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    run_indexed(n, jobs, |i| {
+        catch_unwind(AssertUnwindSafe(|| f(i))).unwrap_or_else(|payload| {
+            Err(anyhow::Error::new(ReproError::JobPanic {
+                index: i,
+                message: panic_message(&*payload),
+            }))
+        })
+    })
 }
 
 #[cfg(test)]
@@ -127,6 +165,49 @@ mod tests {
         assert_eq!(resolve_with(0, 8, 5), 5); // never more workers than jobs
         assert_eq!(resolve_with(0, 0, 5), 1); // never 0
         assert_eq!(resolve_with(2, 8, 0), 1); // zero jobs still yields 1
+    }
+
+    #[test]
+    fn try_run_isolates_a_panicking_job() {
+        // quiet the default panic hook for the intentional panics below
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        for jobs in [1, 4] {
+            let out = try_run_indexed(8, jobs, |i| {
+                if i == 3 {
+                    panic!("poisoned client {i}");
+                }
+                Ok(i * 2)
+            });
+            assert_eq!(out.len(), 8);
+            for (i, r) in out.iter().enumerate() {
+                if i == 3 {
+                    let e = r.as_ref().expect_err("job 3 must fail");
+                    let typed = e
+                        .downcast_ref::<ReproError>()
+                        .expect("panic must surface as a typed ReproError");
+                    assert_eq!(typed.exit_code(), 4);
+                    let msg = typed.to_string();
+                    assert!(msg.contains("job 3") && msg.contains("poisoned client"), "{msg}");
+                } else {
+                    assert_eq!(*r.as_ref().expect("healthy jobs complete"), i * 2);
+                }
+            }
+        }
+        std::panic::set_hook(prev);
+    }
+
+    #[test]
+    fn try_run_passes_plain_errors_through_untyped() {
+        let out = try_run_indexed(3, 2, |i| {
+            if i == 1 {
+                anyhow::bail!("ordinary failure");
+            }
+            Ok(i)
+        });
+        assert!(out[0].is_ok() && out[2].is_ok());
+        let e = out[1].as_ref().unwrap_err();
+        assert!(e.downcast_ref::<ReproError>().is_none());
     }
 
     #[test]

@@ -55,7 +55,10 @@ pub fn run_comparison(
 /// [`run_comparison`] with an explicit worker count (`jobs`; 0 = auto,
 /// 1 = strictly sequential). The shared context is built once; each worker
 /// borrows it and owns only its thin `RunState` + framework params. Result
-/// order is [`FrameworkKind::all`] order regardless of scheduling.
+/// order is [`FrameworkKind::all`] order regardless of scheduling. Jobs run
+/// panic-isolated ([`executor::try_run_indexed`]): one framework's panic
+/// surfaces as a typed [`crate::errors::ReproError::JobPanic`], not an abort
+/// of the whole comparison process.
 pub fn run_comparison_jobs(
     engine: &Engine,
     cfg: &SimConfig,
@@ -65,7 +68,7 @@ pub fn run_comparison_jobs(
 ) -> Result<Vec<RunSummary>> {
     let ctx = ExperimentContext::new(engine, cfg)?;
     let kinds = FrameworkKind::all();
-    let results = executor::run_indexed(
+    let results = executor::try_run_indexed(
         kinds.len(),
         executor::resolve_jobs(jobs, kinds.len()),
         |i| -> Result<RunSummary> {
@@ -308,6 +311,65 @@ pub fn scenario_table(matrix: &[(String, Vec<RunSummary>)]) {
     }
 }
 
+/// Fault-matrix experiment: the paired four-framework comparison repeated
+/// under each fault preset, `none` first as the clean control (bitwise the
+/// default run). Each preset run builds its own shared context with the
+/// same seed, so the frameworks inside one preset observe the identical
+/// fault trace and the cross-preset deltas isolate the failure model.
+pub fn run_fault_matrix(
+    engine: &Engine,
+    base: &SimConfig,
+    budget: Budget,
+    verbose: bool,
+    jobs: usize,
+) -> Result<Vec<(String, Vec<RunSummary>)>> {
+    let mut out = Vec::with_capacity(crate::faults::FaultKind::all().len());
+    for kind in crate::faults::FaultKind::all() {
+        let mut cfg = base.clone();
+        cfg.faults = kind.name().to_string();
+        let summaries = run_comparison_jobs(engine, &cfg, budget, verbose, jobs)?;
+        out.push((kind.name().to_string(), summaries));
+    }
+    Ok(out)
+}
+
+/// Write the per-round CSVs/JSONs of a fault matrix under `dir/faults_<preset>/`.
+pub fn write_fault_matrix(
+    matrix: &[(String, Vec<RunSummary>)],
+    dir: impl AsRef<Path>,
+) -> Result<()> {
+    for (name, summaries) in matrix {
+        write_all(summaries, dir.as_ref().join(format!("faults_{name}")))?;
+    }
+    Ok(())
+}
+
+/// Print the fault-preset × framework robustness table: dropout/retry
+/// pressure, skipped rounds, and the accuracy each framework still reaches.
+pub fn fault_table(matrix: &[(String, Vec<RunSummary>)]) {
+    series_header("Fault matrix — robustness under injected failures");
+    println!(
+        "{:>14} {:>8} {:>7} {:>8} {:>9} {:>8} {:>7} {:>10} {:>9}",
+        "faults", "fw", "rounds", "best_acc", "dropouts", "retries", "q_miss", "R_co", "sim_t(s)"
+    );
+    for (name, summaries) in matrix {
+        for s in summaries {
+            println!(
+                "{:>14} {:>8} {:>7} {:>8.3} {:>9} {:>8} {:>7} {:>10.1} {:>9.2}",
+                name,
+                s.framework,
+                s.rounds,
+                s.best_accuracy,
+                s.total_dropouts,
+                s.total_retries,
+                s.quorum_misses,
+                s.total_comm_cost,
+                s.total_sim_time
+            );
+        }
+    }
+}
+
 /// Print the paper-vs-measured headline claims (EXPERIMENTS.md source).
 pub fn headline(summaries: &[RunSummary]) {
     series_header("Headline claims");
@@ -356,6 +418,9 @@ mod tests {
             env_available: 8,
             env_stragglers: 0,
             env_deadline_scale: 1.0,
+            env_dropouts: 0,
+            retries: 0,
+            quorum_miss: 0,
         }
     }
 

@@ -112,7 +112,7 @@ pub fn grid_jobs(
         .iter()
         .flat_map(|&b| rhos.iter().map(move |&rho| (b, rho)))
         .collect();
-    executor::run_indexed(points.len(), executor::resolve_jobs(jobs, points.len()), |i| {
+    executor::try_run_indexed(points.len(), executor::resolve_jobs(jobs, points.len()), |i| {
         let (b, rho) = points[i];
         let mut cfg = base.clone();
         cfg.bandwidth_bps = b;

@@ -1,0 +1,526 @@
+//! Deterministic fault injection: client dropouts, flaky uplinks, and crash
+//! loops as per-`(round, client)` events derived from dedicated `RngPool`
+//! substreams — the failure-side twin of the scenario engine
+//! (`scenario::Scenario`). FedORA and O-RANFed (PAPERS.md) treat near-RT-RIC
+//! unreliability and deadline misses as first-class selection/allocation
+//! signals; this module supplies the reproducible failure traces those
+//! mechanisms are exercised against.
+//!
+//! # Determinism & fairness contract (PERF.md §fault-model)
+//!
+//! [`Faults::round`] is a **pure function of `(seed, faults, M, round)`**:
+//! every draw comes from `"faults/…"`-labeled substreams of the ROOT-seed
+//! pool (never a per-framework pool) keyed by the round index, and
+//! Markov-chain state replays from round 0 like the scenario chains.
+//! Consequences:
+//!
+//! * all four frameworks of a paired comparison observe the **identical**
+//!   fault trace, so the comparison stays paired under failure;
+//! * no mutable state exists to be perturbed by `--jobs`/`--client-jobs`
+//!   scheduling — the trace is bitwise reproducible at any worker count
+//!   (tests/differential.rs gates this);
+//! * the `none` preset (the default) draws **no randomness at all** and
+//!   yields the all-clean event set, so the default path stays bitwise
+//!   identical to the pre-fault-layer behavior.
+//!
+//! Event semantics (resolved against each framework's own selected set and
+//! deadlines by [`RoundFaults::resolve`]):
+//!
+//! * **mid-round dropout** — the client finishes local compute, then
+//!   vanishes before uploading (compute cost paid, nothing delivered, no
+//!   retry possible);
+//! * **flaky uplink** — upload attempts fail transiently; each retry waits
+//!   an exponential backoff `retry_backoff_s · 2^(k-1)` and a retry whose
+//!   cumulative backoff would blow the client's deadline slack is abandoned
+//!   (deadline-budgeted retries);
+//! * **crash loop** — a rounds-long crash episode (per-client Markov chain):
+//!   dispatch to the client fails for the whole round, so it neither
+//!   computes nor uploads.
+
+use anyhow::{bail, Result};
+
+use crate::config::SimConfig;
+use crate::sim::RngPool;
+
+/// Named fault presets selectable via `SimConfig.faults` / `--faults`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// no faults (the default): bitwise identical to the pre-fault layer
+    None,
+    /// mid-round dropouts: clients vanish after local compute
+    Dropout,
+    /// transiently failing uploads, retried under the deadline budget
+    FlakyUplink,
+    /// rounds-long crash episodes: dispatch fails for the whole round
+    CrashLoop,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Dropout => "dropout",
+            Self::FlakyUplink => "flaky_uplink",
+            Self::CrashLoop => "crash_loop",
+        }
+    }
+
+    /// Canonical config spelling: parses back to `self` via `FromStr`.
+    pub fn spec(&self) -> String {
+        self.name().to_string()
+    }
+
+    /// Every preset, `none` first (the `experiment faults` matrix order —
+    /// the `none` column is the control).
+    pub fn all() -> [FaultKind; 4] {
+        [Self::None, Self::Dropout, Self::FlakyUplink, Self::CrashLoop]
+    }
+
+    /// The presets that actually inject failures.
+    pub fn active() -> [FaultKind; 3] {
+        [Self::Dropout, Self::FlakyUplink, Self::CrashLoop]
+    }
+}
+
+impl std::str::FromStr for FaultKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "off" => Ok(Self::None),
+            "dropout" | "dropouts" => Ok(Self::Dropout),
+            "flaky_uplink" | "flaky-uplink" | "flakyuplink" | "flaky" => Ok(Self::FlakyUplink),
+            "crash_loop" | "crash-loop" | "crashloop" | "crash" => Ok(Self::CrashLoop),
+            other => bail!("unknown fault preset {other:?} (none|dropout|flaky_uplink|crash_loop)"),
+        }
+    }
+}
+
+// --- preset parameters (documented in PERF.md §fault-model) ---
+
+/// dropout: P(selected client vanishes after local compute) per round
+const DROPOUT_P: f64 = 0.15;
+
+/// flaky_uplink: P(one upload attempt fails), and the attempt cap — a
+/// client whose first `FLAKY_MAX_ATTEMPTS` attempts all fail is lost this
+/// round regardless of the remaining deadline budget
+const FLAKY_P_FAIL: f64 = 0.35;
+pub const FLAKY_MAX_ATTEMPTS: usize = 4;
+
+/// crash_loop: P(healthy→crashed), P(crashed→healthy) per round
+const CRASH_P_ON: f64 = 0.08;
+const CRASH_P_OFF: f64 = 0.45;
+
+/// The fault events of one round, indexed by client id. Produced by
+/// [`Faults::round`]; identical across frameworks and parallelism knobs by
+/// construction. `upload_attempts[m]` is the number of attempts client m's
+/// upload needs to land (1 = clean, 0 = hopeless — more than
+/// [`FLAKY_MAX_ATTEMPTS`] would be needed).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RoundFaults {
+    pub round: usize,
+    /// client finishes local compute, then never uploads (no retry)
+    pub drop_after_compute: Vec<bool>,
+    /// attempts needed for the upload to land (1 = clean, 0 = hopeless)
+    pub upload_attempts: Vec<u8>,
+    /// crash episode: dispatch fails all round (no compute, no upload)
+    pub crashed: Vec<bool>,
+}
+
+impl RoundFaults {
+    /// The all-clean event set (what the `none` preset always returns).
+    pub fn clean(round: usize, m: usize) -> Self {
+        Self {
+            round,
+            drop_after_compute: vec![false; m],
+            upload_attempts: vec![1; m],
+            crashed: vec![false; m],
+        }
+    }
+
+    /// True iff no client experiences any fault this round.
+    pub fn is_clean(&self) -> bool {
+        self.drop_after_compute.iter().all(|&d| !d)
+            && self.upload_attempts.iter().all(|&a| a == 1)
+            && self.crashed.iter().all(|&c| !c)
+    }
+
+    /// Resolve this round's events against one framework's selected set:
+    /// which clients compute, how many upload attempts each performs under
+    /// the exponential-backoff budget (`slack(m)` = seconds of deadline
+    /// headroom client m has left for retries; retry k waits
+    /// `backoff0 · 2^(k-1)`, and a retry whose cumulative backoff would
+    /// exceed the slack is abandoned), and who survives to aggregation.
+    pub fn resolve(
+        &self,
+        selected: &[usize],
+        slack: impl Fn(usize) -> f64,
+        backoff0: f64,
+    ) -> FaultOutcome {
+        let mut fates = Vec::with_capacity(selected.len());
+        let mut retries = 0usize;
+        let mut dropouts = 0usize;
+        let mut max_backoff = 0f64;
+        for &m in selected {
+            let fate = if self.crashed[m] {
+                dropouts += 1;
+                ClientFate { id: m, computed: false, attempts: 0, delivered: false, backoff: 0.0 }
+            } else if self.drop_after_compute[m] {
+                dropouts += 1;
+                ClientFate { id: m, computed: true, attempts: 0, delivered: false, backoff: 0.0 }
+            } else {
+                let needed = self.upload_attempts[m] as usize;
+                if needed == 1 {
+                    ClientFate { id: m, computed: true, attempts: 1, delivered: true, backoff: 0.0 }
+                } else {
+                    let budget = slack(m).max(0.0);
+                    // most retries the deadline budget can absorb: largest r
+                    // with backoff0·(2^r - 1) <= budget, capped at the
+                    // attempt cap (a hopeless upload stops retrying there)
+                    let want = if needed == 0 { FLAKY_MAX_ATTEMPTS - 1 } else { needed - 1 };
+                    let mut fit = 0usize;
+                    let mut cum = 0f64;
+                    while fit < want {
+                        let wait = backoff0 * (1u64 << fit) as f64;
+                        if cum + wait > budget {
+                            break;
+                        }
+                        cum += wait;
+                        fit += 1;
+                    }
+                    retries += fit;
+                    max_backoff = max_backoff.max(cum);
+                    let delivered = needed != 0 && fit == needed - 1;
+                    if !delivered {
+                        dropouts += 1;
+                    }
+                    ClientFate { id: m, computed: true, attempts: 1 + fit, delivered, backoff: cum }
+                }
+            };
+            fates.push(fate);
+        }
+        FaultOutcome { fates, retries, dropouts, max_backoff }
+    }
+}
+
+/// What happened to one selected client under this round's faults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientFate {
+    pub id: usize,
+    /// ran its local training phase (false only for a crash episode)
+    pub computed: bool,
+    /// upload attempts actually performed (0 = never attempted)
+    pub attempts: usize,
+    /// the upload landed — this client's update reaches aggregation
+    pub delivered: bool,
+    /// total retry backoff this client waited (seconds)
+    pub backoff: f64,
+}
+
+/// One framework's resolved fault outcome for one round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultOutcome {
+    /// one fate per selected client, in selected order
+    pub fates: Vec<ClientFate>,
+    /// upload retries performed across all clients (only ones that fit the
+    /// deadline budget; the first attempt is not a retry)
+    pub retries: usize,
+    /// selected clients whose update never reached aggregation
+    pub dropouts: usize,
+    /// max per-client retry backoff (seconds) — uploads run in parallel, so
+    /// the slowest client's backoff is what stretches the round
+    pub max_backoff: f64,
+}
+
+impl FaultOutcome {
+    /// Clients whose updates reached aggregation, in selected order.
+    pub fn survivors(&self) -> Vec<usize> {
+        self.fates.iter().filter(|f| f.delivered).map(|f| f.id).collect()
+    }
+
+    /// True iff every selected client computed, uploaded once, and landed —
+    /// the fault-aware accounting then reduces bitwise to the clean one, and
+    /// callers keep the historical (pre-fault-layer) code path.
+    pub fn is_clean(&self) -> bool {
+        self.fates.iter().all(|f| f.computed && f.delivered && f.attempts == 1)
+    }
+}
+
+/// The fault process of one experiment: pure, cheap, shared. Built once per
+/// `ExperimentContext` from the root `(seed, faults, M)` triple;
+/// [`Faults::round`] derives any round's events on demand.
+#[derive(Debug, Clone)]
+pub struct Faults {
+    kind: FaultKind,
+    /// federation size M (event vectors are indexed by client id)
+    m: usize,
+    /// root-seed pool: fault streams live in the `"faults/…"` label
+    /// namespace, disjoint from scenario/topology/init/framework streams
+    pool: RngPool,
+}
+
+impl Faults {
+    pub fn new(cfg: &SimConfig) -> Result<Self> {
+        Ok(Self::from_parts(cfg.faults.parse()?, cfg.seed, cfg.num_clients))
+    }
+
+    pub fn from_parts(kind: FaultKind, seed: u64, m: usize) -> Self {
+        Self { kind, m, pool: RngPool::new(seed) }
+    }
+
+    pub fn kind(&self) -> FaultKind {
+        self.kind
+    }
+
+    /// True for the `none` preset (callers may skip fault bookkeeping).
+    pub fn is_none(&self) -> bool {
+        self.kind == FaultKind::None
+    }
+
+    /// The fault events of `round`: a pure function of
+    /// `(seed, faults, M, round)`. The `none` preset draws no randomness at
+    /// all; `crash_loop` replays its per-client Markov chains from round 0
+    /// (the scenario engine's statelessness trade, PERF.md §fault-model).
+    pub fn round(&self, round: usize) -> RoundFaults {
+        match self.kind {
+            FaultKind::None => RoundFaults::clean(round, self.m),
+            FaultKind::Dropout => self.dropout(round),
+            FaultKind::FlakyUplink => self.flaky_uplink(round),
+            FaultKind::CrashLoop => self.crash_loop(round),
+        }
+    }
+
+    /// The full fault trace of `rounds` rounds (test/figure helper).
+    pub fn trace(&self, rounds: usize) -> Vec<RoundFaults> {
+        (0..rounds).map(|r| self.round(r)).collect()
+    }
+
+    /// Independent per-(round, client) Bernoulli dropouts.
+    fn dropout(&self, round: usize) -> RoundFaults {
+        let mut rng = self.pool.stream("faults/dropout", round as u64);
+        let mut ev = RoundFaults::clean(round, self.m);
+        for d in ev.drop_after_compute.iter_mut() {
+            *d = rng.f64() < DROPOUT_P;
+        }
+        ev
+    }
+
+    /// Per-(round, client) geometric attempt counts: each attempt fails
+    /// independently with `FLAKY_P_FAIL`; a client whose first
+    /// `FLAKY_MAX_ATTEMPTS` attempts all fail is hopeless (0) this round.
+    fn flaky_uplink(&self, round: usize) -> RoundFaults {
+        let mut rng = self.pool.stream("faults/flaky_uplink", round as u64);
+        let mut ev = RoundFaults::clean(round, self.m);
+        for a in ev.upload_attempts.iter_mut() {
+            let mut attempts = 0usize;
+            loop {
+                attempts += 1;
+                if rng.f64() >= FLAKY_P_FAIL {
+                    break;
+                }
+                if attempts == FLAKY_MAX_ATTEMPTS {
+                    attempts = 0; // every attempt inside the cap failed
+                    break;
+                }
+            }
+            *a = attempts as u8;
+        }
+        ev
+    }
+
+    /// Per-client crash chain, starting all-healthy, replayed from round 0.
+    fn crash_loop(&self, round: usize) -> RoundFaults {
+        let mut crashed = vec![false; self.m];
+        for r in 0..=round {
+            let mut rng = self.pool.stream("faults/crash_loop", r as u64);
+            for c in crashed.iter_mut() {
+                let u = rng.f64();
+                *c = if *c { u >= CRASH_P_OFF } else { u < CRASH_P_ON };
+            }
+        }
+        let mut ev = RoundFaults::clean(round, self.m);
+        ev.crashed = crashed;
+        ev
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn faults(kind: FaultKind, seed: u64, m: usize) -> Faults {
+        Faults::from_parts(kind, seed, m)
+    }
+
+    #[test]
+    fn names_parse_and_round_trip() {
+        for kind in FaultKind::all() {
+            let back: FaultKind = kind.name().parse().unwrap();
+            assert_eq!(back, kind);
+            assert_eq!(kind.spec().parse::<FaultKind>().unwrap(), kind);
+        }
+        assert!("nope".parse::<FaultKind>().is_err());
+        assert_eq!("flaky-uplink".parse::<FaultKind>().unwrap(), FaultKind::FlakyUplink);
+        assert_eq!("crash-loop".parse::<FaultKind>().unwrap(), FaultKind::CrashLoop);
+        assert_eq!("off".parse::<FaultKind>().unwrap(), FaultKind::None);
+    }
+
+    #[test]
+    fn none_preset_is_clean_and_draws_nothing() {
+        // seed-independence is the observable proof that `none` never
+        // touches the RNG: any two seeds yield the identical (clean) trace
+        let a = faults(FaultKind::None, 1, 12).trace(40);
+        let b = faults(FaultKind::None, 999, 12).trace(40);
+        assert_eq!(a, b);
+        for ev in &a {
+            assert!(ev.is_clean());
+        }
+    }
+
+    #[test]
+    fn traces_are_pure_functions_of_seed_kind_round() {
+        for kind in FaultKind::all() {
+            let a = faults(kind, 42, 10).trace(30);
+            let b = faults(kind, 42, 10).trace(30);
+            assert_eq!(a, b, "{kind:?}: trace must be reproducible");
+            // random access must agree with replay
+            let f = faults(kind, 42, 10);
+            assert_eq!(f.round(17), a[17], "{kind:?}: random access != replay");
+            assert_eq!(f.round(3), a[3]);
+        }
+        for kind in FaultKind::active() {
+            let a = faults(kind, 42, 10).trace(60);
+            let b = faults(kind, 43, 10).trace(60);
+            assert_ne!(a, b, "{kind:?}: seed must matter");
+        }
+    }
+
+    #[test]
+    fn dropout_only_sets_drop_flags() {
+        let tr = faults(FaultKind::Dropout, 7, 20).trace(60);
+        assert!(tr.iter().any(|e| e.drop_after_compute.iter().any(|&d| d)), "nobody dropped");
+        for e in &tr {
+            assert!(e.upload_attempts.iter().all(|&a| a == 1));
+            assert!(e.crashed.iter().all(|&c| !c));
+        }
+    }
+
+    #[test]
+    fn flaky_uplink_attempts_stay_in_range() {
+        let tr = faults(FaultKind::FlakyUplink, 7, 20).trace(80);
+        let mut saw_retry = false;
+        let mut saw_clean = false;
+        for e in &tr {
+            assert!(e.drop_after_compute.iter().all(|&d| !d));
+            assert!(e.crashed.iter().all(|&c| !c));
+            for &a in &e.upload_attempts {
+                assert!((a as usize) <= FLAKY_MAX_ATTEMPTS);
+                saw_retry |= a != 1;
+                saw_clean |= a == 1;
+            }
+        }
+        assert!(saw_retry, "no upload ever needed a retry");
+        assert!(saw_clean, "no upload ever landed first try");
+    }
+
+    #[test]
+    fn crash_episodes_persist_across_rounds() {
+        let tr = faults(FaultKind::CrashLoop, 3, 30).trace(100);
+        assert!(
+            tr.iter().any(|e| e.crashed.iter().any(|&c| c)),
+            "nobody ever crashed"
+        );
+        // the chain has memory: some episode spans >= 2 consecutive rounds
+        let mut persisted = false;
+        for w in tr.windows(2) {
+            for m in 0..30 {
+                persisted |= w[0].crashed[m] && w[1].crashed[m];
+            }
+        }
+        assert!(persisted, "crash episodes never persisted");
+    }
+
+    #[test]
+    fn resolve_clean_events_is_clean() {
+        let ev = RoundFaults::clean(0, 8);
+        let out = ev.resolve(&[1, 3, 5], |_| 1.0, 0.05);
+        assert!(out.is_clean());
+        assert_eq!(out.survivors(), vec![1, 3, 5]);
+        assert_eq!(out.retries, 0);
+        assert_eq!(out.dropouts, 0);
+        assert_eq!(out.max_backoff, 0.0);
+    }
+
+    #[test]
+    fn resolve_dropout_pays_compute_but_never_delivers() {
+        let mut ev = RoundFaults::clean(0, 4);
+        ev.drop_after_compute[2] = true;
+        let out = ev.resolve(&[0, 2], |_| 10.0, 0.05);
+        assert_eq!(out.survivors(), vec![0]);
+        assert_eq!(out.dropouts, 1);
+        assert_eq!(out.retries, 0);
+        let f2 = &out.fates[1];
+        assert!(f2.computed && !f2.delivered);
+        assert_eq!(f2.attempts, 0);
+    }
+
+    #[test]
+    fn resolve_crash_skips_compute_entirely() {
+        let mut ev = RoundFaults::clean(0, 4);
+        ev.crashed[1] = true;
+        let out = ev.resolve(&[0, 1, 3], |_| 10.0, 0.05);
+        assert_eq!(out.survivors(), vec![0, 3]);
+        assert_eq!(out.dropouts, 1);
+        assert!(!out.fates[1].computed);
+        assert_eq!(out.fates[1].attempts, 0);
+    }
+
+    #[test]
+    fn resolve_budgets_retries_against_the_deadline() {
+        let mut ev = RoundFaults::clean(0, 4);
+        ev.upload_attempts[0] = 3; // needs 2 retries: backoff b + 2b = 3b
+        let b = 0.05;
+        // generous slack: both retries fit, client survives
+        let out = ev.resolve(&[0], |_| 1.0, b);
+        assert_eq!(out.survivors(), vec![0]);
+        assert_eq!(out.retries, 2);
+        assert!((out.max_backoff - 3.0 * b).abs() < 1e-12);
+        // slack fits the first retry (b) but not the second (+2b): abandoned
+        let out = ev.resolve(&[0], |_| 2.0 * b, b);
+        assert!(out.survivors().is_empty());
+        assert_eq!(out.dropouts, 1);
+        assert_eq!(out.retries, 1);
+        assert_eq!(out.fates[0].attempts, 2);
+        assert!((out.max_backoff - b).abs() < 1e-12);
+        // no slack at all: the retry is abandoned immediately
+        let out = ev.resolve(&[0], |_| 0.0, b);
+        assert_eq!(out.retries, 0);
+        assert_eq!(out.fates[0].attempts, 1);
+        assert_eq!(out.max_backoff, 0.0);
+        // zero backoff: retries are free, so the budget never blocks them
+        let out = ev.resolve(&[0], |_| 0.0, 0.0);
+        assert_eq!(out.survivors(), vec![0]);
+        assert_eq!(out.retries, 2);
+    }
+
+    #[test]
+    fn resolve_hopeless_upload_stops_at_the_attempt_cap() {
+        let mut ev = RoundFaults::clean(0, 2);
+        ev.upload_attempts[0] = 0; // hopeless: every attempt in the cap fails
+        let out = ev.resolve(&[0], |_| 1e9, 0.05);
+        assert!(out.survivors().is_empty());
+        assert_eq!(out.dropouts, 1);
+        assert_eq!(out.fates[0].attempts, FLAKY_MAX_ATTEMPTS);
+        assert_eq!(out.retries, FLAKY_MAX_ATTEMPTS - 1);
+    }
+
+    #[test]
+    fn faults_new_reads_config_and_rejects_unknown() {
+        let mut cfg = SimConfig::commag();
+        assert!(Faults::new(&cfg).unwrap().is_none());
+        cfg.faults = "dropout".into();
+        assert_eq!(Faults::new(&cfg).unwrap().kind(), FaultKind::Dropout);
+        cfg.faults = "bogus".into();
+        assert!(Faults::new(&cfg).is_err());
+    }
+}

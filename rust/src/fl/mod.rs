@@ -29,6 +29,8 @@ use anyhow::{bail, Context, Result};
 use crate::config::SimConfig;
 use crate::data::{commag, vision, Batched, ClientShard};
 use crate::experiments::executor;
+use crate::faults::Faults;
+use crate::jsonio::Json;
 use crate::model::ModelInit;
 use crate::oran::{RoundLatency, Topology};
 use crate::runtime::{
@@ -124,6 +126,13 @@ pub struct ExperimentContext<'a> {
     /// [`RoundEnv`] from it, so the paired comparison stays fair under
     /// non-stationary conditions (PERF.md §scenario-engine)
     pub scenario: Scenario,
+    /// the fault-injection process (`cfg.faults` preset). Pure and shared
+    /// like the scenario: every framework derives the SAME per-round fault
+    /// events from the ROOT-seed `"faults/…"` streams, so all four face the
+    /// identical failure trace at any parallelism (PERF.md §fault-model).
+    /// The default `none` preset draws nothing and keeps the historical
+    /// bitwise-identical path
+    pub faults: Faults,
     /// base pool (root seed only): data/topology/model-init streams. Shared
     /// by all frameworks so paired init streams stay identical; per-runner
     /// runtime streams come from [`RngPool::for_framework`] instead.
@@ -248,6 +257,7 @@ impl<'a> ExperimentContext<'a> {
             shard_wholes,
             test,
             scenario: Scenario::new(cfg)?,
+            faults: Faults::new(cfg)?,
             pool: RngPool::new(cfg.seed),
         })
     }
@@ -422,7 +432,10 @@ pub fn resolve_client_jobs(requested: usize, n: usize) -> usize {
 
 /// Run one independent job per selected client on the scoped executor and
 /// return the per-client contributions **in client-index order** (never in
-/// completion order), failing on the first client error.
+/// completion order), failing on the first client error. Jobs are
+/// panic-isolated ([`executor::try_run_indexed`]): a panicking client job
+/// surfaces as a typed `ReproError::JobPanic` naming the client index
+/// instead of tearing down the whole round's worker scope.
 ///
 /// Determinism contract (PERF.md §client-parallelism): the closure must be a
 /// pure function of its index — shared state goes in by `&` reference, and
@@ -435,7 +448,7 @@ where
     T: Send,
     F: Fn(usize) -> Result<T> + Sync,
 {
-    executor::run_indexed(n, jobs, f).into_iter().collect()
+    executor::try_run_indexed(n, jobs, f).into_iter().collect()
 }
 
 /// Run `e` local SGD steps of a `(params, a_t, b_t, lr) -> (params', loss)`
@@ -585,6 +598,14 @@ pub struct RoundOutcome {
     pub comm_cost: f64,
     pub comp_cost: f64,
     pub train_loss: f32,
+    /// selected clients whose update never reached aggregation this round
+    /// (fault layer: crashes, mid-round dropouts, abandoned retries)
+    pub dropouts: usize,
+    /// upload retries performed under the deadline budget this round
+    pub retries: usize,
+    /// true when survivors fell below `cfg.fault_quorum`: the round was
+    /// skipped (recorded, costs paid, no aggregation) instead of panicking
+    pub quorum_miss: bool,
 }
 
 /// One FL framework (SplitMe or a baseline). Implementations hold their own
@@ -617,6 +638,169 @@ pub trait Framework {
     /// memos); reported into [`MemoryStats::framework_cache_bytes`].
     fn cache_bytes(&self) -> usize {
         0
+    }
+
+    /// Serialize the framework-private state that must survive a
+    /// checkpoint/resume cycle: model params (bit-exact via [`state`]
+    /// helpers), selector windows/failure history, adaptive counters.
+    /// Derived caches (params-version memos) are deliberately NOT part of
+    /// the snapshot — they rebuild lazily with identical bytes.
+    fn save_state(&self) -> Json;
+
+    /// Restore from a [`Framework::save_state`] snapshot. The implementation
+    /// is built fresh from the checkpointed config first, then overwritten
+    /// here, so anything not in the snapshot keeps its round-0 construction.
+    fn load_state(&mut self, state: &Json) -> Result<()>;
+}
+
+/// Bit-exact JSON (de)serialization helpers for [`Framework::save_state`] /
+/// [`Framework::load_state`] and the run checkpoint (PERF.md §fault-model):
+/// floats travel as hex bit patterns (`to_bits`), exactly like the golden
+/// snapshots, because a decimal round-trip may lose the last ulp and break
+/// the resume-bitwise guarantee.
+pub mod state {
+    use anyhow::{bail, Context, Result};
+
+    use crate::jsonio::Json;
+    use crate::runtime::Tensor;
+    use crate::selection::DeadlineSelector;
+
+    pub fn f64_json(v: f64) -> Json {
+        Json::str(format!("{:016x}", v.to_bits()))
+    }
+
+    pub fn f64_from(j: &Json) -> Result<f64> {
+        let hex = j.as_str().context("f64 bit pattern must be a string")?;
+        let bits = u64::from_str_radix(hex, 16)
+            .with_context(|| format!("parsing f64 bit pattern {hex:?}"))?;
+        Ok(f64::from_bits(bits))
+    }
+
+    pub fn f32_json(v: f32) -> Json {
+        Json::str(format!("{:08x}", v.to_bits()))
+    }
+
+    pub fn f32_from(j: &Json) -> Result<f32> {
+        let hex = j.as_str().context("f32 bit pattern must be a string")?;
+        let bits = u32::from_str_radix(hex, 16)
+            .with_context(|| format!("parsing f32 bit pattern {hex:?}"))?;
+        Ok(f32::from_bits(bits))
+    }
+
+    /// `{"dims": [...], "bits": "<8 hex digits per f32>"}`.
+    pub fn tensor_json(t: &Tensor) -> Json {
+        let mut bits = String::with_capacity(t.data.len() * 8);
+        for v in &t.data {
+            bits.push_str(&format!("{:08x}", v.to_bits()));
+        }
+        Json::obj(vec![
+            ("dims", Json::arr(t.dims.iter().map(|&d| Json::num(d as f64)).collect())),
+            ("bits", Json::str(bits)),
+        ])
+    }
+
+    pub fn tensor_from(j: &Json) -> Result<Tensor> {
+        let dims: Vec<usize> = j
+            .get("dims")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<_>>()?;
+        let hex = j.get("bits")?.as_str()?;
+        if hex.len() % 8 != 0 {
+            bail!("tensor bit string length {} is not a multiple of 8", hex.len());
+        }
+        let data: Vec<f32> = (0..hex.len() / 8)
+            .map(|i| {
+                u32::from_str_radix(&hex[i * 8..i * 8 + 8], 16)
+                    .map(f32::from_bits)
+                    .with_context(|| format!("parsing f32 bit pattern at {i}"))
+            })
+            .collect::<Result<_>>()?;
+        Tensor::new(dims, data)
+    }
+
+    pub fn usize_vec_json(v: &[usize]) -> Json {
+        Json::arr(v.iter().map(|&x| Json::num(x as f64)).collect())
+    }
+
+    pub fn usize_vec_from(j: &Json) -> Result<Vec<usize>> {
+        j.as_arr()?.iter().map(|x| x.as_usize()).collect()
+    }
+
+    /// Selector snapshot: estimator window (bit-exact) + failure history.
+    pub fn selector_json(sel: &DeadlineSelector) -> Json {
+        let (t_max_k, t_max_km1, fails) = sel.snapshot();
+        Json::obj(vec![
+            ("t_max_k", f64_json(t_max_k)),
+            ("t_max_km1", f64_json(t_max_km1)),
+            (
+                "failures",
+                Json::arr(
+                    fails
+                        .iter()
+                        .map(|&(id, k)| {
+                            Json::arr(vec![Json::num(id as f64), Json::num(k as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn selector_load(sel: &mut DeadlineSelector, j: &Json) -> Result<()> {
+        let t_max_k = f64_from(j.get("t_max_k")?)?;
+        let t_max_km1 = f64_from(j.get("t_max_km1")?)?;
+        let fails: Vec<(usize, u32)> = j
+            .get("failures")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let a = p.as_arr()?;
+                if a.len() != 2 {
+                    bail!("selector failure entry must be [id, count]");
+                }
+                Ok((a[0].as_usize()?, a[1].as_usize()? as u32))
+            })
+            .collect::<Result<_>>()?;
+        sel.restore(t_max_k, t_max_km1, &fails);
+        Ok(())
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn floats_and_tensors_round_trip_bitwise() {
+            for v in [0.0f64, -0.0, 1.5, f64::NAN, f64::INFINITY, 3.141592653589793e-17] {
+                let back = f64_from(&f64_json(v)).unwrap();
+                assert_eq!(back.to_bits(), v.to_bits());
+            }
+            for v in [0.0f32, -0.0, 0.5, f32::NAN, f32::NEG_INFINITY, 1e-30] {
+                let back = f32_from(&f32_json(v)).unwrap();
+                assert_eq!(back.to_bits(), v.to_bits());
+            }
+            let t = Tensor::new(vec![2, 3], vec![1.0, -2.5, f32::NAN, 0.0, -0.0, 1e-30]).unwrap();
+            let back = tensor_from(&tensor_json(&t)).unwrap();
+            assert_eq!(back.dims, t.dims);
+            let bits = |x: &Tensor| x.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&back), bits(&t));
+        }
+
+        #[test]
+        fn tensor_from_rejects_malformed_bits() {
+            let j = Json::obj(vec![
+                ("dims", Json::arr(vec![Json::num(1.0)])),
+                ("bits", Json::str("abc")), // not a multiple of 8
+            ]);
+            assert!(tensor_from(&j).is_err());
+            let j = Json::obj(vec![
+                ("dims", Json::arr(vec![Json::num(1.0)])),
+                ("bits", Json::str("zzzzzzzz")), // not hex
+            ]);
+            assert!(tensor_from(&j).is_err());
+        }
     }
 }
 
@@ -703,6 +887,25 @@ mod tests {
             Ok(i)
         });
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn run_clients_converts_a_client_panic_into_a_typed_error() {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let err = run_clients(4, 2, |i| {
+            if i == 1 {
+                panic!("poisoned shard")
+            }
+            Ok(i)
+        })
+        .expect_err("panicking client must fail the round, not the process");
+        let typed = err
+            .downcast_ref::<crate::errors::ReproError>()
+            .expect("panic must surface as ReproError::JobPanic");
+        assert_eq!(typed.exit_code(), 4);
+        assert!(typed.to_string().contains("job 1"), "{typed}");
+        std::panic::set_hook(prev);
     }
 
     #[test]

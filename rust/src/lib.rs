@@ -30,7 +30,9 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod errors;
 pub mod experiments;
+pub mod faults;
 pub mod fl;
 pub mod harness;
 pub mod jsonio;
@@ -48,6 +50,8 @@ pub mod testkit;
 pub mod prelude {
     pub use crate::config::{FrameworkKind, SimConfig};
     pub use crate::coordinator::{RunState, Runner};
+    pub use crate::errors::ReproError;
+    pub use crate::faults::{FaultKind, Faults};
     pub use crate::fl::ExperimentContext;
     pub use crate::metrics::{RoundRecord, RunSummary};
     pub use crate::runtime::{Engine, Manifest, Tensor};

@@ -27,11 +27,13 @@ USAGE:
   repro run [--framework splitme|fedavg|sfl|oranfed] [--preset commag|vision]
             [--config file.json] [--rounds N] [--stop-at-target]
             [--out DIR] [--seed N] [--eval-every K] [--client-jobs N]
-            [--scenario NAME]
-  repro experiment [fig3a|fig3b|fig3a_churn|fig4a|fig4b|fig5|scenarios|all]
-            [--splitme-rounds N] [--baseline-rounds N] [--out DIR]
+            [--scenario NAME] [--faults NAME] [--fault-quorum Q]
+            [--retry-backoff S] [--checkpoint FILE] [--checkpoint-every K]
+  repro run --resume FILE.ckpt [--rounds N] [--out DIR] [--checkpoint FILE]
+  repro experiment [fig3a|fig3b|fig3a_churn|fig4a|fig4b|fig5|scenarios|faults|all]
+            [--splitme-rounds N] [--baseline-rounds N] [--rounds N] [--out DIR]
             [--seed N] [--verbose] [--jobs N] [--client-jobs N]
-            [--scenario NAME] [--scenarios a,b,c]
+            [--scenario NAME] [--scenarios a,b,c] [--faults NAME]
   repro scenario record [--scenario NAME] [--rounds N] [--out FILE.csv|.json]
             [--preset commag|vision] [--seed N] [--clients M]
   repro sweep   [--preset commag|vision] [--jobs N] [--scenario NAME]
@@ -56,6 +58,23 @@ fig3a_churn:     Fig 3a rerun under churn (default --scenario churn):
 --client-jobs N: worker threads for the per-selected-client phase inside each
                  round (0 = auto: REPRO_CLIENT_JOBS env, else 1). Bitwise
                  identical at any value; multiplies with --jobs.
+--faults NAME:   deterministic fault injection applied to every round's
+                 selected clients (none|dropout|flaky_uplink|crash_loop;
+                 default none = bitwise identical to a fault-free build).
+                 The trace is a pure function of (seed, preset, round), so
+                 all frameworks at any --jobs/--client-jobs see the same
+                 failures (PERF.md #fault-model).
+--fault-quorum Q: minimum surviving uploads to aggregate a round (default 1);
+                 below it the round is recorded as skipped, never a panic
+--retry-backoff S: base exponential-backoff wait (s) for upload retries,
+                 budgeted against each client's deadline slack (default 0.05)
+--checkpoint FILE + --checkpoint-every K: snapshot the run every K rounds;
+                 `repro run --resume FILE` continues bitwise identically
+                 (the snapshot carries its own config — config-shaping flags
+                 conflict with --resume)
+experiment faults: the paired comparison repeated under every fault preset
+                 (`none` first as the clean control), CSVs under
+                 `faults_<preset>/`; --rounds N caps both round budgets
 ";
 
 fn main() {
@@ -66,7 +85,9 @@ fn main() {
     }
     if let Err(e) = real_main(&argv) {
         eprintln!("error: {e:#}");
-        std::process::exit(1);
+        // typed failures map to distinct exit codes (2 = bad input, 3 = io,
+        // 4 = job panic); untyped chains keep the generic 1
+        std::process::exit(repro::errors::ReproError::exit_code_of(&e));
     }
 }
 
@@ -80,12 +101,17 @@ fn real_main(argv: &[String]) -> Result<()> {
         "inspect" => cmd_inspect(),
         other => {
             print!("{USAGE}");
-            anyhow::bail!("unknown subcommand {other:?}");
+            Err(anyhow::Error::new(repro::errors::ReproError::invalid(format!(
+                "unknown subcommand {other:?}"
+            ))))
         }
     }
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
+    if let Some(ckpt) = args.opt_str("resume") {
+        return cmd_run_resume(args, &ckpt);
+    }
     let framework = FrameworkKind::from_str(&args.str_or("framework", "splitme"))?;
     let preset = args.str_or("preset", "commag");
     let mut cfg = match args.opt_str("config") {
@@ -95,9 +121,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
     cfg.stop_at_target = args.flag("stop-at-target") || cfg.stop_at_target;
-    // preserve a --config file's client_jobs/scenario unless a flag overrides
+    // preserve a --config file's client_jobs/scenario/fault knobs unless a
+    // flag overrides
     cfg.client_jobs = args.usize_or("client-jobs", cfg.client_jobs)?;
     cfg.scenario = args.str_or("scenario", &cfg.scenario);
+    cfg.faults = args.str_or("faults", &cfg.faults);
+    cfg.fault_quorum = args.usize_or("fault-quorum", cfg.fault_quorum)?;
+    cfg.retry_backoff_s = args.f64_or("retry-backoff", cfg.retry_backoff_s)?;
+    cfg.checkpoint_every = args.usize_or("checkpoint-every", cfg.checkpoint_every)?;
+    let checkpoint = args.opt_str("checkpoint");
     cfg.validate()?;
     let rounds = args.usize_or("rounds", 30)?;
     let out = args.str_or("out", "results");
@@ -111,6 +143,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         framework.name()
     );
     let mut runner = Runner::new(&engine, &cfg, framework)?;
+    runner.checkpoint = checkpoint.map(Into::into);
     runner.progress = Some(Box::new(|r| {
         println!(
             "round {:>3}: sel={:>2} E={:>2} acc={:.3} train_loss={:.4} sim_t={:.2}s",
@@ -157,11 +190,77 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro run --resume FILE`: continue a checkpointed run to `--rounds`.
+/// The snapshot carries its own full config; flags that would reshape that
+/// config conflict with resuming and are rejected (exit code 2).
+fn cmd_run_resume(args: &Args, ckpt: &str) -> Result<()> {
+    for key in [
+        "framework",
+        "preset",
+        "config",
+        "seed",
+        "eval-every",
+        "client-jobs",
+        "scenario",
+        "faults",
+        "fault-quorum",
+        "retry-backoff",
+        "checkpoint-every",
+    ] {
+        if args.opt_str(key).is_some() {
+            return Err(anyhow::Error::new(repro::errors::ReproError::invalid(format!(
+                "--resume restores the checkpoint's config; --{key} conflicts with it"
+            ))));
+        }
+    }
+    let rounds = args.usize_or("rounds", 30)?;
+    let out = args.str_or("out", "results");
+    let checkpoint = args.opt_str("checkpoint");
+    args.finish()?;
+
+    let engine = Engine::from_default_manifest()?;
+    let mut runner = Runner::resume(&engine, ckpt)?;
+    if let Some(path) = checkpoint {
+        // keep snapshotting, but to a different file than the one resumed
+        runner.checkpoint = Some(path.into());
+    }
+    let framework = runner.kind();
+    let preset = runner.ctx().cfg.preset.clone();
+    println!(
+        "platform={} preset={} framework={} (resumed {} rounds from {ckpt})",
+        engine.platform(),
+        preset,
+        framework.name(),
+        runner.records().len()
+    );
+    runner.progress = Some(Box::new(|r| {
+        println!(
+            "round {:>3}: sel={:>2} E={:>2} acc={:.3} train_loss={:.4} sim_t={:.2}s",
+            r.round, r.selected, r.e, r.accuracy, r.train_loss, r.sim_time
+        );
+    }));
+    let summary = runner.train(rounds)?;
+    std::fs::create_dir_all(&out)?;
+    summary.write_csv(format!("{out}/{}_{}.csv", preset, framework.name()))?;
+    summary.write_json(format!("{out}/{}_{}.json", preset, framework.name()))?;
+    println!(
+        "done: best_acc={:.3} rounds={} sim_time={:.2}s comm={:.1}MB -> {out}/",
+        summary.best_accuracy,
+        summary.rounds,
+        summary.total_sim_time,
+        summary.total_comm_bytes / 1e6
+    );
+    Ok(())
+}
+
 fn cmd_experiment(args: &Args) -> Result<()> {
     let which = args.positional.first().cloned().unwrap_or_else(|| "all".into());
+    // --rounds N: one knob capping both per-framework budgets (the smoke
+    // path `repro experiment faults --rounds 5` and quick CI runs)
+    let rounds = args.opt_usize("rounds")?;
     let budget = Budget {
-        splitme_rounds: args.usize_or("splitme-rounds", 30)?,
-        baseline_rounds: args.usize_or("baseline-rounds", 150)?,
+        splitme_rounds: args.usize_or("splitme-rounds", rounds.unwrap_or(30))?,
+        baseline_rounds: args.usize_or("baseline-rounds", rounds.unwrap_or(150))?,
     };
     let out = args.str_or("out", "results");
     let seed = args.u64_or("seed", 20250710)?;
@@ -170,6 +269,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let client_jobs = args.client_jobs()?;
     let scenario = args.opt_str("scenario");
     let scenario_list = args.opt_str("scenarios");
+    let faults = args.opt_str("faults");
     args.finish()?;
 
     let engine = Engine::from_default_manifest()?;
@@ -184,7 +284,25 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         // measured trace with an `available` column)
         cfg.scenario = "churn".into();
     }
+    if let Some(f) = &faults {
+        if which == "faults" {
+            anyhow::bail!(
+                "`experiment faults` runs every fault preset; --faults conflicts with it"
+            );
+        }
+        cfg.faults = f.clone();
+    }
     cfg.validate()?;
+
+    if which == "faults" {
+        // the fault-matrix experiment: run_comparison × fault preset, with
+        // `none` first as the bitwise-clean control
+        let matrix = experiments::run_fault_matrix(&engine, &cfg, budget, verbose, jobs)?;
+        experiments::write_fault_matrix(&matrix, &out)?;
+        experiments::fault_table(&matrix);
+        println!("\nraw per-round CSVs in {out}/faults_<preset>/");
+        return Ok(());
+    }
 
     if which == "scenarios" {
         // the scenario-matrix experiment: run_comparison × environment
@@ -233,7 +351,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         }
         other => anyhow::bail!(
             "unknown experiment {other:?} \
-             (fig3a|fig3b|fig3a_churn|fig4a|fig4b|fig5|scenarios|all)"
+             (fig3a|fig3b|fig3a_churn|fig4a|fig4b|fig5|scenarios|faults|all)"
         ),
     }
     println!("\nraw per-round CSVs in {out}/");

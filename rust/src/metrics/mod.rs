@@ -47,6 +47,15 @@ pub struct RoundRecord {
     pub env_stragglers: usize,
     /// scenario engine: mean deadline factor over all clients (1.0 nominal)
     pub env_deadline_scale: f64,
+    /// fault layer: clients that crashed or dropped out this round (0 under
+    /// `faults = none`)
+    pub env_dropouts: usize,
+    /// fault layer: upload retries actually performed this round (each one
+    /// resends the client's payload and pays its backoff wait)
+    pub retries: usize,
+    /// fault layer: 1 when the round finished below `fault_quorum` and the
+    /// aggregation was skipped (global model unchanged), else 0
+    pub quorum_miss: usize,
 }
 
 /// Aggregated outcome of a run.
@@ -69,6 +78,12 @@ pub struct RunSummary {
     /// mean candidate-set size over the run (= M under a static scenario);
     /// the denominator Fig-3a-under-churn tracks selection against
     pub mean_available: f64,
+    /// fault layer: total crashed/dropped-out clients over the run
+    pub total_dropouts: usize,
+    /// fault layer: total upload retries performed over the run
+    pub total_retries: usize,
+    /// fault layer: rounds skipped below quorum over the run
+    pub quorum_misses: usize,
     pub records: Vec<RoundRecord>,
 }
 
@@ -110,6 +125,9 @@ impl RunSummary {
             } else {
                 0.0
             },
+            total_dropouts: records.iter().map(|r| r.env_dropouts).sum(),
+            total_retries: records.iter().map(|r| r.retries).sum(),
+            quorum_misses: records.iter().map(|r| r.quorum_miss).sum(),
             records,
         }
     }
@@ -120,15 +138,16 @@ impl RunSummary {
             .with_context(|| format!("creating {:?}", path.as_ref()))?;
         writeln!(
             f,
-            "round,selected,e,comm_bytes,round_time,sim_time,comm_cost,comp_cost,total_cost,train_loss,accuracy,test_loss,env_bw_scale,env_available,env_stragglers,env_deadline_scale"
+            "round,selected,e,comm_bytes,round_time,sim_time,comm_cost,comp_cost,total_cost,train_loss,accuracy,test_loss,env_bw_scale,env_available,env_stragglers,env_deadline_scale,env_dropouts,retries,quorum_miss"
         )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{},{},{},{:.1},{:.6},{:.6},{:.4},{:.6},{:.6},{:.5},{:.4},{:.5},{:.4},{},{},{:.4}",
+                "{},{},{},{:.1},{:.6},{:.6},{:.4},{:.6},{:.6},{:.5},{:.4},{:.5},{:.4},{},{},{:.4},{},{},{}",
                 r.round, r.selected, r.e, r.comm_bytes, r.round_time, r.sim_time,
                 r.comm_cost, r.comp_cost, r.total_cost, r.train_loss, r.accuracy, r.test_loss,
-                r.env_bw_scale, r.env_available, r.env_stragglers, r.env_deadline_scale
+                r.env_bw_scale, r.env_available, r.env_stragglers, r.env_deadline_scale,
+                r.env_dropouts, r.retries, r.quorum_miss
             )?;
         }
         Ok(())
@@ -157,6 +176,9 @@ impl RunSummary {
                     ("env_available", Json::num(r.env_available as f64)),
                     ("env_stragglers", Json::num(r.env_stragglers as f64)),
                     ("env_deadline_scale", Json::num(r.env_deadline_scale)),
+                    ("env_dropouts", Json::num(r.env_dropouts as f64)),
+                    ("retries", Json::num(r.retries as f64)),
+                    ("quorum_miss", Json::num(r.quorum_miss as f64)),
                 ])
             })
             .collect();
@@ -180,6 +202,9 @@ impl RunSummary {
             ("total_comp_cost", Json::num(self.total_comp_cost)),
             ("mean_selected", Json::num(self.mean_selected)),
             ("mean_available", Json::num(self.mean_available)),
+            ("total_dropouts", Json::num(self.total_dropouts as f64)),
+            ("total_retries", Json::num(self.total_retries as f64)),
+            ("quorum_misses", Json::num(self.quorum_misses as f64)),
             ("records", Json::arr(recs)),
         ])
     }
@@ -214,6 +239,9 @@ mod tests {
             env_available: 50,
             env_stragglers: 0,
             env_deadline_scale: 1.0,
+            env_dropouts: 0,
+            retries: 0,
+            quorum_miss: 0,
         }
     }
 
@@ -250,10 +278,27 @@ mod tests {
         assert_eq!(text.lines().count(), 3);
         let header = text.lines().next().unwrap();
         assert!(
-            header.ends_with("env_bw_scale,env_available,env_stragglers,env_deadline_scale"),
-            "env columns missing from CSV: {header}"
+            header.ends_with(
+                "env_bw_scale,env_available,env_stragglers,env_deadline_scale,env_dropouts,retries,quorum_miss"
+            ),
+            "env/fault columns missing from CSV: {header}"
         );
-        assert!(text.lines().nth(1).unwrap().ends_with("1.0000,50,0,1.0000"));
+        assert!(text.lines().nth(1).unwrap().ends_with("1.0000,50,0,1.0000,0,0,0"));
         std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn summary_totals_fault_counters() {
+        let mut r0 = rec(0, 0.4, 0.05);
+        r0.env_dropouts = 2;
+        r0.retries = 3;
+        let mut r1 = rec(1, 0.6, 0.1);
+        r1.env_dropouts = 1;
+        r1.retries = 4;
+        r1.quorum_miss = 1;
+        let s = RunSummary::from_records("fedavg", "commag", 0.83, vec![r0, r1]);
+        assert_eq!(s.total_dropouts, 3);
+        assert_eq!(s.total_retries, 7);
+        assert_eq!(s.quorum_misses, 1);
     }
 }

@@ -84,16 +84,22 @@ pub struct ScenarioTrace {
 
 impl ScenarioTrace {
     /// Load from `path` (`.json` → JSON, anything else → CSV), resolving
-    /// per-client columns against federation size `m`.
+    /// per-client columns against federation size `m`. Unreadable paths
+    /// carry [`crate::errors::ReproError::Io`], malformed content
+    /// [`crate::errors::ReproError::InvalidInput`] (CLI exit codes 3/2).
     pub fn load(path: &str, m: usize) -> Result<Self> {
         let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading scenario trace {path:?}"))?;
+            .map_err(|e| anyhow::Error::new(crate::errors::ReproError::io(path, e)))?;
         let json = Path::new(path)
             .extension()
             .map(|e| e.eq_ignore_ascii_case("json"))
             .unwrap_or(false);
         let parsed = if json { Self::from_json_text(&text, m) } else { Self::from_csv(&text, m) };
-        parsed.with_context(|| format!("loading scenario trace {path:?}"))
+        parsed
+            .map_err(|e| {
+                anyhow::Error::new(crate::errors::ReproError::invalid(format!("{e:#}")))
+            })
+            .with_context(|| format!("loading scenario trace {path:?}"))
     }
 
     /// Parse the CSV form (see module docs for the schema).

@@ -31,6 +31,13 @@ impl Clock {
         assert!(dt >= 0.0 && dt.is_finite(), "clock step must be finite >= 0, got {dt}");
         self.now += dt;
     }
+
+    /// Restore the clock to an absolute instant (checkpoint resume). The
+    /// caller validates the snapshot; this only guards modelling bugs.
+    pub fn restore(&mut self, now: f64) {
+        assert!(now >= 0.0 && now.is_finite(), "clock restore must be finite >= 0, got {now}");
+        self.now = now;
+    }
 }
 
 /// xoshiro256++ PRNG (Blackman & Vigna), seeded via SplitMix64.

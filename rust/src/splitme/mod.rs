@@ -23,9 +23,10 @@ use anyhow::{Context, Result};
 
 use crate::allocation::solve_p2_at;
 use crate::fl::{
-    aggregate_indexed, effective_chunk, resolve_client_jobs, run_clients, run_steps,
+    aggregate_indexed, effective_chunk, resolve_client_jobs, run_clients, run_steps, state,
     ExperimentContext, Framework, RoundOutcome,
 };
+use crate::jsonio::Json;
 use crate::oran::{RicProfile, UploadSizes};
 use crate::runtime::{Arg, ChunkStacks, Frozen, Tensor};
 use crate::scenario::RoundEnv;
@@ -375,7 +376,46 @@ impl Framework for SplitMe {
             solve_p2_at(cfg, topo_r.bandwidth_bps, &selected, &sizes, self.e_last, true, 1.0, true);
         let e = alloc.e;
         self.e_last = e;
-        self.selector.observe(alloc.latency.max_uplink);
+        let selected_ids: Vec<usize> = selected.iter().map(|r| r.id).collect();
+
+        // ---- fault layer: resolve the shared per-round events against the
+        // P1 selection. Each client's retry budget is its deadline slack
+        // after the split compute (both halves, at the adaptive E) and its
+        // P2-allocated uplink time
+        let fate = ctx.faults.round(round).resolve(
+            &selected_ids,
+            |m| {
+                let i = selected_ids
+                    .iter()
+                    .position(|&x| x == m)
+                    .expect("resolved from this selection");
+                let r = selected[i];
+                let uplink = sizes[i].total() * 8.0 / (alloc.fracs[i] * topo_r.bandwidth_bps);
+                r.t_round - e as f64 * (r.q_c + r.q_s) - uplink
+            },
+            cfg.retry_backoff_s,
+        );
+        let survivors = fate.survivors();
+        let quorum_miss = survivors.len() < cfg.fault_quorum;
+
+        // failure history feedback into Algorithm 1: repeatedly-failing RICs
+        // see a tightened effective deadline next round (all-success rounds
+        // keep the history empty and the selection bitwise unchanged)
+        for f in &fate.fates {
+            if f.delivered {
+                self.selector.record_success(f.id);
+            } else {
+                self.selector.record_failure(f.id);
+            }
+        }
+        // the measured uplink the estimator sees includes any retry backoff
+        // the round actually suffered
+        let measured = if fate.max_backoff > 0.0 {
+            alloc.latency.max_uplink + fate.max_backoff
+        } else {
+            alloc.latency.max_uplink
+        };
+        self.selector.observe(measured);
 
         // ---- real training: Steps 1-3, one independent job per client ----
         // Corollary 2/3 schedule: eta ~ 1/sqrt(T) damps the mutual-learning
@@ -384,13 +424,14 @@ impl Framework for SplitMe {
         let eta_c = Tensor::scalar1(ctx.eta_c().data[0] * decay).freeze();
         let eta_s = Tensor::scalar1(ctx.eta_s().data[0] * decay).freeze();
         let chunk = effective_chunk(ctx.preset);
-        let selected_ids: Vec<usize> = selected.iter().map(|r| r.id).collect();
 
         // sequential prelude: snapshot the memo state the jobs may read —
         // per-client `inv_acts` hits from the previous evaluation, plus ONE
-        // frozen wsi shared by every miss (its literal converts once)
+        // frozen wsi shared by every miss (its literal converts once). Only
+        // fault survivors train (a clean round's survivors ARE the selected
+        // set, in selection order)
         self.acts.sync(self.wsi_version);
-        let hits: Vec<Option<Arc<InvActsPass>>> = selected_ids
+        let hits: Vec<Option<Arc<InvActsPass>>> = survivors
             .iter()
             .map(|m| self.acts.per_client.get(m).cloned())
             .collect();
@@ -406,9 +447,11 @@ impl Framework for SplitMe {
         // the sequential path bit for bit (tests/differential.rs)
         let wc0 = &self.wc;
         let wsi0 = &self.wsi;
-        let jobs = resolve_client_jobs(cfg.client_jobs, selected_ids.len());
-        let updates = run_clients(selected_ids.len(), jobs, |i| {
-            let m = selected_ids[i];
+        let jobs = resolve_client_jobs(cfg.client_jobs, survivors.len());
+        // sub-quorum: the round is skipped — no training dispatch at all
+        let train_n = if quorum_miss { 0 } else { survivors.len() };
+        let updates = run_clients(train_n, jobs, |i| {
+            let m = survivors[i];
             // Step 1: download w_C and z = s^{-1}(Y_m) — memoized per
             // wsi-version, so clients the previous eval already passed
             // through `inv_acts` skip the recompute (and reuse the frozen
@@ -497,21 +540,61 @@ impl Framework for SplitMe {
         }
 
         // aggregation + broadcast (downlink free); the aggregates changed,
-        // so bump the params-version tags to invalidate the memos
-        self.wc = aggregate_indexed(wc_parts)?;
-        self.wsi = aggregate_indexed(wsi_parts)?;
-        self.wc_version += 1;
-        self.wsi_version += 1;
-        self.last_selected = selected_ids;
+        // so bump the params-version tags to invalidate the memos. A
+        // sub-quorum round keeps both aggregates (and the version tags, so
+        // the memos stay warm) untouched — skip, not panic
+        let train_loss = if quorum_miss {
+            f32::NAN
+        } else {
+            self.wc = aggregate_indexed(wc_parts)?;
+            self.wsi = aggregate_indexed(wsi_parts)?;
+            self.wc_version += 1;
+            self.wsi_version += 1;
+            self.last_selected = survivors;
+            if loss_n > 0 {
+                loss_sum / loss_n as f32
+            } else {
+                f32::NAN
+            }
+        };
+
+        // clean rounds keep the historical accounting expressions verbatim
+        // (the bitwise `faults=none` gate); faulty rounds charge per fate —
+        // each performed upload attempt resends the model+features payload,
+        // only computing clients burn compute, and the slowest retry
+        // backoff stretches the round
+        let comm_bytes: f64 = if fate.is_clean() {
+            sizes.iter().map(|s| s.total()).sum()
+        } else {
+            fate.fates.iter().zip(&sizes).map(|(f, s)| f.attempts as f64 * s.total()).sum()
+        };
+        let comp_cost: f64 = if fate.is_clean() {
+            crate::oran::comp_cost(&selected, e, cfg.p_tr)
+        } else {
+            let computed: Vec<&RicProfile> = selected
+                .iter()
+                .zip(&fate.fates)
+                .filter(|(_, f)| f.computed)
+                .map(|(r, _)| *r)
+                .collect();
+            crate::oran::comp_cost(&computed, e, cfg.p_tr)
+        };
+        let mut latency = alloc.latency;
+        if fate.max_backoff > 0.0 {
+            latency.max_uplink += fate.max_backoff;
+        }
 
         Ok(RoundOutcome {
-            selected_ids: self.last_selected.clone(),
+            selected_ids,
             e,
-            comm_bytes: sizes.iter().map(|s| s.total()).sum(),
-            latency: alloc.latency,
+            comm_bytes,
+            latency,
             comm_cost: crate::oran::comm_cost(&alloc.fracs, topo_r.bandwidth_bps, cfg.p_c),
-            comp_cost: crate::oran::comp_cost(&selected, e, cfg.p_tr),
-            train_loss: if loss_n > 0 { loss_sum / loss_n as f32 } else { f32::NAN },
+            comp_cost,
+            train_loss,
+            dropouts: fate.dropouts,
+            retries: fate.retries,
+            quorum_miss,
         })
     }
 
@@ -526,6 +609,28 @@ impl Framework for SplitMe {
 
     fn cache_bytes(&self) -> usize {
         self.memo_bytes()
+    }
+
+    fn save_state(&self) -> Json {
+        Json::obj(vec![
+            ("wc", state::tensor_json(&self.wc)),
+            ("wsi", state::tensor_json(&self.wsi)),
+            ("e_last", Json::num(self.e_last as f64)),
+            ("last_selected", state::usize_vec_json(&self.last_selected)),
+            ("selector", state::selector_json(&self.selector)),
+        ])
+    }
+
+    fn load_state(&mut self, s: &Json) -> Result<()> {
+        self.wc = state::tensor_from(s.get("wc")?)?;
+        self.wsi = state::tensor_from(s.get("wsi")?)?;
+        self.e_last = s.get("e_last")?.as_usize()?;
+        self.last_selected = state::usize_vec_from(s.get("last_selected")?)?;
+        state::selector_load(&mut self.selector, s.get("selector")?)?;
+        // version tags and memo caches keep their fresh-construction values:
+        // memo reuse is bitwise identical to recompute, so a cold cache
+        // reproduces the warm-cache records bit for bit
+        Ok(())
     }
 }
 

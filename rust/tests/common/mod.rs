@@ -112,4 +112,7 @@ pub fn assert_records_bitwise_eq(a: &RoundRecord, b: &RoundRecord, what: &str) {
         "{what}: env_deadline_scale @r{}",
         a.round
     );
+    assert_eq!(a.env_dropouts, b.env_dropouts, "{what}: env_dropouts @r{}", a.round);
+    assert_eq!(a.retries, b.retries, "{what}: retries @r{}", a.round);
+    assert_eq!(a.quorum_miss, b.quorum_miss, "{what}: quorum_miss @r{}", a.round);
 }

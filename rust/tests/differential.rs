@@ -20,6 +20,12 @@
 //!   replaying it via `ScenarioKind::Trace` yields bitwise-identical
 //!   `RoundRecord`s across all four frameworks at `--jobs 2
 //!   --client-jobs 4`, through BOTH file formats.
+//! * fault layer (ISSUE 6): `faults = "none"` (and unset) stays bitwise
+//!   identical to the pre-fault-layer records; the dropout / flaky_uplink
+//!   fault traces are identical across frameworks and parallelism knobs;
+//!   an unreachable quorum records skipped rounds instead of panicking;
+//!   and `Runner::resume` from a mid-run checkpoint reproduces the
+//!   uninterrupted run record for record, bit for bit.
 //!
 //! Requires `make artifacts`; SKIPs (stderr note) without it —
 //! `REPRO_REQUIRE_ARTIFACTS=1` (the CI artifacts lane) turns any SKIP into
@@ -301,6 +307,123 @@ fn trace_shorter_than_run_holds_its_last_environment() {
             "round {} must hold the trace's final environment",
             r.round
         );
+    }
+}
+
+#[test]
+fn faults_none_is_bitwise_identical_to_unset() {
+    // the ISSUE-6 acceptance gate for the clean path: the default config
+    // keeps faults == "none" (nobody silently turns injection on), an
+    // explicit `--faults none` takes the same code path, and every fault
+    // counter stays pinned at zero — so a fault-layer-free baseline and
+    // today's build produce the same RoundRecord vector
+    let Some(engine) = try_engine() else { return };
+    let default_cfg = tiny_cfg();
+    assert_eq!(default_cfg.faults, "none", "default must be the clean preset");
+    let mut explicit = tiny_cfg();
+    explicit.faults = "none".into();
+    for kind in FrameworkKind::all() {
+        let a = train_records(&engine, &default_cfg, kind, 3);
+        let b = train_records(&engine, &explicit, kind, 3);
+        assert_eq!(a.len(), b.len());
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_records_bitwise_eq(ra, rb, &format!("{}/faults-none", kind.name()));
+        }
+        for r in &a {
+            assert_eq!(r.env_dropouts, 0, "{}: clean preset dropped a client", kind.name());
+            assert_eq!(r.retries, 0, "{}: clean preset retried an upload", kind.name());
+            assert_eq!(r.quorum_miss, 0, "{}: clean preset missed quorum", kind.name());
+        }
+    }
+}
+
+#[test]
+fn fault_traces_are_identical_across_frameworks_and_parallelism() {
+    // fault draws are pure functions of (seed, preset, round, client) — the
+    // "faults/…" RNG streams hang off the ROOT seed, never a per-framework
+    // or per-thread fork — so every framework observes the SAME dropout /
+    // retry trace, at any client_jobs setting
+    let Some(engine) = try_engine() else { return };
+    let mut eventful = 0usize;
+    for preset in ["dropout", "flaky_uplink"] {
+        let mut cfg = tiny_cfg();
+        cfg.faults = preset.into();
+        assert_client_jobs_parity(&engine, &cfg, 3);
+        let per_fw: Vec<Vec<RoundRecord>> = FrameworkKind::all()
+            .into_iter()
+            .map(|kind| train_records(&engine, &cfg, kind, 3))
+            .collect();
+        for records in &per_fw {
+            eventful += records.iter().map(|r| r.env_dropouts + r.retries).sum::<usize>();
+        }
+        for (records, kind) in per_fw[1..].iter().zip(&FrameworkKind::all()[1..]) {
+            for (a, b) in per_fw[0].iter().zip(records.iter()) {
+                let what = format!("{preset}/{}", kind.name());
+                assert_eq!(a.env_dropouts, b.env_dropouts, "{what}: dropouts @r{}", a.round);
+                assert_eq!(a.retries, b.retries, "{what}: retries @r{}", a.round);
+                assert_eq!(a.quorum_miss, b.quorum_miss, "{what}: quorum @r{}", a.round);
+            }
+        }
+    }
+    // deterministic given the fixed seed: the two stochastic presets must
+    // actually fire somewhere in 3 rounds, or the test is vacuous
+    assert!(eventful > 0, "no dropout or retry fired — fault injection looks inert");
+}
+
+#[test]
+fn sub_quorum_rounds_skip_instead_of_panicking() {
+    // an unreachable quorum turns EVERY round into a recorded skip: the run
+    // completes, train_loss is NaN, no aggregation happens — never a panic
+    let Some(engine) = try_engine() else { return };
+    let mut cfg = tiny_cfg();
+    cfg.faults = "dropout".into();
+    cfg.fault_quorum = cfg.num_clients + 1; // can never be met
+    for kind in FrameworkKind::all() {
+        let records = train_records(&engine, &cfg, kind, 3);
+        assert_eq!(records.len(), 3, "{}: skipped rounds must still be recorded", kind.name());
+        for r in &records {
+            assert_eq!(r.quorum_miss, 1, "{}: round {} met an unreachable quorum", kind.name(), r.round);
+            assert!(
+                r.train_loss.is_nan(),
+                "{}: skipped round {} reported a train loss ({})",
+                kind.name(),
+                r.round,
+                r.train_loss
+            );
+        }
+    }
+}
+
+#[test]
+fn checkpoint_resume_reproduces_uninterrupted_run_bitwise() {
+    // the ISSUE-6 resume gate: run 6 rounds straight; separately run 3,
+    // snapshot to disk, `Runner::resume` from the file, and continue to 6.
+    // The two record vectors must agree bit for bit (wall_secs excepted) —
+    // under a fault preset, so the RNG-cursor replay covers the fault
+    // streams too
+    let Some(engine) = try_engine() else { return };
+    let mut cfg = tiny_cfg();
+    cfg.faults = "flaky_uplink".into();
+    for kind in FrameworkKind::all() {
+        let straight = train_records(&engine, &cfg, kind, 6);
+
+        let path =
+            std::env::temp_dir().join(format!("repro_diff_resume_{}.ckpt", kind.name()));
+        let mut first = Runner::new(&engine, &cfg, kind).expect("runner");
+        first.train(3).expect("first half");
+        first.write_checkpoint(&path).expect("write checkpoint");
+        drop(first);
+
+        let mut resumed = Runner::resume(&engine, &path).expect("resume");
+        assert_eq!(resumed.kind(), kind);
+        assert_eq!(resumed.records().len(), 3, "snapshot must carry the first 3 records");
+        let summary = resumed.train(6).expect("second half");
+        std::fs::remove_file(&path).ok();
+
+        assert_eq!(summary.records.len(), straight.len(), "{}: round count", kind.name());
+        for (a, b) in straight.iter().zip(&summary.records) {
+            assert_records_bitwise_eq(a, b, &format!("{}/resume", kind.name()));
+        }
     }
 }
 

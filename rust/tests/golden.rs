@@ -50,6 +50,9 @@ fn record_json(r: &RoundRecord) -> Json {
     m.insert("e".into(), Json::num(r.e as f64));
     m.insert("env_available".into(), Json::num(r.env_available as f64));
     m.insert("env_stragglers".into(), Json::num(r.env_stragglers as f64));
+    m.insert("env_dropouts".into(), Json::num(r.env_dropouts as f64));
+    m.insert("retries".into(), Json::num(r.retries as f64));
+    m.insert("quorum_miss".into(), Json::num(r.quorum_miss as f64));
     let f64s = [
         r.comm_bytes,
         r.round_time,
@@ -109,7 +112,16 @@ fn flatten(j: &Json) -> Vec<(String, String)> {
         let records = records.as_arr().expect("framework records");
         out.push((format!("{name}/rounds"), records.len().to_string()));
         for (i, rec) in records.iter().enumerate() {
-            for field in ["round", "selected", "e", "env_available", "env_stragglers"] {
+            for field in [
+                "round",
+                "selected",
+                "e",
+                "env_available",
+                "env_stragglers",
+                "env_dropouts",
+                "retries",
+                "quorum_miss",
+            ] {
                 out.push((format!("{name}/round{i}/{field}"), leaf(rec.get(field).expect(field))));
             }
             for field in F64_FIELDS.iter().chain(F32_FIELDS.iter()) {

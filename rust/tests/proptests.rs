@@ -246,6 +246,64 @@ fn trace_record_replay_roundtrips_bitwise() {
     });
 }
 
+// ------------------------------------------------------------------- faults
+
+#[test]
+fn fault_traces_are_pure_and_well_formed() {
+    // the determinism contract of the fault layer (ISSUE 6), over random
+    // (kind, seed, M, round): `Faults::round` is a pure function of that
+    // triple — two instances agree, and random access equals replay (the
+    // crash_loop Markov chain re-derives from round 0 on every call) —
+    // event vectors are M-long, attempt counts respect the cap, and the
+    // `none` preset never injects anything
+    use repro::faults::{FaultKind, Faults, FLAKY_MAX_ATTEMPTS};
+    check("faults: purity + well-formedness + resolve bookkeeping", 150, |g| {
+        let kind = *g.choose(&FaultKind::all());
+        let seed = g.usize_in(0..=100_000) as u64;
+        let m = g.usize_in(1..=40);
+        let round = g.usize_in(0..=60);
+        let f = Faults::from_parts(kind, seed, m);
+        let a = f.round(round);
+        let b = Faults::from_parts(kind, seed, m).round(round);
+        prop_assert!(a == b, "{kind:?}: round {round} not reproducible across instances");
+        // querying earlier rounds must not perturb a later one
+        for r in (0..round).rev().take(5) {
+            let _ = f.round(r);
+        }
+        prop_assert!(f.round(round) == a, "{kind:?}: earlier queries perturbed round {round}");
+        prop_assert!(a.round == round);
+        prop_assert!(a.drop_after_compute.len() == m);
+        prop_assert!(a.upload_attempts.len() == m && a.crashed.len() == m);
+        for &att in &a.upload_attempts {
+            prop_assert!(
+                (att as usize) <= FLAKY_MAX_ATTEMPTS,
+                "{kind:?}: {att} attempts exceeds the cap"
+            );
+        }
+        if kind == FaultKind::None {
+            prop_assert!(a.is_clean(), "the none preset must stay all-clean");
+        }
+        // resolve() bookkeeping against ANY selection: fates keep selected
+        // order, dropouts == undelivered fates, retries == extra attempts,
+        // and a zero deadline budget can never absorb a retry
+        let selected: Vec<usize> = (0..m).filter(|_| g.bool()).collect();
+        let backoff0 = g.f64_in(0.001..0.2);
+        let out = f.round(round).resolve(&selected, |_| f64::INFINITY, backoff0);
+        prop_assert!(out.fates.len() == selected.len());
+        for (fate, &id) in out.fates.iter().zip(&selected) {
+            prop_assert!(fate.id == id, "fates must keep selected order");
+        }
+        let undelivered = out.fates.iter().filter(|f| !f.delivered).count();
+        prop_assert!(out.dropouts == undelivered, "dropouts != undelivered fates");
+        let extra: usize = out.fates.iter().map(|f| f.attempts.saturating_sub(1)).sum();
+        prop_assert!(out.retries == extra, "retries {} != extra attempts {extra}", out.retries);
+        let starved = f.round(round).resolve(&selected, |_| 0.0, backoff0);
+        prop_assert!(starved.retries == 0, "zero deadline slack still absorbed a retry");
+        prop_assert!(starved.max_backoff == 0.0, "starved round stretched the uplink");
+        Ok(())
+    });
+}
+
 // ---------------------------------------------------------------- selection
 
 #[test]
@@ -449,6 +507,10 @@ fn config_json_roundtrip_random_fields() {
         c.e_max = g.usize_in(1..=30);
         c.e_initial = g.usize_in(1..=c.e_max);
         c.seed = g.usize_in(0..=1_000_000) as u64;
+        c.faults = repro::faults::FaultKind::all()[g.usize_in(0..=3)].spec();
+        c.fault_quorum = g.usize_in(1..=c.num_clients);
+        c.retry_backoff_s = g.f64_in(0.001..1.0);
+        c.checkpoint_every = g.usize_in(0..=20);
         let back = SimConfig::from_json(&Json::parse(&c.to_json().to_string_pretty()).unwrap())
             .map_err(|e| anyhow::anyhow!("{e}"))?;
         prop_assert!(back.num_clients == c.num_clients);
@@ -456,6 +518,9 @@ fn config_json_roundtrip_random_fields() {
         close(back.rho, c.rho, 1e-12)?;
         prop_assert!(back.e_initial == c.e_initial && back.e_max == c.e_max);
         prop_assert!(back.seed == c.seed);
+        prop_assert!(back.faults == c.faults && back.fault_quorum == c.fault_quorum);
+        close(back.retry_backoff_s, c.retry_backoff_s, 1e-12)?;
+        prop_assert!(back.checkpoint_every == c.checkpoint_every);
         Ok(())
     });
 }
