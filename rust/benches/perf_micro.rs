@@ -103,6 +103,39 @@ fn main() {
         std::hint::black_box(sel.select(&topo, |r| 10.0 * (r.q_c + r.q_s)));
     });
 
+    // federation scale-out (ISSUE 7): the per-round control-plane setup —
+    // lazy env derivation + capped selection over the effective topology —
+    // at M = 10^3 / 10^5 / 10^6. The acceptance bar is the 10^6 row staying
+    // within ~10x of the 10^3 row at equal selected-set size: identity
+    // rounds are O(1) env + an O(cap log cap) indexed prefix walk (the
+    // one-time O(M log M) index build is absorbed by the warmup round).
+    {
+        use repro::selection::{CostModel, SelectPath};
+        let size = UploadSizes { model_bytes: 28e3, feature_bytes: 65e3 };
+        let cost = CostModel::split(10.0);
+        for (tag, m) in [("m1e3", 1_000usize), ("m1e5", 100_000), ("m1e6", 1_000_000)] {
+            let mut mcfg = SimConfig::commag();
+            mcfg.num_clients = m;
+            mcfg.b_min = 1.0 / m as f64;
+            let mtopo = Topology::build(&mcfg);
+            let mscen = repro::scenario::Scenario::new(&mcfg).expect("static preset");
+            let mut msel =
+                DeadlineSelector::from_uniform(m, size, mtopo.bandwidth_bps, mcfg.alpha);
+            let mut round = 0usize;
+            rec.bench(&format!("l3/round_setup_{tag}"), 1, 50, || {
+                let env = mscen.env(round);
+                let topo_r = env.effective(&mtopo);
+                let path = if env.is_identity() {
+                    SelectPath::Indexed
+                } else {
+                    SelectPath::Streaming
+                };
+                std::hint::black_box(msel.select_capped(&topo_r, &cost, 16, path, 4));
+                round += 1;
+            });
+        }
+    }
+
     let mut rng2 = pool.stream("mat", 0);
     let mut a_data = vec![0f32; 2048 * 65];
     fill_normal(&mut rng2, &mut a_data, 1.0);

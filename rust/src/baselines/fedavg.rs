@@ -44,7 +44,7 @@ impl FedAvg {
         let jobs = resolve_client_jobs(ctx.cfg.client_jobs, selected.len());
         let results = run_clients(selected.len(), jobs, |i| {
             let m = selected[i];
-            let shard = &ctx.shards[m].data;
+            let shard = &ctx.shard(m).data;
             run_steps(
                 ctx,
                 "fedavg_step",
@@ -86,8 +86,9 @@ impl Framework for FedAvg {
     ) -> Result<RoundOutcome> {
         let cfg = &ctx.cfg;
         // FedAvg has no deadline awareness, but it can only draw clients
-        // that are actually reachable this round (scenario churn)
-        let topo_r = env.apply(&ctx.topo);
+        // that are actually reachable this round (scenario churn); identity
+        // environments borrow ctx.topo — no per-round O(M) copy
+        let topo_r = env.effective(&ctx.topo);
         let ids = sample_from(rng, "fedavg_select", round, &env.available_ids(), cfg.fedavg_k);
         let e = cfg.fedavg_e;
 

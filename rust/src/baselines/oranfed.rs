@@ -11,12 +11,12 @@ use anyhow::Result;
 
 use crate::allocation::solve_p2_at;
 use crate::baselines::fedavg::FedAvg;
-use crate::fl::{state, ExperimentContext, Framework, RoundOutcome};
+use crate::fl::{resolve_client_jobs, state, ExperimentContext, Framework, RoundOutcome};
 use crate::jsonio::Json;
 use crate::oran::{self, RicProfile, UploadSizes};
 use crate::runtime::Tensor;
 use crate::scenario::RoundEnv;
-use crate::selection::DeadlineSelector;
+use crate::selection::{CostModel, DeadlineSelector, SelectPath};
 use crate::sim::RngPool;
 
 pub struct OranFed {
@@ -28,13 +28,17 @@ impl OranFed {
     pub fn new(ctx: &ExperimentContext) -> Result<Self> {
         let c = ctx.init.client(&ctx.pool)?;
         let s = ctx.init.server(&ctx.pool)?;
-        let sizes = vec![
-            UploadSizes { model_bytes: ctx.full_model_bytes(), feature_bytes: 0.0 };
-            ctx.topo.len()
-        ];
+        // every client uplinks the same full model, so the round-0 estimate
+        // comes from the O(1) uniform constructor (no O(M) size vector)
+        let size = UploadSizes { model_bytes: ctx.full_model_bytes(), feature_bytes: 0.0 };
         Ok(Self {
             wf: ctx.init.concat_full(&c, &s)?,
-            selector: DeadlineSelector::new(&ctx.topo, &sizes, ctx.cfg.alpha),
+            selector: DeadlineSelector::from_uniform(
+                ctx.topo.len(),
+                size,
+                ctx.topo.bandwidth_bps,
+                ctx.cfg.alpha,
+            ),
         })
     }
 }
@@ -54,19 +58,39 @@ impl Framework for OranFed {
         let cfg = &ctx.cfg;
         let e = cfg.oranfed_e;
         let scale = 1.0 / cfg.omega; // full model on the weak edge
-        let topo_r = env.apply(&ctx.topo);
+        // identity environments borrow ctx.topo — no per-round O(M) copy
+        let topo_r = env.effective(&ctx.topo);
 
-        // deadline-aware selection over FULL-model local compute
-        let mut selected: Vec<&RicProfile> = self
-            .selector
-            .select(&topo_r, |r| e as f64 * r.q_c * scale);
-        if selected.is_empty() {
-            selected.push(
-                topo_r
-                    .most_slack(|r| e as f64 * r.q_c * scale)
-                    .expect("scenario engine keeps >= 1 candidate available"),
-            );
-        }
+        // deadline-aware selection over FULL-model local compute; with a
+        // selection cap the admitted set is the streaming/indexed top-k
+        // (O(selected) per round at any federation size)
+        let selected: Vec<&RicProfile> = if cfg.select_cap > 0 {
+            let path = if cfg.reference_path {
+                SelectPath::Dense
+            } else if env.is_identity() {
+                SelectPath::Indexed
+            } else {
+                SelectPath::Streaming
+            };
+            let jobs = resolve_client_jobs(cfg.client_jobs, topo_r.len());
+            self.selector.select_capped(
+                &topo_r,
+                &CostModel::unsplit(e as f64, scale),
+                cfg.select_cap,
+                path,
+                jobs,
+            )
+        } else {
+            let mut sel = self.selector.select(&topo_r, |r| e as f64 * r.q_c * scale);
+            if sel.is_empty() {
+                sel.push(
+                    topo_r
+                        .most_slack(|r| e as f64 * r.q_c * scale)
+                        .expect("scenario engine keeps >= 1 candidate available"),
+                );
+            }
+            sel
+        };
         let sizes = vec![
             UploadSizes { model_bytes: ctx.full_model_bytes(), feature_bytes: 0.0 };
             selected.len()

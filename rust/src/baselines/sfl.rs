@@ -61,8 +61,9 @@ impl Framework for VanillaSfl {
     ) -> Result<RoundOutcome> {
         let cfg = &ctx.cfg;
         // like FedAvg: no deadline awareness, but only reachable clients
-        // (scenario churn) can join the per-batch ping-pong
-        let topo_r = env.apply(&ctx.topo);
+        // (scenario churn) can join the per-batch ping-pong; identity
+        // environments borrow ctx.topo — no per-round O(M) copy
+        let topo_r = env.effective(&ctx.topo);
         let ids = sample_from(rng, "sfl_select", round, &env.available_ids(), cfg.sfl_k);
         let e = cfg.sfl_e;
 
@@ -99,7 +100,7 @@ impl Framework for VanillaSfl {
         let train_n = if quorum_miss { 0 } else { survivors.len() };
         let halves = run_clients(train_n, jobs, |i| {
             let m = survivors[i];
-            let shard = &ctx.shards[m].data;
+            let shard = &ctx.shard(m).data;
             let mut wc_m = wc0.clone();
             let mut ws_m = ws0.clone();
             let mut loss = 0f32;

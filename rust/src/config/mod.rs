@@ -134,6 +134,30 @@ pub struct SimConfig {
     /// suite is the gate), total thread footprint multiplies with `--jobs`
     /// — PERF.md §client-parallelism.
     pub client_jobs: usize,
+    /// cap on how many candidates the deadline-aware selectors admit per
+    /// round (0 = off, the historical unbounded behavior). With a cap the
+    /// selection runs as a streaming top-k over candidate shards instead of
+    /// a full O(M log M) sort — the federation-scale path (PERF.md
+    /// §federation-scale). Applies to SplitMe and O-RANFed; the fixed-K
+    /// baselines already bound their own K.
+    pub select_cap: usize,
+    /// how many trailing `RoundRecord`s `RunState` retains in memory
+    /// (0 = unbounded, the historical behavior). `RunSummary` totals are
+    /// accumulated incrementally and stay identical under any window;
+    /// incompatible with `checkpoint_every` (checkpoints embed the full
+    /// record history for bitwise resume).
+    pub record_window: usize,
+    /// distinct synthetic data shards: client m trains shard `m % S`
+    /// (0 = auto: S = M for M <= 256, else 240 — divisible by both the
+    /// 3-slice commag and 10-class vision cycles, so sharded populations
+    /// keep the exact class mix). Bounds dataset memory at federation
+    /// scale; small-M runs are bitwise unchanged.
+    pub data_shards: usize,
+    /// force the dense reference path: full per-client env/fault vectors
+    /// and cold Markov replay from round 0 (the pre-federation-scale
+    /// behavior). Only useful to differential-test the lazy path against;
+    /// never faster.
+    pub reference_path: bool,
     /// fixed-K baselines (FedAvg K=10/E=10, SFL K=20/E=14 per §V)
     pub fedavg_k: usize,
     pub fedavg_e: usize,
@@ -179,6 +203,10 @@ impl SimConfig {
             eta_s: Some(0.02),
             chunk_cache_cap_bytes: 0,
             client_jobs: 0,
+            select_cap: 0,
+            record_window: 0,
+            data_shards: 0,
+            reference_path: false,
             fedavg_k: 10,
             fedavg_e: 10,
             sfl_k: 20,
@@ -267,6 +295,10 @@ impl SimConfig {
             ("eta_s", opt(self.eta_s)),
             ("chunk_cache_cap_bytes", Json::num(self.chunk_cache_cap_bytes as f64)),
             ("client_jobs", Json::num(self.client_jobs as f64)),
+            ("select_cap", Json::num(self.select_cap as f64)),
+            ("record_window", Json::num(self.record_window as f64)),
+            ("data_shards", Json::num(self.data_shards as f64)),
+            ("reference_path", Json::Bool(self.reference_path)),
             ("fedavg_k", Json::num(self.fedavg_k as f64)),
             ("fedavg_e", Json::num(self.fedavg_e as f64)),
             ("sfl_k", Json::num(self.sfl_k as f64)),
@@ -333,6 +365,10 @@ impl SimConfig {
         }
         if let Some(v) = j.opt("chunk_cache_cap_bytes") { cfg.chunk_cache_cap_bytes = v.as_usize()?; }
         if let Some(v) = j.opt("client_jobs") { cfg.client_jobs = v.as_usize()?; }
+        if let Some(v) = j.opt("select_cap") { cfg.select_cap = v.as_usize()?; }
+        if let Some(v) = j.opt("record_window") { cfg.record_window = v.as_usize()?; }
+        if let Some(v) = j.opt("data_shards") { cfg.data_shards = v.as_usize()?; }
+        if let Some(v) = j.opt("reference_path") { cfg.reference_path = v.as_bool()?; }
         if let Some(v) = j.opt("fedavg_k") { cfg.fedavg_k = v.as_usize()?; }
         if let Some(v) = j.opt("fedavg_e") { cfg.fedavg_e = v.as_usize()?; }
         if let Some(v) = j.opt("sfl_k") { cfg.sfl_k = v.as_usize()?; }
@@ -384,7 +420,33 @@ impl SimConfig {
         if !(self.retry_backoff_s.is_finite() && self.retry_backoff_s >= 0.0) {
             bail!("retry_backoff_s must be finite and >= 0; got {}", self.retry_backoff_s);
         }
+        if self.checkpoint_every > 0 && self.record_window > 0 {
+            bail!(
+                "checkpoint_every and record_window are mutually exclusive: checkpoints \
+                 embed the full record history for bitwise resume, a window discards it"
+            );
+        }
         Ok(())
+    }
+
+    /// The resolved synthetic-data shard count S: client m trains shard
+    /// `m % S`. `data_shards = 0` (auto) keeps S = M for M <= 256 — every
+    /// client its own shard, bitwise identical to the unsharded generator —
+    /// and caps S at 240 beyond that (240 = lcm(3, 10)·8, so the commag
+    /// 3-slice and vision 10-class cycles both divide it and `m % S`
+    /// preserves each client's class).
+    pub fn shard_count(&self) -> usize {
+        let s = match self.data_shards {
+            0 => {
+                if self.num_clients <= 256 {
+                    self.num_clients
+                } else {
+                    240
+                }
+            }
+            s => s,
+        };
+        s.min(self.num_clients).max(1)
     }
 
     /// K_eps(E) of constraint (22f): O((E+1)^2 / (E^2 eps^2)).
@@ -532,6 +594,44 @@ mod tests {
         assert_eq!(c.num_clients, 12);
         assert_eq!(c.b_min, 0.05);
         assert_eq!(c.fedavg_k, 10); // untouched default
+    }
+
+    #[test]
+    fn scale_knobs_default_off_and_round_trip() {
+        let c = SimConfig::commag();
+        assert_eq!((c.select_cap, c.record_window, c.data_shards), (0, 0, 0));
+        assert!(!c.reference_path);
+        let mut c = SimConfig::commag();
+        c.select_cap = 16;
+        c.record_window = 4;
+        c.data_shards = 30;
+        c.reference_path = true;
+        assert!(c.validate().is_ok());
+        let back =
+            SimConfig::from_json(&Json::parse(&c.to_json().to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back.select_cap, 16);
+        assert_eq!(back.record_window, 4);
+        assert_eq!(back.data_shards, 30);
+        assert!(back.reference_path);
+        // a record window discards the history a checkpoint must embed
+        let mut c = SimConfig::commag();
+        c.checkpoint_every = 5;
+        c.record_window = 8;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn shard_count_auto_rule() {
+        let mut c = SimConfig::commag();
+        assert_eq!(c.shard_count(), 50); // M <= 256: every client its own shard
+        c.num_clients = 256;
+        assert_eq!(c.shard_count(), 256);
+        c.num_clients = 100_000;
+        assert_eq!(c.shard_count(), 240); // divisible by 3 and 10: class mix kept
+        c.data_shards = 30;
+        assert_eq!(c.shard_count(), 30);
+        c.data_shards = 1_000_000; // explicit S never exceeds M
+        assert_eq!(c.shard_count(), 100_000);
     }
 
     #[test]

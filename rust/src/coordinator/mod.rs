@@ -22,7 +22,7 @@ use anyhow::Result;
 use crate::baselines;
 use crate::config::{FrameworkKind, SimConfig};
 use crate::fl::{ExperimentContext, Framework, MemoryStats};
-use crate::metrics::{RoundRecord, RunSummary};
+use crate::metrics::{RecordWriter, RoundRecord, RunSummary, SummaryAccum};
 use crate::oran;
 use crate::runtime::Engine;
 use crate::sim::{Clock, RngPool};
@@ -33,7 +33,14 @@ use crate::sim::{Clock, RngPool};
 pub struct RunState {
     pub kind: FrameworkKind,
     pub clock: Clock,
+    /// retained per-round records: the full history by default, or only the
+    /// trailing `cfg.record_window` rounds when that knob is set (bounded
+    /// memory at federation scale — summary totals come from `accum`, not
+    /// from this vector, so retention never changes them)
     pub records: Vec<RoundRecord>,
+    /// streaming summary aggregates, fed every record as it is produced —
+    /// the single code path behind [`RunSummary`] for windowed AND full runs
+    pub accum: SummaryAccum,
     /// per-framework runtime streams, derived purely from (seed, framework)
     /// in ONE place ([`RngPool::for_framework`]) so no sharing or thread
     /// interleaving can perturb them
@@ -51,6 +58,7 @@ impl RunState {
             kind,
             clock: Clock::new(),
             records: Vec::new(),
+            accum: SummaryAccum::new(kind.name(), &cfg.preset, cfg.target_accuracy),
             pool: RngPool::for_framework(cfg.seed, kind.name()),
             next_round: 0,
         }
@@ -84,6 +92,10 @@ pub struct Runner<'e> {
     /// when set, [`Runner::train`] snapshots the run here every
     /// `cfg.checkpoint_every` rounds (and `resume` continues from it)
     pub checkpoint: Option<PathBuf>,
+    /// when set, every finished round is appended to this streaming sink as
+    /// it is produced (`--stream-records`); pair with `cfg.record_window`
+    /// for bounded-memory full exports at M = 10⁵–10⁶
+    pub record_sink: Option<RecordWriter>,
 }
 
 impl<'e> Runner<'e> {
@@ -102,7 +114,7 @@ impl<'e> Runner<'e> {
     fn assemble(ctx: CtxHandle<'e>, kind: FrameworkKind) -> Result<Self> {
         let framework = baselines::build(kind, ctx.get())?;
         let state = RunState::new(kind, &ctx.get().cfg);
-        Ok(Self { ctx, framework, state, progress: None, checkpoint: None })
+        Ok(Self { ctx, framework, state, progress: None, checkpoint: None, record_sink: None })
     }
 
     /// Rebuild a runner from a [`checkpoint::Checkpoint`] on disk. The
@@ -116,6 +128,13 @@ impl<'e> Runner<'e> {
         runner.framework.load_state(&ck.framework_state)?;
         runner.state.next_round = ck.next_round;
         runner.state.clock.restore(ck.clock);
+        // replay the saved records through the accumulator: checkpoints are
+        // mutually exclusive with `record_window` (config validation), so
+        // `ck.records` is always the full history and the resumed summary
+        // matches the uninterrupted run bit for bit
+        for r in &ck.records {
+            runner.state.accum.push(r);
+        }
         runner.state.records = ck.records;
         runner.checkpoint = Some(path.as_ref().to_path_buf());
         Ok(runner)
@@ -139,7 +158,19 @@ impl<'e> Runner<'e> {
             if let Some(cb) = &self.progress {
                 cb(&rec);
             }
+            self.state.accum.push(&rec);
+            if let Some(sink) = &mut self.record_sink {
+                sink.push(&rec)?;
+            }
             self.state.records.push(rec);
+            // bounded retention: keep only the trailing window in memory
+            // (aggregates already live in the accumulator; streamed exports
+            // already hit disk above)
+            let window = self.ctx.get().cfg.record_window;
+            if window > 0 && self.state.records.len() > window {
+                let excess = self.state.records.len() - window;
+                self.state.records.drain(..excess);
+            }
             self.state.next_round = round + 1;
             self.maybe_checkpoint()?;
             if hit && self.ctx.get().cfg.stop_at_target {
@@ -147,6 +178,15 @@ impl<'e> Runner<'e> {
             }
         }
         Ok(self.summary())
+    }
+
+    /// Flush and close the streaming record sink, if one was attached.
+    /// Idempotent: later calls (and drops) are no-ops.
+    pub fn finish_records(&mut self) -> Result<()> {
+        match self.record_sink.take() {
+            Some(sink) => sink.finish(),
+            None => Ok(()),
+        }
     }
 
     /// Snapshot after rounds K, 2K, ... when a checkpoint path is set and
@@ -231,13 +271,10 @@ impl<'e> Runner<'e> {
     }
 
     pub fn summary(&self) -> RunSummary {
-        let ctx = self.ctx.get();
-        RunSummary::from_records(
-            self.state.kind.name(),
-            &ctx.cfg.preset,
-            ctx.cfg.target_accuracy,
-            self.state.records.clone(),
-        )
+        // every record this runner produced has passed through the
+        // accumulator, so this is `from_records` over the full history even
+        // when only a trailing window of records is still retained
+        self.state.accum.clone().finish(self.state.records.clone())
     }
 
     pub fn records(&self) -> &[RoundRecord] {

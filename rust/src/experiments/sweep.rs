@@ -61,7 +61,8 @@ pub fn settle(
     let mut selected_n = 0usize;
     for round in 0..rounds {
         let env = scenario.env(round);
-        let topo_r = env.apply(&topo);
+        // identity rounds borrow `topo` — no O(M) copy in the settle loop
+        let topo_r = env.effective(&topo);
         let mut selected: Vec<_> = selector
             .select(&topo_r, |r| e_last as f64 * (r.q_c + r.q_s))
             .into_iter()

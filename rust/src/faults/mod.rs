@@ -40,6 +40,7 @@
 use anyhow::{bail, Result};
 
 use crate::config::SimConfig;
+use crate::pop::{ChainMemo, PerClient};
 use crate::sim::RngPool;
 
 /// Named fault presets selectable via `SimConfig.faults` / `--faults`.
@@ -119,30 +120,35 @@ const CRASH_P_OFF: f64 = 0.45;
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RoundFaults {
     pub round: usize,
+    /// federation size M (event attributes are indexed by client id)
+    pub m: usize,
     /// client finishes local compute, then never uploads (no retry)
-    pub drop_after_compute: Vec<bool>,
+    pub drop_after_compute: PerClient<bool>,
     /// attempts needed for the upload to land (1 = clean, 0 = hopeless)
-    pub upload_attempts: Vec<u8>,
+    pub upload_attempts: PerClient<u8>,
     /// crash episode: dispatch fails all round (no compute, no upload)
-    pub crashed: Vec<bool>,
+    pub crashed: PerClient<bool>,
 }
 
 impl RoundFaults {
-    /// The all-clean event set (what the `none` preset always returns).
+    /// The all-clean event set (what the `none` preset always returns) —
+    /// O(1) in M via the broadcast representation.
     pub fn clean(round: usize, m: usize) -> Self {
         Self {
             round,
-            drop_after_compute: vec![false; m],
-            upload_attempts: vec![1; m],
-            crashed: vec![false; m],
+            m,
+            drop_after_compute: PerClient::uniform(false),
+            upload_attempts: PerClient::uniform(1),
+            crashed: PerClient::uniform(false),
         }
     }
 
-    /// True iff no client experiences any fault this round.
+    /// True iff no client experiences any fault this round — O(1) on the
+    /// broadcast (clean) representation.
     pub fn is_clean(&self) -> bool {
-        self.drop_after_compute.iter().all(|&d| !d)
-            && self.upload_attempts.iter().all(|&a| a == 1)
-            && self.crashed.iter().all(|&c| !c)
+        self.drop_after_compute.all(self.m, |&d| !d)
+            && self.upload_attempts.all(self.m, |&a| a == 1)
+            && self.crashed.all(self.m, |&c| !c)
     }
 
     /// Resolve this round's events against one framework's selected set:
@@ -162,14 +168,14 @@ impl RoundFaults {
         let mut dropouts = 0usize;
         let mut max_backoff = 0f64;
         for &m in selected {
-            let fate = if self.crashed[m] {
+            let fate = if *self.crashed.get(m) {
                 dropouts += 1;
                 ClientFate { id: m, computed: false, attempts: 0, delivered: false, backoff: 0.0 }
-            } else if self.drop_after_compute[m] {
+            } else if *self.drop_after_compute.get(m) {
                 dropouts += 1;
                 ClientFate { id: m, computed: true, attempts: 0, delivered: false, backoff: 0.0 }
             } else {
-                let needed = self.upload_attempts[m] as usize;
+                let needed = *self.upload_attempts.get(m) as usize;
                 if needed == 1 {
                     ClientFate { id: m, computed: true, attempts: 1, delivered: true, backoff: 0.0 }
                 } else {
@@ -257,15 +263,28 @@ pub struct Faults {
     /// root-seed pool: fault streams live in the `"faults/…"` label
     /// namespace, disjoint from scenario/topology/init/framework streams
     pool: RngPool,
+    /// reference (dense) path: cold crash-chain replay from round 0 and
+    /// dense event representation (the pre-ISSUE-7 behavior)
+    dense: bool,
+    /// skip-ahead cache for the crash_loop per-client Markov chains
+    memo_crash: ChainMemo<Vec<bool>>,
 }
 
 impl Faults {
     pub fn new(cfg: &SimConfig) -> Result<Self> {
-        Ok(Self::from_parts(cfg.faults.parse()?, cfg.seed, cfg.num_clients))
+        let mut f = Self::from_parts(cfg.faults.parse()?, cfg.seed, cfg.num_clients);
+        f.dense = cfg.reference_path;
+        Ok(f)
     }
 
     pub fn from_parts(kind: FaultKind, seed: u64, m: usize) -> Self {
-        Self { kind, m, pool: RngPool::new(seed) }
+        Self { kind, m, pool: RngPool::new(seed), dense: false, memo_crash: ChainMemo::new() }
+    }
+
+    /// Switch to (or away from) the reference dense path: cold chain
+    /// replay, dense event representation. Used by the scale differential.
+    pub fn set_dense(&mut self, dense: bool) {
+        self.dense = dense;
     }
 
     pub fn kind(&self) -> FaultKind {
@@ -282,12 +301,18 @@ impl Faults {
     /// all; `crash_loop` replays its per-client Markov chains from round 0
     /// (the scenario engine's statelessness trade, PERF.md §fault-model).
     pub fn round(&self, round: usize) -> RoundFaults {
-        match self.kind {
+        let mut ev = match self.kind {
             FaultKind::None => RoundFaults::clean(round, self.m),
             FaultKind::Dropout => self.dropout(round),
             FaultKind::FlakyUplink => self.flaky_uplink(round),
             FaultKind::CrashLoop => self.crash_loop(round),
+        };
+        if self.dense {
+            ev.drop_after_compute.densify(self.m);
+            ev.upload_attempts.densify(self.m);
+            ev.crashed.densify(self.m);
         }
+        ev
     }
 
     /// The full fault trace of `rounds` rounds (test/figure helper).
@@ -298,10 +323,9 @@ impl Faults {
     /// Independent per-(round, client) Bernoulli dropouts.
     fn dropout(&self, round: usize) -> RoundFaults {
         let mut rng = self.pool.stream("faults/dropout", round as u64);
+        let drops: Vec<bool> = (0..self.m).map(|_| rng.f64() < DROPOUT_P).collect();
         let mut ev = RoundFaults::clean(round, self.m);
-        for d in ev.drop_after_compute.iter_mut() {
-            *d = rng.f64() < DROPOUT_P;
-        }
+        ev.drop_after_compute = PerClient::Dense(drops);
         ev
     }
 
@@ -310,36 +334,54 @@ impl Faults {
     /// `FLAKY_MAX_ATTEMPTS` attempts all fail is hopeless (0) this round.
     fn flaky_uplink(&self, round: usize) -> RoundFaults {
         let mut rng = self.pool.stream("faults/flaky_uplink", round as u64);
+        let attempts: Vec<u8> = (0..self.m)
+            .map(|_| {
+                let mut attempts = 0usize;
+                loop {
+                    attempts += 1;
+                    if rng.f64() >= FLAKY_P_FAIL {
+                        break;
+                    }
+                    if attempts == FLAKY_MAX_ATTEMPTS {
+                        attempts = 0; // every attempt inside the cap failed
+                        break;
+                    }
+                }
+                attempts as u8
+            })
+            .collect();
         let mut ev = RoundFaults::clean(round, self.m);
-        for a in ev.upload_attempts.iter_mut() {
-            let mut attempts = 0usize;
-            loop {
-                attempts += 1;
-                if rng.f64() >= FLAKY_P_FAIL {
-                    break;
-                }
-                if attempts == FLAKY_MAX_ATTEMPTS {
-                    attempts = 0; // every attempt inside the cap failed
-                    break;
-                }
-            }
-            *a = attempts as u8;
-        }
+        ev.upload_attempts = PerClient::Dense(attempts);
         ev
     }
 
-    /// Per-client crash chain, starting all-healthy, replayed from round 0.
-    fn crash_loop(&self, round: usize) -> RoundFaults {
-        let mut crashed = vec![false; self.m];
-        for r in 0..=round {
-            let mut rng = self.pool.stream("faults/crash_loop", r as u64);
-            for c in crashed.iter_mut() {
-                let u = rng.f64();
-                *c = if *c { u >= CRASH_P_OFF } else { u < CRASH_P_ON };
-            }
+    /// One transition of the per-client crash chains across round `r`
+    /// (M sequential draws from the round-keyed stream).
+    fn crash_step(&self, mut crashed: Vec<bool>, r: usize) -> Vec<bool> {
+        let mut rng = self.pool.stream("faults/crash_loop", r as u64);
+        for c in crashed.iter_mut() {
+            let u = rng.f64();
+            *c = if *c { u >= CRASH_P_OFF } else { u < CRASH_P_ON };
         }
+        crashed
+    }
+
+    /// Per-client crash chain, starting all-healthy; defined by replay from
+    /// round 0 and skip-ahead memoized (bitwise identical — every
+    /// transition draws from a round-keyed stream).
+    fn crash_loop(&self, round: usize) -> RoundFaults {
+        let crashed = if self.dense {
+            let mut c = vec![false; self.m];
+            for r in 0..=round {
+                c = self.crash_step(c, r);
+            }
+            c
+        } else {
+            self.memo_crash
+                .state_at(round, || vec![false; self.m], |c, r| self.crash_step(c, r))
+        };
         let mut ev = RoundFaults::clean(round, self.m);
-        ev.crashed = crashed;
+        ev.crashed = PerClient::Dense(crashed);
         ev
     }
 }
@@ -398,10 +440,13 @@ mod tests {
     #[test]
     fn dropout_only_sets_drop_flags() {
         let tr = faults(FaultKind::Dropout, 7, 20).trace(60);
-        assert!(tr.iter().any(|e| e.drop_after_compute.iter().any(|&d| d)), "nobody dropped");
+        assert!(
+            tr.iter().any(|e| e.drop_after_compute.iter(e.m).any(|&d| d)),
+            "nobody dropped"
+        );
         for e in &tr {
-            assert!(e.upload_attempts.iter().all(|&a| a == 1));
-            assert!(e.crashed.iter().all(|&c| !c));
+            assert!(e.upload_attempts.all(e.m, |&a| a == 1));
+            assert!(e.crashed.all(e.m, |&c| !c));
         }
     }
 
@@ -411,9 +456,9 @@ mod tests {
         let mut saw_retry = false;
         let mut saw_clean = false;
         for e in &tr {
-            assert!(e.drop_after_compute.iter().all(|&d| !d));
-            assert!(e.crashed.iter().all(|&c| !c));
-            for &a in &e.upload_attempts {
+            assert!(e.drop_after_compute.all(e.m, |&d| !d));
+            assert!(e.crashed.all(e.m, |&c| !c));
+            for &a in e.upload_attempts.iter(e.m) {
                 assert!((a as usize) <= FLAKY_MAX_ATTEMPTS);
                 saw_retry |= a != 1;
                 saw_clean |= a == 1;
@@ -427,17 +472,32 @@ mod tests {
     fn crash_episodes_persist_across_rounds() {
         let tr = faults(FaultKind::CrashLoop, 3, 30).trace(100);
         assert!(
-            tr.iter().any(|e| e.crashed.iter().any(|&c| c)),
+            tr.iter().any(|e| e.crashed.iter(e.m).any(|&c| c)),
             "nobody ever crashed"
         );
         // the chain has memory: some episode spans >= 2 consecutive rounds
         let mut persisted = false;
         for w in tr.windows(2) {
             for m in 0..30 {
-                persisted |= w[0].crashed[m] && w[1].crashed[m];
+                persisted |= *w[0].crashed.get(m) && *w[1].crashed.get(m);
             }
         }
         assert!(persisted, "crash episodes never persisted");
+    }
+
+    #[test]
+    fn memoized_crash_chain_matches_cold_replay() {
+        let lazy = faults(FaultKind::CrashLoop, 11, 25);
+        let mut dense = faults(FaultKind::CrashLoop, 11, 25);
+        dense.set_dense(true);
+        // mixed access pattern: sequential, backward, far-forward
+        for r in [0usize, 1, 2, 7, 3, 8, 30, 31, 5, 30] {
+            let a = lazy.round(r);
+            let b = dense.round(r);
+            assert_eq!(a, b, "round {r}: memoized != cold replay");
+            // bitwise, not just semantic: both sides dense and elementwise equal
+            assert_eq!(a.crashed.to_vec(25), b.crashed.to_vec(25));
+        }
     }
 
     #[test]
@@ -454,7 +514,7 @@ mod tests {
     #[test]
     fn resolve_dropout_pays_compute_but_never_delivers() {
         let mut ev = RoundFaults::clean(0, 4);
-        ev.drop_after_compute[2] = true;
+        ev.drop_after_compute.set(2, true, 4);
         let out = ev.resolve(&[0, 2], |_| 10.0, 0.05);
         assert_eq!(out.survivors(), vec![0]);
         assert_eq!(out.dropouts, 1);
@@ -467,7 +527,7 @@ mod tests {
     #[test]
     fn resolve_crash_skips_compute_entirely() {
         let mut ev = RoundFaults::clean(0, 4);
-        ev.crashed[1] = true;
+        ev.crashed.set(1, true, 4);
         let out = ev.resolve(&[0, 1, 3], |_| 10.0, 0.05);
         assert_eq!(out.survivors(), vec![0, 3]);
         assert_eq!(out.dropouts, 1);
@@ -478,7 +538,7 @@ mod tests {
     #[test]
     fn resolve_budgets_retries_against_the_deadline() {
         let mut ev = RoundFaults::clean(0, 4);
-        ev.upload_attempts[0] = 3; // needs 2 retries: backoff b + 2b = 3b
+        ev.upload_attempts.set(0, 3, 4); // needs 2 retries: backoff b + 2b = 3b
         let b = 0.05;
         // generous slack: both retries fit, client survives
         let out = ev.resolve(&[0], |_| 1.0, b);
@@ -506,7 +566,7 @@ mod tests {
     #[test]
     fn resolve_hopeless_upload_stops_at_the_attempt_cap() {
         let mut ev = RoundFaults::clean(0, 2);
-        ev.upload_attempts[0] = 0; // hopeless: every attempt in the cap fails
+        ev.upload_attempts.set(0, 0, 2); // hopeless: every attempt in the cap fails
         let out = ev.resolve(&[0], |_| 1e9, 0.05);
         assert!(out.survivors().is_empty());
         assert_eq!(out.dropouts, 1);

@@ -150,9 +150,25 @@ impl<'a> ExperimentContext<'a> {
         let plan = engine
             .warmup_preset(&cfg.preset)
             .context("compiling preset artifacts")?;
+        // synthetic-data shard cap (PERF.md §federation-scale): generate
+        // S = cfg.shard_count() shards and map client m to shard m % S.
+        // Both generators draw each shard from its own per-client stream
+        // (`*_client`, keyed by m), so generating S shards is bitwise
+        // identical to the first S shards of the full-M generation — and
+        // S = M for small federations keeps today's behavior exactly.
+        let shard_cfg = {
+            let s = cfg.shard_count();
+            if s == cfg.num_clients {
+                cfg.clone()
+            } else {
+                let mut c = cfg.clone();
+                c.num_clients = s;
+                c
+            }
+        };
         let (shards, test) = match cfg.preset.as_str() {
-            "commag" => commag::generate(cfg, preset.batch),
-            "vision" => vision::generate(cfg, preset.batch),
+            "commag" => commag::generate(&shard_cfg, preset.batch),
+            "vision" => vision::generate(&shard_cfg, preset.batch),
             other => bail!("no data generator for preset {other:?}"),
         };
         if shards.iter().any(|s| s.data.num_batches() == 0) {
@@ -271,19 +287,32 @@ impl<'a> ExperimentContext<'a> {
         Tensor::scalar1(self.cfg.eta_s.unwrap_or(self.preset.eta_s)).freeze()
     }
 
-    /// Chunk stacks for shard `m`: `(xs, ys)` if precomputed.
-    pub fn shard_chunks(&self, m: usize) -> Option<(&ChunkStacks, &ChunkStacks)> {
-        self.chunks.get(m).map(|c| (&c.xs, &c.ys))
+    /// The data shard index client `m` trains on (`m % S`; S = M for small
+    /// federations, so this is the identity there).
+    pub fn shard_of(&self, m: usize) -> usize {
+        m % self.shards.len()
     }
 
-    /// Whole-shard smash input for shard `m`: the interned `client_fwd_x{NB}`
-    /// artifact plus the frozen `[NB, B, ...]` stack (materialized on first
-    /// use), if the context carries a slot for this shard size.
+    /// The data shard client `m` trains on.
+    pub fn shard(&self, m: usize) -> &ClientShard {
+        &self.shards[self.shard_of(m)]
+    }
+
+    /// Chunk stacks for client `m`'s shard: `(xs, ys)` if precomputed.
+    pub fn shard_chunks(&self, m: usize) -> Option<(&ChunkStacks, &ChunkStacks)> {
+        self.chunks.get(self.shard_of(m)).map(|c| (&c.xs, &c.ys))
+    }
+
+    /// Whole-shard smash input for client `m`'s shard: the interned
+    /// `client_fwd_x{NB}` artifact plus the frozen `[NB, B, ...]` stack
+    /// (materialized on first use), if the context carries a slot for this
+    /// shard size.
     pub fn shard_whole(&self, m: usize) -> Option<(ArtifactId, &Frozen)> {
-        let w = self.shard_wholes.get(m)?.as_ref()?;
+        let s = self.shard_of(m);
+        let w = self.shard_wholes.get(s)?.as_ref()?;
         let stack = w.cell.get_or_init(|| {
             let xs: Vec<&Tensor> =
-                self.shards[m].data.batches.iter().map(|(x, _)| x.tensor()).collect();
+                self.shards[s].data.batches.iter().map(|(x, _)| x.tensor()).collect();
             // cannot fail: num_batches >= 1 and uniform batch shapes were
             // both validated when the context was built
             Tensor::stack(&xs).expect("whole-shard stack over validated batches").freeze()
@@ -329,7 +358,7 @@ impl<'a> ExperimentContext<'a> {
 
     /// Wire size of client m's whole-dataset smashed upload (S_m), bytes.
     pub fn smashed_bytes(&self, m: usize) -> f64 {
-        (self.shards[m].data.num_samples() * self.preset.split_dim) as f64 * 4.0
+        (self.shard(m).data.num_samples() * self.preset.split_dim) as f64 * 4.0
     }
 
     /// Per-batch smashed tensor size, bytes (vanilla SFL's per-update unit).

@@ -40,6 +40,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod model;
 pub mod oran;
+pub mod pop;
 pub mod runtime;
 pub mod scenario;
 pub mod selection;

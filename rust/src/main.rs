@@ -29,6 +29,9 @@ USAGE:
             [--out DIR] [--seed N] [--eval-every K] [--client-jobs N]
             [--scenario NAME] [--faults NAME] [--fault-quorum Q]
             [--retry-backoff S] [--checkpoint FILE] [--checkpoint-every K]
+            [--clients M] [--select-cap K] [--record-window W]
+            [--data-shards S] [--stream-records FILE.csv|.jsonl]
+            [--reference-path]
   repro run --resume FILE.ckpt [--rounds N] [--out DIR] [--checkpoint FILE]
   repro experiment [fig3a|fig3b|fig3a_churn|fig4a|fig4b|fig5|scenarios|faults|all]
             [--splitme-rounds N] [--baseline-rounds N] [--rounds N] [--out DIR]
@@ -75,6 +78,23 @@ fig3a_churn:     Fig 3a rerun under churn (default --scenario churn):
 experiment faults: the paired comparison repeated under every fault preset
                  (`none` first as the clean control), CSVs under
                  `faults_<preset>/`; --rounds N caps both round budgets
+--clients M:     override the preset's federation size (scales b_min so the
+                 waterfill floor stays feasible) — M = 10⁵-10⁶ works with
+                 --select-cap (PERF.md #federation-scale)
+--select-cap K:  cap deadline-aware selection at the K most slack-rich
+                 admitted RICs via a streaming top-k (per-round work becomes
+                 O(selected), not O(M log M)); 0 (default) = uncapped legacy
+                 selection, bitwise identical to before
+--record-window W: keep only the trailing W per-round records in memory
+                 (summary totals are streamed and stay exact); conflicts
+                 with --checkpoint-every
+--data-shards S: distinct client data shards to generate (default 0 = auto:
+                 M when M <= 256, else 240); client m trains shard m mod S
+--stream-records FILE: append every finished round to FILE as it happens
+                 (.jsonl = one JSON object per line, else CSV) — full
+                 exports at any M without buffering
+--reference-path: force the dense O(M log M) selection oracle (differential
+                 debugging of the capped paths)
 ";
 
 fn main() {
@@ -130,6 +150,17 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.retry_backoff_s = args.f64_or("retry-backoff", cfg.retry_backoff_s)?;
     cfg.checkpoint_every = args.usize_or("checkpoint-every", cfg.checkpoint_every)?;
     let checkpoint = args.opt_str("checkpoint");
+    // federation-scale knobs (PERF.md #federation-scale)
+    if let Some(m) = args.opt_usize("clients")? {
+        cfg.num_clients = m;
+        // keep the waterfill floor feasible: M * b_min must stay <= 1
+        cfg.b_min = cfg.b_min.min(1.0 / m as f64);
+    }
+    cfg.select_cap = args.usize_or("select-cap", cfg.select_cap)?;
+    cfg.record_window = args.usize_or("record-window", cfg.record_window)?;
+    cfg.data_shards = args.usize_or("data-shards", cfg.data_shards)?;
+    cfg.reference_path = args.flag("reference-path") || cfg.reference_path;
+    let stream_records = args.opt_str("stream-records");
     cfg.validate()?;
     let rounds = args.usize_or("rounds", 30)?;
     let out = args.str_or("out", "results");
@@ -144,6 +175,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
     let mut runner = Runner::new(&engine, &cfg, framework)?;
     runner.checkpoint = checkpoint.map(Into::into);
+    if let Some(path) = &stream_records {
+        runner.record_sink = Some(repro::metrics::RecordWriter::create(path)?);
+    }
     runner.progress = Some(Box::new(|r| {
         println!(
             "round {:>3}: sel={:>2} E={:>2} acc={:.3} train_loss={:.4} sim_t={:.2}s",
@@ -151,6 +185,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         );
     }));
     let summary = runner.train(rounds)?;
+    runner.finish_records()?;
+    if let Some(path) = &stream_records {
+        println!("streamed {} per-round records -> {path}", summary.rounds);
+    }
     std::fs::create_dir_all(&out)?;
     summary.write_csv(format!("{out}/{}_{}.csv", cfg.preset, framework.name()))?;
     summary.write_json(format!("{out}/{}_{}.json", cfg.preset, framework.name()))?;
@@ -206,6 +244,11 @@ fn cmd_run_resume(args: &Args, ckpt: &str) -> Result<()> {
         "fault-quorum",
         "retry-backoff",
         "checkpoint-every",
+        "clients",
+        "select-cap",
+        "record-window",
+        "data-shards",
+        "reference-path",
     ] {
         if args.opt_str(key).is_some() {
             return Err(anyhow::Error::new(repro::errors::ReproError::invalid(format!(
@@ -359,7 +402,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 }
 
 fn cmd_scenario(args: &Args) -> Result<()> {
-    use repro::scenario::{Scenario, ScenarioKind, ScenarioTrace};
+    use repro::scenario::{Scenario, ScenarioKind, TraceWriter};
     let action = args.positional.first().cloned().unwrap_or_default();
     if action != "record" {
         anyhow::bail!(
@@ -381,9 +424,14 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     // recording never runs PJRT — the environment process is pure L3, so
     // this works in artifact-less environments too
     let scenario = Scenario::from_parts(kind.clone(), seed, m)?;
-    let envs = scenario.trace(rounds);
-    let trace = ScenarioTrace::from_envs(&envs, m)?;
-    trace.write(std::path::Path::new(&out), Some((&kind.spec(), seed)))?;
+    // stream row by row: peak memory is one RoundEnv, not O(M * rounds) —
+    // recording M = 10⁶ federations never buffers the whole trace
+    // (byte-identical to the batch ScenarioTrace::write by construction)
+    let mut writer = TraceWriter::create(std::path::Path::new(&out), m, Some((&kind.spec(), seed)))?;
+    for round in 0..rounds {
+        writer.push(&scenario.env(round))?;
+    }
+    writer.finish()?;
     println!(
         "recorded {rounds} rounds of `{}` (M={m}, seed={seed}) -> {out}",
         kind.spec()

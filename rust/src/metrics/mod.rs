@@ -87,6 +87,114 @@ pub struct RunSummary {
     pub records: Vec<RoundRecord>,
 }
 
+/// Streaming accumulator behind [`RunSummary`]: every aggregate is folded
+/// round by round in record order, with the SAME operations and fold order
+/// the batch `from_records` path uses — in fact `from_records` now delegates
+/// here, so the windowed-retention runs (`--record-window`) and the full
+/// in-memory runs share one summary code path and produce bitwise-identical
+/// totals by construction (tests/scale.rs pins this differentially).
+#[derive(Debug, Clone)]
+pub struct SummaryAccum {
+    framework: String,
+    preset: String,
+    target_accuracy: f32,
+    rounds: usize,
+    final_accuracy: f32,
+    best_accuracy: f32,
+    rounds_to_target: Option<usize>,
+    time_to_target: Option<f64>,
+    total_sim_time: f64,
+    total_comm_bytes: f64,
+    total_comm_cost: f64,
+    total_comp_cost: f64,
+    selected_sum: f64,
+    available_sum: f64,
+    total_dropouts: usize,
+    total_retries: usize,
+    quorum_misses: usize,
+}
+
+impl SummaryAccum {
+    pub fn new(framework: &str, preset: &str, target_accuracy: f32) -> Self {
+        Self {
+            framework: framework.to_string(),
+            preset: preset.to_string(),
+            target_accuracy,
+            rounds: 0,
+            final_accuracy: f32::NAN,
+            best_accuracy: f32::NEG_INFINITY,
+            rounds_to_target: None,
+            time_to_target: None,
+            total_sim_time: 0.0,
+            total_comm_bytes: 0.0,
+            total_comm_cost: 0.0,
+            total_comp_cost: 0.0,
+            selected_sum: 0.0,
+            available_sum: 0.0,
+            total_dropouts: 0,
+            total_retries: 0,
+            quorum_misses: 0,
+        }
+    }
+
+    /// Fold one finished round in. Records MUST arrive in round order (the
+    /// run loop's natural order): `final_accuracy`/`total_sim_time` keep the
+    /// latest value and the target hit keeps the first.
+    pub fn push(&mut self, r: &RoundRecord) {
+        self.rounds += 1;
+        self.total_sim_time = r.sim_time;
+        self.total_comm_bytes += r.comm_bytes;
+        self.total_comm_cost += r.comm_cost;
+        self.total_comp_cost += r.comp_cost;
+        self.selected_sum += r.selected as f64;
+        self.available_sum += r.env_available as f64;
+        self.total_dropouts += r.env_dropouts;
+        self.total_retries += r.retries;
+        self.quorum_misses += r.quorum_miss;
+        if !r.accuracy.is_nan() {
+            self.final_accuracy = r.accuracy;
+            self.best_accuracy = self.best_accuracy.max(r.accuracy);
+            if self.rounds_to_target.is_none() && r.accuracy >= self.target_accuracy {
+                self.rounds_to_target = Some(r.round);
+                self.time_to_target = Some(r.sim_time);
+            }
+        }
+    }
+
+    /// Seal the accumulator into a [`RunSummary`]. `records` is whatever
+    /// retention policy the caller ran — the full history, or just the
+    /// trailing `--record-window` — and does not feed any aggregate.
+    pub fn finish(self, records: Vec<RoundRecord>) -> RunSummary {
+        RunSummary {
+            framework: self.framework,
+            preset: self.preset,
+            rounds: self.rounds,
+            final_accuracy: self.final_accuracy,
+            best_accuracy: self.best_accuracy,
+            rounds_to_target: self.rounds_to_target,
+            time_to_target: self.time_to_target,
+            total_sim_time: self.total_sim_time,
+            total_comm_bytes: self.total_comm_bytes,
+            total_comm_cost: self.total_comm_cost,
+            total_comp_cost: self.total_comp_cost,
+            mean_selected: if self.rounds > 0 {
+                self.selected_sum / self.rounds as f64
+            } else {
+                0.0
+            },
+            mean_available: if self.rounds > 0 {
+                self.available_sum / self.rounds as f64
+            } else {
+                0.0
+            },
+            total_dropouts: self.total_dropouts,
+            total_retries: self.total_retries,
+            quorum_misses: self.quorum_misses,
+            records,
+        }
+    }
+}
+
 impl RunSummary {
     pub fn from_records(
         framework: &str,
@@ -94,94 +202,28 @@ impl RunSummary {
         target_accuracy: f32,
         records: Vec<RoundRecord>,
     ) -> Self {
-        let rounds = records.len();
-        let evals: Vec<&RoundRecord> =
-            records.iter().filter(|r| !r.accuracy.is_nan()).collect();
-        let final_accuracy = evals.last().map(|r| r.accuracy).unwrap_or(f32::NAN);
-        let best_accuracy = evals
-            .iter()
-            .map(|r| r.accuracy)
-            .fold(f32::NEG_INFINITY, f32::max);
-        let hit = evals.iter().find(|r| r.accuracy >= target_accuracy);
-        Self {
-            framework: framework.to_string(),
-            preset: preset.to_string(),
-            rounds,
-            final_accuracy,
-            best_accuracy,
-            rounds_to_target: hit.map(|r| r.round),
-            time_to_target: hit.map(|r| r.sim_time),
-            total_sim_time: records.last().map(|r| r.sim_time).unwrap_or(0.0),
-            total_comm_bytes: records.iter().map(|r| r.comm_bytes).sum(),
-            total_comm_cost: records.iter().map(|r| r.comm_cost).sum(),
-            total_comp_cost: records.iter().map(|r| r.comp_cost).sum(),
-            mean_selected: if rounds > 0 {
-                records.iter().map(|r| r.selected as f64).sum::<f64>() / rounds as f64
-            } else {
-                0.0
-            },
-            mean_available: if rounds > 0 {
-                records.iter().map(|r| r.env_available as f64).sum::<f64>() / rounds as f64
-            } else {
-                0.0
-            },
-            total_dropouts: records.iter().map(|r| r.env_dropouts).sum(),
-            total_retries: records.iter().map(|r| r.retries).sum(),
-            quorum_misses: records.iter().map(|r| r.quorum_miss).sum(),
-            records,
+        let mut acc = SummaryAccum::new(framework, preset, target_accuracy);
+        for r in &records {
+            acc.push(r);
         }
+        acc.finish(records)
     }
 
-    /// CSV with one row per round (figure-regeneration input).
+    /// CSV with one row per round (figure-regeneration input). Shares the
+    /// row formatter with the streaming [`RecordWriter`], so batch and
+    /// streamed exports are byte-identical per row by construction.
     pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
         let mut f = std::fs::File::create(path.as_ref())
             .with_context(|| format!("creating {:?}", path.as_ref()))?;
-        writeln!(
-            f,
-            "round,selected,e,comm_bytes,round_time,sim_time,comm_cost,comp_cost,total_cost,train_loss,accuracy,test_loss,env_bw_scale,env_available,env_stragglers,env_deadline_scale,env_dropouts,retries,quorum_miss"
-        )?;
+        writeln!(f, "{CSV_HEADER}")?;
         for r in &self.records {
-            writeln!(
-                f,
-                "{},{},{},{:.1},{:.6},{:.6},{:.4},{:.6},{:.6},{:.5},{:.4},{:.5},{:.4},{},{},{:.4},{},{},{}",
-                r.round, r.selected, r.e, r.comm_bytes, r.round_time, r.sim_time,
-                r.comm_cost, r.comp_cost, r.total_cost, r.train_loss, r.accuracy, r.test_loss,
-                r.env_bw_scale, r.env_available, r.env_stragglers, r.env_deadline_scale,
-                r.env_dropouts, r.retries, r.quorum_miss
-            )?;
+            writeln!(f, "{}", csv_line(r))?;
         }
         Ok(())
     }
 
     pub fn to_json(&self) -> Json {
-        let recs = self
-            .records
-            .iter()
-            .map(|r| {
-                Json::obj(vec![
-                    ("round", Json::num(r.round as f64)),
-                    ("selected", Json::num(r.selected as f64)),
-                    ("e", Json::num(r.e as f64)),
-                    ("comm_bytes", Json::num(r.comm_bytes)),
-                    ("round_time", Json::num(r.round_time)),
-                    ("sim_time", Json::num(r.sim_time)),
-                    ("comm_cost", Json::num(r.comm_cost)),
-                    ("comp_cost", Json::num(r.comp_cost)),
-                    ("total_cost", Json::num(r.total_cost)),
-                    ("train_loss", Json::num(r.train_loss as f64)),
-                    ("accuracy", Json::num(r.accuracy as f64)),
-                    ("test_loss", Json::num(r.test_loss as f64)),
-                    ("wall_secs", Json::num(r.wall_secs)),
-                    ("env_bw_scale", Json::num(r.env_bw_scale)),
-                    ("env_available", Json::num(r.env_available as f64)),
-                    ("env_stragglers", Json::num(r.env_stragglers as f64)),
-                    ("env_deadline_scale", Json::num(r.env_deadline_scale)),
-                    ("env_dropouts", Json::num(r.env_dropouts as f64)),
-                    ("retries", Json::num(r.retries as f64)),
-                    ("quorum_miss", Json::num(r.quorum_miss as f64)),
-                ])
-            })
-            .collect();
+        let recs = self.records.iter().map(record_json).collect();
         Json::obj(vec![
             ("framework", Json::str(self.framework.clone())),
             ("preset", Json::str(self.preset.clone())),
@@ -213,6 +255,95 @@ impl RunSummary {
         std::fs::write(path.as_ref(), self.to_json().to_string_pretty())
             .with_context(|| format!("writing {:?}", path.as_ref()))?;
         Ok(())
+    }
+}
+
+/// Column order of the per-round CSV export (batch and streaming).
+pub const CSV_HEADER: &str = "round,selected,e,comm_bytes,round_time,sim_time,comm_cost,comp_cost,total_cost,train_loss,accuracy,test_loss,env_bw_scale,env_available,env_stragglers,env_deadline_scale,env_dropouts,retries,quorum_miss";
+
+/// One CSV row of a [`RoundRecord`] — the exact historical `write_csv`
+/// format, factored out so the streaming sink emits identical bytes.
+fn csv_line(r: &RoundRecord) -> String {
+    format!(
+        "{},{},{},{:.1},{:.6},{:.6},{:.4},{:.6},{:.6},{:.5},{:.4},{:.5},{:.4},{},{},{:.4},{},{},{}",
+        r.round, r.selected, r.e, r.comm_bytes, r.round_time, r.sim_time,
+        r.comm_cost, r.comp_cost, r.total_cost, r.train_loss, r.accuracy, r.test_loss,
+        r.env_bw_scale, r.env_available, r.env_stragglers, r.env_deadline_scale,
+        r.env_dropouts, r.retries, r.quorum_miss
+    )
+}
+
+/// The JSON object of one [`RoundRecord`] — shared by the batch summary
+/// export and the streaming JSONL sink.
+pub fn record_json(r: &RoundRecord) -> Json {
+    Json::obj(vec![
+        ("round", Json::num(r.round as f64)),
+        ("selected", Json::num(r.selected as f64)),
+        ("e", Json::num(r.e as f64)),
+        ("comm_bytes", Json::num(r.comm_bytes)),
+        ("round_time", Json::num(r.round_time)),
+        ("sim_time", Json::num(r.sim_time)),
+        ("comm_cost", Json::num(r.comm_cost)),
+        ("comp_cost", Json::num(r.comp_cost)),
+        ("total_cost", Json::num(r.total_cost)),
+        ("train_loss", Json::num(r.train_loss as f64)),
+        ("accuracy", Json::num(r.accuracy as f64)),
+        ("test_loss", Json::num(r.test_loss as f64)),
+        ("wall_secs", Json::num(r.wall_secs)),
+        ("env_bw_scale", Json::num(r.env_bw_scale)),
+        ("env_available", Json::num(r.env_available as f64)),
+        ("env_stragglers", Json::num(r.env_stragglers as f64)),
+        ("env_deadline_scale", Json::num(r.env_deadline_scale)),
+        ("env_dropouts", Json::num(r.env_dropouts as f64)),
+        ("retries", Json::num(r.retries as f64)),
+        ("quorum_miss", Json::num(r.quorum_miss as f64)),
+    ])
+}
+
+/// Bounded-memory per-round record sink (ISSUE 7): rows hit disk as the run
+/// produces them, so an M = 10⁵–10⁶ federation can export every round
+/// without ever holding the full history. Format by extension: `.jsonl` (or
+/// `.json`) writes one compact [`record_json`] object per line; anything
+/// else writes the historical CSV (header + [`csv_line`] rows — byte-equal
+/// to [`RunSummary::write_csv`]).
+pub struct RecordWriter {
+    out: std::io::BufWriter<std::fs::File>,
+    path: std::path::PathBuf,
+    json: bool,
+    rows: usize,
+}
+
+impl RecordWriter {
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let json =
+            matches!(path.extension().and_then(|e| e.to_str()), Some("jsonl") | Some("json"));
+        let f = std::fs::File::create(&path)
+            .with_context(|| format!("creating record stream {path:?}"))?;
+        let mut out = std::io::BufWriter::new(f);
+        if !json {
+            writeln!(out, "{CSV_HEADER}").with_context(|| format!("writing {path:?}"))?;
+        }
+        Ok(Self { out, path, json, rows: 0 })
+    }
+
+    pub fn push(&mut self, r: &RoundRecord) -> Result<()> {
+        if self.json {
+            writeln!(self.out, "{}", record_json(r).to_string_compact())
+        } else {
+            writeln!(self.out, "{}", csv_line(r))
+        }
+        .with_context(|| format!("appending round {} to {:?}", r.round, self.path))?;
+        self.rows += 1;
+        Ok(())
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn finish(mut self) -> Result<()> {
+        self.out.flush().with_context(|| format!("flushing record stream {:?}", self.path))
     }
 }
 
@@ -285,6 +416,76 @@ mod tests {
         );
         assert!(text.lines().nth(1).unwrap().ends_with("1.0000,50,0,1.0000,0,0,0"));
         std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn accum_matches_from_records_bitwise() {
+        let recs = vec![rec(0, f32::NAN, 0.05), rec(1, 0.7, 0.10), rec(2, 0.85, 0.15)];
+        let batch = RunSummary::from_records("splitme", "commag", 0.83, recs.clone());
+        // windowed retention: only the last record survives in memory, but
+        // every aggregate must still come out identical
+        let mut acc = SummaryAccum::new("splitme", "commag", 0.83);
+        for r in &recs {
+            acc.push(r);
+        }
+        let windowed = acc.finish(vec![recs.last().unwrap().clone()]);
+        assert_eq!(windowed.rounds, batch.rounds);
+        assert_eq!(windowed.final_accuracy.to_bits(), batch.final_accuracy.to_bits());
+        assert_eq!(windowed.best_accuracy.to_bits(), batch.best_accuracy.to_bits());
+        assert_eq!(windowed.rounds_to_target, batch.rounds_to_target);
+        assert_eq!(windowed.time_to_target.map(f64::to_bits), batch.time_to_target.map(f64::to_bits));
+        assert_eq!(windowed.total_sim_time.to_bits(), batch.total_sim_time.to_bits());
+        assert_eq!(windowed.total_comm_bytes.to_bits(), batch.total_comm_bytes.to_bits());
+        assert_eq!(windowed.total_comm_cost.to_bits(), batch.total_comm_cost.to_bits());
+        assert_eq!(windowed.total_comp_cost.to_bits(), batch.total_comp_cost.to_bits());
+        assert_eq!(windowed.mean_selected.to_bits(), batch.mean_selected.to_bits());
+        assert_eq!(windowed.mean_available.to_bits(), batch.mean_available.to_bits());
+        assert_eq!(windowed.records.len(), 1);
+    }
+
+    #[test]
+    fn streaming_csv_matches_batch_write_csv() {
+        let recs = vec![rec(0, 0.4, 0.05), rec(1, 0.6, 0.1), rec(2, f32::NAN, 0.15)];
+        let s = RunSummary::from_records("sfl", "commag", 0.83, recs.clone());
+        let batch = std::env::temp_dir().join("repro_records_batch.csv");
+        let streamed = std::env::temp_dir().join("repro_records_stream.csv");
+        s.write_csv(&batch).unwrap();
+        let mut w = RecordWriter::create(&streamed).unwrap();
+        for r in &recs {
+            w.push(r).unwrap();
+        }
+        assert_eq!(w.rows(), 3);
+        w.finish().unwrap();
+        assert_eq!(
+            std::fs::read(&batch).unwrap(),
+            std::fs::read(&streamed).unwrap(),
+            "streamed CSV must be byte-identical to the batch export"
+        );
+        std::fs::remove_file(&batch).ok();
+        std::fs::remove_file(&streamed).ok();
+    }
+
+    #[test]
+    fn streaming_jsonl_rows_reparse_to_record_json() {
+        let recs = vec![rec(0, 0.4, 0.05), rec(1, 0.6, 0.1)];
+        let path = std::env::temp_dir().join("repro_records_stream.jsonl");
+        let mut w = RecordWriter::create(&path).unwrap();
+        for r in &recs {
+            w.push(r).unwrap();
+        }
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "one object per line");
+        for (line, r) in lines.iter().zip(&recs) {
+            let parsed = Json::parse(line).unwrap();
+            assert_eq!(parsed.get("round").unwrap().as_usize().unwrap(), r.round);
+            assert_eq!(
+                parsed.get("comm_bytes").unwrap().as_f64().unwrap(),
+                r.comm_bytes
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,355 @@
+//! Population-scale primitives (ISSUE 7): lazily-derived per-client state
+//! and skip-ahead memoization for the Markov chains that drive it.
+//!
+//! At M = 10⁵–10⁶ near-RT-RICs the old dense representation — one
+//! `Vec<f64>`/`Vec<bool>` entry per client per round per framework — is the
+//! dominant cost of a round even when every entry holds the same value
+//! (`static` scenario, `none` faults, rush-hour's uniform scales). The fix
+//! is representational, not behavioral:
+//!
+//! * [`PerClient<T>`] stores a per-client attribute either as one broadcast
+//!   value (`Uniform`, O(1) in M) or as a dense vector (`Dense`, the old
+//!   layout). Reads go through [`PerClient::get`]; equality is *semantic*
+//!   (a `Uniform(v)` equals a `Dense` whose every entry is `v`), so traces
+//!   recorded dense compare equal to the lazy originals.
+//! * [`ChainMemo`] memoizes the last few visited states of a per-stream
+//!   Markov chain so random access to round `r` advances from the nearest
+//!   earlier cached round instead of replaying from round 0 — an O(rounds²)
+//!   → O(rounds) fix for full runs. Because every chain draws from
+//!   round-keyed `RngPool` substreams, skipping the re-walk changes *where
+//!   the walk starts*, never *what it draws*: the realized trace is bitwise
+//!   identical to the cold replay (gated by tests here and in
+//!   `tests/scale.rs`).
+//!
+//! Both types are pure plumbing: no randomness of their own, no knowledge
+//! of scenario/fault semantics.
+
+use std::sync::Mutex;
+
+/// A per-client attribute over a federation of known size: either one value
+/// broadcast to every client (O(1) storage) or a dense per-client vector.
+///
+/// The federation size `m` is carried by the *owner* (e.g.
+/// `RoundEnv.m`), not the enum, so `Uniform` stays a single value; accessors
+/// that need it take `m` explicitly.
+#[derive(Debug, Clone)]
+pub enum PerClient<T> {
+    /// every client holds this value
+    Uniform(T),
+    /// per-client values, indexed by client id (len == M)
+    Dense(Vec<T>),
+}
+
+impl<T: Clone + PartialEq> PerClient<T> {
+    pub fn uniform(v: T) -> Self {
+        Self::Uniform(v)
+    }
+
+    /// The value of client `i`.
+    pub fn get(&self, i: usize) -> &T {
+        match self {
+            Self::Uniform(v) => v,
+            Self::Dense(d) => &d[i],
+        }
+    }
+
+    pub fn is_uniform(&self) -> bool {
+        matches!(self, Self::Uniform(_))
+    }
+
+    /// `Some(&v)` iff the representation is the broadcast one.
+    pub fn as_uniform(&self) -> Option<&T> {
+        match self {
+            Self::Uniform(v) => Some(v),
+            Self::Dense(_) => None,
+        }
+    }
+
+    /// Materialize the dense vector (the reference/dense-path layout).
+    pub fn to_vec(&self, m: usize) -> Vec<T> {
+        match self {
+            Self::Uniform(v) => vec![v.clone(); m],
+            Self::Dense(d) => {
+                assert_eq!(d.len(), m, "PerClient::to_vec: dense len != m");
+                d.clone()
+            }
+        }
+    }
+
+    /// Convert in place to the dense representation.
+    pub fn densify(&mut self, m: usize) {
+        if let Self::Uniform(v) = self {
+            *self = Self::Dense(vec![v.clone(); m]);
+        }
+        if let Self::Dense(d) = self {
+            assert_eq!(d.len(), m, "PerClient::densify: dense len != m");
+        }
+    }
+
+    /// Set client `i`'s value, densifying a broadcast representation first
+    /// (write-side escape hatch for tests and trace replay).
+    pub fn set(&mut self, i: usize, v: T, m: usize) {
+        self.densify(m);
+        if let Self::Dense(d) = self {
+            d[i] = v;
+        }
+    }
+
+    /// Iterate the M per-client values (broadcast repeats the one value).
+    pub fn iter(&self, m: usize) -> Box<dyn Iterator<Item = &T> + '_> {
+        match self {
+            Self::Uniform(v) => Box::new(std::iter::repeat(v).take(m)),
+            Self::Dense(d) => {
+                assert_eq!(d.len(), m, "PerClient::iter: dense len != m");
+                Box::new(d.iter())
+            }
+        }
+    }
+
+    /// Number of clients whose value satisfies `pred` — O(1) on the
+    /// broadcast representation.
+    pub fn count(&self, m: usize, pred: impl Fn(&T) -> bool) -> usize {
+        match self {
+            Self::Uniform(v) => {
+                if pred(v) {
+                    m
+                } else {
+                    0
+                }
+            }
+            Self::Dense(d) => {
+                assert_eq!(d.len(), m, "PerClient::count: dense len != m");
+                d.iter().filter(|v| pred(v)).count()
+            }
+        }
+    }
+
+    /// True iff every client's value satisfies `pred` — O(1) broadcast.
+    pub fn all(&self, m: usize, pred: impl Fn(&T) -> bool) -> bool {
+        self.count(m, &pred) == m
+    }
+}
+
+/// Semantic equality: representations are compared by the per-client values
+/// they denote, so `Uniform(v) == Dense([v; m])`. Two `Dense` sides must
+/// agree elementwise (and therefore in length); two broadcasts compare the
+/// single value.
+impl<T: PartialEq> PartialEq for PerClient<T> {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Self::Uniform(a), Self::Uniform(b)) => a == b,
+            (Self::Dense(a), Self::Dense(b)) => a == b,
+            (Self::Uniform(a), Self::Dense(d)) | (Self::Dense(d), Self::Uniform(a)) => {
+                d.iter().all(|v| v == a)
+            }
+        }
+    }
+}
+
+impl<T: Eq> Eq for PerClient<T> {}
+
+/// How many `(round, state)` pairs a [`ChainMemo`] retains. Four framework
+/// cursors walking the same shared chain round-by-round (plus a trace/test
+/// helper doing random access) fit comfortably; eviction is
+/// least-recently-used.
+pub const MEMO_SLOTS: usize = 8;
+
+/// Skip-ahead memo for a per-stream Markov chain: remembers the state
+/// *after* each recently-visited round so `state_at(r)` advances from the
+/// nearest earlier cached round instead of round 0.
+///
+/// The chain itself stays a pure function of `(seed, label, round)` — every
+/// per-round transition draws from a round-keyed RNG substream, so starting
+/// the walk at round `r0+1` from the cached state of `r0` consumes exactly
+/// the draws the cold replay would have consumed for rounds `r0+1..=r`.
+/// Bitwise identity with the cold replay is therefore structural, and
+/// `tests` below pin it anyway.
+///
+/// Interior-mutable (`Mutex`) so `&self` scenario/fault APIs stay intact;
+/// the lock is held only for the slot bookkeeping plus the walk itself,
+/// which also serializes concurrent walkers onto the cache (each framework
+/// runner has its own `Scenario`/`Faults` clone, so contention is nil in
+/// practice).
+pub struct ChainMemo<S> {
+    slots: Mutex<Vec<(usize, S)>>,
+}
+
+impl<S: Clone> ChainMemo<S> {
+    pub fn new() -> Self {
+        Self { slots: Mutex::new(Vec::new()) }
+    }
+
+    /// The chain state after processing `round`. `init()` builds the state
+    /// *before round 0*; `step(state, r)` advances across round `r`
+    /// (performing that round's RNG draws).
+    pub fn state_at(
+        &self,
+        round: usize,
+        init: impl FnOnce() -> S,
+        mut step: impl FnMut(S, usize) -> S,
+    ) -> S {
+        let mut slots = self.slots.lock().unwrap();
+        // exact hit: move to the back (most recently used) and return
+        if let Some(pos) = slots.iter().position(|(r, _)| *r == round) {
+            let hit = slots.remove(pos);
+            let out = hit.1.clone();
+            slots.push(hit);
+            return out;
+        }
+        // nearest earlier cached round, else cold-start from init()
+        let pred = slots
+            .iter()
+            .enumerate()
+            .filter(|(_, (r, _))| *r < round)
+            .max_by_key(|(_, (r, _))| *r)
+            .map(|(i, _)| i);
+        let (start, mut state) = match pred {
+            Some(i) => (slots[i].0 + 1, slots[i].1.clone()),
+            None => (0, init()),
+        };
+        for r in start..=round {
+            state = step(state, r);
+        }
+        slots.push((round, state.clone()));
+        if slots.len() > MEMO_SLOTS {
+            slots.remove(0); // least recently used lives at the front
+        }
+        state
+    }
+
+    /// Drop every cached state (tests; never needed in production paths).
+    pub fn clear(&self) {
+        self.slots.lock().unwrap().clear();
+    }
+}
+
+impl<S: Clone> Clone for ChainMemo<S> {
+    fn clone(&self) -> Self {
+        Self { slots: Mutex::new(self.slots.lock().unwrap().clone()) }
+    }
+}
+
+impl<S> std::fmt::Debug for ChainMemo<S> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let n = self.slots.lock().map(|s| s.len()).unwrap_or(0);
+        write!(f, "ChainMemo({n} cached)")
+    }
+}
+
+impl<S: Clone> Default for ChainMemo<S> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_reads_like_dense() {
+        let u = PerClient::uniform(2.5f64);
+        let d = PerClient::Dense(vec![2.5; 7]);
+        for i in 0..7 {
+            assert_eq!(u.get(i), d.get(i));
+        }
+        assert_eq!(u.to_vec(7), d.to_vec(7));
+        assert_eq!(u.count(7, |&v| v > 2.0), 7);
+        assert_eq!(d.count(7, |&v| v > 3.0), 0);
+        assert!(u.all(7, |&v| v == 2.5));
+        assert_eq!(u.iter(7).count(), 7);
+        assert!(u.is_uniform() && !d.is_uniform());
+        assert_eq!(u.as_uniform(), Some(&2.5));
+        assert_eq!(d.as_uniform(), None);
+    }
+
+    #[test]
+    fn equality_is_semantic_across_representations() {
+        let u = PerClient::uniform(true);
+        assert_eq!(u, PerClient::Dense(vec![true; 4]));
+        assert_ne!(u, PerClient::Dense(vec![true, false, true, true]));
+        assert_eq!(PerClient::uniform(1.0), PerClient::uniform(1.0));
+        assert_ne!(PerClient::uniform(1.0), PerClient::uniform(0.5));
+        assert_eq!(
+            PerClient::Dense(vec![1, 2, 3]),
+            PerClient::Dense(vec![1, 2, 3])
+        );
+    }
+
+    #[test]
+    fn set_densifies_on_write() {
+        let mut p = PerClient::uniform(1.0f64);
+        p.set(2, 0.5, 5);
+        assert!(!p.is_uniform());
+        assert_eq!(p.to_vec(5), vec![1.0, 1.0, 0.5, 1.0, 1.0]);
+        // writing the broadcast value back still leaves it dense (set is a
+        // representation escape hatch, not a normalizer)
+        p.set(2, 1.0, 5);
+        assert!(!p.is_uniform());
+        assert_eq!(p, PerClient::uniform(1.0));
+    }
+
+    /// A toy chain whose step count is observable: state = (round, draws so
+    /// far), where each step "draws" round+1 units. Memoized random access
+    /// must yield the same state as cold replay while performing fewer
+    /// steps.
+    #[test]
+    fn memoized_chain_matches_cold_replay() {
+        let cold = |round: usize| {
+            let mut s = 0u64;
+            for r in 0..=round {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(r as u64);
+            }
+            s
+        };
+        let memo: ChainMemo<u64> = ChainMemo::new();
+        let walk = |round: usize| {
+            memo.state_at(
+                round,
+                || 0u64,
+                |s, r| s.wrapping_mul(6364136223846793005).wrapping_add(r as u64),
+            )
+        };
+        // sequential, repeated, backward, and far-forward access patterns
+        for r in [0usize, 1, 2, 3, 3, 2, 10, 11, 5, 40, 41, 0] {
+            assert_eq!(walk(r), cold(r), "round {r}");
+        }
+    }
+
+    #[test]
+    fn memo_advances_incrementally_not_from_zero() {
+        use std::cell::Cell;
+        let steps = Cell::new(0usize);
+        let memo: ChainMemo<usize> = ChainMemo::new();
+        let walk = |round: usize| {
+            memo.state_at(round, || 0usize, |s, _| {
+                steps.set(steps.get() + 1);
+                s + 1
+            })
+        };
+        assert_eq!(walk(99), 100);
+        assert_eq!(steps.get(), 100);
+        // the next round costs ONE step, not 101
+        assert_eq!(walk(100), 101);
+        assert_eq!(steps.get(), 101);
+        // an exact hit costs zero
+        assert_eq!(walk(100), 101);
+        assert_eq!(steps.get(), 101);
+        // going backward restarts from the nearest earlier cached state
+        assert_eq!(walk(99), 100);
+        assert_eq!(steps.get(), 101);
+    }
+
+    #[test]
+    fn memo_evicts_least_recently_used() {
+        let memo: ChainMemo<usize> = ChainMemo::new();
+        let walk = |round: usize| memo.state_at(round, || 0usize, |s, _| s + 1);
+        for r in 0..MEMO_SLOTS + 3 {
+            assert_eq!(walk(r), r + 1);
+        }
+        // still correct after eviction (may just re-walk)
+        for r in 0..MEMO_SLOTS + 3 {
+            assert_eq!(walk(r), r + 1);
+        }
+    }
+}

@@ -48,12 +48,14 @@
 //! preset reproduces its `RoundRecord`s bit for bit
 //! (tests/differential.rs `trace_record_replay_is_bitwise_identical...`).
 
-use std::path::Path;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use super::RoundEnv;
 use crate::jsonio::Json;
+use crate::pop::PerClient;
 
 /// The five trace columns; only `round` is required.
 pub const COLUMNS: [&str; 5] = ["round", "bw_scale", "available", "q_scale", "deadline_scale"];
@@ -61,14 +63,17 @@ pub const COLUMNS: [&str; 5] = ["round", "bw_scale", "available", "q_scale", "de
 /// Root-level JSON keys: the columns' container plus optional provenance.
 const ROOT_KEYS: [&str; 6] = ["schema", "m", "source", "seed", "note", "rounds"];
 
-/// One traced round, fully resolved to federation size M.
+/// One traced round. Per-client columns keep the broadcast/dense split of
+/// the file schema ([`PerClient`]): a single-value cell stays `Uniform`
+/// (O(1) in M), a `;`-separated / array cell stays `Dense` — so loading or
+/// recording a broadcast-only trace costs O(rows), not O(M·rows).
 #[derive(Debug, Clone, PartialEq)]
 struct TraceRow {
     round: usize,
     bw_scale: f64,
-    available: Vec<bool>,
-    q_scale: Vec<f64>,
-    deadline_scale: Vec<f64>,
+    available: PerClient<bool>,
+    q_scale: PerClient<f64>,
+    deadline_scale: PerClient<f64>,
 }
 
 /// A loaded (or recorded) per-round environment stream. Immutable after
@@ -150,15 +155,15 @@ impl ScenarioTrace {
                 }
             };
             let available = match avail_at {
-                None => vec![true; m],
+                None => PerClient::uniform(true),
                 Some(i) => parse_bool_list(cells[i], ln, m)?,
             };
             let q_scale = match q_at {
-                None => vec![1.0; m],
+                None => PerClient::uniform(1.0),
                 Some(i) => parse_scale_list(cells[i], "q_scale", ln, m)?,
             };
             let deadline_scale = match dl_at {
-                None => vec![1.0; m],
+                None => PerClient::uniform(1.0),
                 Some(i) => parse_scale_list(cells[i], "deadline_scale", ln, m)?,
             };
             rows.push(TraceRow { round, bw_scale, available, q_scale, deadline_scale });
@@ -205,8 +210,8 @@ impl ScenarioTrace {
                 Some(v) => check_scale(v.as_f64()?, "bw_scale", round)?,
             };
             let available = match entry.opt("available") {
-                None => vec![true; m],
-                Some(Json::Bool(b)) => vec![*b; m],
+                None => PerClient::uniform(true),
+                Some(Json::Bool(b)) => PerClient::uniform(*b),
                 Some(v) => {
                     let vals: Vec<bool> = v
                         .as_arr()
@@ -220,7 +225,7 @@ impl ScenarioTrace {
                             vals.len()
                         );
                     }
-                    vals
+                    PerClient::Dense(vals)
                 }
             };
             let q_scale = json_scale_list(entry.opt("q_scale"), "q_scale", round, m)?;
@@ -235,27 +240,7 @@ impl ScenarioTrace {
     /// `ScenarioTrace::from_envs(&scenario.trace(rounds), m)` captures any
     /// synthetic preset's stream in replayable form.
     pub fn from_envs(envs: &[RoundEnv], m: usize) -> Result<Self> {
-        let rows = envs
-            .iter()
-            .map(|e| {
-                if e.available.len() != m
-                    || e.compute_scale.len() != m
-                    || e.deadline_scale.len() != m
-                {
-                    bail!(
-                        "env at round {} is for a different federation size (want M={m})",
-                        e.round
-                    );
-                }
-                Ok(TraceRow {
-                    round: e.round,
-                    bw_scale: e.bandwidth_scale,
-                    available: e.available.clone(),
-                    q_scale: e.compute_scale.clone(),
-                    deadline_scale: e.deadline_scale.clone(),
-                })
-            })
-            .collect::<Result<Vec<_>>>()?;
+        let rows = envs.iter().map(|e| env_row(e, m)).collect::<Result<Vec<_>>>()?;
         Self::from_rows(rows, m)
     }
 
@@ -277,7 +262,7 @@ impl ScenarioTrace {
             }
         }
         for r in &rows {
-            if !r.available.iter().any(|&a| a) {
+            if r.available.all(m, |&a| !a) {
                 bail!(
                     "round {}: no client is available — every round needs at least one candidate",
                     r.round
@@ -323,6 +308,7 @@ impl ScenarioTrace {
         let row = &self.rows[idx];
         RoundEnv {
             round,
+            m: self.m,
             bandwidth_scale: row.bw_scale,
             available: row.available.clone(),
             compute_scale: row.q_scale.clone(),
@@ -332,40 +318,20 @@ impl ScenarioTrace {
 
     /// CSV serialization (always the full five-column header; floats in
     /// shortest round-trip form, so parse(to_csv(t)) == t bitwise).
+    /// Broadcast columns write ONE value — the schema's broadcast form —
+    /// so a uniform trace serializes in O(rows), not O(M·rows).
     pub fn to_csv(&self) -> String {
         let mut out = String::from("round,bw_scale,available,q_scale,deadline_scale\n");
         for r in &self.rows {
-            let avail: Vec<&str> = r.available.iter().map(|&a| if a { "1" } else { "0" }).collect();
-            out.push_str(&format!(
-                "{},{},{},{},{}\n",
-                r.round,
-                r.bw_scale,
-                avail.join(";"),
-                fmt_f64_list(&r.q_scale),
-                fmt_f64_list(&r.deadline_scale)
-            ));
+            out.push_str(&csv_row(r, self.m));
+            out.push('\n');
         }
         out
     }
 
     /// JSON serialization (schema 1, with the recording federation size).
     pub fn to_json(&self) -> Json {
-        let rounds = self
-            .rows
-            .iter()
-            .map(|r| {
-                Json::obj(vec![
-                    ("round", Json::num(r.round as f64)),
-                    ("bw_scale", Json::num(r.bw_scale)),
-                    ("available", Json::arr(r.available.iter().map(|&b| Json::Bool(b)).collect())),
-                    ("q_scale", Json::arr(r.q_scale.iter().map(|&v| Json::num(v)).collect())),
-                    (
-                        "deadline_scale",
-                        Json::arr(r.deadline_scale.iter().map(|&v| Json::num(v)).collect()),
-                    ),
-                ])
-            })
-            .collect();
+        let rounds = self.rows.iter().map(|r| row_json(r, self.m)).collect();
         Json::obj(vec![
             ("schema", Json::num(1.0)),
             ("m", Json::num(self.m as f64)),
@@ -375,32 +341,172 @@ impl ScenarioTrace {
 
     /// Write to `path` (format by extension, like [`Self::load`]);
     /// `provenance` = `(scenario spec, seed)` annotates the file so a
-    /// recorded trace names what produced it.
+    /// recorded trace names what produced it. Delegates to the streaming
+    /// [`TraceWriter`], so batch and streaming recording are byte-identical
+    /// by construction.
     pub fn write(&self, path: &Path, provenance: Option<(&str, u64)>) -> Result<()> {
-        let json = path.extension().map(|e| e.eq_ignore_ascii_case("json")).unwrap_or(false);
-        let text = if json {
-            let mut j = self.to_json();
-            if let (Json::Obj(map), Some((source, seed))) = (&mut j, provenance) {
-                map.insert("source".to_string(), Json::str(source));
-                map.insert("seed".to_string(), Json::num(seed as f64));
-            }
-            j.to_string_pretty() + "\n"
-        } else {
-            match provenance {
-                Some((source, seed)) => format!(
-                    "# recorded scenario={source} seed={seed} m={}\n{}",
-                    self.m,
-                    self.to_csv()
-                ),
-                None => self.to_csv(),
-            }
-        };
-        std::fs::write(path, text).with_context(|| format!("writing scenario trace {path:?}"))
+        let mut w = TraceWriter::create(path, self.m, provenance)?;
+        for r in &self.rows {
+            w.push_row(r)?;
+        }
+        w.finish()
     }
 }
 
-fn fmt_f64_list(vals: &[f64]) -> String {
-    vals.iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(";")
+/// Streaming trace recorder: one [`RoundEnv`] in, one row out, O(row) peak
+/// memory — `repro scenario record` uses this instead of materializing the
+/// whole `ScenarioTrace` (which is O(M·rounds) for dense presets). Enforces
+/// the same invariants as [`ScenarioTrace::from_rows`] (strictly ascending
+/// rounds, at least one available client, at least one row) at push/finish
+/// time, and produces byte-identical files to [`ScenarioTrace::write`].
+#[derive(Debug)]
+pub struct TraceWriter {
+    out: std::io::BufWriter<std::fs::File>,
+    path: PathBuf,
+    json: bool,
+    m: usize,
+    rows: usize,
+    last_round: Option<usize>,
+}
+
+impl TraceWriter {
+    /// Open `path` (format by extension, like [`ScenarioTrace::load`]) and
+    /// write the header/envelope.
+    pub fn create(path: &Path, m: usize, provenance: Option<(&str, u64)>) -> Result<Self> {
+        if m == 0 {
+            bail!("scenario trace needs a federation of M >= 1 clients");
+        }
+        let json = path.extension().map(|e| e.eq_ignore_ascii_case("json")).unwrap_or(false);
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("writing scenario trace {path:?}"))?;
+        let mut w = Self {
+            out: std::io::BufWriter::new(file),
+            path: path.to_path_buf(),
+            json,
+            m,
+            rows: 0,
+            last_round: None,
+        };
+        if json {
+            write!(w.out, "{{\n \"schema\": 1,\n \"m\": {m}")?;
+            if let Some((source, seed)) = provenance {
+                let src = Json::str(source).to_string_compact();
+                write!(w.out, ",\n \"source\": {src},\n \"seed\": {seed}")?;
+            }
+            write!(w.out, ",\n \"rounds\": [")?;
+        } else {
+            if let Some((source, seed)) = provenance {
+                writeln!(w.out, "# recorded scenario={source} seed={seed} m={m}")?;
+            }
+            writeln!(w.out, "round,bw_scale,available,q_scale,deadline_scale")?;
+        }
+        Ok(w)
+    }
+
+    /// Append one realized environment as a trace row.
+    pub fn push(&mut self, env: &RoundEnv) -> Result<()> {
+        let row = env_row(env, self.m)?;
+        self.push_row(&row)
+    }
+
+    fn push_row(&mut self, r: &TraceRow) -> Result<()> {
+        if let Some(prev) = self.last_round {
+            if r.round <= prev {
+                bail!(
+                    "trace rounds must be strictly ascending: round {} follows round {prev}",
+                    r.round
+                );
+            }
+        }
+        if r.available.all(self.m, |&a| !a) {
+            bail!(
+                "round {}: no client is available — every round needs at least one candidate",
+                r.round
+            );
+        }
+        if self.json {
+            if self.rows > 0 {
+                write!(self.out, ",")?;
+            }
+            // render at indent level 2 (inside the `rounds` array): the
+            // pretty printer pads 1 space per level, so shifting every
+            // line of the indent-0 rendering by 2 spaces reproduces it
+            let pretty = row_json(r, self.m).to_string_pretty().replace('\n', "\n  ");
+            write!(self.out, "\n  {pretty}")?;
+        } else {
+            writeln!(self.out, "{}", csv_row(r, self.m))?;
+        }
+        self.rows += 1;
+        self.last_round = Some(r.round);
+        Ok(())
+    }
+
+    /// Close the envelope and flush. Errors if no row was ever pushed (an
+    /// empty trace can never replay).
+    pub fn finish(mut self) -> Result<()> {
+        if self.rows == 0 {
+            bail!("scenario trace has no rounds");
+        }
+        if self.json {
+            write!(self.out, "\n ]\n}}\n")?;
+        }
+        self.out.flush().with_context(|| format!("writing scenario trace {:?}", self.path))
+    }
+}
+
+fn env_row(e: &RoundEnv, m: usize) -> Result<TraceRow> {
+    if e.m != m {
+        bail!("env at round {} is for a different federation size (want M={m})", e.round);
+    }
+    Ok(TraceRow {
+        round: e.round,
+        bw_scale: e.bandwidth_scale,
+        available: e.available.clone(),
+        q_scale: e.compute_scale.clone(),
+        deadline_scale: e.deadline_scale.clone(),
+    })
+}
+
+fn csv_row(r: &TraceRow, m: usize) -> String {
+    let avail = match r.available.as_uniform() {
+        Some(&b) => (if b { "1" } else { "0" }).to_string(),
+        None => {
+            r.available.iter(m).map(|&a| if a { "1" } else { "0" }).collect::<Vec<_>>().join(";")
+        }
+    };
+    format!(
+        "{},{},{},{},{}",
+        r.round,
+        r.bw_scale,
+        avail,
+        fmt_f64_cell(&r.q_scale, m),
+        fmt_f64_cell(&r.deadline_scale, m)
+    )
+}
+
+fn row_json(r: &TraceRow, m: usize) -> Json {
+    let available = match r.available.as_uniform() {
+        Some(&b) => Json::Bool(b),
+        None => Json::arr(r.available.iter(m).map(|&b| Json::Bool(b)).collect()),
+    };
+    let scales = |v: &PerClient<f64>| match v.as_uniform() {
+        Some(&x) => Json::num(x),
+        None => Json::arr(v.iter(m).map(|&x| Json::num(x)).collect()),
+    };
+    Json::obj(vec![
+        ("round", Json::num(r.round as f64)),
+        ("bw_scale", Json::num(r.bw_scale)),
+        ("available", available),
+        ("q_scale", scales(&r.q_scale)),
+        ("deadline_scale", scales(&r.deadline_scale)),
+    ])
+}
+
+fn fmt_f64_cell(v: &PerClient<f64>, m: usize) -> String {
+    match v.as_uniform() {
+        Some(x) => format!("{x}"),
+        None => v.iter(m).map(|x| format!("{x}")).collect::<Vec<_>>().join(";"),
+    }
 }
 
 fn parse_scale(cell: &str, col: &str, ln: usize) -> Result<f64> {
@@ -413,16 +519,16 @@ fn parse_scale(cell: &str, col: &str, ln: usize) -> Result<f64> {
     Ok(v)
 }
 
-fn parse_scale_list(cell: &str, col: &str, ln: usize, m: usize) -> Result<Vec<f64>> {
+fn parse_scale_list(cell: &str, col: &str, ln: usize, m: usize) -> Result<PerClient<f64>> {
     if !cell.contains(';') {
-        return Ok(vec![parse_scale(cell, col, ln)?; m]);
+        return Ok(PerClient::uniform(parse_scale(cell, col, ln)?));
     }
     let vals: Vec<f64> =
         cell.split(';').map(|t| parse_scale(t.trim(), col, ln)).collect::<Result<_>>()?;
     if vals.len() != m {
         bail!("line {ln}: {col} has {} per-client values, federation has M={m}", vals.len());
     }
-    Ok(vals)
+    Ok(PerClient::Dense(vals))
 }
 
 fn parse_bool_token(tok: &str, ln: usize) -> Result<bool> {
@@ -433,22 +539,22 @@ fn parse_bool_token(tok: &str, ln: usize) -> Result<bool> {
     }
 }
 
-fn parse_bool_list(cell: &str, ln: usize, m: usize) -> Result<Vec<bool>> {
+fn parse_bool_list(cell: &str, ln: usize, m: usize) -> Result<PerClient<bool>> {
     if !cell.contains(';') {
-        return Ok(vec![parse_bool_token(cell.trim(), ln)?; m]);
+        return Ok(PerClient::uniform(parse_bool_token(cell.trim(), ln)?));
     }
     let vals: Vec<bool> =
         cell.split(';').map(|t| parse_bool_token(t.trim(), ln)).collect::<Result<_>>()?;
     if vals.len() != m {
         bail!("line {ln}: available has {} per-client values, federation has M={m}", vals.len());
     }
-    Ok(vals)
+    Ok(PerClient::Dense(vals))
 }
 
-fn json_scale_list(v: Option<&Json>, col: &str, round: usize, m: usize) -> Result<Vec<f64>> {
+fn json_scale_list(v: Option<&Json>, col: &str, round: usize, m: usize) -> Result<PerClient<f64>> {
     match v {
-        None => Ok(vec![1.0; m]),
-        Some(Json::Num(x)) => Ok(vec![check_scale(*x, col, round)?; m]),
+        None => Ok(PerClient::uniform(1.0)),
+        Some(Json::Num(x)) => Ok(PerClient::uniform(check_scale(*x, col, round)?)),
         Some(arr) => {
             let vals = arr.as_f64_vec().with_context(|| format!("round {round}: {col}"))?;
             if vals.len() != m {
@@ -460,7 +566,7 @@ fn json_scale_list(v: Option<&Json>, col: &str, round: usize, m: usize) -> Resul
             for &x in &vals {
                 check_scale(x, col, round)?;
             }
-            Ok(vals)
+            Ok(PerClient::Dense(vals))
         }
     }
 }
@@ -501,9 +607,12 @@ round,bw_scale,available,q_scale,deadline_scale
         assert!(e0.is_identity());
         let e3 = t.env(3);
         assert_eq!(e3.bandwidth_scale, 0.35);
-        assert_eq!(e3.available, vec![true, false, true]);
-        assert_eq!(e3.compute_scale, vec![1.0, 1.0, 3.5]);
-        assert_eq!(e3.deadline_scale, vec![0.8; 3]); // scalar broadcast
+        assert_eq!(e3.available.to_vec(3), vec![true, false, true]);
+        assert_eq!(e3.compute_scale.to_vec(3), vec![1.0, 1.0, 3.5]);
+        assert_eq!(e3.deadline_scale.to_vec(3), vec![0.8; 3]);
+        // a scalar cell stays broadcast (O(1) in M), a `;` cell stays dense
+        assert!(e3.deadline_scale.is_uniform());
+        assert!(!e3.available.is_uniform());
     }
 
     #[test]
@@ -633,14 +742,14 @@ round,bw_scale,available,q_scale,deadline_scale
                     );
                     assert_eq!(r.available, e.available, "{kind:?} r{}", e.round);
                     assert_eq!(
-                        bits(&r.compute_scale),
-                        bits(&e.compute_scale),
+                        bits(&r.compute_scale.to_vec(6)),
+                        bits(&e.compute_scale.to_vec(6)),
                         "{kind:?} r{}: q",
                         e.round
                     );
                     assert_eq!(
-                        bits(&r.deadline_scale),
-                        bits(&e.deadline_scale),
+                        bits(&r.deadline_scale.to_vec(6)),
+                        bits(&e.deadline_scale.to_vec(6)),
                         "{kind:?} r{}: deadline",
                         e.round
                     );
@@ -669,6 +778,60 @@ round,bw_scale,available,q_scale,deadline_scale
             std::fs::remove_file(&path).ok();
         }
         assert!(ScenarioTrace::load("/nonexistent/trace.csv", 3).is_err());
+    }
+
+    #[test]
+    fn streaming_writer_is_byte_identical_to_batch_write() {
+        for kind in [ScenarioKind::RushHour, ScenarioKind::Churn] {
+            let s = Scenario::from_parts(kind.clone(), 9, 5).unwrap();
+            let envs = s.trace(12);
+            let t = ScenarioTrace::from_envs(&envs, 5).unwrap();
+            for ext in ["csv", "json"] {
+                let batch = std::env::temp_dir().join(format!("repro_trace_batch.{ext}"));
+                let streamed = std::env::temp_dir().join(format!("repro_trace_stream.{ext}"));
+                t.write(&batch, Some(("spec", 9))).unwrap();
+                let mut w = TraceWriter::create(&streamed, 5, Some(("spec", 9))).unwrap();
+                for e in &envs {
+                    w.push(e).unwrap();
+                }
+                w.finish().unwrap();
+                assert_eq!(
+                    std::fs::read(&batch).unwrap(),
+                    std::fs::read(&streamed).unwrap(),
+                    "{kind:?}/{ext}: streaming writer diverged from batch write"
+                );
+                let back = ScenarioTrace::load(streamed.to_str().unwrap(), 5).unwrap();
+                assert_eq!(back, t, "{kind:?}/{ext}: streamed file must replay");
+                std::fs::remove_file(&batch).ok();
+                std::fs::remove_file(&streamed).ok();
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_writer_enforces_trace_invariants() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("repro_trace_invariants.csv");
+        // no rows pushed → finish errors like from_rows
+        let w = TraceWriter::create(&path, 3, None).unwrap();
+        let e = w.finish().unwrap_err();
+        assert!(e.to_string().contains("no rounds"), "{e:#}");
+        // out-of-order rounds rejected at push time
+        let mut w = TraceWriter::create(&path, 3, None).unwrap();
+        w.push(&RoundEnv::identity(5, 3)).unwrap();
+        let e = w.push(&RoundEnv::identity(5, 3)).unwrap_err();
+        assert!(e.to_string().contains("strictly ascending"), "{e:#}");
+        // foreign federation size rejected
+        let mut w = TraceWriter::create(&path, 3, None).unwrap();
+        let e = w.push(&RoundEnv::identity(0, 4)).unwrap_err();
+        assert!(e.to_string().contains("different federation size"), "{e:#}");
+        // a round with nobody available can never replay
+        let mut w = TraceWriter::create(&path, 2, None).unwrap();
+        let mut env = RoundEnv::identity(0, 2);
+        env.available = crate::pop::PerClient::uniform(false);
+        let e = w.push(&env).unwrap_err();
+        assert!(e.to_string().contains("at least one candidate"), "{e:#}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -30,7 +30,7 @@ use crate::jsonio::Json;
 use crate::oran::{RicProfile, UploadSizes};
 use crate::runtime::{Arg, ChunkStacks, Frozen, Tensor};
 use crate::scenario::RoundEnv;
-use crate::selection::DeadlineSelector;
+use crate::selection::{CostModel, DeadlineSelector, SelectPath};
 use crate::sim::RngPool;
 use inversion::ClientTrace;
 
@@ -120,11 +120,15 @@ pub struct SplitMe {
 
 impl SplitMe {
     pub fn new(ctx: &ExperimentContext) -> Result<Self> {
-        let sizes = Self::upload_sizes_all(ctx);
         Ok(Self {
             wc: ctx.init.client(&ctx.pool)?,
             wsi: ctx.init.inverse(&ctx.pool)?,
-            selector: DeadlineSelector::new(&ctx.topo, &sizes, ctx.cfg.alpha),
+            selector: DeadlineSelector::from_uniform(
+                ctx.topo.len(),
+                Self::upload_size(ctx),
+                ctx.topo.bandwidth_bps,
+                ctx.cfg.alpha,
+            ),
             e_last: ctx.cfg.e_initial,
             last_selected: Vec::new(),
             wc_version: 0,
@@ -134,30 +138,37 @@ impl SplitMe {
         })
     }
 
-    /// Per-round uplink of client m: its client-side model (omega*d) plus the
+    /// Per-round uplink of a client: its client-side model (omega*d) plus the
     /// whole-dataset smashed activations S_m (§V-B: SplitMe "inputs all the
-    /// local data ... to generate the labels for the server").
-    fn upload_sizes_all(ctx: &ExperimentContext) -> Vec<UploadSizes> {
-        (0..ctx.topo.len())
-            .map(|m| UploadSizes {
-                model_bytes: ctx.client_model_bytes(),
-                feature_bytes: ctx.smashed_bytes(m),
-            })
-            .collect()
+    /// local data ... to generate the labels for the server"). Every data
+    /// shard holds `samples_per_client` samples, so the size is uniform
+    /// across the federation — which is what lets the selector be built via
+    /// the O(1) [`DeadlineSelector::from_uniform`] instead of an O(M)
+    /// per-client vector.
+    fn upload_size(ctx: &ExperimentContext) -> UploadSizes {
+        UploadSizes {
+            model_bytes: ctx.client_model_bytes(),
+            feature_bytes: ctx.smashed_bytes(0),
+        }
     }
 
     /// The `inv_acts` pass over client m's labels under the CURRENT `wsi`,
-    /// memoized per `(wsi_version, m)`. Serves both the z-target generation
-    /// of Step 1 (the frozen `z` side — literals cached across every round
-    /// at this version) and the Step-4 supervision (the `tuples` side).
+    /// memoized per `(wsi_version, data shard)`. Serves both the z-target
+    /// generation of Step 1 (the frozen `z` side — literals cached across
+    /// every round at this version) and the Step-4 supervision (the `tuples`
+    /// side). Keyed by [`ExperimentContext::shard_of`] rather than the raw
+    /// client id: the pass is a pure function of `(wsi, shard data)`, so
+    /// clients sharing a shard share the result bit for bit — at M ≤ shard
+    /// count the key IS the client id and nothing changes.
     fn inv_acts_for(&mut self, ctx: &ExperimentContext, m: usize) -> Result<Arc<InvActsPass>> {
+        let m = ctx.shard_of(m);
         self.acts.sync(self.wsi_version);
         if let Some(a) = self.acts.per_client.get(&m) {
             return Ok(a.clone());
         }
         let inv_acts = ctx.plan.role("inv_acts")?;
         let wsi = self.acts.frozen_params(&self.wsi);
-        let batches = &ctx.shards[m].data.batches;
+        let batches = &ctx.shard(m).data.batches;
         let mut tuples = Vec::with_capacity(batches.len());
         for (_, y) in batches {
             let outs = ctx.engine.run_id(inv_acts, &[Arg::Cached(wsi.as_ref()), Arg::Cached(y)])?;
@@ -169,8 +180,9 @@ impl SplitMe {
     }
 
     /// Smashed activations of client m's whole shard under the CURRENT
-    /// aggregated `wc`, memoized per `(wc_version, m)`.
+    /// aggregated `wc`, memoized per `(wc_version, data shard)`.
     fn smashed_for(&mut self, ctx: &ExperimentContext, m: usize) -> Result<Arc<Vec<Frozen>>> {
+        let m = ctx.shard_of(m);
         self.smash.sync(self.wc_version);
         if let Some(s) = self.smash.per_client.get(&m) {
             return Ok(s.clone());
@@ -195,7 +207,7 @@ impl SplitMe {
             .iter()
             .map(|&m| {
                 let labels: Vec<&Frozen> =
-                    ctx.shards[m].data.batches.iter().map(|(_, y)| y).collect();
+                    ctx.shard(m).data.batches.iter().map(|(_, y)| y).collect();
                 let smashed = self.smashed_for(ctx, m)?;
                 let acts = self.inv_acts_for(ctx, m)?;
                 Ok(ClientTrace { labels, smashed, acts })
@@ -262,8 +274,8 @@ pub fn smash_shard(ctx: &ExperimentContext, m: usize, wc: &Frozen) -> Result<Vec
         return Ok(stacked.unstack()?.into_iter().map(Tensor::freeze).collect());
     }
     let fwd = ctx.plan.role("client_fwd")?;
-    let mut out = Vec::with_capacity(ctx.shards[m].data.num_batches());
-    for (x, _) in &ctx.shards[m].data.batches {
+    let mut out = Vec::with_capacity(ctx.shard(m).data.num_batches());
+    for (x, _) in &ctx.shard(m).data.batches {
         let r = ctx.engine.run_id(fwd, &[Arg::Cached(wc), Arg::Cached(x)])?;
         out.push(
             r.into_iter()
@@ -282,7 +294,7 @@ pub fn smash_shard(ctx: &ExperimentContext, m: usize, wc: &Frozen) -> Result<Vec
 /// retaining the intermediate tuples would be pure memory overhead.
 fn z_pass_compute(ctx: &ExperimentContext, wsi: &Frozen, m: usize) -> Result<InvActsPass> {
     let inv_acts = ctx.plan.role("inv_acts")?;
-    let batches = &ctx.shards[m].data.batches;
+    let batches = &ctx.shard(m).data.batches;
     let mut tuples = Vec::with_capacity(batches.len());
     for (_, y) in batches {
         let mut outs = ctx.engine.run_id(inv_acts, &[Arg::Cached(wsi), Arg::Cached(y)])?;
@@ -344,25 +356,49 @@ impl Framework for SplitMe {
         let cfg = &ctx.cfg;
 
         // ---- the round's O-RAN substrate: availability-filtered candidate
-        // set with this round's Q/deadline/bandwidth factors applied. Under
-        // the static scenario this reproduces ctx.topo bit for bit.
-        let topo_r = env.apply(&ctx.topo);
+        // set with this round's Q/deadline/bandwidth factors applied. An
+        // identity environment (the static scenario) borrows ctx.topo —
+        // no per-round O(M) copy.
+        let topo_r = env.effective(&ctx.topo);
 
         // ---- P1: deadline-aware selection (Algorithm 1) ----
         let e_sel = self.e_last;
-        let mut selected: Vec<&RicProfile> = self
-            .selector
-            .select(&topo_r, |r| e_sel as f64 * (r.q_c + r.q_s));
-        if selected.is_empty() {
-            // degenerate deadline draw (or a churn round where no available
-            // RIC fits): admit the single most-slack candidate so training
-            // always progresses (and the estimate can relax)
-            selected.push(
-                topo_r
-                    .most_slack(|r| e_sel as f64 * (r.q_c + r.q_s))
-                    .expect("scenario engine keeps >= 1 candidate available"),
-            );
-        }
+        let selected: Vec<&RicProfile> = if cfg.select_cap > 0 {
+            // capped top-k (ISSUE 7): O(selected) admitted set at any M;
+            // identity rounds walk the presorted index over the base
+            // topology, dynamic rounds stream a cap-sized heap, and
+            // --reference-path forces the dense differential oracle
+            let path = if cfg.reference_path {
+                SelectPath::Dense
+            } else if env.is_identity() {
+                SelectPath::Indexed
+            } else {
+                SelectPath::Streaming
+            };
+            let jobs = resolve_client_jobs(cfg.client_jobs, topo_r.len());
+            self.selector.select_capped(
+                &topo_r,
+                &CostModel::split(e_sel as f64),
+                cfg.select_cap,
+                path,
+                jobs,
+            )
+        } else {
+            let mut sel = self
+                .selector
+                .select(&topo_r, |r| e_sel as f64 * (r.q_c + r.q_s));
+            if sel.is_empty() {
+                // degenerate deadline draw (or a churn round where no
+                // available RIC fits): admit the single most-slack candidate
+                // so training always progresses (and the estimate can relax)
+                sel.push(
+                    topo_r
+                        .most_slack(|r| e_sel as f64 * (r.q_c + r.q_s))
+                        .expect("scenario engine keeps >= 1 candidate available"),
+                );
+            }
+            sel
+        };
         let sizes: Vec<UploadSizes> = selected
             .iter()
             .map(|r| UploadSizes {
@@ -433,7 +469,7 @@ impl Framework for SplitMe {
         self.acts.sync(self.wsi_version);
         let hits: Vec<Option<Arc<InvActsPass>>> = survivors
             .iter()
-            .map(|m| self.acts.per_client.get(m).cloned())
+            .map(|&m| self.acts.per_client.get(&ctx.shard_of(m)).cloned())
             .collect();
         let wsi_round = if hits.iter().any(Option::is_none) {
             Some(self.acts.frozen_params(&self.wsi))
@@ -466,7 +502,7 @@ impl Framework for SplitMe {
                 }
             };
             let z: Vec<&Frozen> = (0..pass.tuples.len()).map(|b| pass.z(b)).collect();
-            let shard = &ctx.shards[m].data;
+            let shard = &ctx.shard(m).data;
 
             // per-round window stacks over the z targets (the x side comes
             // precomputed from the shared context)

@@ -131,14 +131,15 @@ fn scenario_envs_are_pure_and_well_formed() {
             .env(round);
         prop_assert!(a == b, "{kind:?} env not reproducible at round {round}");
         prop_assert!(a.round == round);
-        prop_assert!(a.available.len() == m && a.compute_scale.len() == m);
-        prop_assert!(a.deadline_scale.len() == m);
+        prop_assert!(a.m == m);
+        prop_assert!(a.available.to_vec(m).len() == m && a.compute_scale.to_vec(m).len() == m);
+        prop_assert!(a.deadline_scale.to_vec(m).len() == m);
         prop_assert!(a.available_count() >= 1, "{kind:?}: empty candidate set");
         prop_assert!(a.bandwidth_scale > 0.0 && a.bandwidth_scale <= 1.0);
-        for &c in &a.compute_scale {
+        for &c in a.compute_scale.iter(m) {
             prop_assert!(c.is_finite() && c >= 1.0, "compute scale {c}");
         }
-        for &d in &a.deadline_scale {
+        for &d in a.deadline_scale.iter(m) {
             prop_assert!(d.is_finite() && d > 0.0 && d <= 1.0, "deadline scale {d}");
         }
         if kind == ScenarioKind::Static {
@@ -180,7 +181,7 @@ fn scenario_effective_topology_respects_selection_invariants() {
                 "client {} violates its scenario-scaled deadline",
                 r.id
             );
-            prop_assert!(env.available[r.id], "selected an unavailable client {}", r.id);
+            prop_assert!(*env.available.get(r.id), "selected an unavailable client {}", r.id);
         }
         Ok(())
     });
@@ -219,12 +220,12 @@ fn trace_record_replay_roundtrips_bitwise() {
                 );
                 prop_assert!(r.available == e.available, "{kind:?}/{tag} r{}: avail", e.round);
                 prop_assert!(
-                    bits(&r.compute_scale) == bits(&e.compute_scale),
+                    bits(&r.compute_scale.to_vec(m)) == bits(&e.compute_scale.to_vec(m)),
                     "{kind:?}/{tag} r{}: q_scale",
                     e.round
                 );
                 prop_assert!(
-                    bits(&r.deadline_scale) == bits(&e.deadline_scale),
+                    bits(&r.deadline_scale.to_vec(m)) == bits(&e.deadline_scale.to_vec(m)),
                     "{kind:?}/{tag} r{}: deadline_scale",
                     e.round
                 );
@@ -238,7 +239,7 @@ fn trace_record_replay_roundtrips_bitwise() {
             );
             prop_assert!(held.available == last.available, "{kind:?}/{tag}: held avail");
             prop_assert!(
-                bits(&held.compute_scale) == bits(&last.compute_scale),
+                bits(&held.compute_scale.to_vec(m)) == bits(&last.compute_scale.to_vec(m)),
                 "{kind:?}/{tag}: held q"
             );
         }
@@ -272,9 +273,10 @@ fn fault_traces_are_pure_and_well_formed() {
         }
         prop_assert!(f.round(round) == a, "{kind:?}: earlier queries perturbed round {round}");
         prop_assert!(a.round == round);
-        prop_assert!(a.drop_after_compute.len() == m);
-        prop_assert!(a.upload_attempts.len() == m && a.crashed.len() == m);
-        for &att in &a.upload_attempts {
+        prop_assert!(a.m == m);
+        prop_assert!(a.drop_after_compute.to_vec(m).len() == m);
+        prop_assert!(a.upload_attempts.to_vec(m).len() == m && a.crashed.to_vec(m).len() == m);
+        for &att in a.upload_attempts.iter(m) {
             prop_assert!(
                 (att as usize) <= FLAKY_MAX_ATTEMPTS,
                 "{kind:?}: {att} attempts exceeds the cap"

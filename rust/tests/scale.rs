@@ -1,0 +1,273 @@
+//! Federation scale-out differential suite (ISSUE 7): proves the
+//! O(selected)-per-round machinery — capped streaming/indexed selection,
+//! lazily-derived environments, windowed record retention, streaming record
+//! export — is **bitwise identical** to the dense reference path it
+//! replaced.
+//!
+//! * `SelectPath::Streaming` (jobs 1 and 4) and `SelectPath::Indexed`
+//!   (identity rounds) vs the `Dense` sort oracle, across every scenario
+//!   preset, M up to 256, with failure-penalty state in play.
+//! * the multi-shard parallel merge of the streaming scan at M = 10⁴
+//!   (> SELECT_SHARD, so the fan-out actually splits) vs the same oracle.
+//! * full training runs: `reference_path = true` (dense env/fault vectors,
+//!   cold Markov replay, dense selection) vs the default lazy path —
+//!   record-for-record bitwise, all four frameworks, scenario × fault
+//!   presets.
+//! * `--record-window` runs: identical `RunSummary` totals with only the
+//!   trailing window retained, and a streaming CSV sink that reproduces
+//!   the batch `write_csv` output byte for byte.
+//!
+//! The selection-level tests need no artifacts; the training runs SKIP
+//! without `make artifacts` (REPRO_REQUIRE_ARTIFACTS=1 hardens, as usual).
+
+mod common;
+
+use common::{assert_records_bitwise_eq, tiny_cfg, try_engine};
+use repro::config::{FrameworkKind, SimConfig};
+use repro::coordinator::Runner;
+use repro::metrics::{RecordWriter, RoundRecord, RunSummary};
+use repro::oran::{RicProfile, Topology, UploadSizes};
+use repro::scenario::{Scenario, ScenarioKind};
+use repro::selection::{CostModel, DeadlineSelector, SelectPath};
+
+fn ids(v: &[&RicProfile]) -> Vec<usize> {
+    v.iter().map(|r| r.id).collect()
+}
+
+fn scaled_cfg(m: usize, kind: &ScenarioKind) -> SimConfig {
+    let mut cfg = SimConfig::commag();
+    cfg.num_clients = m;
+    cfg.b_min = 1.0 / m as f64;
+    cfg.scenario = kind.name().to_string();
+    cfg
+}
+
+/// The tentpole's selection gate: on every scenario preset, every round's
+/// effective topology must yield the SAME admitted set from the streaming
+/// heap scan (sequential and sharded) as from the dense filter-sort oracle
+/// — and on identity rounds, from the presorted-index walk too. Failure
+/// penalties and a moving t_estimate are part of the state under test.
+#[test]
+fn capped_paths_match_dense_across_scenario_presets() {
+    let size = UploadSizes { model_bytes: 28e3, feature_bytes: 65e3 };
+    for kind in ScenarioKind::all() {
+        for m in [1usize, 7, 64, 256] {
+            let cfg = scaled_cfg(m, &kind);
+            let topo = Topology::build(&cfg);
+            let scenario =
+                Scenario::from_parts(kind.clone(), cfg.seed, m).expect("synthetic preset");
+            let mut sel = DeadlineSelector::from_uniform(m, size, topo.bandwidth_bps, cfg.alpha);
+            // outstanding failures shrink effective deadlines — the indexed
+            // walk's penalized prefix must agree with the oracle too
+            sel.record_failure(0);
+            if m > 3 {
+                sel.record_failure(3);
+                sel.record_failure(3);
+            }
+            for round in 0..6 {
+                let env = scenario.env(round);
+                let topo_r = env.effective(&topo);
+                for cost in [CostModel::split(8.0), CostModel::unsplit(8.0, 3.0)] {
+                    for cap in [1usize, 4, 32, 1000] {
+                        let what = format!("{:?} m={m} r={round} cap={cap}", kind.name());
+                        let dense =
+                            ids(&sel.select_capped(&topo_r, &cost, cap, SelectPath::Dense, 1));
+                        let stream =
+                            ids(&sel.select_capped(&topo_r, &cost, cap, SelectPath::Streaming, 1));
+                        let sharded =
+                            ids(&sel.select_capped(&topo_r, &cost, cap, SelectPath::Streaming, 4));
+                        assert_eq!(dense, stream, "{what}: streaming");
+                        assert_eq!(dense, sharded, "{what}: streaming jobs=4");
+                        if env.is_identity() {
+                            let indexed =
+                                ids(&sel.select_capped(&topo, &cost, cap, SelectPath::Indexed, 1));
+                            assert_eq!(dense, indexed, "{what}: indexed");
+                        }
+                        assert!(dense.len() <= cap.max(1), "{what}: cap violated");
+                        assert!(
+                            dense.len() <= 1 || dense.windows(2).all(|w| w[0] < w[1]),
+                            "{what}: ids not ascending"
+                        );
+                    }
+                }
+                // the closed loop moves the comm estimate between rounds
+                sel.observe(2e-3 * (round + 1) as f64);
+            }
+        }
+    }
+}
+
+/// At M = 10⁴ the streaming scan spans multiple SELECT_SHARD candidate
+/// shards, so `jobs > 1` actually fans out and the deterministic heap merge
+/// is load-bearing — pin it against the dense oracle at several worker
+/// counts.
+#[test]
+fn streaming_shard_fanout_matches_dense_at_m_10k() {
+    let m = 10_000usize;
+    let kind = ScenarioKind::Fading;
+    let cfg = scaled_cfg(m, &kind);
+    let topo = Topology::build(&cfg);
+    let scenario = Scenario::from_parts(kind, cfg.seed, m).expect("fading preset");
+    let size = UploadSizes { model_bytes: 28e3, feature_bytes: 65e3 };
+    let mut sel = DeadlineSelector::from_uniform(m, size, topo.bandwidth_bps, cfg.alpha);
+    sel.observe(5e-3);
+    sel.observe(5e-3);
+    let cost = CostModel::split(10.0);
+    for round in 0..2 {
+        let env = scenario.env(round);
+        let topo_r = env.effective(&topo);
+        for cap in [16usize, 128] {
+            let dense = ids(&sel.select_capped(&topo_r, &cost, cap, SelectPath::Dense, 1));
+            for jobs in [1usize, 4, 7] {
+                let got =
+                    ids(&sel.select_capped(&topo_r, &cost, cap, SelectPath::Streaming, jobs));
+                assert_eq!(dense, got, "m=10k r={round} cap={cap} jobs={jobs}");
+            }
+        }
+    }
+}
+
+fn train_summary(
+    engine: &repro::runtime::Engine,
+    cfg: &SimConfig,
+    kind: FrameworkKind,
+    rounds: usize,
+) -> RunSummary {
+    let mut runner = Runner::new(engine, cfg, kind).expect("runner");
+    runner.train(rounds).expect("train")
+}
+
+/// The tentpole's acceptance gate: with capped selection on, the default
+/// lazy path (broadcast env/fault attributes, memoized Markov skip-ahead,
+/// indexed/streaming selection) must reproduce `reference_path = true`
+/// (dense per-client vectors, cold replay from round 0, dense sort) record
+/// for record, bit for bit — all four frameworks, scenario × fault presets.
+#[test]
+fn lazy_path_matches_dense_reference_runs_bitwise() {
+    let Some(engine) = try_engine() else { return };
+    let matrix = [
+        ("static", "none"),
+        ("fading", "none"),
+        ("churn", "dropout"),
+        ("slice_fading", "crash_loop"),
+        ("stragglers", "flaky_uplink"),
+    ];
+    for (scenario, faults) in matrix {
+        let mut lazy = tiny_cfg();
+        lazy.scenario = scenario.into();
+        lazy.faults = faults.into();
+        lazy.select_cap = 4;
+        let mut dense = lazy.clone();
+        dense.reference_path = true;
+        for kind in FrameworkKind::all() {
+            let a = train_summary(&engine, &lazy, kind, 3);
+            let b = train_summary(&engine, &dense, kind, 3);
+            assert_eq!(a.records.len(), b.records.len(), "{scenario}/{faults}/{}", kind.name());
+            for (ra, rb) in a.records.iter().zip(&b.records) {
+                assert_records_bitwise_eq(
+                    ra,
+                    rb,
+                    &format!("{scenario}+{faults}/{}/lazy-vs-reference", kind.name()),
+                );
+            }
+        }
+    }
+}
+
+fn assert_summary_totals_bitwise_eq(a: &RunSummary, b: &RunSummary, what: &str) {
+    assert_eq!(a.framework, b.framework, "{what}: framework");
+    assert_eq!(a.preset, b.preset, "{what}: preset");
+    assert_eq!(a.rounds, b.rounds, "{what}: rounds");
+    assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits(), "{what}: final_accuracy");
+    assert_eq!(a.best_accuracy.to_bits(), b.best_accuracy.to_bits(), "{what}: best_accuracy");
+    assert_eq!(a.rounds_to_target, b.rounds_to_target, "{what}: rounds_to_target");
+    assert_eq!(
+        a.time_to_target.map(f64::to_bits),
+        b.time_to_target.map(f64::to_bits),
+        "{what}: time_to_target"
+    );
+    assert_eq!(a.total_sim_time.to_bits(), b.total_sim_time.to_bits(), "{what}: total_sim_time");
+    assert_eq!(
+        a.total_comm_bytes.to_bits(),
+        b.total_comm_bytes.to_bits(),
+        "{what}: total_comm_bytes"
+    );
+    assert_eq!(a.total_comm_cost.to_bits(), b.total_comm_cost.to_bits(), "{what}: total_comm_cost");
+    assert_eq!(a.total_comp_cost.to_bits(), b.total_comp_cost.to_bits(), "{what}: total_comp_cost");
+    assert_eq!(a.mean_selected.to_bits(), b.mean_selected.to_bits(), "{what}: mean_selected");
+    assert_eq!(a.mean_available.to_bits(), b.mean_available.to_bits(), "{what}: mean_available");
+    assert_eq!(a.total_dropouts, b.total_dropouts, "{what}: total_dropouts");
+    assert_eq!(a.total_retries, b.total_retries, "{what}: total_retries");
+    assert_eq!(a.quorum_misses, b.quorum_misses, "{what}: quorum_misses");
+}
+
+/// The bounded-memory gate: a `record_window = 2` run retains only the two
+/// trailing records, yet every RunSummary aggregate — folded through the
+/// streaming accumulator — is bitwise identical to the unbounded run's.
+#[test]
+fn record_window_preserves_summary_totals_bitwise() {
+    let Some(engine) = try_engine() else { return };
+    let rounds = 5;
+    for kind in [FrameworkKind::SplitMe, FrameworkKind::FedAvg] {
+        let mut full_cfg = tiny_cfg();
+        full_cfg.faults = "flaky_uplink".into();
+        let mut win_cfg = full_cfg.clone();
+        win_cfg.record_window = 2;
+        let full = train_summary(&engine, &full_cfg, kind, rounds);
+        let windowed = train_summary(&engine, &win_cfg, kind, rounds);
+        assert_eq!(full.records.len(), rounds, "{}: full history", kind.name());
+        assert_eq!(windowed.records.len(), 2, "{}: trailing window only", kind.name());
+        // the retained tail is the tail of the full history, bit for bit
+        for (ra, rb) in full.records[rounds - 2..].iter().zip(&windowed.records) {
+            assert_records_bitwise_eq(ra, rb, &format!("{}/window-tail", kind.name()));
+        }
+        assert_summary_totals_bitwise_eq(&full, &windowed, kind.name());
+    }
+}
+
+/// Streaming export end to end: a windowed run with a CSV record sink must
+/// produce the byte-identical file the unbounded run writes via the batch
+/// `RunSummary::write_csv` — rows hit disk as rounds finish, independent of
+/// what stays in memory.
+#[test]
+fn streamed_record_sink_matches_batch_csv_bytes() {
+    let Some(engine) = try_engine() else { return };
+    let rounds = 4;
+    let cfg = tiny_cfg();
+    let full = train_summary(&engine, &cfg, FrameworkKind::SplitMe, rounds);
+    let batch_path = std::env::temp_dir().join("repro_scale_batch.csv");
+    full.write_csv(&batch_path).expect("batch csv");
+
+    let mut win_cfg = cfg.clone();
+    win_cfg.record_window = 1;
+    let stream_path = std::env::temp_dir().join("repro_scale_stream.csv");
+    let mut runner = Runner::new(&engine, &win_cfg, FrameworkKind::SplitMe).expect("runner");
+    runner.record_sink = Some(RecordWriter::create(&stream_path).expect("sink"));
+    runner.train(rounds).expect("train");
+    assert_eq!(runner.records().len(), 1, "window must bound in-memory retention");
+    runner.finish_records().expect("flush");
+
+    let batch = std::fs::read(&batch_path).expect("read batch");
+    let streamed = std::fs::read(&stream_path).expect("read stream");
+    std::fs::remove_file(&batch_path).ok();
+    std::fs::remove_file(&stream_path).ok();
+    // the CSV schema carries only deterministic columns (wall_secs is not
+    // exported), so the two files must agree byte for byte
+    assert_eq!(batch, streamed, "streamed CSV diverges from batch export");
+}
+
+/// The lazy representation really is O(1) per identity round at large M:
+/// broadcast attributes, no per-client vectors. Guards the memory math in
+/// PERF.md §federation-scale.
+#[test]
+fn identity_envs_stay_broadcast_at_federation_scale() {
+    let m = 1_000_000usize;
+    let s = Scenario::from_parts(ScenarioKind::Static, 1234, m).expect("static preset");
+    let env = s.env(7);
+    assert!(env.is_identity());
+    assert_eq!(env.m, m);
+    assert!(env.available.is_uniform(), "static availability must stay broadcast");
+    assert!(env.compute_scale.is_uniform(), "static compute scale must stay broadcast");
+    assert!(env.deadline_scale.is_uniform(), "static deadline scale must stay broadcast");
+    assert_eq!(env.available_count(), m);
+}
