@@ -19,6 +19,10 @@ pub struct Args {
     /// positional arguments (after the subcommand)
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
+    /// flags parsed as bare switches because their next token started with
+    /// `--` — remembered so value accessors and `finish()` can point at the
+    /// `--key=--value` escape hatch instead of a baffling downstream error
+    bare: std::collections::BTreeSet<String>,
     /// flags that were consumed (for unknown-flag detection)
     seen: std::cell::RefCell<Vec<String>>,
 }
@@ -26,20 +30,36 @@ pub struct Args {
 impl Args {
     /// Parse `argv[1..]`: first non-flag token is the subcommand, the rest
     /// are `--key value`, `--key=value`, or bare `--switch` (value "true").
+    /// A repeated flag is an error, not a silent last-wins: `--rounds 5
+    /// --rounds 9` almost always means a stale shell history edit, and the
+    /// losing value would vanish without a trace. A space-form value cannot
+    /// begin with `--` (it parses as a bare switch); the `=` form passes
+    /// anything through.
     pub fn parse(argv: &[String]) -> Result<(String, Args)> {
         let mut it = argv.iter().peekable();
         let mut cmd = String::new();
         let mut positional = Vec::new();
         let mut flags = BTreeMap::new();
+        let mut bare = std::collections::BTreeSet::new();
         while let Some(tok) = it.next() {
             if let Some(name) = tok.strip_prefix("--") {
-                if let Some((k, v)) = name.split_once('=') {
-                    flags.insert(k.to_string(), v.to_string());
+                let (key, value, is_bare) = if let Some((k, v)) = name.split_once('=') {
+                    (k.to_string(), v.to_string(), false)
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    flags.insert(name.to_string(), it.next().unwrap().clone());
+                    (name.to_string(), it.next().unwrap().clone(), false)
                 } else {
-                    flags.insert(name.to_string(), "true".to_string());
+                    (name.to_string(), "true".to_string(), true)
+                };
+                if flags.contains_key(&key) {
+                    return Err(invalid(format!(
+                        "--{key} given more than once (flags may appear at most once; \
+                         the last occurrence would silently win)"
+                    )));
                 }
+                if is_bare {
+                    bare.insert(key.clone());
+                }
+                flags.insert(key, value);
             } else if cmd.is_empty() {
                 cmd = tok.clone();
             } else {
@@ -49,12 +69,27 @@ impl Args {
         if cmd.is_empty() {
             return Err(invalid("missing subcommand".into()));
         }
-        Ok((cmd, Args { positional, flags, seen: Default::default() }))
+        Ok((cmd, Args { positional, flags, bare, seen: Default::default() }))
     }
 
     fn raw(&self, key: &str) -> Option<&str> {
         self.seen.borrow_mut().push(key.to_string());
         self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// The shared bad-value error for typed accessors. When the flag was
+    /// parsed as a bare switch (its would-be value started with `--`), the
+    /// message explains the `--key=--value` escape hatch instead of just
+    /// complaining about the literal "true".
+    fn expects(&self, key: &str, what: &str, v: &str) -> anyhow::Error {
+        if self.bare.contains(key) {
+            invalid(format!(
+                "--{key} expects {what}, but was given no value (the next token started \
+                 with \"--\"; attach such a value with '=': --{key}=--value)"
+            ))
+        } else {
+            invalid(format!("--{key} expects {what}, got {v:?}"))
+        }
     }
 
     pub fn str_or(&self, key: &str, default: &str) -> String {
@@ -68,9 +103,7 @@ impl Args {
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.raw(key) {
             None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|_| invalid(format!("--{key} expects an integer, got {v:?}"))),
+            Some(v) => v.parse().map_err(|_| self.expects(key, "an integer", v)),
         }
     }
 
@@ -78,28 +111,21 @@ impl Args {
     pub fn opt_usize(&self, key: &str) -> Result<Option<usize>> {
         match self.raw(key) {
             None => Ok(None),
-            Some(v) => v
-                .parse()
-                .map(Some)
-                .map_err(|_| invalid(format!("--{key} expects an integer, got {v:?}"))),
+            Some(v) => v.parse().map(Some).map_err(|_| self.expects(key, "an integer", v)),
         }
     }
 
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.raw(key) {
             None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|_| invalid(format!("--{key} expects an integer, got {v:?}"))),
+            Some(v) => v.parse().map_err(|_| self.expects(key, "an integer", v)),
         }
     }
 
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
         match self.raw(key) {
             None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|_| invalid(format!("--{key} expects a number, got {v:?}"))),
+            Some(v) => v.parse().map_err(|_| self.expects(key, "a number", v)),
         }
     }
 
@@ -123,12 +149,20 @@ impl Args {
         self.usize_or("client-jobs", 0)
     }
 
-    /// Call after reading all known flags: errors on leftovers (typos).
+    /// Call after reading all known flags: errors on leftovers (typos). An
+    /// unknown flag that parsed as a bare switch may really be a leaked
+    /// value (`--out --weird` turns `--weird` into a flag of its own), so
+    /// the error documents the `=` escape hatch for that case.
     pub fn finish(&self) -> Result<()> {
         let seen = self.seen.borrow();
         for k in self.flags.keys() {
             if !seen.contains(k) {
-                return Err(invalid(format!("unknown flag --{k}")));
+                let hint = if self.bare.contains(k) {
+                    " (a value beginning with \"--\" must be attached with '=': --key=--value)"
+                } else {
+                    ""
+                };
+                return Err(invalid(format!("unknown flag --{k}{hint}")));
             }
         }
         Ok(())
@@ -209,5 +243,57 @@ mod tests {
     #[test]
     fn missing_subcommand_errors() {
         assert!(Args::parse(&argv("")).is_err());
+    }
+
+    #[test]
+    fn duplicate_flags_are_rejected_not_last_wins() {
+        // space form
+        let e = Args::parse(&argv("run --rounds 5 --rounds 9")).unwrap_err();
+        assert_eq!(ReproError::exit_code_of(&e), 2);
+        assert!(e.to_string().contains("--rounds"), "{e:#}");
+        assert!(e.to_string().contains("more than once"), "{e:#}");
+        // eq form
+        let e = Args::parse(&argv("run --out=a --out=b")).unwrap_err();
+        assert_eq!(ReproError::exit_code_of(&e), 2);
+        // mixed forms collide on the same key too
+        let e = Args::parse(&argv("run --seed 1 --seed=2")).unwrap_err();
+        assert_eq!(ReproError::exit_code_of(&e), 2);
+        // a repeated bare switch is also a duplicate
+        let e = Args::parse(&argv("run --verbose --verbose")).unwrap_err();
+        assert_eq!(ReproError::exit_code_of(&e), 2);
+    }
+
+    #[test]
+    fn double_dash_value_parses_as_bare_switch_with_escape_hatch_hint() {
+        // `--out --weird`: --out becomes a bare switch, --weird leaks into
+        // the flag namespace. The unknown-flag error must teach the = form.
+        let (_, a) = Args::parse(&argv("run --out --weird")).unwrap();
+        assert_eq!(a.str_or("out", "d"), "true"); // the bare-switch misparse
+        let e = a.finish().unwrap_err();
+        assert_eq!(ReproError::exit_code_of(&e), 2);
+        assert!(e.to_string().contains("--weird"), "{e:#}");
+        assert!(e.to_string().contains("--key=--value"), "{e:#}");
+        // a typed accessor on the bare flag names the escape hatch too
+        let (_, a) = Args::parse(&argv("run --rounds --fast")).unwrap();
+        let e = a.usize_or("rounds", 1).unwrap_err();
+        assert_eq!(ReproError::exit_code_of(&e), 2);
+        assert!(e.to_string().contains("--rounds=--value"), "{e:#}");
+        // the = form actually accepts a value starting with --
+        let (_, a) = Args::parse(&argv("run --out=--weird")).unwrap();
+        assert_eq!(a.str_or("out", "d"), "--weird");
+        a.finish().unwrap();
+        // a genuinely unknown plain flag gets no misleading hint
+        let (_, a) = Args::parse(&argv("run --typo 3")).unwrap();
+        let e = a.finish().unwrap_err();
+        assert!(!e.to_string().contains("--key=--value"), "{e:#}");
+    }
+
+    #[test]
+    fn flags_may_precede_the_subcommand() {
+        let (cmd, a) = Args::parse(&argv("--jobs 3 experiment faults")).unwrap();
+        assert_eq!(cmd, "experiment");
+        assert_eq!(a.jobs().unwrap(), 3);
+        assert_eq!(a.positional, vec!["faults"]);
+        a.finish().unwrap();
     }
 }

@@ -23,7 +23,7 @@ use crate::config::{FrameworkKind, SimConfig};
 use crate::errors::ReproError;
 use crate::fl::state;
 use crate::jsonio::Json;
-use crate::metrics::RoundRecord;
+use crate::metrics::{RoundRecord, RunSummary};
 
 /// Bumped on any incompatible change to the checkpoint layout; loaders
 /// reject other versions instead of misreading them.
@@ -93,6 +93,65 @@ pub fn record_from_json(j: &Json) -> Result<RoundRecord> {
         env_dropouts: j.get("env_dropouts")?.as_usize()?,
         retries: j.get("retries")?.as_usize()?,
         quorum_miss: j.get("quorum_miss")?.as_usize()?,
+    })
+}
+
+/// A full [`RunSummary`] with every float bit-hexed — the warm-tier payload
+/// of the experiment-service result cache (`serve::cache`). The records go
+/// through [`record_to_json`] (wall_secs included) so a cache hit returns
+/// the cold run's exact byte content.
+pub fn summary_to_json(s: &RunSummary) -> Json {
+    Json::obj(vec![
+        ("framework", Json::str(s.framework.clone())),
+        ("preset", Json::str(s.preset.clone())),
+        ("rounds", Json::num(s.rounds as f64)),
+        ("final_accuracy", state::f32_json(s.final_accuracy)),
+        ("best_accuracy", state::f32_json(s.best_accuracy)),
+        (
+            "rounds_to_target",
+            s.rounds_to_target.map(|v| Json::num(v as f64)).unwrap_or(Json::Null),
+        ),
+        ("time_to_target", state::opt_f64_json(s.time_to_target)),
+        ("total_sim_time", state::f64_json(s.total_sim_time)),
+        ("total_comm_bytes", state::f64_json(s.total_comm_bytes)),
+        ("total_comm_cost", state::f64_json(s.total_comm_cost)),
+        ("total_comp_cost", state::f64_json(s.total_comp_cost)),
+        ("mean_selected", state::f64_json(s.mean_selected)),
+        ("mean_available", state::f64_json(s.mean_available)),
+        ("total_dropouts", Json::num(s.total_dropouts as f64)),
+        ("total_retries", Json::num(s.total_retries as f64)),
+        ("quorum_misses", Json::num(s.quorum_misses as f64)),
+        ("records", Json::arr(s.records.iter().map(record_to_json).collect())),
+    ])
+}
+
+pub fn summary_from_json(j: &Json) -> Result<RunSummary> {
+    Ok(RunSummary {
+        framework: j.get("framework")?.as_str()?.to_string(),
+        preset: j.get("preset")?.as_str()?.to_string(),
+        rounds: j.get("rounds")?.as_usize()?,
+        final_accuracy: state::f32_from(j.get("final_accuracy")?)?,
+        best_accuracy: state::f32_from(j.get("best_accuracy")?)?,
+        rounds_to_target: match j.get("rounds_to_target")? {
+            Json::Null => None,
+            v => Some(v.as_usize()?),
+        },
+        time_to_target: state::opt_f64_from(j.get("time_to_target")?)?,
+        total_sim_time: state::f64_from(j.get("total_sim_time")?)?,
+        total_comm_bytes: state::f64_from(j.get("total_comm_bytes")?)?,
+        total_comm_cost: state::f64_from(j.get("total_comm_cost")?)?,
+        total_comp_cost: state::f64_from(j.get("total_comp_cost")?)?,
+        mean_selected: state::f64_from(j.get("mean_selected")?)?,
+        mean_available: state::f64_from(j.get("mean_available")?)?,
+        total_dropouts: j.get("total_dropouts")?.as_usize()?,
+        total_retries: j.get("total_retries")?.as_usize()?,
+        quorum_misses: j.get("quorum_misses")?.as_usize()?,
+        records: j
+            .get("records")?
+            .as_arr()?
+            .iter()
+            .map(record_from_json)
+            .collect::<Result<_>>()?,
     })
 }
 
@@ -267,20 +326,57 @@ mod tests {
         // wrong schema
         let mut j = ck.to_json();
         if let Json::Obj(entries) = &mut j {
-            entries[0].1 = Json::num(99.0);
+            entries.insert("schema".to_string(), Json::num(99.0));
         }
         let e = Checkpoint::from_json(&j).unwrap_err();
         assert_eq!(ReproError::exit_code_of(&e), 2);
         // record count / cursor mismatch
         let mut j = ck.to_json();
         if let Json::Obj(entries) = &mut j {
-            let slot = entries.iter_mut().find(|(k, _)| k == "next_round").unwrap();
-            slot.1 = Json::num(3.0);
+            entries.insert("next_round".to_string(), Json::num(3.0));
         }
         let e = Checkpoint::from_json(&j).unwrap_err();
         assert_eq!(ReproError::exit_code_of(&e), 2);
         // missing file -> Io
         let e = Checkpoint::load("/nonexistent/dir/ck.json").unwrap_err();
         assert_eq!(ReproError::exit_code_of(&e), 3);
+    }
+
+    #[test]
+    fn summaries_round_trip_bitwise_through_text() {
+        let mut r0 = rec(0);
+        r0.accuracy = 0.7; // one real eval so the target machinery engages
+        let s = RunSummary::from_records("splitme", "commag", 0.65, vec![r0, rec(1)]);
+        assert_eq!(s.rounds_to_target, Some(0));
+        let text = summary_to_json(&s).to_string_pretty();
+        let back = summary_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!((back.framework.as_str(), back.preset.as_str()), ("splitme", "commag"));
+        assert_eq!(back.rounds, s.rounds);
+        assert_eq!(back.final_accuracy.to_bits(), s.final_accuracy.to_bits());
+        assert_eq!(back.best_accuracy.to_bits(), s.best_accuracy.to_bits());
+        assert_eq!(back.rounds_to_target, s.rounds_to_target);
+        assert_eq!(back.time_to_target.map(f64::to_bits), s.time_to_target.map(f64::to_bits));
+        assert_eq!(back.total_sim_time.to_bits(), s.total_sim_time.to_bits());
+        assert_eq!(back.total_comm_bytes.to_bits(), s.total_comm_bytes.to_bits());
+        assert_eq!(back.mean_selected.to_bits(), s.mean_selected.to_bits());
+        assert_eq!(back.mean_available.to_bits(), s.mean_available.to_bits());
+        assert_eq!(
+            (back.total_dropouts, back.total_retries, back.quorum_misses),
+            (s.total_dropouts, s.total_retries, s.quorum_misses)
+        );
+        assert_eq!(back.records.len(), 2);
+        for (a, b) in back.records.iter().zip(&s.records) {
+            assert_eq!(bits(a), bits(b));
+        }
+        // a never-evaluated run carries NaN/-inf accuracies and a None
+        // target — all must survive the text cycle
+        let empty = RunSummary::from_records("fedavg", "commag", 0.83, vec![rec(2)]);
+        assert!(empty.final_accuracy.is_nan());
+        let text = summary_to_json(&empty).to_string_pretty();
+        let back = summary_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.final_accuracy.to_bits(), empty.final_accuracy.to_bits());
+        assert_eq!(back.best_accuracy.to_bits(), f32::NEG_INFINITY.to_bits());
+        assert_eq!(back.rounds_to_target, None);
+        assert_eq!(back.time_to_target, None);
     }
 }

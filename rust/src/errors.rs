@@ -37,13 +37,18 @@ impl ReproError {
         }
     }
 
+    /// The first `ReproError` in an anyhow chain, if any — the shared
+    /// classifier behind [`ReproError::exit_code_of`] and the experiment
+    /// service's typed protocol responses (`serve`), which must agree on
+    /// what counts as invalid input.
+    pub fn of_chain(e: &anyhow::Error) -> Option<&ReproError> {
+        e.chain().find_map(|c| c.downcast_ref::<ReproError>())
+    }
+
     /// The exit code for an anyhow chain: the first `ReproError` found wins;
     /// an untyped chain maps to the generic failure code 1.
     pub fn exit_code_of(e: &anyhow::Error) -> i32 {
-        e.chain()
-            .find_map(|c| c.downcast_ref::<ReproError>())
-            .map(|r| r.exit_code())
-            .unwrap_or(1)
+        Self::of_chain(e).map(|r| r.exit_code()).unwrap_or(1)
     }
 
     /// Wrap a `std::io::Result` context into the typed taxonomy.

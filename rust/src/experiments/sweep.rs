@@ -124,6 +124,41 @@ pub fn grid_jobs(
     .collect()
 }
 
+/// [`grid_jobs`] routed through a persistent experiment service: every
+/// grid cell is submitted as a sweep job, so repeated sweeps (same grid,
+/// or overlapping grids) are answered from the service's two-tier result
+/// cache instead of re-settling. Returns the points (row-major, bitwise
+/// identical to [`grid_jobs`]) plus how many cells were cache hits.
+pub fn grid_served(
+    svc: &crate::serve::Service<'_>,
+    base: &SimConfig,
+    bandwidths: &[f64],
+    rhos: &[f64],
+    split_dim: usize,
+    client_params: usize,
+    jobs: usize,
+) -> Result<(Vec<SweepPoint>, usize)> {
+    let points: Vec<(f64, f64)> = bandwidths
+        .iter()
+        .flat_map(|&b| rhos.iter().map(move |&rho| (b, rho)))
+        .collect();
+    let results: Result<Vec<_>> =
+        executor::try_run_indexed(points.len(), executor::resolve_jobs(jobs, points.len()), |i| {
+            let (b, rho) = points[i];
+            let mut cfg = base.clone();
+            cfg.bandwidth_bps = b;
+            cfg.rho = rho;
+            // settle horizon 10 = grid_jobs' horizon, so the cache key of a
+            // served cell matches a later identical served sweep exactly
+            svc.sweep_job(&cfg, split_dim, client_params, 10)
+        })
+        .into_iter()
+        .collect();
+    let results = results?;
+    let hits = results.iter().filter(|(_, src)| src.is_hit()).count();
+    Ok((results.into_iter().map(|(p, _)| p).collect(), hits))
+}
+
 pub fn print_table(points: &[SweepPoint]) {
     println!(
         "{:>12} {:>6} {:>9} {:>4} {:>12} {:>11}",
@@ -261,5 +296,22 @@ mod tests {
         let seq = grid_jobs(&base, &bw, &rhos, SPLIT, CP, 1).unwrap();
         let par = grid_jobs(&base, &bw, &rhos, SPLIT, CP, 4).unwrap();
         assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn served_grid_matches_direct_and_caches() {
+        use crate::serve::{ServeOpts, Service};
+        let base = SimConfig::commag();
+        let bw = [5e8, 1e9];
+        let rhos = [0.2, 0.8];
+        let direct = grid_jobs(&base, &bw, &rhos, SPLIT, CP, 2).unwrap();
+        // sweeps are pure L3, so an engine-less in-memory service suffices
+        let svc = Service::new(None, &ServeOpts { hot_cap_bytes: 1 << 20, warm_dir: None });
+        let (served, hits) = grid_served(&svc, &base, &bw, &rhos, SPLIT, CP, 2).unwrap();
+        assert_eq!(served, direct, "served grid must be bitwise identical to grid_jobs");
+        assert_eq!(hits, 0, "a cold sweep has no cache to hit");
+        let (again, hits) = grid_served(&svc, &base, &bw, &rhos, SPLIT, CP, 2).unwrap();
+        assert_eq!(again, direct);
+        assert_eq!(hits, 4, "the repeated grid must be answered entirely from cache");
     }
 }

@@ -716,6 +716,19 @@ pub mod state {
         Ok(f32::from_bits(bits))
     }
 
+    /// `Option<f64>` as bit-hex-or-null (summary `time_to_target` in the
+    /// warm result cache).
+    pub fn opt_f64_json(v: Option<f64>) -> Json {
+        v.map(f64_json).unwrap_or(Json::Null)
+    }
+
+    pub fn opt_f64_from(j: &Json) -> Result<Option<f64>> {
+        match j {
+            Json::Null => Ok(None),
+            other => f64_from(other).map(Some),
+        }
+    }
+
     /// `{"dims": [...], "bits": "<8 hex digits per f32>"}`.
     pub fn tensor_json(t: &Tensor) -> Json {
         let mut bits = String::with_capacity(t.data.len() * 8);

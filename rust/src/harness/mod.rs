@@ -31,6 +31,36 @@ impl Stats {
     pub fn per_sec(&self) -> f64 {
         1.0 / self.median.as_secs_f64()
     }
+
+    /// Summarize raw duration samples (median + MAD + min/max/mean) — the
+    /// reduction [`bench`] applies to its timed iterations, also used on
+    /// the experiment service's per-job wallclock telemetry. Panics on an
+    /// empty sample set.
+    pub fn from_samples(name: &str, mut samples: Vec<Duration>) -> Stats {
+        assert!(!samples.is_empty(), "stats need at least one sample");
+        samples.sort_unstable();
+        let median = samples[samples.len() / 2];
+        let mad = {
+            let mut dev: Vec<i128> = samples
+                .iter()
+                .map(|s| (s.as_nanos() as i128 - median.as_nanos() as i128).abs())
+                .collect();
+            dev.sort_unstable();
+            Duration::from_nanos(dev[dev.len() / 2] as u64)
+        };
+        let mean = Duration::from_nanos(
+            (samples.iter().map(|s| s.as_nanos()).sum::<u128>() / samples.len() as u128) as u64,
+        );
+        Stats {
+            name: name.to_string(),
+            iters: samples.len(),
+            median,
+            mad,
+            min: samples[0],
+            max: *samples.last().unwrap(),
+            mean,
+        }
+    }
 }
 
 fn fmt_dur(d: Duration) -> String {
@@ -56,28 +86,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> S
         f();
         samples.push(t0.elapsed());
     }
-    samples.sort_unstable();
-    let median = samples[samples.len() / 2];
-    let mad = {
-        let mut dev: Vec<i128> = samples
-            .iter()
-            .map(|s| (s.as_nanos() as i128 - median.as_nanos() as i128).abs())
-            .collect();
-        dev.sort_unstable();
-        Duration::from_nanos(dev[dev.len() / 2] as u64)
-    };
-    let mean = Duration::from_nanos(
-        (samples.iter().map(|s| s.as_nanos()).sum::<u128>() / iters as u128) as u64,
-    );
-    let stats = Stats {
-        name: name.to_string(),
-        iters,
-        median,
-        mad,
-        min: samples[0],
-        max: *samples.last().unwrap(),
-        mean,
-    };
+    let stats = Stats::from_samples(name, samples);
     println!(
         "bench {:<40} median {:>10}  ±{:>9}  min {:>10}  max {:>10}  n={}",
         stats.name,

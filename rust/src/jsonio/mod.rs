@@ -136,6 +136,19 @@ impl Json {
         out
     }
 
+    /// The canonical byte form used for content hashing (the experiment
+    /// service's result-cache keys): semantically equal values serialize to
+    /// identical bytes. The guarantee rests on two properties of this
+    /// module — objects are `BTreeMap`s (key order is sorted, never
+    /// insertion order), and the compact writer emits exactly one spelling
+    /// per value (no whitespace; integral f64 below 2^53 as integer text).
+    /// Today that makes it an alias of [`Json::to_string_compact`]; cache
+    /// keys must go through THIS name so the contract survives any future
+    /// pretty/compact formatting change.
+    pub fn to_canonical_string(&self) -> String {
+        self.to_string_compact()
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         let pad = |out: &mut String, n: usize| {
             if pretty {
@@ -506,6 +519,17 @@ mod tests {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(Default::default()));
         assert_eq!(Json::parse("[]").unwrap().to_string_compact(), "[]");
+    }
+
+    #[test]
+    fn canonical_form_is_order_and_spelling_insensitive() {
+        // same object, different key order and number/whitespace spellings
+        let a = Json::parse(r#"{"b": 2.0, "a": [1, {"y": true, "x": null}]}"#).unwrap();
+        let b = Json::parse(r#"{ "a":[1.0,{ "x":null,"y":true }],"b":2 }"#).unwrap();
+        assert_eq!(a.to_canonical_string(), b.to_canonical_string());
+        // and a semantic difference shows in the bytes
+        let c = Json::parse(r#"{"b": 2.5, "a": [1, {"y": true, "x": null}]}"#).unwrap();
+        assert_ne!(a.to_canonical_string(), c.to_canonical_string());
     }
 
     #[test]

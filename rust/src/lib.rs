@@ -44,6 +44,7 @@ pub mod pop;
 pub mod runtime;
 pub mod scenario;
 pub mod selection;
+pub mod serve;
 pub mod sim;
 pub mod splitme;
 pub mod testkit;
@@ -57,4 +58,5 @@ pub mod prelude {
     pub use crate::metrics::{RoundRecord, RunSummary};
     pub use crate::runtime::{Engine, Manifest, Tensor};
     pub use crate::scenario::{RoundEnv, Scenario, ScenarioKind, ScenarioTrace};
+    pub use crate::serve::{ServeOpts, Service};
 }

@@ -5,6 +5,9 @@
 //!   * `experiment` — regenerate a paper figure (fig3a/fig3b/fig4a/fig4b/fig5/all)
 //!   * `scenario`   — record a synthetic preset's realized environment
 //!                    stream to a replayable trace file (`scenario record`)
+//!   * `serve`      — persistent experiment service: newline-delimited JSON
+//!                    jobs on stdin (or `--listen`), shared engine/context
+//!                    pool, two-tier result cache with bitwise-identical hits
 //!   * `inspect`    — list presets + artifacts of the AOT manifest
 //!
 //! The binary is self-contained after `make artifacts`: python never runs on
@@ -40,6 +43,9 @@ USAGE:
   repro scenario record [--scenario NAME] [--rounds N] [--out FILE.csv|.json]
             [--preset commag|vision] [--seed N] [--clients M]
   repro sweep   [--preset commag|vision] [--jobs N] [--scenario NAME]
+                [--served] [--cache-dir DIR] [--no-warm-cache]
+  repro serve   [--jobs N] [--queue-cap N] [--hot-cache-bytes N]
+                [--cache-dir DIR] [--no-warm-cache] [--listen HOST:PORT]
   repro inspect
 
 --scenario NAME: dynamic O-RAN environment applied to every round: a preset
@@ -95,6 +101,19 @@ experiment faults: the paired comparison repeated under every fault preset
                  exports at any M without buffering
 --reference-path: force the dense O(M log M) selection oracle (differential
                  debugging of the capped paths)
+serve:           one request per stdin line, one response per line, e.g.
+                 {\"id\":\"j1\",\"cmd\":\"run\",\"rounds\":30,\"preset\":\"commag\"}
+                 (cmds: run|sweep|ping|stats|shutdown; PERF.md
+                 #experiment-service has the full protocol). Repeated jobs
+                 answer from a two-tier cache — hot in-memory (LRU inside
+                 --hot-cache-bytes, default 64MiB) over a warm on-disk tier
+                 under --cache-dir (default .repro-cache; --no-warm-cache
+                 disables it) — and a cache hit is bitwise identical to the
+                 cold run. Overload (more than --queue-cap pending jobs,
+                 default 64) answers a typed `busy` response. --listen
+                 serves the same protocol on a local TCP socket instead.
+sweep --served:  route grid cells through an in-process service so repeated
+                 sweeps answer from the same cache (hits are reported)
 ";
 
 fn main() {
@@ -118,6 +137,7 @@ fn real_main(argv: &[String]) -> Result<()> {
         "experiment" => cmd_experiment(&args),
         "scenario" => cmd_scenario(&args),
         "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args),
         "inspect" => cmd_inspect(),
         other => {
             print!("{USAGE}");
@@ -447,10 +467,17 @@ fn cmd_scenario(args: &Args) -> Result<()> {
 
 fn cmd_sweep(args: &Args) -> Result<()> {
     use repro::experiments::sweep;
+    use repro::serve::{ServeOpts, Service};
     let preset = args.str_or("preset", "commag");
     let jobs = args.jobs()?;
     let scenario = args.opt_str("scenario");
+    let served = args.flag("served");
+    let cache_dir = args.str_or("cache-dir", ".repro-cache");
+    let no_warm = args.flag("no-warm-cache");
     args.finish()?;
+    if !served && (no_warm || args.opt_str("cache-dir").is_some()) {
+        anyhow::bail!("--cache-dir/--no-warm-cache only apply with --served");
+    }
     let mut base = SimConfig::preset_config(&preset)?;
     if let Some(s) = scenario {
         base.scenario = s;
@@ -460,10 +487,77 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let p = m.preset(&preset)?;
     let bandwidths = [1e8, 2.5e8, 5e8, 1e9, 2e9, 4e9];
     let rhos = [0.2, 0.5, 0.8];
-    let pts = sweep::grid_jobs(&base, &bandwidths, &rhos, p.split_dim, p.client_params, jobs)?;
+    let pts = if served {
+        // grid cells become service jobs: a repeated sweep (or an
+        // overlapping grid) answers from the persistent warm cache
+        let opts = ServeOpts {
+            warm_dir: if no_warm { None } else { Some(cache_dir.into()) },
+            ..ServeOpts::default()
+        };
+        let svc = Service::new(None, &opts);
+        let (pts, hits) = sweep::grid_served(
+            &svc,
+            &base,
+            &bandwidths,
+            &rhos,
+            p.split_dim,
+            p.client_params,
+            jobs,
+        )?;
+        println!("served sweep: {hits}/{} cells answered from cache", pts.len());
+        pts
+    } else {
+        sweep::grid_jobs(&base, &bandwidths, &rhos, p.split_dim, p.client_params, jobs)?
+    };
     println!("P1/P2 steady state over bandwidth x rho ({preset}, M={}):", base.num_clients);
     sweep::print_table(&pts);
     Ok(())
+}
+
+/// `repro serve`: the persistent experiment service. Builds the engine once
+/// (jobs share its interned artifacts and the per-config context pool) and
+/// answers newline-delimited JSON requests on stdin — or, with `--listen`,
+/// on a local TCP socket. Artifact-less hosts degrade gracefully: sweep
+/// jobs still work, run jobs answer a typed `invalid` response.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use repro::serve::{ServeOpts, Service};
+    let jobs = args.jobs()?;
+    let queue_cap = args.usize_or("queue-cap", 64)?;
+    let hot_cap = args.usize_or("hot-cache-bytes", 64 << 20)?;
+    let cache_dir = args.str_or("cache-dir", ".repro-cache");
+    let no_warm = args.flag("no-warm-cache");
+    let listen = args.opt_str("listen");
+    args.finish()?;
+
+    let engine = match Engine::from_default_manifest() {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!(
+                "repro serve: no engine ({e:#}); serving sweep jobs only — \
+                 run jobs will answer `invalid`"
+            );
+            None
+        }
+    };
+    if let Some(e) = &engine {
+        eprintln!("repro serve: platform={} (shared engine, contexts built once per config)", e.platform());
+    }
+    let opts = ServeOpts {
+        hot_cap_bytes: hot_cap,
+        warm_dir: if no_warm { None } else { Some(cache_dir.into()) },
+    };
+    let svc = Service::new(engine.as_ref(), &opts);
+    match listen {
+        Some(addr) => svc.serve_tcp(&addr, jobs, queue_cap),
+        None => {
+            eprintln!("repro serve: reading requests from stdin (one JSON object per line)");
+            let stdin = std::io::stdin();
+            // Stdout (not StdoutLock, which is !Send) — workers share it
+            // behind the service's own response mutex
+            svc.serve(stdin.lock(), std::io::stdout(), jobs, queue_cap)?;
+            Ok(())
+        }
+    }
 }
 
 fn cmd_inspect() -> Result<()> {

@@ -311,6 +311,7 @@ pub struct RecordWriter {
     path: std::path::PathBuf,
     json: bool,
     rows: usize,
+    finished: bool,
 }
 
 impl RecordWriter {
@@ -324,7 +325,7 @@ impl RecordWriter {
         if !json {
             writeln!(out, "{CSV_HEADER}").with_context(|| format!("writing {path:?}"))?;
         }
-        Ok(Self { out, path, json, rows: 0 })
+        Ok(Self { out, path, json, rows: 0, finished: false })
     }
 
     pub fn push(&mut self, r: &RoundRecord) -> Result<()> {
@@ -342,8 +343,24 @@ impl RecordWriter {
         self.rows
     }
 
+    /// The checked completion path: flush errors surface to the caller.
     pub fn finish(mut self) -> Result<()> {
+        self.finished = true;
         self.out.flush().with_context(|| format!("flushing record stream {:?}", self.path))
+    }
+}
+
+/// Durability on the unhappy path (ISSUE 8): a run that errors out mid-round
+/// — or a service job dropped mid-stream — unwinds past `finish()`, and
+/// every row is already a complete line, so flushing here leaves a
+/// parseable prefix on disk instead of a buffer-truncated one. Best-effort
+/// by design: `Drop` cannot report failures, which is why `finish()` stays
+/// the checked path.
+impl Drop for RecordWriter {
+    fn drop(&mut self) {
+        if !self.finished {
+            let _ = self.out.flush();
+        }
     }
 }
 
@@ -486,6 +503,38 @@ mod tests {
                 r.comm_bytes
             );
         }
+    }
+
+    #[test]
+    fn dropped_writer_leaves_parseable_rows_on_disk() {
+        // CSV: drop mid-stream without finish(); the rows pushed so far
+        // must be intact (BufWriter's 8 KiB buffer would otherwise hold
+        // them hostage — each csv row here is ~100 bytes)
+        let path = std::env::temp_dir().join("repro_records_dropped.csv");
+        {
+            let mut w = RecordWriter::create(&path).unwrap();
+            w.push(&rec(0, 0.4, 0.05)).unwrap();
+            w.push(&rec(1, 0.6, 0.1)).unwrap();
+            // no finish(): simulates an error return unwinding the run
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "header + both pushed rows must be on disk: {text:?}");
+        assert_eq!(lines[0], CSV_HEADER);
+        assert!(lines[1].starts_with("0,") && lines[2].starts_with("1,"));
+
+        // JSONL: every flushed line must reparse
+        let path = std::env::temp_dir().join("repro_records_dropped.jsonl");
+        {
+            let mut w = RecordWriter::create(&path).unwrap();
+            w.push(&rec(0, 0.4, 0.05)).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1);
+        assert_eq!(Json::parse(lines[0]).unwrap().get("round").unwrap().as_usize().unwrap(), 0);
     }
 
     #[test]

@@ -376,6 +376,13 @@ impl Engine {
         self.ctx_builds.load(Ordering::Relaxed)
     }
 
+    /// Total PJRT executions across every interned artifact. The result
+    /// cache's "a hit performs zero framework rounds" claim is pinned by
+    /// taking this before and after a repeated job (tests/service.rs).
+    pub fn total_calls(&self) -> u64 {
+        self.stats().iter().map(|(_, s)| s.calls).sum()
+    }
+
     pub fn platform(&self) -> String {
         self.client.0.platform_name()
     }

@@ -367,6 +367,7 @@ pub struct TraceWriter {
     m: usize,
     rows: usize,
     last_round: Option<usize>,
+    finished: bool,
 }
 
 impl TraceWriter {
@@ -386,6 +387,7 @@ impl TraceWriter {
             m,
             rows: 0,
             last_round: None,
+            finished: false,
         };
         if json {
             write!(w.out, "{{\n \"schema\": 1,\n \"m\": {m}")?;
@@ -441,16 +443,36 @@ impl TraceWriter {
         Ok(())
     }
 
-    /// Close the envelope and flush. Errors if no row was ever pushed (an
-    /// empty trace can never replay).
+    /// Close the envelope and flush — the checked path. Errors if no row
+    /// was ever pushed (an empty trace can never replay).
     pub fn finish(mut self) -> Result<()> {
         if self.rows == 0 {
             bail!("scenario trace has no rounds");
         }
+        self.finished = true;
         if self.json {
             write!(self.out, "\n ]\n}}\n")?;
         }
         self.out.flush().with_context(|| format!("writing scenario trace {:?}", self.path))
+    }
+}
+
+/// Durability on the unhappy path (ISSUE 8): a recording that unwinds past
+/// `finish()` still leaves a *loadable* trace of the rounds pushed so far —
+/// for JSON that means closing the `rounds` array and the envelope before
+/// flushing (a raw flush would strand an unparseable prefix). Best-effort:
+/// `Drop` cannot report failures, so `finish()` remains the checked path;
+/// a zero-row JSON recording is left unclosed because an empty trace is
+/// invalid to load either way.
+impl Drop for TraceWriter {
+    fn drop(&mut self) {
+        if self.finished {
+            return;
+        }
+        if self.json && self.rows > 0 {
+            let _ = write!(self.out, "\n ]\n}}\n");
+        }
+        let _ = self.out.flush();
     }
 }
 
@@ -832,6 +854,27 @@ round,bw_scale,available,q_scale,deadline_scale
         let e = w.push(&env).unwrap_err();
         assert!(e.to_string().contains("at least one candidate"), "{e:#}");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn dropped_writer_leaves_loadable_trace() {
+        // a recording abandoned mid-stream (error unwind, dropped service
+        // job) must still leave the pushed rounds loadable — for JSON the
+        // Drop impl closes the envelope, for CSV the rows are self-framing
+        for ext in ["csv", "json"] {
+            let path = std::env::temp_dir().join(format!("repro_trace_dropped.{ext}"));
+            {
+                let mut w = TraceWriter::create(&path, 3, Some(("spec", 9))).unwrap();
+                w.push(&RoundEnv::identity(0, 3)).unwrap();
+                w.push(&RoundEnv::identity(1, 3)).unwrap();
+                // no finish(): the writer is dropped mid-stream
+            }
+            let back = ScenarioTrace::load(path.to_str().unwrap(), 3)
+                .unwrap_or_else(|e| panic!("{ext}: dropped trace must stay loadable: {e:#}"));
+            assert_eq!((back.first_round(), back.last_round()), (0, 1), "{ext}");
+            assert_eq!(back.len(), 2, "{ext}");
+            std::fs::remove_file(&path).ok();
+        }
     }
 
     #[test]

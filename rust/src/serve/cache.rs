@@ -1,0 +1,704 @@
+//! Two-tier result cache behind the experiment service (PERF.md
+//! §experiment-service).
+//!
+//! **Key.** Results are memoized under a 64-bit FNV-1a hash of the job's
+//! *canonical config* — the [`crate::config::SimConfig`] JSON (BTreeMap
+//! object = sorted keys, one canonical byte form per semantic value, see
+//! [`crate::jsonio::Json::to_canonical_string`]) with the execution-only
+//! knobs of [`EXECUTION_ONLY_KEYS`] removed — concatenated with a job
+//! discriminator (`cmd`, framework, round budget / sweep dimensions). Two
+//! configs that can produce different bytes anywhere in a `RunSummary` or
+//! its records therefore hash differently; knobs that are documented and
+//! differentially tested to be bitwise-invisible do not fragment the cache.
+//!
+//! **Tiers.** Hot: in-memory `(key → result)` with byte accounting against
+//! a `chunk_cache_cap_bytes`-style cap and least-recently-used eviction.
+//! Warm: one pretty-printed JSON document per key under
+//! `<warm_dir>/<key-hex>/result.json`, floats serialized as bit-pattern hex
+//! through the checkpoint helpers ([`checkpoint::record_to_json`] /
+//! [`checkpoint::summary_to_json`]) so the round trip is exact, NaN
+//! included. A warm hit is re-verified by replaying its records through
+//! [`RunSummary::from_records`] (the [`crate::metrics::SummaryAccum`] fold)
+//! and comparing every aggregate bit for bit — a corrupt or tampered entry
+//! is a typed [`ReproError::InvalidInput`] naming the file, never a
+//! silently wrong result.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::config::{FrameworkKind, SimConfig};
+use crate::coordinator::checkpoint;
+use crate::errors::ReproError;
+use crate::experiments::sweep::SweepPoint;
+use crate::fl::state;
+use crate::jsonio::Json;
+use crate::metrics::{RoundRecord, RunSummary};
+
+/// Bumped on any incompatible change to the warm-tier document layout.
+pub const WARM_SCHEMA: usize = 1;
+
+/// Config fields removed from the hash preimage because they steer *how* a
+/// run executes, not *what* it computes — each is pinned bitwise-invisible
+/// by an existing documented invariant:
+///
+/// * `client_jobs` — per-client parallelism, bitwise identical at any value
+///   (PERF.md §client-parallelism, tests/differential.rs)
+/// * `chunk_cache_cap_bytes` — literal-cache capacity; memo reuse is
+///   bitwise identical to recompute (coordinator/checkpoint.rs header)
+/// * `checkpoint_every` — snapshot cadence; a pure side output
+/// * `reference_path` — forces the dense selection oracle, differentially
+///   pinned bitwise-equal to the capped path (tests/scale.rs)
+///
+/// `record_window`, `select_cap`, `eval_every`, `stop_at_target`, and
+/// `data_shards` deliberately STAY in the key: they change the retained
+/// records, the admitted set, the eval cadence, or the round count.
+pub const EXECUTION_ONLY_KEYS: &[&str] =
+    &["client_jobs", "chunk_cache_cap_bytes", "checkpoint_every", "reference_path"];
+
+/// 64-bit FNV-1a (the crate carries no hashing dependency; collision odds
+/// at realistic sweep-cell counts are negligible, and the warm tier
+/// re-verifies the stored config's key on load anyway).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The canonical byte form of a config for cache-key purposes: sorted-key
+/// compact JSON with the execution-only knobs removed.
+pub fn canonical_config(cfg: &SimConfig) -> String {
+    let mut j = cfg.to_json();
+    if let Json::Obj(map) = &mut j {
+        for k in EXECUTION_ONLY_KEYS {
+            map.remove(*k);
+        }
+    }
+    j.to_canonical_string()
+}
+
+/// What a cached job computed — the discriminating half of the cache key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobSpec {
+    Run { kind: FrameworkKind, rounds: usize },
+    Sweep { split_dim: usize, client_params: usize, settle_rounds: usize },
+}
+
+impl JobSpec {
+    fn preimage_suffix(&self) -> String {
+        // '\0' cannot appear in the JSON text, so the suffix can never
+        // collide with config bytes
+        match self {
+            JobSpec::Run { kind, rounds } => {
+                format!("\0cmd=run\0framework={}\0rounds={rounds}", kind.name())
+            }
+            JobSpec::Sweep { split_dim, client_params, settle_rounds } => format!(
+                "\0cmd=sweep\0split_dim={split_dim}\0client_params={client_params}\
+                 \0settle_rounds={settle_rounds}"
+            ),
+        }
+    }
+
+    fn to_json(self) -> Json {
+        match self {
+            JobSpec::Run { kind, rounds } => Json::obj(vec![
+                ("cmd", Json::str("run")),
+                ("framework", Json::str(kind.name())),
+                ("rounds", Json::num(rounds as f64)),
+            ]),
+            JobSpec::Sweep { split_dim, client_params, settle_rounds } => Json::obj(vec![
+                ("cmd", Json::str("sweep")),
+                ("split_dim", Json::num(split_dim as f64)),
+                ("client_params", Json::num(client_params as f64)),
+                ("settle_rounds", Json::num(settle_rounds as f64)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        match j.get("cmd")?.as_str()? {
+            "run" => Ok(JobSpec::Run {
+                kind: j.get("framework")?.as_str()?.parse()?,
+                rounds: j.get("rounds")?.as_usize()?,
+            }),
+            "sweep" => Ok(JobSpec::Sweep {
+                split_dim: j.get("split_dim")?.as_usize()?,
+                client_params: j.get("client_params")?.as_usize()?,
+                settle_rounds: j.get("settle_rounds")?.as_usize()?,
+            }),
+            other => anyhow::bail!("unknown cached job cmd {other:?}"),
+        }
+    }
+}
+
+/// The cache key of `(config, job)`.
+pub fn key_of(cfg: &SimConfig, spec: &JobSpec) -> u64 {
+    let mut pre = canonical_config(cfg);
+    pre.push_str(&spec.preimage_suffix());
+    fnv1a64(pre.as_bytes())
+}
+
+/// The key's on-disk / on-wire spelling (warm directory name, response
+/// field).
+pub fn key_hex(key: u64) -> String {
+    format!("{key:016x}")
+}
+
+/// A memoized job result.
+#[derive(Debug, Clone)]
+pub enum CachedResult {
+    Run(RunSummary),
+    Sweep(SweepPoint),
+}
+
+impl CachedResult {
+    /// Byte accounting for the hot tier's cap (heap estimate — records
+    /// dominate a run summary, exact string capacities do not matter).
+    pub fn approx_bytes(&self) -> usize {
+        match self {
+            CachedResult::Run(s) => {
+                std::mem::size_of::<RunSummary>()
+                    + s.framework.len()
+                    + s.preset.len()
+                    + s.records.len() * std::mem::size_of::<RoundRecord>()
+            }
+            CachedResult::Sweep(_) => std::mem::size_of::<SweepPoint>(),
+        }
+    }
+}
+
+/// Which tier served a hit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    Hot,
+    Warm,
+}
+
+struct HotTier {
+    cap_bytes: usize,
+    used_bytes: usize,
+    /// monotone access stamp: larger = more recently touched (LRU victim =
+    /// smallest stamp)
+    tick: u64,
+    entries: HashMap<u64, (u64, CachedResult)>,
+}
+
+impl HotTier {
+    fn get(&mut self, key: u64) -> Option<CachedResult> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.entries.get_mut(&key).map(|e| {
+            e.0 = tick;
+            e.1.clone()
+        })
+    }
+
+    fn insert(&mut self, key: u64, v: CachedResult) {
+        let bytes = v.approx_bytes();
+        if bytes > self.cap_bytes {
+            // one oversized result must not evict the whole tier; it simply
+            // stays warm-only
+            return;
+        }
+        if let Some((_, old)) = self.entries.remove(&key) {
+            self.used_bytes -= old.approx_bytes();
+        }
+        while self.used_bytes + bytes > self.cap_bytes {
+            let Some((&victim, _)) = self.entries.iter().min_by_key(|(_, (stamp, _))| *stamp)
+            else {
+                break;
+            };
+            if let Some((_, evicted)) = self.entries.remove(&victim) {
+                self.used_bytes -= evicted.approx_bytes();
+            }
+        }
+        self.tick += 1;
+        self.entries.insert(key, (self.tick, v));
+        self.used_bytes += bytes;
+    }
+}
+
+/// The two-tier cache: a byte-capped in-memory LRU over an optional on-disk
+/// warm directory. Warm hits are promoted back into the hot tier.
+pub struct ResultCache {
+    hot: Mutex<HotTier>,
+    warm_dir: Option<PathBuf>,
+}
+
+impl ResultCache {
+    pub fn new(hot_cap_bytes: usize, warm_dir: Option<PathBuf>) -> Self {
+        Self {
+            hot: Mutex::new(HotTier {
+                cap_bytes: hot_cap_bytes,
+                used_bytes: 0,
+                tick: 0,
+                entries: HashMap::new(),
+            }),
+            warm_dir,
+        }
+    }
+
+    pub fn hot_entries(&self) -> usize {
+        self.hot.lock().expect("hot tier lock").entries.len()
+    }
+
+    pub fn hot_bytes(&self) -> usize {
+        self.hot.lock().expect("hot tier lock").used_bytes
+    }
+
+    pub fn warm_dir(&self) -> Option<&Path> {
+        self.warm_dir.as_deref()
+    }
+
+    /// Look `(config, job)` up: hot tier first, then the warm directory
+    /// (verified + promoted). `Ok(None)` is a miss; `Err` means a warm
+    /// entry exists but is corrupt (typed [`ReproError::InvalidInput`]).
+    pub fn get(&self, cfg: &SimConfig, spec: &JobSpec) -> Result<Option<(CachedResult, Tier)>> {
+        let key = key_of(cfg, spec);
+        if let Some(v) = self.hot.lock().expect("hot tier lock").get(key) {
+            return Ok(Some((v, Tier::Hot)));
+        }
+        let Some(dir) = &self.warm_dir else { return Ok(None) };
+        let path = dir.join(key_hex(key)).join("result.json");
+        if !path.exists() {
+            return Ok(None);
+        }
+        let v = load_warm(&path, key)?;
+        self.hot.lock().expect("hot tier lock").insert(key, v.clone());
+        Ok(Some((v, Tier::Warm)))
+    }
+
+    /// Memoize a completed job in both tiers. A warm-tier write failure is
+    /// an error (typed Io) — the caller decides whether it is fatal; the
+    /// hot insert has already happened either way.
+    pub fn put(&self, cfg: &SimConfig, spec: &JobSpec, v: &CachedResult) -> Result<()> {
+        let key = key_of(cfg, spec);
+        self.hot.lock().expect("hot tier lock").insert(key, v.clone());
+        if let Some(dir) = &self.warm_dir {
+            write_warm(dir, key, cfg, spec, v)?;
+        }
+        Ok(())
+    }
+}
+
+fn invalid_entry(path: &Path, msg: String) -> anyhow::Error {
+    anyhow::Error::new(ReproError::invalid(format!(
+        "warm cache entry {} is corrupt ({msg}) — delete it to recompute",
+        path.display()
+    )))
+}
+
+/// Bit-hex JSON of a [`SweepPoint`] (warm tier only; the protocol response
+/// uses plain decimals).
+fn point_to_json(p: &SweepPoint) -> Json {
+    Json::obj(vec![
+        ("bandwidth_bps", state::f64_json(p.bandwidth_bps)),
+        ("rho", state::f64_json(p.rho)),
+        ("selected", Json::num(p.selected as f64)),
+        ("e", Json::num(p.e as f64)),
+        ("round_latency", state::f64_json(p.round_latency)),
+        ("round_cost", state::f64_json(p.round_cost)),
+    ])
+}
+
+fn point_from_json(j: &Json) -> Result<SweepPoint> {
+    Ok(SweepPoint {
+        bandwidth_bps: state::f64_from(j.get("bandwidth_bps")?)?,
+        rho: state::f64_from(j.get("rho")?)?,
+        selected: j.get("selected")?.as_usize()?,
+        e: j.get("e")?.as_usize()?,
+        round_latency: state::f64_from(j.get("round_latency")?)?,
+        round_cost: state::f64_from(j.get("round_cost")?)?,
+    })
+}
+
+fn write_warm(
+    dir: &Path,
+    key: u64,
+    cfg: &SimConfig,
+    spec: &JobSpec,
+    v: &CachedResult,
+) -> Result<()> {
+    let entry_dir = dir.join(key_hex(key));
+    std::fs::create_dir_all(&entry_dir)
+        .map_err(|e| anyhow::Error::new(ReproError::io(entry_dir.display(), e)))?;
+    let result = match v {
+        CachedResult::Run(s) => checkpoint::summary_to_json(s),
+        CachedResult::Sweep(p) => point_to_json(p),
+    };
+    // the FULL config (execution knobs included) is stored for provenance;
+    // the loader re-derives the canonical key from it as a self-check
+    let doc = Json::obj(vec![
+        ("schema", Json::num(WARM_SCHEMA as f64)),
+        ("key", Json::str(key_hex(key))),
+        ("config", cfg.to_json()),
+        ("job", spec.to_json()),
+        ("result", result),
+    ]);
+    let path = entry_dir.join("result.json");
+    // write-then-rename so a crashed writer never leaves a half document
+    // where `get` would read it
+    let tmp = entry_dir.join("result.json.tmp");
+    std::fs::write(&tmp, doc.to_string_pretty())
+        .map_err(|e| anyhow::Error::new(ReproError::io(tmp.display(), e)))?;
+    std::fs::rename(&tmp, &path)
+        .map_err(|e| anyhow::Error::new(ReproError::io(path.display(), e)))?;
+    Ok(())
+}
+
+fn load_warm(path: &Path, key: u64) -> Result<CachedResult> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::Error::new(ReproError::io(path.display(), e)))?;
+    let j = Json::parse(&text).map_err(|e| invalid_entry(path, format!("{e:#}")))?;
+    let parsed = (|| -> Result<(SimConfig, JobSpec, CachedResult)> {
+        let schema = j.get("schema")?.as_usize()?;
+        if schema != WARM_SCHEMA {
+            anyhow::bail!("schema {schema} (this build reads {WARM_SCHEMA})");
+        }
+        let cfg = SimConfig::from_json(j.get("config")?)?;
+        let spec = JobSpec::from_json(j.get("job")?)?;
+        let result = match spec {
+            JobSpec::Run { .. } => {
+                CachedResult::Run(checkpoint::summary_from_json(j.get("result")?)?)
+            }
+            JobSpec::Sweep { .. } => CachedResult::Sweep(point_from_json(j.get("result")?)?),
+        };
+        Ok((cfg, spec, result))
+    })()
+    .map_err(|e| invalid_entry(path, format!("{e:#}")))?;
+    let (cfg, spec, result) = parsed;
+    // self-check 1: the stored config+job must re-derive the key it is
+    // filed under (catches moved/renamed entries and stale hash logic)
+    let derived = key_of(&cfg, &spec);
+    if derived != key {
+        return Err(invalid_entry(
+            path,
+            format!("stored config hashes to {} not {}", key_hex(derived), key_hex(key)),
+        ));
+    }
+    // self-check 2: replay the records through the SummaryAccum fold and
+    // require every aggregate to match the stored summary bit for bit —
+    // the cache-hit-is-bitwise-identical invariant, enforced at load time.
+    // Only full-history entries can replay (a `record_window` run retains
+    // a trailing slice; its aggregates were folded from rounds no longer
+    // present).
+    if let (CachedResult::Run(s), JobSpec::Run { kind, .. }) = (&result, &spec) {
+        if s.framework != kind.name() {
+            return Err(invalid_entry(
+                path,
+                format!("summary framework {:?} != job framework {:?}", s.framework, kind.name()),
+            ));
+        }
+        if s.records.len() == s.rounds {
+            let replayed = RunSummary::from_records(
+                &s.framework,
+                &s.preset,
+                cfg.target_accuracy,
+                s.records.clone(),
+            );
+            verify_replay(s, &replayed).map_err(|e| invalid_entry(path, format!("{e:#}")))?;
+        }
+    }
+    Ok(result)
+}
+
+/// Every aggregate the [`crate::metrics::SummaryAccum`] fold produces,
+/// compared bitwise between the stored summary and its replay.
+fn verify_replay(stored: &RunSummary, replayed: &RunSummary) -> Result<()> {
+    fn eq_bits64(what: &str, a: f64, b: f64) -> Result<()> {
+        if a.to_bits() != b.to_bits() {
+            anyhow::bail!("replayed {what} {b:?} != stored {a:?}");
+        }
+        Ok(())
+    }
+    fn eq_bits32(what: &str, a: f32, b: f32) -> Result<()> {
+        if a.to_bits() != b.to_bits() {
+            anyhow::bail!("replayed {what} {b:?} != stored {a:?}");
+        }
+        Ok(())
+    }
+    if replayed.rounds != stored.rounds {
+        anyhow::bail!("replayed rounds {} != stored {}", replayed.rounds, stored.rounds);
+    }
+    eq_bits32("final_accuracy", stored.final_accuracy, replayed.final_accuracy)?;
+    eq_bits32("best_accuracy", stored.best_accuracy, replayed.best_accuracy)?;
+    if replayed.rounds_to_target != stored.rounds_to_target {
+        anyhow::bail!(
+            "replayed rounds_to_target {:?} != stored {:?}",
+            replayed.rounds_to_target,
+            stored.rounds_to_target
+        );
+    }
+    match (stored.time_to_target, replayed.time_to_target) {
+        (None, None) => {}
+        (Some(a), Some(b)) => eq_bits64("time_to_target", a, b)?,
+        (a, b) => anyhow::bail!("replayed time_to_target {b:?} != stored {a:?}"),
+    }
+    eq_bits64("total_sim_time", stored.total_sim_time, replayed.total_sim_time)?;
+    eq_bits64("total_comm_bytes", stored.total_comm_bytes, replayed.total_comm_bytes)?;
+    eq_bits64("total_comm_cost", stored.total_comm_cost, replayed.total_comm_cost)?;
+    eq_bits64("total_comp_cost", stored.total_comp_cost, replayed.total_comp_cost)?;
+    eq_bits64("mean_selected", stored.mean_selected, replayed.mean_selected)?;
+    eq_bits64("mean_available", stored.mean_available, replayed.mean_available)?;
+    if (stored.total_dropouts, stored.total_retries, stored.quorum_misses)
+        != (replayed.total_dropouts, replayed.total_retries, replayed.quorum_misses)
+    {
+        anyhow::bail!("replayed fault counters differ from stored");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{self, prop_assert};
+
+    fn rec(round: usize, acc: f32, t: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            selected: 7,
+            e: 3,
+            comm_bytes: 1.5e6,
+            round_time: 0.062_500_000_000_000_01, // not representable in decimal text
+            sim_time: t,
+            comm_cost: 2.0,
+            comp_cost: 0.75,
+            total_cost: 2.75,
+            train_loss: 0.5,
+            accuracy: acc,
+            test_loss: if acc.is_nan() { f32::NAN } else { 0.6 },
+            wall_secs: 0.031_25,
+            env_bw_scale: 0.9,
+            env_available: 40,
+            env_stragglers: 2,
+            env_deadline_scale: 1.1,
+            env_dropouts: 1,
+            retries: 4,
+            quorum_miss: 0,
+        }
+    }
+
+    fn sample_summary(cfg: &SimConfig, n: usize) -> RunSummary {
+        let records: Vec<RoundRecord> = (0..n)
+            .map(|r| {
+                // skipped evals (NaN) and target hits both exercised
+                let acc = if r % 2 == 0 { f32::NAN } else { 0.80 + 0.02 * r as f32 };
+                rec(r, acc, 0.1 * (r + 1) as f64)
+            })
+            .collect();
+        RunSummary::from_records("splitme", &cfg.preset, cfg.target_accuracy, records)
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("repro_serve_cache_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn config_hash_canonicalization() {
+        // satellite 4: semantically equal configs hash equal (execution-only
+        // knobs and JSON round trips are invisible); any semantic field or
+        // job-dimension change moves the key
+        testkit::check("serve cache key canonicalization", 64, |g| {
+            let mut cfg = SimConfig::commag();
+            cfg.seed = g.usize_in(0..=1000) as u64;
+            cfg.rho = g.f64_in(0.05..0.95);
+            cfg.num_clients = g.usize_in(2..=200);
+            cfg.b_min = (1.0 / cfg.num_clients as f64).min(0.02);
+            let spec = JobSpec::Run {
+                kind: *g.choose(&FrameworkKind::all()),
+                rounds: g.usize_in(1..=50),
+            };
+            let base = key_of(&cfg, &spec);
+
+            let mut x = cfg.clone();
+            x.client_jobs = g.usize_in(0..=8);
+            x.chunk_cache_cap_bytes = g.usize_in(0..=1 << 20);
+            x.checkpoint_every = g.usize_in(0..=10);
+            x.reference_path = g.bool();
+            prop_assert!(key_of(&x, &spec) == base, "execution-only knob changed the key");
+
+            let rt = SimConfig::from_json(&cfg.to_json())?;
+            prop_assert!(key_of(&rt, &spec) == base, "JSON round trip changed the key");
+
+            let mut y = cfg.clone();
+            match g.usize_in(0..=6) {
+                0 => y.seed = y.seed.wrapping_add(1),
+                1 => y.rho += 0.001,
+                2 => y.num_clients += 1,
+                3 => y.scenario = "fading".into(),
+                4 => y.eval_every += 1,
+                5 => y.record_window += 1,
+                _ => y.select_cap += 1,
+            }
+            prop_assert!(key_of(&y, &spec) != base, "semantic field change kept the key");
+
+            let other_spec = match spec {
+                JobSpec::Run { kind, rounds } => JobSpec::Run { kind, rounds: rounds + 1 },
+                s => s,
+            };
+            prop_assert!(key_of(&cfg, &other_spec) != base, "round budget not in the key");
+            prop_assert!(
+                key_of(&cfg, &JobSpec::Sweep { split_dim: 64, client_params: 6272, settle_rounds: 10 })
+                    != base,
+                "run and sweep keys collide"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hot_tier_eviction_honors_byte_cap_and_lru() {
+        let cfg = SimConfig::commag();
+        let entry = CachedResult::Run(sample_summary(&cfg, 4));
+        let bytes = entry.approx_bytes();
+        let cache = ResultCache::new(2 * bytes, None);
+        let spec = JobSpec::Run { kind: FrameworkKind::SplitMe, rounds: 4 };
+        let at_seed = |seed: u64| {
+            let mut c = cfg.clone();
+            c.seed = seed;
+            c
+        };
+        cache.put(&at_seed(1), &spec, &entry).unwrap();
+        cache.put(&at_seed(2), &spec, &entry).unwrap();
+        assert_eq!(cache.hot_entries(), 2);
+        assert_eq!(cache.hot_bytes(), 2 * bytes);
+        // touch seed-1 so seed-2 becomes the LRU victim
+        assert!(cache.get(&at_seed(1), &spec).unwrap().is_some());
+        cache.put(&at_seed(3), &spec, &entry).unwrap();
+        assert_eq!(cache.hot_entries(), 2, "byte cap must evict, not grow");
+        assert!(cache.hot_bytes() <= 2 * bytes);
+        assert!(cache.get(&at_seed(1), &spec).unwrap().is_some(), "recently used survived");
+        assert!(cache.get(&at_seed(3), &spec).unwrap().is_some(), "new entry present");
+        assert!(cache.get(&at_seed(2), &spec).unwrap().is_none(), "LRU victim evicted");
+        // an entry larger than the whole cap is skipped, not cached by
+        // evicting everything else
+        let big = CachedResult::Run(sample_summary(&cfg, 4096));
+        assert!(big.approx_bytes() > 2 * bytes);
+        cache.put(&at_seed(4), &spec, &big).unwrap();
+        assert!(cache.get(&at_seed(4), &spec).unwrap().is_none());
+        assert_eq!(cache.hot_entries(), 2);
+    }
+
+    #[test]
+    fn warm_tier_round_trips_bitwise_and_promotes() {
+        let dir = tmp_dir("roundtrip");
+        let cfg = SimConfig::commag();
+        let spec = JobSpec::Run { kind: FrameworkKind::SplitMe, rounds: 5 };
+        let summary = sample_summary(&cfg, 5);
+        {
+            let cache = ResultCache::new(1 << 20, Some(dir.clone()));
+            cache.put(&cfg, &spec, &CachedResult::Run(summary.clone())).unwrap();
+        }
+        // a FRESH cache (empty hot tier) must serve the result from disk,
+        // bitwise identical — NaN accuracies and non-decimal floats included
+        let cache = ResultCache::new(1 << 20, Some(dir.clone()));
+        let (got, tier) = cache.get(&cfg, &spec).unwrap().expect("warm hit");
+        assert_eq!(tier, Tier::Warm);
+        let CachedResult::Run(back) = got else { panic!("run entry came back as sweep") };
+        assert_eq!(back.rounds, summary.rounds);
+        assert_eq!(back.final_accuracy.to_bits(), summary.final_accuracy.to_bits());
+        assert_eq!(back.best_accuracy.to_bits(), summary.best_accuracy.to_bits());
+        assert_eq!(back.rounds_to_target, summary.rounds_to_target);
+        assert_eq!(
+            back.time_to_target.map(f64::to_bits),
+            summary.time_to_target.map(f64::to_bits)
+        );
+        assert_eq!(back.total_sim_time.to_bits(), summary.total_sim_time.to_bits());
+        assert_eq!(back.total_comm_bytes.to_bits(), summary.total_comm_bytes.to_bits());
+        assert_eq!(back.records.len(), summary.records.len());
+        for (a, b) in back.records.iter().zip(&summary.records) {
+            // wall_secs included: the warm tier stores the original record
+            // vector verbatim (bit-hex), exactly like a checkpoint
+            assert_eq!(a.wall_secs.to_bits(), b.wall_secs.to_bits());
+            assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+            assert_eq!(a.round_time.to_bits(), b.round_time.to_bits());
+            assert_eq!(a.comm_bytes.to_bits(), b.comm_bytes.to_bits());
+        }
+        // the warm hit was promoted into the hot tier
+        let (_, tier2) = cache.get(&cfg, &spec).unwrap().expect("promoted hit");
+        assert_eq!(tier2, Tier::Hot);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn warm_tier_rejects_corrupt_and_tampered_entries() {
+        let dir = tmp_dir("tamper");
+        let cfg = SimConfig::commag();
+        let spec = JobSpec::Run { kind: FrameworkKind::SplitMe, rounds: 3 };
+        let summary = sample_summary(&cfg, 3);
+        let path = dir.join(key_hex(key_of(&cfg, &spec))).join("result.json");
+
+        // unparseable bytes -> typed InvalidInput naming the file
+        {
+            let cache = ResultCache::new(0, Some(dir.clone()));
+            cache.put(&cfg, &spec, &CachedResult::Run(summary.clone())).unwrap();
+            std::fs::write(&path, "not json").unwrap();
+            let e = cache.get(&cfg, &spec).unwrap_err();
+            assert_eq!(ReproError::exit_code_of(&e), 2);
+            assert!(format!("{e:#}").contains("result.json"), "error must name the file: {e:#}");
+        }
+        // a tampered record (comm_bytes bit-flip) fails the SummaryAccum
+        // replay cross-check — hot cap 0 forces every get through the disk
+        // path
+        {
+            let cache = ResultCache::new(0, Some(dir.clone()));
+            cache.put(&cfg, &spec, &CachedResult::Run(summary.clone())).unwrap();
+            let text = std::fs::read_to_string(&path).unwrap();
+            let mut doc = Json::parse(&text).unwrap();
+            if let Json::Obj(map) = &mut doc {
+                let result = map.get_mut("result").unwrap();
+                if let Json::Obj(rmap) = result {
+                    let records = rmap.get_mut("records").unwrap();
+                    if let Json::Arr(rs) = records {
+                        if let Json::Obj(r0) = &mut rs[0] {
+                            r0.insert("comm_bytes".into(), state::f64_json(summary.records[0].comm_bytes + 1.0));
+                        }
+                    }
+                }
+            }
+            std::fs::write(&path, doc.to_string_pretty()).unwrap();
+            let e = cache.get(&cfg, &spec).unwrap_err();
+            assert_eq!(ReproError::exit_code_of(&e), 2);
+            assert!(
+                format!("{e:#}").contains("total_comm_bytes"),
+                "replay verification should name the broken aggregate: {e:#}"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_points_round_trip_bitwise() {
+        let dir = tmp_dir("sweep");
+        let cfg = SimConfig::commag();
+        let spec = JobSpec::Sweep { split_dim: 64, client_params: 6272, settle_rounds: 10 };
+        let p = SweepPoint {
+            bandwidth_bps: 2.5e8,
+            rho: 0.2 + 0.1, // 0.30000000000000004 — only exact bitwise
+            selected: 12,
+            e: 7,
+            round_latency: 0.062_500_000_000_000_01,
+            round_cost: 3.75,
+        };
+        {
+            let cache = ResultCache::new(1 << 20, Some(dir.clone()));
+            cache.put(&cfg, &spec, &CachedResult::Sweep(p.clone())).unwrap();
+        }
+        let cache = ResultCache::new(1 << 20, Some(dir.clone()));
+        let (got, tier) = cache.get(&cfg, &spec).unwrap().expect("warm hit");
+        assert_eq!(tier, Tier::Warm);
+        let CachedResult::Sweep(back) = got else { panic!("sweep entry came back as run") };
+        assert_eq!(back.rho.to_bits(), p.rho.to_bits());
+        assert_eq!(back.round_latency.to_bits(), p.round_latency.to_bits());
+        assert_eq!(back.round_cost.to_bits(), p.round_cost.to_bits());
+        assert_eq!((back.selected, back.e), (p.selected, p.e));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

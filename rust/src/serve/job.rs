@@ -1,0 +1,253 @@
+//! The experiment service's wire protocol: newline-delimited JSON requests
+//! and responses (PERF.md §experiment-service).
+//!
+//! One request per line, e.g.
+//! `{"id":"j1","cmd":"run","framework":"splitme","rounds":30,"config":{...}}`;
+//! the `config` object takes the same partial-override schema as
+//! `--config` files ([`SimConfig::from_json`]), and a top-level `"preset"`
+//! shorthand is folded into it. Every malformed request — unparseable
+//! JSON, unknown `cmd`, invalid config — is a typed
+//! [`ReproError::InvalidInput`] that the server answers with a `status:
+//! "invalid"` response; nothing on this path panics or kills the server.
+
+use anyhow::Result;
+
+use crate::config::{FrameworkKind, SimConfig};
+use crate::errors::ReproError;
+use crate::jsonio::Json;
+
+/// Default round budget of a `run` job without an explicit `"rounds"`.
+pub const DEFAULT_ROUNDS: usize = 30;
+/// Default settle horizon of a `sweep` job (matches `sweep::grid_jobs`).
+pub const DEFAULT_SETTLE_ROUNDS: usize = 10;
+
+/// One parsed request line.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// caller-chosen correlation id, echoed on the response
+    pub id: String,
+    pub cmd: Command,
+}
+
+#[derive(Debug, Clone)]
+pub enum Command {
+    /// Train `framework` for `rounds` and return the `RunSummary`.
+    Run { cfg: SimConfig, framework: FrameworkKind, rounds: usize },
+    /// Settle one L3 sweep cell (`sweep::settle`) and return the
+    /// `SweepPoint`. The model dims come from the engine's preset manifest
+    /// unless given explicitly.
+    Sweep {
+        cfg: SimConfig,
+        split_dim: Option<usize>,
+        client_params: Option<usize>,
+        settle_rounds: usize,
+    },
+    Ping,
+    Stats,
+    Shutdown,
+}
+
+fn invalid(msg: String) -> anyhow::Error {
+    anyhow::Error::new(ReproError::invalid(msg))
+}
+
+/// Best-effort id extraction from a line that may not parse at all — the
+/// error response should still correlate when the JSON is well-formed but
+/// the request is not. Falls back to `"?"`.
+pub fn peek_id(line: &str) -> String {
+    Json::parse(line)
+        .ok()
+        .and_then(|j| j.opt("id").and_then(|v| v.as_str().ok().map(str::to_string)))
+        .unwrap_or_else(|| "?".to_string())
+}
+
+/// Parse one request line. EVERY failure is typed `InvalidInput`: the
+/// service must answer `invalid`, never crash or misclassify a bad request
+/// as an internal error.
+pub fn parse(line: &str) -> Result<Request> {
+    let j = Json::parse(line).map_err(|e| invalid(format!("unparseable request JSON: {e:#}")))?;
+    let id = match j.opt("id") {
+        Some(v) => v
+            .as_str()
+            .map_err(|_| invalid("request \"id\" must be a string".into()))?
+            .to_string(),
+        None => "?".to_string(),
+    };
+    let cmd = j
+        .opt("cmd")
+        .ok_or_else(|| invalid(format!("request {id:?} has no \"cmd\"")))?
+        .as_str()
+        .map_err(|_| invalid(format!("request {id:?}: \"cmd\" must be a string")))?
+        .to_string();
+    let command = match cmd.as_str() {
+        "ping" => Command::Ping,
+        "stats" => Command::Stats,
+        "shutdown" => Command::Shutdown,
+        "run" => {
+            let cfg = job_config(&j, &id)?;
+            let framework: FrameworkKind = match j.opt("framework") {
+                None => FrameworkKind::SplitMe,
+                Some(v) => v
+                    .as_str()
+                    .map_err(|_| invalid(format!("request {id:?}: \"framework\" must be a string")))
+                    .and_then(|s| {
+                        s.parse().map_err(|e: anyhow::Error| {
+                            invalid(format!("request {id:?}: {e:#}"))
+                        })
+                    })?,
+            };
+            let rounds = opt_usize(&j, "rounds", &id)?.unwrap_or(DEFAULT_ROUNDS);
+            if rounds == 0 {
+                return Err(invalid(format!("request {id:?}: \"rounds\" must be >= 1")));
+            }
+            Command::Run { cfg, framework, rounds }
+        }
+        "sweep" => {
+            let cfg = job_config(&j, &id)?;
+            let settle_rounds =
+                opt_usize(&j, "settle_rounds", &id)?.unwrap_or(DEFAULT_SETTLE_ROUNDS);
+            if settle_rounds == 0 {
+                return Err(invalid(format!("request {id:?}: \"settle_rounds\" must be >= 1")));
+            }
+            Command::Sweep {
+                cfg,
+                split_dim: opt_usize(&j, "split_dim", &id)?,
+                client_params: opt_usize(&j, "client_params", &id)?,
+                settle_rounds,
+            }
+        }
+        other => {
+            return Err(invalid(format!(
+                "request {id:?}: unknown cmd {other:?} (run|sweep|ping|stats|shutdown)"
+            )))
+        }
+    };
+    Ok(Request { id, cmd: command })
+}
+
+fn opt_usize(j: &Json, key: &str, id: &str) -> Result<Option<usize>> {
+    match j.opt(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_usize()
+            .map(Some)
+            .map_err(|_| invalid(format!("request {id:?}: {key:?} must be a non-negative integer"))),
+    }
+}
+
+/// The job's `SimConfig`: the optional `"config"` object (partial-override
+/// schema) with a top-level `"preset"` shorthand folded in, then validated.
+fn job_config(j: &Json, id: &str) -> Result<SimConfig> {
+    let mut map = match j.opt("config") {
+        None => std::collections::BTreeMap::new(),
+        Some(Json::Obj(m)) => m.clone(),
+        Some(_) => return Err(invalid(format!("request {id:?}: \"config\" must be an object"))),
+    };
+    if let Some(p) = j.opt("preset") {
+        let p = p
+            .as_str()
+            .map_err(|_| invalid(format!("request {id:?}: \"preset\" must be a string")))?;
+        map.entry("preset".to_string()).or_insert_with(|| Json::str(p));
+    }
+    let cfg = SimConfig::from_json(&Json::Obj(map))
+        .map_err(|e| invalid(format!("request {id:?}: bad config: {e:#}")))?;
+    cfg.validate().map_err(|e| invalid(format!("request {id:?}: bad config: {e:#}")))?;
+    Ok(cfg)
+}
+
+/// Response builder: `{"id": ..., "status": ..., <extra fields>}`, written
+/// compact on one line.
+pub fn response(id: &str, status: &str, extra: Vec<(&str, Json)>) -> Json {
+    let mut fields = vec![("id", Json::str(id)), ("status", Json::str(status))];
+    fields.extend(extra);
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_request_parses_with_defaults() {
+        let r = parse(r#"{"id":"a1","cmd":"run","preset":"commag"}"#).unwrap();
+        assert_eq!(r.id, "a1");
+        match r.cmd {
+            Command::Run { cfg, framework, rounds } => {
+                assert_eq!(cfg.preset, "commag");
+                assert_eq!(framework, FrameworkKind::SplitMe);
+                assert_eq!(rounds, DEFAULT_ROUNDS);
+            }
+            other => panic!("expected run, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn run_request_takes_config_overrides_and_framework() {
+        let r = parse(
+            r#"{"id":"a2","cmd":"run","framework":"sfl","rounds":3,
+                "config":{"preset":"commag","num_clients":9,"b_min":0.111}}"#,
+        )
+        .unwrap();
+        match r.cmd {
+            Command::Run { cfg, framework, rounds } => {
+                assert_eq!(cfg.num_clients, 9);
+                assert_eq!(framework, FrameworkKind::Sfl);
+                assert_eq!(rounds, 3);
+            }
+            other => panic!("expected run, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sweep_request_parses() {
+        let r = parse(
+            r#"{"id":"s1","cmd":"sweep","split_dim":64,"client_params":6272,
+                "settle_rounds":3,"config":{"rho":0.5}}"#,
+        )
+        .unwrap();
+        match r.cmd {
+            Command::Sweep { cfg, split_dim, client_params, settle_rounds } => {
+                assert_eq!(cfg.rho, 0.5);
+                assert_eq!(split_dim, Some(64));
+                assert_eq!(client_params, Some(6272));
+                assert_eq!(settle_rounds, 3);
+            }
+            other => panic!("expected sweep, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_requests_are_typed_invalid() {
+        for bad in [
+            "{oops",                                          // unparseable
+            r#"{"id":"x"}"#,                                  // no cmd
+            r#"{"id":"x","cmd":"explode"}"#,                  // unknown cmd
+            r#"{"id":"x","cmd":"run","rounds":0}"#,           // zero budget
+            r#"{"id":"x","cmd":"run","framework":"nope"}"#,   // bad framework
+            r#"{"id":"x","cmd":"run","config":{"b_min":9}}"#, // invalid config
+            r#"{"id":"x","cmd":"run","config":3}"#,           // config not an object
+            r#"{"id":7,"cmd":"ping"}"#,                       // non-string id
+        ] {
+            let e = parse(bad).unwrap_err();
+            assert_eq!(ReproError::exit_code_of(&e), 2, "{bad}: {e:#}");
+        }
+    }
+
+    #[test]
+    fn peek_id_is_best_effort() {
+        assert_eq!(peek_id(r#"{"id":"j9","cmd":"explode"}"#), "j9");
+        assert_eq!(peek_id("{oops"), "?");
+        assert_eq!(peek_id(r#"{"cmd":"run"}"#), "?");
+        assert_eq!(peek_id(r#"{"id":7}"#), "?");
+    }
+
+    #[test]
+    fn control_commands_parse() {
+        assert!(matches!(parse(r#"{"id":"p","cmd":"ping"}"#).unwrap().cmd, Command::Ping));
+        assert!(matches!(parse(r#"{"id":"s","cmd":"stats"}"#).unwrap().cmd, Command::Stats));
+        assert!(matches!(
+            parse(r#"{"id":"q","cmd":"shutdown"}"#).unwrap().cmd,
+            Command::Shutdown
+        ));
+    }
+}

@@ -1,0 +1,738 @@
+//! `repro serve` — the persistent experiment service (PERF.md
+//! §experiment-service).
+//!
+//! One process holds the interned-artifact [`Engine`] and a pool of
+//! [`ExperimentContext`]s (one per distinct config, built once, shared by
+//! every job that needs it) and answers newline-delimited JSON requests
+//! ([`job`]) from stdin or a local TCP socket. Completed work is memoized
+//! in a two-tier [`cache::ResultCache`] keyed by the canonical config hash:
+//! a repeated job is answered from memory (or the on-disk warm tier) with
+//! **zero** additional framework rounds, and a cache hit is bitwise
+//! identical to the cold run that produced it — the warm tier round-trips
+//! every float through bit-hex and replays the records through
+//! `SummaryAccum` to prove it.
+//!
+//! Concurrency shape: a bounded [`queue::BoundedQueue`] feeds a scoped
+//! worker pool (same `executor::resolve_jobs` policy as the experiment
+//! harness). Overload is answered with a typed `busy` response — the queue
+//! never blocks the reader and never panics. Identical jobs racing through
+//! different workers are single-flighted: the second waits for the first
+//! and then hits the cache instead of recomputing.
+
+pub mod cache;
+pub mod job;
+pub mod queue;
+
+use std::collections::{HashMap, HashSet};
+use std::io::{BufRead, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::{FrameworkKind, SimConfig};
+use crate::coordinator::Runner;
+use crate::errors::ReproError;
+use crate::experiments::executor;
+use crate::experiments::sweep::{self, SweepPoint};
+use crate::fl::ExperimentContext;
+use crate::jsonio::Json;
+use crate::metrics::RunSummary;
+use crate::runtime::Engine;
+
+use self::cache::{CachedResult, JobSpec, ResultCache, Tier};
+use self::job::{Command, Request};
+use self::queue::{BoundedQueue, PushError};
+
+/// Namespace salt separating context-pool keys from result-cache keys: a
+/// context is keyed by the **full** config (execution knobs like
+/// `client_jobs` live on the context), a result by the canonical config.
+const CTX_NS: u64 = 0x9e37_79b9_7f4a_7c15;
+
+fn invalid(msg: String) -> anyhow::Error {
+    anyhow::Error::new(ReproError::invalid(msg))
+}
+
+/// Where a job's result came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Source {
+    /// computed by this request (and now cached)
+    Cold,
+    /// in-memory hot tier
+    Hot,
+    /// on-disk warm tier (`.repro-cache/<hash>/`), promoted to hot
+    Warm,
+}
+
+impl Source {
+    pub fn label(self) -> &'static str {
+        match self {
+            Source::Cold => "cold",
+            Source::Hot => "hot",
+            Source::Warm => "warm",
+        }
+    }
+
+    pub fn is_hit(self) -> bool {
+        !matches!(self, Source::Cold)
+    }
+}
+
+impl From<Tier> for Source {
+    fn from(t: Tier) -> Self {
+        match t {
+            Tier::Hot => Source::Hot,
+            Tier::Warm => Source::Warm,
+        }
+    }
+}
+
+/// Service construction knobs (CLI: `--hot-cache-bytes`, `--cache-dir`,
+/// `--no-warm-cache`).
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// hot-tier byte budget (LRU-evicted past it)
+    pub hot_cap_bytes: usize,
+    /// warm-tier directory; `None` disables the on-disk tier
+    pub warm_dir: Option<PathBuf>,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts { hot_cap_bytes: 64 << 20, warm_dir: Some(PathBuf::from(".repro-cache")) }
+    }
+}
+
+/// Lifetime counters surfaced by the `stats` command.
+#[derive(Default)]
+struct Telemetry {
+    executed: AtomicU64,
+    hits_hot: AtomicU64,
+    hits_warm: AtomicU64,
+    busy: AtomicU64,
+    invalid: AtomicU64,
+    failed: AtomicU64,
+    job_wall: Mutex<Vec<Duration>>,
+}
+
+/// The experiment service: engine + context pool + two-tier result cache +
+/// single-flight dedup. One instance serves many jobs over many
+/// connections; everything here is `&self` and thread-safe.
+///
+/// `engine` is optional: sweep jobs are pure L3 (no PJRT), so an
+/// artifact-less host can still serve them. Run jobs on an engine-less
+/// service are answered with a typed `invalid` response.
+pub struct Service<'e> {
+    engine: Option<&'e Engine>,
+    cache: ResultCache,
+    contexts: Mutex<HashMap<u64, Arc<ExperimentContext<'e>>>>,
+    /// keys (result or context) currently being computed; losers of the
+    /// race wait on `inflight_done` then re-check the cache/pool
+    inflight: Mutex<HashSet<u64>>,
+    inflight_done: Condvar,
+    tel: Telemetry,
+}
+
+/// Removes its key from the in-flight set on drop, so a computation that
+/// errors — or even panics through the worker's `catch_unwind` — never
+/// leaves waiters stuck on the condvar.
+struct FlightGuard<'s, 'e> {
+    svc: &'s Service<'e>,
+    key: u64,
+}
+
+impl Drop for FlightGuard<'_, '_> {
+    fn drop(&mut self) {
+        self.svc.inflight.lock().expect("inflight lock").remove(&self.key);
+        self.svc.inflight_done.notify_all();
+    }
+}
+
+impl<'e> Service<'e> {
+    pub fn new(engine: Option<&'e Engine>, opts: &ServeOpts) -> Service<'e> {
+        Service {
+            engine,
+            cache: ResultCache::new(opts.hot_cap_bytes, opts.warm_dir.clone()),
+            contexts: Mutex::new(HashMap::new()),
+            inflight: Mutex::new(HashSet::new()),
+            inflight_done: Condvar::new(),
+            tel: Telemetry::default(),
+        }
+    }
+
+    /// Claim `key` for computation. `true` = we compute; `false` = another
+    /// thread was computing it and has now finished — re-check the cache.
+    fn begin(&self, key: u64) -> bool {
+        let mut g = self.inflight.lock().expect("inflight lock");
+        if g.insert(key) {
+            return true;
+        }
+        while g.contains(&key) {
+            g = self.inflight_done.wait(g).expect("inflight lock");
+        }
+        false
+    }
+
+    fn note_hit(&self, tier: Tier) {
+        match tier {
+            Tier::Hot => &self.tel.hits_hot,
+            Tier::Warm => &self.tel.hits_warm,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The shared context for `cfg`: pool hit, or build-once under
+    /// single-flight (concurrent jobs with the same config never build two
+    /// contexts — `Engine::context_builds` pins this in tests/service.rs).
+    fn context_for(&self, cfg: &SimConfig) -> Result<Arc<ExperimentContext<'e>>> {
+        let engine = self.engine.ok_or_else(|| {
+            invalid("this service has no engine (artifact manifest) — run jobs need one".into())
+        })?;
+        let key = cache::fnv1a64(cfg.to_json().to_canonical_string().as_bytes()) ^ CTX_NS;
+        loop {
+            if let Some(ctx) = self.contexts.lock().expect("context pool lock").get(&key) {
+                return Ok(ctx.clone());
+            }
+            if !self.begin(key) {
+                // the builder finished; if it failed the pool is still
+                // empty and the next iteration retries the build ourselves
+                continue;
+            }
+            let _flight = FlightGuard { svc: self, key };
+            if let Some(ctx) = self.contexts.lock().expect("context pool lock").get(&key) {
+                return Ok(ctx.clone());
+            }
+            let ctx = Arc::new(ExperimentContext::new(engine, cfg)?);
+            self.contexts.lock().expect("context pool lock").insert(key, ctx.clone());
+            return Ok(ctx);
+        }
+    }
+
+    /// Train `framework` for `rounds` under `cfg` — or answer from the
+    /// cache. The returned summary is bitwise identical either way.
+    pub fn run_job(
+        &self,
+        cfg: &SimConfig,
+        framework: FrameworkKind,
+        rounds: usize,
+    ) -> Result<(RunSummary, Source)> {
+        let spec = JobSpec::Run { kind: framework, rounds };
+        let key = cache::key_of(cfg, &spec);
+        loop {
+            if let Some((hit, tier)) = self.cache.get(cfg, &spec)? {
+                return match hit {
+                    CachedResult::Run(s) => {
+                        self.note_hit(tier);
+                        Ok((s, Source::from(tier)))
+                    }
+                    CachedResult::Sweep(_) => Err(invalid(format!(
+                        "cache entry {} holds a sweep result under a run key — \
+                         delete it to recompute",
+                        cache::key_hex(key)
+                    ))),
+                };
+            }
+            if !self.begin(key) {
+                continue; // the in-flight twin finished; re-check the cache
+            }
+            let _flight = FlightGuard { svc: self, key };
+            // the twin may have published between our get() and begin()
+            if let Some((CachedResult::Run(s), tier)) = self.cache.get(cfg, &spec)? {
+                self.note_hit(tier);
+                return Ok((s, Source::from(tier)));
+            }
+            let ctx = self.context_for(cfg)?;
+            let t0 = Instant::now();
+            let summary = Runner::shared(ctx.as_ref(), framework)?.train(rounds)?;
+            self.tel.executed.fetch_add(1, Ordering::Relaxed);
+            self.tel.job_wall.lock().expect("telemetry lock").push(t0.elapsed());
+            if let Err(e) = self.cache.put(cfg, &spec, &CachedResult::Run(summary.clone())) {
+                // a broken warm tier degrades durability, not correctness
+                eprintln!("warning: warm cache write for {} failed: {e:#}", cache::key_hex(key));
+            }
+            return Ok((summary, Source::Cold));
+        }
+    }
+
+    /// Settle one sweep cell (`sweep::settle`, pure L3 — no engine needed)
+    /// — or answer from the cache.
+    pub fn sweep_job(
+        &self,
+        cfg: &SimConfig,
+        split_dim: usize,
+        client_params: usize,
+        settle_rounds: usize,
+    ) -> Result<(SweepPoint, Source)> {
+        let spec = JobSpec::Sweep { split_dim, client_params, settle_rounds };
+        let key = cache::key_of(cfg, &spec);
+        loop {
+            if let Some((hit, tier)) = self.cache.get(cfg, &spec)? {
+                return match hit {
+                    CachedResult::Sweep(p) => {
+                        self.note_hit(tier);
+                        Ok((p, Source::from(tier)))
+                    }
+                    CachedResult::Run(_) => Err(invalid(format!(
+                        "cache entry {} holds a run result under a sweep key — \
+                         delete it to recompute",
+                        cache::key_hex(key)
+                    ))),
+                };
+            }
+            if !self.begin(key) {
+                continue;
+            }
+            let _flight = FlightGuard { svc: self, key };
+            if let Some((CachedResult::Sweep(p), tier)) = self.cache.get(cfg, &spec)? {
+                self.note_hit(tier);
+                return Ok((p, Source::from(tier)));
+            }
+            let t0 = Instant::now();
+            let point = sweep::settle(cfg, split_dim, client_params, settle_rounds)?;
+            self.tel.executed.fetch_add(1, Ordering::Relaxed);
+            self.tel.job_wall.lock().expect("telemetry lock").push(t0.elapsed());
+            if let Err(e) = self.cache.put(cfg, &spec, &CachedResult::Sweep(point.clone())) {
+                eprintln!("warning: warm cache write for {} failed: {e:#}", cache::key_hex(key));
+            }
+            return Ok((point, Source::Cold));
+        }
+    }
+
+    /// Model dims of a sweep job: explicit request fields win; otherwise
+    /// the engine's preset manifest supplies them.
+    fn resolve_dims(
+        &self,
+        cfg: &SimConfig,
+        split_dim: Option<usize>,
+        client_params: Option<usize>,
+    ) -> Result<(usize, usize)> {
+        if let (Some(s), Some(c)) = (split_dim, client_params) {
+            return Ok((s, c));
+        }
+        let engine = self.engine.ok_or_else(|| {
+            invalid(format!(
+                "sweep on an engine-less service needs explicit \"split_dim\" and \
+                 \"client_params\" (no preset manifest to read {:?} dims from)",
+                cfg.preset
+            ))
+        })?;
+        let p = engine.preset(&cfg.preset)?;
+        Ok((split_dim.unwrap_or(p.split_dim), client_params.unwrap_or(p.client_params)))
+    }
+
+    /// One work-queue job → one response. Never returns `Err` and never
+    /// unwinds: errors become typed `invalid`/`error` responses, panics are
+    /// caught and become exit-code-4 `error` responses (the worker and the
+    /// service survive).
+    fn respond_work(&self, req: &Request) -> Json {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.execute(req))) {
+            Ok(Ok(resp)) => resp,
+            Ok(Err(e)) => self.error_response(&req.id, &e),
+            Err(payload) => {
+                let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                    (*s).to_string()
+                } else if let Some(s) = payload.downcast_ref::<String>() {
+                    s.clone()
+                } else {
+                    "non-string panic payload".to_string()
+                };
+                self.tel.failed.fetch_add(1, Ordering::Relaxed);
+                job::response(
+                    &req.id,
+                    "error",
+                    vec![
+                        // 4 = ReproError::JobPanic's exit code
+                        ("code", Json::num(4.0)),
+                        ("error", Json::str(format!("job panicked: {msg}"))),
+                    ],
+                )
+            }
+        }
+    }
+
+    fn execute(&self, req: &Request) -> Result<Json> {
+        match &req.cmd {
+            Command::Run { cfg, framework, rounds } => {
+                let spec = JobSpec::Run { kind: *framework, rounds: *rounds };
+                let key = cache::key_of(cfg, &spec);
+                let (summary, source) = self.run_job(cfg, *framework, *rounds)?;
+                Ok(job::response(
+                    &req.id,
+                    if source.is_hit() { "cache_hit" } else { "ok" },
+                    vec![
+                        ("source", Json::str(source.label())),
+                        ("key", Json::str(cache::key_hex(key))),
+                        ("summary", summary.to_json()),
+                    ],
+                ))
+            }
+            Command::Sweep { cfg, split_dim, client_params, settle_rounds } => {
+                let (s, c) = self.resolve_dims(cfg, *split_dim, *client_params)?;
+                let spec = JobSpec::Sweep {
+                    split_dim: s,
+                    client_params: c,
+                    settle_rounds: *settle_rounds,
+                };
+                let key = cache::key_of(cfg, &spec);
+                let (point, source) = self.sweep_job(cfg, s, c, *settle_rounds)?;
+                Ok(job::response(
+                    &req.id,
+                    if source.is_hit() { "cache_hit" } else { "ok" },
+                    vec![
+                        ("source", Json::str(source.label())),
+                        ("key", Json::str(cache::key_hex(key))),
+                        ("point", point_json(&point)),
+                    ],
+                ))
+            }
+            // control commands are normally answered inline by the reader,
+            // but tolerate one reaching a worker
+            Command::Ping => Ok(job::response(&req.id, "ok", vec![("reply", Json::str("pong"))])),
+            Command::Stats => Ok(self.stats_response(&req.id)),
+            Command::Shutdown => {
+                Ok(job::response(&req.id, "ok", vec![("reply", Json::str("bye"))]))
+            }
+        }
+    }
+
+    /// Typed failure → typed response: `InvalidInput` anywhere in the chain
+    /// means a bad request (`status: "invalid"`, code 2); everything else
+    /// is an internal `error` with its exit code.
+    fn error_response(&self, id: &str, e: &anyhow::Error) -> Json {
+        match ReproError::of_chain(e) {
+            Some(ReproError::InvalidInput(_)) => {
+                self.tel.invalid.fetch_add(1, Ordering::Relaxed);
+                job::response(
+                    id,
+                    "invalid",
+                    vec![("code", Json::num(2.0)), ("error", Json::str(format!("{e:#}")))],
+                )
+            }
+            other => {
+                self.tel.failed.fetch_add(1, Ordering::Relaxed);
+                let code = other.map(|r| r.exit_code()).unwrap_or(1);
+                job::response(
+                    id,
+                    "error",
+                    vec![("code", Json::num(code as f64)), ("error", Json::str(format!("{e:#}")))],
+                )
+            }
+        }
+    }
+
+    fn stats_response(&self, id: &str) -> Json {
+        let n = |v: u64| Json::num(v as f64);
+        let mut fields = vec![
+            ("jobs_executed", n(self.tel.executed.load(Ordering::Relaxed))),
+            ("cache_hits_hot", n(self.tel.hits_hot.load(Ordering::Relaxed))),
+            ("cache_hits_warm", n(self.tel.hits_warm.load(Ordering::Relaxed))),
+            ("busy_rejections", n(self.tel.busy.load(Ordering::Relaxed))),
+            ("invalid_requests", n(self.tel.invalid.load(Ordering::Relaxed))),
+            ("failed_jobs", n(self.tel.failed.load(Ordering::Relaxed))),
+            ("contexts", Json::num(self.contexts.lock().expect("context pool lock").len() as f64)),
+            ("hot_entries", Json::num(self.cache.hot_entries() as f64)),
+            ("hot_bytes", Json::num(self.cache.hot_bytes() as f64)),
+        ];
+        if let Some(engine) = self.engine {
+            fields.push(("engine_calls", n(engine.total_calls())));
+            fields.push(("context_builds", n(engine.context_builds())));
+        }
+        let wall = self.tel.job_wall.lock().expect("telemetry lock").clone();
+        if !wall.is_empty() {
+            let s = crate::harness::Stats::from_samples("job_wall", wall);
+            fields.push(("job_wall_p50_secs", Json::num(s.median.as_secs_f64())));
+            fields.push(("job_wall_mean_secs", Json::num(s.mean.as_secs_f64())));
+            fields.push(("job_wall_max_secs", Json::num(s.max.as_secs_f64())));
+        }
+        job::response(id, "ok", fields)
+    }
+
+    /// Serve newline-delimited JSON requests from `input` until EOF or a
+    /// `shutdown` command; responses go to `output` (one compact line
+    /// each, in completion order). `workers` follows the `--jobs`
+    /// convention (0 = auto); `queue_cap` bounds pending jobs — overflow
+    /// gets a typed `busy` response, the reader never blocks on the pool.
+    ///
+    /// Returns `Ok(true)` when a `shutdown` request ended the stream (its
+    /// `bye` is written after every queued job drains), `Ok(false)` on
+    /// plain EOF.
+    pub fn serve<R: BufRead, W: Write + Send>(
+        &self,
+        input: R,
+        output: W,
+        workers: usize,
+        queue_cap: usize,
+    ) -> Result<bool> {
+        let queue_cap = queue_cap.max(1);
+        let workers = executor::resolve_jobs(workers, queue_cap);
+        let writer = Mutex::new(output);
+        let queue: BoundedQueue<Request> = BoundedQueue::new(queue_cap);
+        let mut shutdown_id: Option<String> = None;
+        let mut read_err: Option<anyhow::Error> = None;
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| {
+                    while let Some(req) = queue.pop() {
+                        write_line(&writer, &self.respond_work(&req));
+                    }
+                });
+            }
+            for line in input.lines() {
+                let line = match line {
+                    Ok(l) => l,
+                    Err(e) => {
+                        read_err =
+                            Some(anyhow::Error::new(ReproError::io("<request stream>", e)));
+                        break;
+                    }
+                };
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let req = match job::parse(&line) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        write_line(&writer, &self.error_response(&job::peek_id(&line), &e));
+                        continue;
+                    }
+                };
+                match req.cmd {
+                    // control commands answer inline — they must not queue
+                    // behind long jobs
+                    Command::Ping => write_line(
+                        &writer,
+                        &job::response(&req.id, "ok", vec![("reply", Json::str("pong"))]),
+                    ),
+                    Command::Stats => write_line(&writer, &self.stats_response(&req.id)),
+                    Command::Shutdown => {
+                        shutdown_id = Some(req.id);
+                        break;
+                    }
+                    Command::Run { .. } | Command::Sweep { .. } => {
+                        if let Err(PushError::Full(r) | PushError::Closed(r)) =
+                            queue.try_push(req)
+                        {
+                            self.tel.busy.fetch_add(1, Ordering::Relaxed);
+                            write_line(
+                                &writer,
+                                &job::response(
+                                    &r.id,
+                                    "busy",
+                                    vec![(
+                                        "error",
+                                        Json::str(format!(
+                                            "job queue full ({queue_cap} pending); retry \
+                                             after a response drains"
+                                        )),
+                                    )],
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+            queue.close(); // workers drain what's queued, then exit
+        });
+        // scope joined: every accepted job has answered — now the bye
+        if let Some(id) = &shutdown_id {
+            write_line(&writer, &job::response(id, "ok", vec![("reply", Json::str("bye"))]));
+        }
+        match read_err {
+            Some(e) => Err(e),
+            None => Ok(shutdown_id.is_some()),
+        }
+    }
+
+    /// Serve connections on a local TCP listener, one at a time (the cache
+    /// and context pool persist across connections). Returns when a
+    /// connection issues `shutdown`.
+    pub fn serve_tcp(&self, addr: &str, workers: usize, queue_cap: usize) -> Result<()> {
+        let listener = std::net::TcpListener::bind(addr)
+            .map_err(|e| anyhow::Error::new(ReproError::io(addr, e)))?;
+        let shown =
+            listener.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| addr.to_string());
+        eprintln!("repro serve: listening on {shown} (newline-delimited JSON; see PERF.md)");
+        for conn in listener.incoming() {
+            let stream = match conn {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("warning: accept failed: {e}");
+                    continue;
+                }
+            };
+            let reader = std::io::BufReader::new(
+                stream.try_clone().map_err(|e| anyhow::Error::new(ReproError::io(addr, e)))?,
+            );
+            match self.serve(reader, stream, workers, queue_cap) {
+                Ok(true) => return Ok(()), // shutdown command
+                Ok(false) => {}            // client hung up; next connection
+                Err(e) => eprintln!("warning: connection error: {e:#}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Decimal (human-consumable) wire form of a sweep result — the bit-exact
+/// form lives in the warm tier (`cache::point_to_json`).
+fn point_json(p: &SweepPoint) -> Json {
+    Json::obj(vec![
+        ("bandwidth_bps", Json::num(p.bandwidth_bps)),
+        ("rho", Json::num(p.rho)),
+        ("selected", Json::num(p.selected as f64)),
+        ("e", Json::num(p.e as f64)),
+        ("round_latency", Json::num(p.round_latency)),
+        ("round_cost", Json::num(p.round_cost)),
+    ])
+}
+
+/// One response line: compact JSON + newline, flushed so a piped consumer
+/// sees it immediately. Write failures (e.g. the client hung up) are
+/// swallowed — the service outlives any one connection.
+fn write_line<W: Write>(writer: &Mutex<W>, resp: &Json) {
+    let mut g = writer.lock().expect("response writer lock");
+    let _ = writeln!(g, "{}", resp.to_string_compact());
+    let _ = g.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// `Write` handle the test can read back after `serve` consumed it.
+    #[derive(Clone, Default)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("repro-serve-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn opts(dir: &std::path::Path) -> ServeOpts {
+        ServeOpts { hot_cap_bytes: 1 << 20, warm_dir: Some(dir.to_path_buf()) }
+    }
+
+    #[test]
+    fn service_is_shareable_across_worker_threads() {
+        fn assert_sync<T: Send + Sync>() {}
+        assert_sync::<Service<'static>>();
+    }
+
+    #[test]
+    fn stdin_protocol_end_to_end_without_an_engine() {
+        let dir = tmp_dir("e2e");
+        let svc = Service::new(None, &opts(&dir));
+        let sweep = |id: &str| {
+            format!(
+                "{{\"id\":\"{id}\",\"cmd\":\"sweep\",\"split_dim\":64,\
+                 \"client_params\":6272,\"settle_rounds\":3,\
+                 \"config\":{{\"preset\":\"commag\",\"rho\":0.5}}}}"
+            )
+        };
+        let lines = [
+            r#"{"id":"p1","cmd":"ping"}"#.to_string(),
+            sweep("j1"),
+            sweep("j2"), // identical cell — must be a cache hit
+            "{oops".to_string(),
+            r#"{"id":"r1","cmd":"run","rounds":2,"preset":"commag"}"#.to_string(),
+            r#"{"id":"q","cmd":"shutdown"}"#.to_string(),
+        ];
+        let input = std::io::Cursor::new(lines.join("\n"));
+        let out = SharedBuf::default();
+        let shut = svc.serve(input, out.clone(), 2, 8).unwrap();
+        assert!(shut, "shutdown command must report a deliberate stop");
+
+        let text = String::from_utf8(out.0.lock().unwrap().clone()).unwrap();
+        let mut by_id = std::collections::HashMap::new();
+        for line in text.lines() {
+            let j = Json::parse(line).unwrap_or_else(|e| panic!("bad response {line:?}: {e:#}"));
+            let id = j.get("id").unwrap().as_str().unwrap().to_string();
+            by_id.insert(id, j);
+        }
+        let status =
+            |id: &str| by_id[id].get("status").unwrap().as_str().unwrap().to_string();
+
+        assert_eq!(status("p1"), "ok");
+        assert_eq!(by_id["p1"].get("reply").unwrap().as_str().unwrap(), "pong");
+
+        // exactly one of the twin sweeps computed; the other hit the cache
+        // (either order — they race through two workers)
+        let mut pair = [status("j1"), status("j2")];
+        pair.sort();
+        assert_eq!(pair, ["cache_hit", "ok"], "twin jobs: one cold + one hit\n{text}");
+        let p1 = by_id["j1"].get("point").unwrap().to_canonical_string();
+        let p2 = by_id["j2"].get("point").unwrap().to_canonical_string();
+        assert_eq!(p1, p2, "cache hit must be byte-identical to the cold result");
+
+        // the unparseable line answers as typed invalid under the "?" id
+        assert_eq!(status("?"), "invalid");
+        // run jobs need an engine — typed invalid, not a crash
+        assert_eq!(status("r1"), "invalid");
+        let err = by_id["r1"].get("error").unwrap().as_str().unwrap().to_string();
+        assert!(err.contains("no engine"), "{err}");
+
+        // the bye is the final line, written only after the queue drained
+        let last = Json::parse(text.lines().last().unwrap()).unwrap();
+        assert_eq!(last.get("id").unwrap().as_str().unwrap(), "q");
+        assert_eq!(last.get("reply").unwrap().as_str().unwrap(), "bye");
+
+        // telemetry: 1 executed sweep, 1 hit, 2 invalids (parse + no-engine)
+        assert_eq!(svc.tel.executed.load(Ordering::Relaxed), 1);
+        let hits = svc.tel.hits_hot.load(Ordering::Relaxed)
+            + svc.tel.hits_warm.load(Ordering::Relaxed);
+        assert_eq!(hits, 1);
+        assert_eq!(svc.tel.invalid.load(Ordering::Relaxed), 2);
+        assert_eq!(svc.tel.failed.load(Ordering::Relaxed), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_results_round_trip_through_both_tiers_bitwise() {
+        let dir = tmp_dir("tiers");
+        let cfg = SimConfig::commag();
+        let o = opts(&dir);
+
+        let svc = Service::new(None, &o);
+        let (cold, s0) = svc.sweep_job(&cfg, 64, 6272, 3).unwrap();
+        assert_eq!(s0, Source::Cold);
+        let (hot, s1) = svc.sweep_job(&cfg, 64, 6272, 3).unwrap();
+        assert_eq!(s1, Source::Hot);
+
+        // a fresh service sharing the warm dir: disk hit, then bitwise
+        let svc2 = Service::new(None, &o);
+        let (warm, s2) = svc2.sweep_job(&cfg, 64, 6272, 3).unwrap();
+        assert_eq!(s2, Source::Warm);
+
+        for (p, what) in [(&hot, "hot"), (&warm, "warm")] {
+            assert_eq!(p.bandwidth_bps.to_bits(), cold.bandwidth_bps.to_bits(), "{what}");
+            assert_eq!(p.rho.to_bits(), cold.rho.to_bits(), "{what}");
+            assert_eq!(p.selected, cold.selected, "{what}");
+            assert_eq!(p.e, cold.e, "{what}");
+            assert_eq!(p.round_latency.to_bits(), cold.round_latency.to_bits(), "{what}");
+            assert_eq!(p.round_cost.to_bits(), cold.round_cost.to_bits(), "{what}");
+        }
+        assert_eq!(svc.tel.executed.load(Ordering::Relaxed), 1, "one cold compute only");
+        assert_eq!(svc2.tel.executed.load(Ordering::Relaxed), 0, "warm hit never computes");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn engine_less_sweep_without_dims_is_typed_invalid() {
+        let svc = Service::new(None, &ServeOpts { hot_cap_bytes: 1 << 20, warm_dir: None });
+        let e = svc.resolve_dims(&SimConfig::commag(), None, Some(6272)).unwrap_err();
+        assert_eq!(ReproError::exit_code_of(&e), 2);
+    }
+}

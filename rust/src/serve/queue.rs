@@ -1,0 +1,161 @@
+//! Bounded MPMC job queue behind the experiment service's backpressure
+//! contract: enqueue is **non-blocking** — a full queue hands the job back
+//! to the caller (which answers a typed `busy` response) instead of
+//! blocking the request reader or panicking — while dequeue blocks until
+//! an item arrives or the queue is closed and drained.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Why [`BoundedQueue::try_push`] handed the item back.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue is at capacity: overload, answer `busy` upstream.
+    Full(T),
+    /// The queue was closed (shutdown in progress): no new work accepted.
+    Closed(T),
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    cap: usize,
+    ready: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "a zero-capacity queue can never accept work");
+        Self {
+            inner: Mutex::new(Inner { items: VecDeque::with_capacity(cap), closed: false }),
+            cap,
+            ready: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("queue lock").items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Non-blocking enqueue. Returns the item inside the error when the
+    /// queue is full or closed, so the caller still owns it for the
+    /// rejection response.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().expect("queue lock");
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Blocking dequeue: `Some(item)` in FIFO order, `None` once the queue
+    /// is closed AND fully drained (workers exit on `None` — queued jobs
+    /// submitted before shutdown still complete).
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().expect("queue lock");
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.ready.wait(g).expect("queue lock");
+        }
+    }
+
+    /// Stop accepting work and wake every blocked `pop`. Items already
+    /// queued are still handed out before `pop` starts returning `None`.
+    pub fn close(&self) {
+        self.inner.lock().expect("queue lock").closed = true;
+        self.ready.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_capacity() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        // full: the item comes back, nothing blocks, nothing panics
+        match q.try_push(3) {
+            Err(PushError::Full(item)) => assert_eq!(item, 3),
+            other => panic!("expected Full rejection, got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        // capacity freed: accepted again
+        q.try_push(4).unwrap();
+        assert_eq!(q.pop(), Some(4));
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q = BoundedQueue::new(4);
+        q.try_push("a").unwrap();
+        q.try_push("b").unwrap();
+        q.close();
+        // closed: new work rejected with the item returned
+        match q.try_push("c") {
+            Err(PushError::Closed(item)) => assert_eq!(item, "c"),
+            other => panic!("expected Closed rejection, got {other:?}"),
+        }
+        // but the already-queued items still drain in order
+        assert_eq!(q.pop(), Some("a"));
+        assert_eq!(q.pop(), Some("b"));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None); // stays terminal
+    }
+
+    #[test]
+    fn blocked_pop_wakes_on_push_and_close() {
+        let q = std::sync::Arc::new(BoundedQueue::new(1));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(v) = q2.pop() {
+                got.push(v);
+            }
+            got
+        });
+        for i in 0..5 {
+            // capacity 1: spin until the consumer drains the slot
+            let mut item = i;
+            loop {
+                match q.try_push(item) {
+                    Ok(()) => break,
+                    Err(PushError::Full(back)) => {
+                        item = back;
+                        std::thread::yield_now();
+                    }
+                    Err(PushError::Closed(_)) => panic!("queue closed early"),
+                }
+            }
+        }
+        q.close();
+        assert_eq!(consumer.join().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,139 @@
+//! Experiment-service gate (artifact-dependent; SKIPs without
+//! `make artifacts`): the served cold run, the hot-tier hit, the warm-tier
+//! reload in a fresh service, and a one-shot `Runner` run must be pairwise
+//! bitwise-identical — and the repeated job must execute **zero** additional
+//! framework rounds, pinned by the engine's PJRT call counters.
+
+mod common;
+
+use repro::config::FrameworkKind;
+use repro::coordinator::Runner;
+use repro::metrics::RunSummary;
+use repro::serve::{ServeOpts, Service, Source};
+
+/// Bitwise equality of every deterministic summary field (`wall_secs`
+/// inside records is host wallclock; `same_process` additionally pins it —
+/// a cache hit returns the stored records, bits and all).
+fn assert_summaries_bitwise_eq(a: &RunSummary, b: &RunSummary, what: &str, same_process: bool) {
+    assert_eq!(a.framework, b.framework, "{what}: framework");
+    assert_eq!(a.preset, b.preset, "{what}: preset");
+    assert_eq!(a.rounds, b.rounds, "{what}: rounds");
+    assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits(), "{what}: final_accuracy");
+    assert_eq!(a.best_accuracy.to_bits(), b.best_accuracy.to_bits(), "{what}: best_accuracy");
+    assert_eq!(a.rounds_to_target, b.rounds_to_target, "{what}: rounds_to_target");
+    assert_eq!(
+        a.time_to_target.map(f64::to_bits),
+        b.time_to_target.map(f64::to_bits),
+        "{what}: time_to_target"
+    );
+    assert_eq!(a.total_sim_time.to_bits(), b.total_sim_time.to_bits(), "{what}: total_sim_time");
+    assert_eq!(
+        a.total_comm_bytes.to_bits(),
+        b.total_comm_bytes.to_bits(),
+        "{what}: total_comm_bytes"
+    );
+    assert_eq!(
+        a.total_comm_cost.to_bits(),
+        b.total_comm_cost.to_bits(),
+        "{what}: total_comm_cost"
+    );
+    assert_eq!(
+        a.total_comp_cost.to_bits(),
+        b.total_comp_cost.to_bits(),
+        "{what}: total_comp_cost"
+    );
+    assert_eq!(a.mean_selected.to_bits(), b.mean_selected.to_bits(), "{what}: mean_selected");
+    assert_eq!(a.mean_available.to_bits(), b.mean_available.to_bits(), "{what}: mean_available");
+    assert_eq!(a.total_dropouts, b.total_dropouts, "{what}: total_dropouts");
+    assert_eq!(a.total_retries, b.total_retries, "{what}: total_retries");
+    assert_eq!(a.quorum_misses, b.quorum_misses, "{what}: quorum_misses");
+    assert_eq!(a.records.len(), b.records.len(), "{what}: record count");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        common::assert_records_bitwise_eq(ra, rb, what);
+        if same_process {
+            assert_eq!(
+                ra.wall_secs.to_bits(),
+                rb.wall_secs.to_bits(),
+                "{what}: wall_secs @r{} (a cache hit must return the stored bits)",
+                ra.round
+            );
+        }
+    }
+}
+
+#[test]
+fn served_runs_hit_cache_with_zero_extra_engine_work_and_bitwise_parity() {
+    let Some(engine) = common::try_engine() else { return };
+    let cfg = common::tiny_cfg();
+    const ROUNDS: usize = 3;
+    let warm_dir = std::env::temp_dir().join(format!("repro-service-it-{}", std::process::id()));
+    std::fs::remove_dir_all(&warm_dir).ok();
+    let opts = ServeOpts { hot_cap_bytes: 8 << 20, warm_dir: Some(warm_dir.clone()) };
+
+    // (1) served cold run
+    let svc = Service::new(Some(&engine), &opts);
+    let (cold, src) = svc.run_job(&cfg, FrameworkKind::SplitMe, ROUNDS).unwrap();
+    assert_eq!(src, Source::Cold);
+    assert_eq!(cold.rounds, ROUNDS);
+    let calls_after_cold = engine.total_calls();
+    let builds_after_cold = engine.context_builds();
+    assert!(calls_after_cold > 0, "a cold run must execute PJRT artifacts");
+
+    // (2) the identical job again: hot-tier hit, ZERO additional engine
+    // executions and zero context builds — the whole point of the service
+    let (hot, src) = svc.run_job(&cfg, FrameworkKind::SplitMe, ROUNDS).unwrap();
+    assert_eq!(src, Source::Hot);
+    assert_eq!(
+        engine.total_calls(),
+        calls_after_cold,
+        "a cache hit must not execute a single artifact"
+    );
+    assert_eq!(engine.context_builds(), builds_after_cold, "a cache hit must not build a context");
+    assert_summaries_bitwise_eq(&cold, &hot, "hot hit vs cold", true);
+
+    // (3) a fresh service over the same warm dir: disk reload, still zero
+    // engine work, still bitwise — including wall_secs, which round-trips
+    // through the bit-hex text format
+    let svc2 = Service::new(Some(&engine), &opts);
+    let (warm, src) = svc2.run_job(&cfg, FrameworkKind::SplitMe, ROUNDS).unwrap();
+    assert_eq!(src, Source::Warm);
+    assert_eq!(engine.total_calls(), calls_after_cold, "a warm hit must not execute artifacts");
+    assert_eq!(engine.context_builds(), builds_after_cold, "a warm hit must not build a context");
+    assert_summaries_bitwise_eq(&cold, &warm, "warm reload vs cold", true);
+
+    // (4) one-shot parity: the same training run through the plain Runner
+    // path (`repro run`) must match the served run bit for bit
+    let oneshot = Runner::new(&engine, &cfg, FrameworkKind::SplitMe)
+        .unwrap()
+        .train(ROUNDS)
+        .unwrap();
+    assert_summaries_bitwise_eq(&cold, &oneshot, "one-shot Runner vs served", false);
+
+    std::fs::remove_dir_all(&warm_dir).ok();
+}
+
+#[test]
+fn distinct_jobs_share_one_context_but_not_results() {
+    let Some(engine) = common::try_engine() else { return };
+    let cfg = common::tiny_cfg();
+    let svc = Service::new(Some(&engine), &ServeOpts { hot_cap_bytes: 8 << 20, warm_dir: None });
+
+    let builds_before = engine.context_builds();
+    let (two, src) = svc.run_job(&cfg, FrameworkKind::SplitMe, 2).unwrap();
+    assert_eq!(src, Source::Cold);
+    // a different round budget is a different cache key...
+    let (three, src) = svc.run_job(&cfg, FrameworkKind::SplitMe, 3).unwrap();
+    assert_eq!(src, Source::Cold);
+    assert_eq!(two.rounds, 2);
+    assert_eq!(three.rounds, 3);
+    // ...but the same config reuses the one shared context
+    assert_eq!(
+        engine.context_builds() - builds_before,
+        1,
+        "both jobs must share a single ExperimentContext"
+    );
+    // and the shared-context prefix is the same trajectory
+    for (ra, rb) in two.records.iter().zip(&three.records) {
+        common::assert_records_bitwise_eq(ra, rb, "2-round vs 3-round prefix");
+    }
+}
