@@ -41,8 +41,25 @@ pub fn waterfill(
     bandwidth_bps: f64,
     b_min: f64,
 ) -> Vec<f64> {
+    waterfill_rates(client_time, bytes, &vec![bandwidth_bps; client_time.len()], b_min)
+}
+
+/// [`waterfill`] with heterogeneous per-client effective rates (P2′):
+/// client m's fraction is priced against its own `rates_bps[m]`, so
+/// `b_m(tau) = S'_m·8 / (r_m (tau - E Q_C,m))` — same KKT structure, same
+/// unique bisection root. The expression shapes match the scalar version
+/// exactly, so `rates_bps[m] == B` for all m is bitwise identical to
+/// [`waterfill`] (which now delegates here).
+pub fn waterfill_rates(
+    client_time: &[f64],
+    bytes: &[f64],
+    rates_bps: &[f64],
+    b_min: f64,
+) -> Vec<f64> {
     let k = client_time.len();
     assert!(k > 0, "waterfill over empty selection");
+    assert_eq!(k, rates_bps.len(), "one effective rate per selected client");
+    assert!(rates_bps.iter().all(|&r| r > 0.0), "effective rates must be positive");
     let floor_sum = b_min * k as f64;
     assert!(
         floor_sum <= 1.0 + 1e-9,
@@ -58,12 +75,13 @@ pub fn waterfill(
         client_time
             .iter()
             .zip(bytes)
-            .map(|(&t, &s)| {
+            .zip(rates_bps)
+            .map(|((&t, &s), &rate)| {
                 let dt = tau - t;
                 if dt <= 0.0 {
                     f64::INFINITY
                 } else {
-                    (s * 8.0 / (bandwidth_bps * dt)).max(b_min)
+                    (s * 8.0 / (rate * dt)).max(b_min)
                 }
             })
             .sum()
@@ -90,7 +108,8 @@ pub fn waterfill(
     let mut fr: Vec<f64> = client_time
         .iter()
         .zip(bytes)
-        .map(|(&t, &s)| (s * 8.0 / (bandwidth_bps * (tau - t))).max(b_min))
+        .zip(rates_bps)
+        .map(|((&t, &s), &rate)| (s * 8.0 / (rate * (tau - t))).max(b_min))
         .collect();
     // normalize the residual rounding error onto the non-floored clients.
     // The bisection keeps `need(hi) <= 1`, so the excess here is <= 0 and
@@ -168,21 +187,128 @@ pub fn solve_p2_at(
     client_time_scale: f64,
     server_side: bool,
 ) -> Allocation {
+    solve_p2_shares(
+        cfg,
+        bandwidth_bps,
+        None,
+        selected,
+        sizes,
+        e_last,
+        adapt_e,
+        client_time_scale,
+        server_side,
+    )
+}
+
+/// P2′: [`solve_p2_at`] with heterogeneous per-client uplink shares and the
+/// energy term. `shares[i]` scales the shared budget into selected client
+/// i's effective channel rate `r_i = shares[i] * bandwidth_bps` (the
+/// scenario engine's `RoundEnv::shares_for` hands these over); `None` — or
+/// all-1.0 shares — means the homogeneous model.
+///
+/// The homogeneous-identity gate: with `shares == None`/all-1.0 AND
+/// `cfg.rho_e == 0` this runs the EXACT pre-P2′ eval body (same calls, same
+/// expression shapes), so it is bitwise identical to the historical solver —
+/// the energy term and the rate generalization are enabled structurally,
+/// never by multiplying by 1.0 or adding 0.0.
+///
+/// With energy enabled (`cfg.rho_e > 0`), each client's waterfill pricing
+/// rate is discounted by `1 + rho_e * p_tx,m`: an expensive transmitter
+/// looks slower to the KKT solve, receives a larger fraction, and therefore
+/// spends less wall-clock (and fewer joules) on air. The objective becomes
+/// `K_eps(E) * (round_cost + rho_e * E_round)` with `E_round` from
+/// [`oran::round_energy`] (radio + client-side compute energy).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_p2_shares(
+    cfg: &SimConfig,
+    bandwidth_bps: f64,
+    shares: Option<&[f64]>,
+    selected: &[&RicProfile],
+    sizes: &[UploadSizes],
+    e_last: usize,
+    adapt_e: bool,
+    client_time_scale: f64,
+    server_side: bool,
+) -> Allocation {
     assert!(!selected.is_empty());
+    if let Some(s) = shares {
+        assert_eq!(s.len(), selected.len(), "one uplink share per selected client");
+    }
+    // all-1.0 shares are semantically homogeneous: collapse to None so the
+    // representation a caller happens to hold can never change the bits
+    let shares = shares.filter(|s| s.iter().any(|&v| v != 1.0));
     let bytes: Vec<f64> = sizes.iter().map(|s| s.total()).collect();
+    let em = oran::EnergyModel::from_cfg(cfg);
+    let scalar_path = shares.is_none() && !em.enabled();
+
+    // heterogeneous-path rate vectors (unused — and unallocated — on the
+    // scalar path): the TRUE rate prices latency/comm/energy, the FILL rate
+    // adds the energy discount that steers joule-hungry clients
+    let (true_rates, fill_rates): (Vec<f64>, Vec<f64>) = if scalar_path {
+        (Vec::new(), Vec::new())
+    } else {
+        let tr: Vec<f64> = match shares {
+            Some(s) => s.iter().map(|&v| v * bandwidth_bps).collect(),
+            None => vec![bandwidth_bps; selected.len()],
+        };
+        let fr = if em.enabled() {
+            tr.iter()
+                .zip(selected)
+                .map(|(&r, ric)| r / (1.0 + em.rho_e * em.tx_power(ric)))
+                .collect()
+        } else {
+            tr.clone()
+        };
+        (tr, fr)
+    };
 
     let eval = |e: usize| -> Allocation {
         let ct: Vec<f64> = selected
             .iter()
             .map(|r| e as f64 * r.q_c * client_time_scale)
             .collect();
-        let fracs = waterfill(&ct, &bytes, bandwidth_bps, cfg.b_min);
-        let latency = oran::round_latency(
+        if scalar_path {
+            // pre-P2′ body, verbatim: the bitwise gate
+            let fracs = waterfill(&ct, &bytes, bandwidth_bps, cfg.b_min);
+            let latency = oran::round_latency(
+                selected,
+                &fracs,
+                sizes,
+                e,
+                bandwidth_bps,
+                0.0,
+                client_time_scale,
+            );
+            let lat_total = if server_side {
+                latency.total()
+            } else {
+                latency.client_phase
+            };
+            let r_co = oran::comm_cost(&fracs, bandwidth_bps, cfg.p_c);
+            let r_cp = if server_side {
+                oran::comp_cost(selected, e, cfg.p_tr)
+            } else {
+                selected
+                    .iter()
+                    .map(|r| e as f64 * r.q_c * client_time_scale * cfg.p_tr)
+                    .sum()
+            };
+            let round_cost = oran::total_cost(cfg.rho, r_co, r_cp, lat_total);
+            return Allocation {
+                fracs,
+                e,
+                latency,
+                round_cost,
+                objective: cfg.k_eps(e) * round_cost,
+            };
+        }
+        let fracs = waterfill_rates(&ct, &bytes, &fill_rates, cfg.b_min);
+        let latency = oran::round_latency_rates(
             selected,
             &fracs,
             sizes,
             e,
-            bandwidth_bps,
+            &true_rates,
             0.0,
             client_time_scale,
         );
@@ -191,7 +317,7 @@ pub fn solve_p2_at(
         } else {
             latency.client_phase
         };
-        let r_co = oran::comm_cost(&fracs, bandwidth_bps, cfg.p_c);
+        let r_co = oran::comm_cost_rates(&fracs, &true_rates, cfg.p_c);
         let r_cp = if server_side {
             oran::comp_cost(selected, e, cfg.p_tr)
         } else {
@@ -201,13 +327,18 @@ pub fn solve_p2_at(
                 .sum()
         };
         let round_cost = oran::total_cost(cfg.rho, r_co, r_cp, lat_total);
-        Allocation {
-            fracs,
-            e,
-            latency,
-            round_cost,
-            objective: cfg.k_eps(e) * round_cost,
-        }
+        let objective = if em.enabled() {
+            let energy = oran::round_energy(
+                &em,
+                selected,
+                |i| oran::uplink_time(bytes[i], fracs[i], true_rates[i]),
+                |r| e as f64 * r.q_c * client_time_scale,
+            );
+            cfg.k_eps(e) * (round_cost + em.rho_e * energy)
+        } else {
+            cfg.k_eps(e) * round_cost
+        };
+        Allocation { fracs, e, latency, round_cost, objective }
     };
 
     if !adapt_e {
@@ -325,6 +456,100 @@ mod tests {
         for (x, y) in a.fracs.iter().zip(&b.fracs) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+    }
+
+    #[test]
+    fn waterfill_rates_uniform_is_bitwise_waterfill() {
+        let ct = vec![0.004, 0.008, 0.002, 0.006];
+        let by = vec![9e4, 6e4, 1.2e5, 3e4];
+        let a = waterfill(&ct, &by, 1e9, 0.02);
+        let b = waterfill_rates(&ct, &by, &[1e9; 4], 0.02);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn waterfill_rates_gives_slow_clients_more_bandwidth() {
+        // identical compute and bytes; client 1 on a half-rate channel must
+        // receive a strictly larger fraction to hit the common tau
+        let ct = vec![0.003; 3];
+        let by = vec![2e5; 3];
+        let fr = waterfill_rates(&ct, &by, &[1e9, 0.5e9, 1e9], 0.01);
+        assert!((fr.iter().sum::<f64>() - 1.0).abs() < 1e-9, "{fr:?}");
+        assert!(fr.iter().all(|&f| f >= 0.01 - 1e-12), "{fr:?}");
+        assert!(fr[1] > fr[0], "{fr:?}");
+        assert_eq!(fr[0].to_bits(), fr[2].to_bits(), "equal-rate twins must tie");
+        // and the unfloored completion times still equalize
+        let t: Vec<f64> = [1e9, 0.5e9, 1e9]
+            .iter()
+            .zip(&fr)
+            .map(|(&r, &f)| 0.003 + 2e5 * 8.0 / (f * r))
+            .collect();
+        for w in t.windows(2) {
+            assert!((w[0] - w[1]).abs() < 1e-6, "{t:?}");
+        }
+    }
+
+    #[test]
+    fn solve_p2_shares_uniform_is_bitwise_scalar_path() {
+        let (cfg, topo) = setup(50);
+        let sel: Vec<&RicProfile> = topo.rics.iter().take(12).collect();
+        let a = solve_p2_at(
+            &cfg, cfg.bandwidth_bps, &sel, &sizes(12), cfg.e_initial, true, 1.0, true,
+        );
+        // an all-1.0 share vector a caller happens to materialize must
+        // collapse to the exact scalar path (the representation-independence
+        // half of the homogeneous-identity gate)
+        let ones = vec![1.0; 12];
+        let b = solve_p2_shares(
+            &cfg, cfg.bandwidth_bps, Some(&ones), &sel, &sizes(12), cfg.e_initial, true, 1.0, true,
+        );
+        assert_eq!(a.e, b.e);
+        assert_eq!(a.round_cost.to_bits(), b.round_cost.to_bits());
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+        assert_eq!(a.latency.total().to_bits(), b.latency.total().to_bits());
+        for (x, y) in a.fracs.iter().zip(&b.fracs) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn solve_p2_shares_prices_heterogeneous_rates() {
+        let (cfg, topo) = setup(50);
+        let sel: Vec<&RicProfile> = topo.rics.iter().take(6).collect();
+        let shares = vec![1.0, 0.3, 1.0, 0.3, 1.0, 1.0];
+        // fixed E so the two solves are directly comparable
+        let het = solve_p2_shares(
+            &cfg, cfg.bandwidth_bps, Some(&shares), &sel, &sizes(6), 10, false, 1.0, true,
+        );
+        let hom = solve_p2_at(&cfg, cfg.bandwidth_bps, &sel, &sizes(6), 10, false, 1.0, true);
+        assert!((het.fracs.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(het.fracs.iter().all(|&f| f >= cfg.b_min - 1e-12));
+        // the slow-RAT clients soak up extra budget relative to the
+        // homogeneous solve, and the modeled round is slower
+        assert!(het.fracs[1] > hom.fracs[1], "{:?} vs {:?}", het.fracs, hom.fracs);
+        assert!(het.latency.client_phase > hom.latency.client_phase);
+    }
+
+    #[test]
+    fn solve_p2_energy_term_changes_objective_structurally() {
+        let (mut cfg, topo) = setup(50);
+        let sel: Vec<&RicProfile> = topo.rics.iter().take(8).collect();
+        let base = solve_p2(&cfg, &sel, &sizes(8), cfg.e_initial, true, 1.0, true);
+        cfg.rho_e = 0.5;
+        let energy = solve_p2(&cfg, &sel, &sizes(8), cfg.e_initial, true, 1.0, true);
+        // same K_eps scale: the energy objective must sit strictly above the
+        // pure-cost objective at the same E (it adds a positive term)
+        assert!(
+            energy.objective > cfg.k_eps(energy.e) * energy.round_cost,
+            "energy term missing from the objective"
+        );
+        // rho_e = 0 never pays the term, not even a *0.0
+        assert_eq!(
+            base.objective.to_bits(),
+            (cfg.k_eps(base.e) * base.round_cost).to_bits()
+        );
     }
 
     #[test]

@@ -103,18 +103,30 @@ impl Framework for FedAvg {
             ids.len()
         ];
         let scale = 1.0 / cfg.omega; // full model on the weak edge
-        let mut latency =
-            oran::round_latency(&selected, &fracs, &sizes, e, topo_r.bandwidth_bps, 0.0, scale);
+        // per-client effective rates (P2′): None on homogeneous rounds keeps
+        // every expression below on the historical scalar-B path bit for bit
+        let sel_shares = env.shares_for(&ids);
+        let rates: Vec<f64> = match &sel_shares {
+            Some(s) => s.iter().map(|&v| v * topo_r.bandwidth_bps).collect(),
+            None => vec![topo_r.bandwidth_bps; ids.len()],
+        };
+        let mut latency = match &sel_shares {
+            Some(_) => oran::round_latency_rates(&selected, &fracs, &sizes, e, &rates, 0.0, scale),
+            None => {
+                oran::round_latency(&selected, &fracs, &sizes, e, topo_r.bandwidth_bps, 0.0, scale)
+            }
+        };
         latency.server_phase = 0.0; // no rApp training in plain FL
 
         // fault layer: resolve the shared per-round events against this
-        // round's selection; the uniform uplink time bounds each client's
-        // retry budget (slack = deadline - compute - uplink)
-        let uplink = sizes[0].total() * 8.0 / (fracs[0] * topo_r.bandwidth_bps);
+        // round's selection; each client's uplink time (over its own
+        // effective rate) bounds its retry budget
         let fate = ctx.faults.round(round).resolve(
             &ids,
             |m| {
                 let r = topo_r.by_id(m).expect("resolved from this round's selection");
+                let i = ids.iter().position(|&x| x == m).expect("resolved from this selection");
+                let uplink = sizes[0].total() * 8.0 / (fracs[0] * rates[i]);
                 r.t_round - e as f64 * r.q_c * scale - uplink
             },
             cfg.retry_backoff_s,
@@ -153,13 +165,24 @@ impl Framework for FedAvg {
         if fate.max_backoff > 0.0 {
             latency.max_uplink += fate.max_backoff;
         }
+        let comm_cost = match &sel_shares {
+            Some(_) => oran::comm_cost_rates(&fracs, &rates, cfg.p_c),
+            None => oran::comm_cost(&fracs, topo_r.bandwidth_bps, cfg.p_c),
+        };
+        let energy_cost = oran::round_energy(
+            &oran::EnergyModel::from_cfg(cfg),
+            &selected,
+            |i| oran::uplink_time(sizes[i].total(), fracs[i], rates[i]),
+            |r| e as f64 * r.q_c * scale,
+        );
         Ok(RoundOutcome {
             selected_ids: ids.clone(),
             e,
             comm_bytes,
             latency,
-            comm_cost: oran::comm_cost(&fracs, topo_r.bandwidth_bps, cfg.p_c),
+            comm_cost,
             comp_cost,
+            energy_cost,
             train_loss,
             dropouts: fate.dropouts,
             retries: fate.retries,

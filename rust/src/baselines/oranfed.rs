@@ -9,7 +9,7 @@
 
 use anyhow::Result;
 
-use crate::allocation::solve_p2_at;
+use crate::allocation::solve_p2_shares;
 use crate::baselines::fedavg::FedAvg;
 use crate::fl::{resolve_client_jobs, state, ExperimentContext, Framework, RoundOutcome};
 use crate::jsonio::Json;
@@ -60,6 +60,9 @@ impl Framework for OranFed {
         let scale = 1.0 / cfg.omega; // full model on the weak edge
         // identity environments borrow ctx.topo — no per-round O(M) copy
         let topo_r = env.effective(&ctx.topo);
+        // per-client uplink shares (P2′): None on homogeneous rounds keeps
+        // selection and allocation on the historical scalar-B path bit for bit
+        let share_map = env.share_map();
 
         // deadline-aware selection over FULL-model local compute; with a
         // selection cap the admitted set is the streaming/indexed top-k
@@ -73,15 +76,17 @@ impl Framework for OranFed {
                 SelectPath::Streaming
             };
             let jobs = resolve_client_jobs(cfg.client_jobs, topo_r.len());
-            self.selector.select_capped(
+            self.selector.select_capped_shares(
                 &topo_r,
                 &CostModel::unsplit(e as f64, scale),
                 cfg.select_cap,
                 path,
                 jobs,
+                share_map,
             )
         } else {
-            let mut sel = self.selector.select(&topo_r, |r| e as f64 * r.q_c * scale);
+            let mut sel =
+                self.selector.select_shares(&topo_r, share_map, |r| e as f64 * r.q_c * scale);
             if sel.is_empty() {
                 sel.push(
                     topo_r
@@ -96,19 +101,36 @@ impl Framework for OranFed {
             selected.len()
         ];
 
-        // bandwidth allocation at fixed E (round-effective B), no server side
-        let alloc = solve_p2_at(cfg, topo_r.bandwidth_bps, &selected, &sizes, e, false, scale, false);
+        // bandwidth allocation at fixed E (round-effective B), no server side;
+        // heterogeneous rounds price each client's fraction at its own rate
+        let sel_shares: Option<Vec<f64>> =
+            share_map.map(|sh| selected.iter().map(|r| *sh.get(r.id)).collect());
+        let alloc = solve_p2_shares(
+            cfg,
+            topo_r.bandwidth_bps,
+            sel_shares.as_deref(),
+            &selected,
+            &sizes,
+            e,
+            false,
+            scale,
+            false,
+        );
+        let rates: Vec<f64> = match &sel_shares {
+            Some(s) => s.iter().map(|&v| v * topo_r.bandwidth_bps).collect(),
+            None => vec![topo_r.bandwidth_bps; selected.len()],
+        };
 
         // fault layer: each selected client's retry budget is its deadline
         // slack after compute + its ALLOCATED uplink time (water-filling
-        // fractions, not uniform shares)
+        // fractions over its own effective rate, not uniform shares)
         let ids: Vec<usize> = selected.iter().map(|r| r.id).collect();
         let fate = ctx.faults.round(round).resolve(
             &ids,
             |m| {
                 let i = ids.iter().position(|&x| x == m).expect("resolved from this selection");
                 let r = selected[i];
-                let uplink = sizes[i].total() * 8.0 / (alloc.fracs[i] * topo_r.bandwidth_bps);
+                let uplink = sizes[i].total() * 8.0 / (alloc.fracs[i] * rates[i]);
                 r.t_round - e as f64 * r.q_c * scale - uplink
             },
             cfg.retry_backoff_s,
@@ -165,13 +187,24 @@ impl Framework for OranFed {
                 .map(|(r, _)| e as f64 * r.q_c * scale * cfg.p_tr)
                 .sum()
         };
+        let comm_cost = match &sel_shares {
+            Some(_) => oran::comm_cost_rates(&alloc.fracs, &rates, cfg.p_c),
+            None => oran::comm_cost(&alloc.fracs, topo_r.bandwidth_bps, cfg.p_c),
+        };
+        let energy_cost = oran::round_energy(
+            &oran::EnergyModel::from_cfg(cfg),
+            &selected,
+            |i| oran::uplink_time(sizes[i].total(), alloc.fracs[i], rates[i]),
+            |r| e as f64 * r.q_c * scale,
+        );
         Ok(RoundOutcome {
             selected_ids: ids,
             e,
             comm_bytes,
             latency,
-            comm_cost: oran::comm_cost(&alloc.fracs, topo_r.bandwidth_bps, cfg.p_c),
+            comm_cost,
             comp_cost,
+            energy_cost,
             train_loss,
             dropouts: fate.dropouts,
             retries: fate.retries,

@@ -66,17 +66,26 @@ impl Framework for VanillaSfl {
         let topo_r = env.effective(&ctx.topo);
         let ids = sample_from(rng, "sfl_select", round, &env.available_ids(), cfg.sfl_k);
         let e = cfg.sfl_e;
+        // per-client effective rates (P2′): None on homogeneous rounds keeps
+        // every expression below on the historical scalar-B path bit for bit
+        let sel_shares = env.shares_for(&ids);
+        let rates: Vec<f64> = match &sel_shares {
+            Some(s) => s.iter().map(|&v| v * topo_r.bandwidth_bps).collect(),
+            None => vec![topo_r.bandwidth_bps; ids.len()],
+        };
 
         // fault layer: resolve the shared per-round events before the real
         // compute so non-surviving clients' discarded work is never
-        // dispatched. Uniform-bandwidth uplink of the half-model bounds the
-        // retry budget (slack = deadline - compute - uplink)
+        // dispatched. Uniform-fraction uplink of the half-model over each
+        // client's own effective rate bounds the retry budget
+        // (slack = deadline - compute - uplink)
         let half_bytes = ctx.client_model_bytes();
-        let uplink = half_bytes * 8.0 / ((1.0 / ids.len() as f64) * topo_r.bandwidth_bps);
         let fate = ctx.faults.round(round).resolve(
             &ids,
             |m| {
                 let r = topo_r.by_id(m).expect("resolved from this round's selection");
+                let i = ids.iter().position(|&x| x == m).expect("resolved from this selection");
+                let uplink = half_bytes * 8.0 / ((1.0 / ids.len() as f64) * rates[i]);
                 r.t_round - e as f64 * (r.q_c + r.q_s) - uplink
             },
             cfg.retry_backoff_s,
@@ -161,9 +170,12 @@ impl Framework for VanillaSfl {
             ids.len()
         ];
         let per_update = ctx.smashed_batch_bytes();
-        let mut latency = oran::round_latency(
-            &selected, &fracs, &sizes, e, topo_r.bandwidth_bps, per_update, 1.0,
-        );
+        let mut latency = match &sel_shares {
+            Some(_) => oran::round_latency_rates(&selected, &fracs, &sizes, e, &rates, per_update, 1.0),
+            None => oran::round_latency(
+                &selected, &fracs, &sizes, e, topo_r.bandwidth_bps, per_update, 1.0,
+            ),
+        };
 
         // clean rounds keep the historical accounting expressions verbatim
         // (the bitwise `faults=none` gate); faulty rounds charge per fate —
@@ -198,13 +210,26 @@ impl Framework for VanillaSfl {
             latency.max_uplink += fate.max_backoff;
         }
 
+        let comm_cost = match &sel_shares {
+            Some(_) => oran::comm_cost_rates(&fracs, &rates, cfg.p_c),
+            None => oran::comm_cost(&fracs, topo_r.bandwidth_bps, cfg.p_c),
+        };
+        // client-device joules: the per-update smashed pings ride the same
+        // uplink channel as the half-model, so both bill tx_power seconds
+        let energy_cost = oran::round_energy(
+            &oran::EnergyModel::from_cfg(cfg),
+            &selected,
+            |i| oran::uplink_time(sizes[i].total() + per_update * e as f64, fracs[i], rates[i]),
+            |r| e as f64 * r.q_c,
+        );
         Ok(RoundOutcome {
             selected_ids: ids.clone(),
             e,
             comm_bytes,
             latency,
-            comm_cost: oran::comm_cost(&fracs, topo_r.bandwidth_bps, cfg.p_c),
+            comm_cost,
             comp_cost,
+            energy_cost,
             train_loss,
             dropouts: fate.dropouts,
             retries: fate.retries,

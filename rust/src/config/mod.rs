@@ -71,6 +71,15 @@ pub struct SimConfig {
     pub omega: f64,
     /// rho — Pareto trade-off between resource cost and learning time
     pub rho: f64,
+    /// rho_E — weight of the per-round energy term in the P2′ objective.
+    /// 0 (the default) disables energy pricing structurally and keeps the
+    /// solver bitwise identical to the pre-P2′ path — see
+    /// `oran::EnergyModel` and PERF.md §allocation-P2′
+    pub rho_e: f64,
+    /// base radio transmit power (W) per uploading client (P2′ energy term)
+    pub p_tx: f64,
+    /// base compute power (W) per training client (P2′ energy term)
+    pub p_cmp: f64,
     /// t_round ~ U(lo, hi) slice-specific control-loop deadline (s)
     pub t_round_range: (f64, f64),
     /// alpha — heuristic factor of Algorithm 1
@@ -180,6 +189,9 @@ impl SimConfig {
             b_min: 1.0 / 50.0,
             omega: 0.2,
             rho: 0.8,
+            rho_e: 0.0,
+            p_tx: 2.0,
+            p_cmp: 5.0,
             t_round_range: (50e-3, 100e-3),
             alpha: 0.7,
             e_initial: 20,
@@ -272,6 +284,9 @@ impl SimConfig {
             ("b_min", Json::num(self.b_min)),
             ("omega", Json::num(self.omega)),
             ("rho", Json::num(self.rho)),
+            ("rho_e", Json::num(self.rho_e)),
+            ("p_tx", Json::num(self.p_tx)),
+            ("p_cmp", Json::num(self.p_cmp)),
             ("t_round_range", pair(self.t_round_range)),
             ("alpha", Json::num(self.alpha)),
             ("e_initial", Json::num(self.e_initial as f64)),
@@ -332,6 +347,9 @@ impl SimConfig {
         if let Some(v) = j.opt("b_min") { cfg.b_min = v.as_f64()?; }
         if let Some(v) = j.opt("omega") { cfg.omega = v.as_f64()?; }
         if let Some(v) = j.opt("rho") { cfg.rho = v.as_f64()?; }
+        if let Some(v) = j.opt("rho_e") { cfg.rho_e = v.as_f64()?; }
+        if let Some(v) = j.opt("p_tx") { cfg.p_tx = v.as_f64()?; }
+        if let Some(v) = j.opt("p_cmp") { cfg.p_cmp = v.as_f64()?; }
         if let Some(v) = j.opt("t_round_range") { cfg.t_round_range = pair(v)?; }
         if let Some(v) = j.opt("alpha") { cfg.alpha = v.as_f64()?; }
         if let Some(v) = j.opt("e_initial") { cfg.e_initial = v.as_usize()?; }
@@ -389,6 +407,14 @@ impl SimConfig {
         }
         if !(0.0..=1.0).contains(&self.alpha) {
             bail!("alpha must be in [0,1]");
+        }
+        if !(self.rho_e.is_finite() && self.rho_e >= 0.0) {
+            bail!("rho_e must be finite and >= 0; got {}", self.rho_e);
+        }
+        if !(self.p_tx.is_finite() && self.p_tx >= 0.0)
+            || !(self.p_cmp.is_finite() && self.p_cmp >= 0.0)
+        {
+            bail!("energy powers p_tx/p_cmp must be finite and >= 0");
         }
         if self.e_initial == 0 || self.e_max == 0 || self.e_initial > self.e_max {
             bail!("need 1 <= e_initial <= e_max");
@@ -617,6 +643,32 @@ mod tests {
         let mut c = SimConfig::commag();
         c.checkpoint_every = 5;
         c.record_window = 8;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn energy_knobs_default_off_and_round_trip() {
+        let c = SimConfig::commag();
+        assert_eq!(c.rho_e, 0.0, "energy term must default off (bitwise gate)");
+        assert_eq!((c.p_tx, c.p_cmp), (2.0, 5.0));
+        let mut c = SimConfig::commag();
+        c.rho_e = 0.3;
+        c.p_tx = 1.5;
+        c.p_cmp = 7.0;
+        assert!(c.validate().is_ok());
+        let back =
+            SimConfig::from_json(&Json::parse(&c.to_json().to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back.rho_e, 0.3);
+        assert_eq!(back.p_tx, 1.5);
+        assert_eq!(back.p_cmp, 7.0);
+        // partial override files keep the quiet default
+        let j = Json::parse(r#"{"preset": "commag", "num_clients": 12, "b_min": 0.05}"#).unwrap();
+        assert_eq!(SimConfig::from_json(&j).unwrap().rho_e, 0.0);
+        let mut c = SimConfig::commag();
+        c.rho_e = -0.1;
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::commag();
+        c.p_tx = f64::NAN;
         assert!(c.validate().is_err());
     }
 

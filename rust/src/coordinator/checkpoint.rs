@@ -68,6 +68,8 @@ pub fn record_to_json(r: &RoundRecord) -> Json {
         ("env_dropouts", Json::num(r.env_dropouts as f64)),
         ("retries", Json::num(r.retries as f64)),
         ("quorum_miss", Json::num(r.quorum_miss as f64)),
+        ("energy_cost", state::f64_json(r.energy_cost)),
+        ("env_bw_spread", state::f64_json(r.env_bw_spread)),
     ])
 }
 
@@ -93,6 +95,8 @@ pub fn record_from_json(j: &Json) -> Result<RoundRecord> {
         env_dropouts: j.get("env_dropouts")?.as_usize()?,
         retries: j.get("retries")?.as_usize()?,
         quorum_miss: j.get("quorum_miss")?.as_usize()?,
+        energy_cost: state::f64_from(j.get("energy_cost")?)?,
+        env_bw_spread: state::f64_from(j.get("env_bw_spread")?)?,
     })
 }
 
@@ -116,6 +120,7 @@ pub fn summary_to_json(s: &RunSummary) -> Json {
         ("total_comm_bytes", state::f64_json(s.total_comm_bytes)),
         ("total_comm_cost", state::f64_json(s.total_comm_cost)),
         ("total_comp_cost", state::f64_json(s.total_comp_cost)),
+        ("total_energy_cost", state::f64_json(s.total_energy_cost)),
         ("mean_selected", state::f64_json(s.mean_selected)),
         ("mean_available", state::f64_json(s.mean_available)),
         ("total_dropouts", Json::num(s.total_dropouts as f64)),
@@ -141,6 +146,7 @@ pub fn summary_from_json(j: &Json) -> Result<RunSummary> {
         total_comm_bytes: state::f64_from(j.get("total_comm_bytes")?)?,
         total_comm_cost: state::f64_from(j.get("total_comm_cost")?)?,
         total_comp_cost: state::f64_from(j.get("total_comp_cost")?)?,
+        total_energy_cost: state::f64_from(j.get("total_energy_cost")?)?,
         mean_selected: state::f64_from(j.get("mean_selected")?)?,
         mean_available: state::f64_from(j.get("mean_available")?)?,
         total_dropouts: j.get("total_dropouts")?.as_usize()?,
@@ -257,6 +263,8 @@ mod tests {
             env_dropouts: 1,
             retries: 4,
             quorum_miss: 0,
+            energy_cost: 0.031_25, // exact in binary: survives any formatter
+            env_bw_spread: 0.45,
         }
     }
 
@@ -274,6 +282,8 @@ mod tests {
             r.wall_secs.to_bits(),
             r.env_bw_scale.to_bits(),
             r.env_deadline_scale.to_bits(),
+            r.energy_cost.to_bits(),
+            r.env_bw_spread.to_bits(),
         ]
     }
 
@@ -358,6 +368,7 @@ mod tests {
         assert_eq!(back.time_to_target.map(f64::to_bits), s.time_to_target.map(f64::to_bits));
         assert_eq!(back.total_sim_time.to_bits(), s.total_sim_time.to_bits());
         assert_eq!(back.total_comm_bytes.to_bits(), s.total_comm_bytes.to_bits());
+        assert_eq!(back.total_energy_cost.to_bits(), s.total_energy_cost.to_bits());
         assert_eq!(back.mean_selected.to_bits(), s.mean_selected.to_bits());
         assert_eq!(back.mean_available.to_bits(), s.mean_available.to_bits());
         assert_eq!(

@@ -259,6 +259,8 @@ impl<'e> Runner<'e> {
             env_dropouts: out.dropouts,
             retries: out.retries,
             quorum_miss: out.quorum_miss as usize,
+            energy_cost: out.energy_cost,
+            env_bw_spread: env.bw_spread(),
         })
     }
 

@@ -370,6 +370,74 @@ pub fn fault_table(matrix: &[(String, Vec<RunSummary>)]) {
     }
 }
 
+/// Default ρ_E grid for the energy–cost Pareto sweep: 0 first (bitwise the
+/// energy-blind P2 solver, the frontier's cost-only endpoint), then
+/// log-ish steps into the energy-dominated regime.
+pub const PARETO_RHO_E: [f64; 5] = [0.0, 0.05, 0.1, 0.2, 0.4];
+
+/// Energy–cost Pareto sweep (P2′, PERF.md §allocation-P2′): the SplitMe run
+/// repeated at each energy weight ρ_E, tracing how the allocator trades
+/// round cost against client transmit+compute energy. Every point builds
+/// its own shared context with the same seed, so the cross-point deltas
+/// isolate the ρ_E knob; the ρ_E = 0 point is bitwise the default run.
+pub fn run_pareto(
+    engine: &Engine,
+    base: &SimConfig,
+    rounds: usize,
+    rho_es: &[f64],
+    verbose: bool,
+) -> Result<Vec<(f64, RunSummary)>> {
+    let mut out = Vec::with_capacity(rho_es.len());
+    for &rho_e in rho_es {
+        let mut cfg = base.clone();
+        cfg.rho_e = rho_e;
+        let ctx = ExperimentContext::new(engine, &cfg)?;
+        let mut runner = Runner::shared(&ctx, FrameworkKind::SplitMe)?;
+        if verbose {
+            runner.progress = Some(Box::new(move |r| {
+                eprintln!(
+                    "[pareto rho_e={rho_e}] round {:>3}: sel={:>2} E={:>2} cost={:.2} energy={:.3}",
+                    r.round, r.selected, r.e, r.total_cost, r.energy_cost
+                );
+            }));
+        }
+        out.push((rho_e, runner.train(rounds)?));
+    }
+    Ok(out)
+}
+
+/// Write the per-round CSVs/JSONs of a Pareto sweep under
+/// `dir/pareto_rho<value>/` (one subdirectory per ρ_E point).
+pub fn write_pareto(frontier: &[(f64, RunSummary)], dir: impl AsRef<Path>) -> Result<()> {
+    for (rho_e, s) in frontier {
+        write_all(std::slice::from_ref(s), dir.as_ref().join(format!("pareto_rho{rho_e}")))?;
+    }
+    Ok(())
+}
+
+/// Print the frontier table: per ρ_E point, the round-cost totals against
+/// the energy totals — the two axes of the Pareto trade.
+pub fn pareto_table(frontier: &[(f64, RunSummary)]) {
+    series_header("Pareto frontier — round cost vs client energy (P2\u{2032}, sweeping rho_E)");
+    println!(
+        "{:>7} {:>7} {:>8} {:>10} {:>10} {:>10} {:>10} {:>9}",
+        "rho_E", "rounds", "best_acc", "R_co", "R_cp", "R_E", "R_E/round", "sim_t(s)"
+    );
+    for (rho_e, s) in frontier {
+        println!(
+            "{:>7} {:>7} {:>8.3} {:>10.1} {:>10.3} {:>10.3} {:>10.4} {:>9.2}",
+            rho_e,
+            s.rounds,
+            s.best_accuracy,
+            s.total_comm_cost,
+            s.total_comp_cost,
+            s.total_energy_cost,
+            s.total_energy_cost / s.rounds.max(1) as f64,
+            s.total_sim_time
+        );
+    }
+}
+
 /// Print the paper-vs-measured headline claims (EXPERIMENTS.md source).
 pub fn headline(summaries: &[RunSummary]) {
     series_header("Headline claims");
@@ -421,6 +489,8 @@ mod tests {
             env_dropouts: 0,
             retries: 0,
             quorum_miss: 0,
+            energy_cost: 0.2,
+            env_bw_spread: 0.0,
         }
     }
 

@@ -626,6 +626,13 @@ pub struct RoundOutcome {
     pub latency: RoundLatency,
     pub comm_cost: f64,
     pub comp_cost: f64,
+    /// modeled round energy (J) of the clean round: per-client transmit
+    /// energy over the true effective rates plus client-side compute energy
+    /// ([`crate::oran::round_energy`]). Always populated — priced at the
+    /// base `p_tx`/`p_cmp` powers even when `rho_e == 0` keeps it out of
+    /// the P2′ objective. Fault retry attempts are NOT billed (the energy
+    /// model prices the modeled schedule, not the fault replay).
+    pub energy_cost: f64,
     pub train_loss: f32,
     /// selected clients whose update never reached aggregation this round
     /// (fault layer: crashes, mid-round dropouts, abandoned retries)

@@ -36,10 +36,12 @@ USAGE:
             [--data-shards S] [--stream-records FILE.csv|.jsonl]
             [--reference-path]
   repro run --resume FILE.ckpt [--rounds N] [--out DIR] [--checkpoint FILE]
-  repro experiment [fig3a|fig3b|fig3a_churn|fig4a|fig4b|fig5|scenarios|faults|all]
+  repro experiment [fig3a|fig3b|fig3a_churn|fig4a|fig4b|fig5|scenarios|faults|
+            pareto|all]
             [--splitme-rounds N] [--baseline-rounds N] [--rounds N] [--out DIR]
             [--seed N] [--verbose] [--jobs N] [--client-jobs N]
             [--scenario NAME] [--scenarios a,b,c] [--faults NAME]
+            [--rho-e a,b,c]
   repro scenario record [--scenario NAME] [--rounds N] [--out FILE.csv|.json]
             [--preset commag|vision] [--seed N] [--clients M]
   repro sweep   [--preset commag|vision] [--jobs N] [--scenario NAME]
@@ -49,9 +51,11 @@ USAGE:
   repro inspect
 
 --scenario NAME: dynamic O-RAN environment applied to every round: a preset
-                 (static|fading|churn|rush_hour|stragglers|slice_fading;
-                 default static = today's stationary substrate, bitwise
-                 identical to before) or a trace replay (trace:<file.csv|
+                 (static|fading|churn|rush_hour|stragglers|slice_fading|
+                 multi_rat|cell_edge; default static = today's stationary
+                 substrate, bitwise identical to before; multi_rat/cell_edge
+                 add heterogeneous per-client uplink shares) or a trace
+                 replay (trace:<file.csv|
                  .json> — schema in PERF.md #scenario-engine; rounds past
                  the trace end hold its last row). All frameworks of a
                  comparison see the identical environment stream.
@@ -84,6 +88,11 @@ fig3a_churn:     Fig 3a rerun under churn (default --scenario churn):
 experiment faults: the paired comparison repeated under every fault preset
                  (`none` first as the clean control), CSVs under
                  `faults_<preset>/`; --rounds N caps both round budgets
+experiment pareto: the SplitMe run repeated per energy weight rho_E
+                 (default grid 0,0.05,0.1,0.2,0.4; --rho-e a,b,c overrides),
+                 printing the round-cost vs client-energy frontier (P2');
+                 CSVs under `pareto_rho<value>/`. The rho_E=0 point is
+                 bitwise the energy-blind default run.
 --clients M:     override the preset's federation size (scales b_min so the
                  waterfill floor stays feasible) — M = 10⁵-10⁶ works with
                  --select-cap (PERF.md #federation-scale)
@@ -333,6 +342,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let scenario = args.opt_str("scenario");
     let scenario_list = args.opt_str("scenarios");
     let faults = args.opt_str("faults");
+    let rho_e_list = args.opt_str("rho-e");
     args.finish()?;
 
     let engine = Engine::from_default_manifest()?;
@@ -356,6 +366,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         cfg.faults = f.clone();
     }
     cfg.validate()?;
+    if rho_e_list.is_some() && which != "pareto" {
+        anyhow::bail!("--rho-e only applies to `experiment pareto`");
+    }
 
     if which == "faults" {
         // the fault-matrix experiment: run_comparison × fault preset, with
@@ -378,7 +391,10 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             ),
             (Some(one), None) => one.clone(),
             (None, Some(list)) => list,
-            (None, None) => "static,fading,churn,rush_hour,stragglers,slice_fading".to_string(),
+            (None, None) => {
+                "static,fading,churn,rush_hour,stragglers,slice_fading,multi_rat,cell_edge"
+                    .to_string()
+            }
         };
         let names: Vec<String> = list
             .split(',')
@@ -393,6 +409,36 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         experiments::write_matrix(&matrix, &out)?;
         experiments::scenario_table(&matrix);
         println!("\nraw per-round CSVs in {out}/scenario_<name>/");
+        return Ok(());
+    }
+
+    if which == "pareto" {
+        // the energy–cost frontier: the SplitMe run repeated per rho_E point
+        // (only the P2′ framework reads the energy weight, so the baselines
+        // would just replicate their rho_E=0 rows)
+        let grid: Vec<f64> = match &rho_e_list {
+            Some(list) => list
+                .split(',')
+                .map(|s| s.trim())
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse::<f64>().map_err(|e| {
+                        anyhow::Error::new(repro::errors::ReproError::invalid(format!(
+                            "--rho-e value {s:?}: {e}"
+                        )))
+                    })
+                })
+                .collect::<Result<_>>()?,
+            None => experiments::PARETO_RHO_E.to_vec(),
+        };
+        if grid.is_empty() {
+            anyhow::bail!("--rho-e {:?} names no grid points — nothing to sweep", rho_e_list);
+        }
+        let frontier =
+            experiments::run_pareto(&engine, &cfg, budget.splitme_rounds, &grid, verbose)?;
+        experiments::write_pareto(&frontier, &out)?;
+        experiments::pareto_table(&frontier);
+        println!("\nraw per-round CSVs in {out}/pareto_rho<value>/");
         return Ok(());
     }
 
@@ -414,7 +460,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         }
         other => anyhow::bail!(
             "unknown experiment {other:?} \
-             (fig3a|fig3b|fig3a_churn|fig4a|fig4b|fig5|scenarios|faults|all)"
+             (fig3a|fig3b|fig3a_churn|fig4a|fig4b|fig5|scenarios|faults|pareto|all)"
         ),
     }
     println!("\nraw per-round CSVs in {out}/");
@@ -546,7 +592,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         hot_cap_bytes: hot_cap,
         warm_dir: if no_warm { None } else { Some(cache_dir.into()) },
     };
-    let svc = Service::new(engine.as_ref(), &opts);
+    // advisory lock on the warm dir: a second `repro serve` on the same
+    // --cache-dir fails fast here with the owner's pid
+    let svc = Service::new_locked(engine.as_ref(), &opts)?;
     match listen {
         Some(addr) => svc.serve_tcp(&addr, jobs, queue_cap),
         None => {

@@ -56,6 +56,13 @@ pub struct RoundRecord {
     /// fault layer: 1 when the round finished below `fault_quorum` and the
     /// aggregation was skipped (global model unchanged), else 0
     pub quorum_miss: usize,
+    /// R_E of this round (P2′): selected clients' joules priced at the base
+    /// tx/compute powers — always populated, even when `rho_e = 0` keeps the
+    /// energy term out of the allocation objective
+    pub energy_cost: f64,
+    /// scenario engine: spread (max − min) of the per-client uplink shares
+    /// this round (0.0 on homogeneous rounds)
+    pub env_bw_spread: f64,
 }
 
 /// Aggregated outcome of a run.
@@ -74,6 +81,8 @@ pub struct RunSummary {
     pub total_comm_bytes: f64,
     pub total_comm_cost: f64,
     pub total_comp_cost: f64,
+    /// P2′ energy accounting: sum of per-round `energy_cost` over the run
+    pub total_energy_cost: f64,
     pub mean_selected: f64,
     /// mean candidate-set size over the run (= M under a static scenario);
     /// the denominator Fig-3a-under-churn tracks selection against
@@ -107,6 +116,7 @@ pub struct SummaryAccum {
     total_comm_bytes: f64,
     total_comm_cost: f64,
     total_comp_cost: f64,
+    total_energy_cost: f64,
     selected_sum: f64,
     available_sum: f64,
     total_dropouts: usize,
@@ -129,6 +139,7 @@ impl SummaryAccum {
             total_comm_bytes: 0.0,
             total_comm_cost: 0.0,
             total_comp_cost: 0.0,
+            total_energy_cost: 0.0,
             selected_sum: 0.0,
             available_sum: 0.0,
             total_dropouts: 0,
@@ -146,6 +157,7 @@ impl SummaryAccum {
         self.total_comm_bytes += r.comm_bytes;
         self.total_comm_cost += r.comm_cost;
         self.total_comp_cost += r.comp_cost;
+        self.total_energy_cost += r.energy_cost;
         self.selected_sum += r.selected as f64;
         self.available_sum += r.env_available as f64;
         self.total_dropouts += r.env_dropouts;
@@ -177,6 +189,7 @@ impl SummaryAccum {
             total_comm_bytes: self.total_comm_bytes,
             total_comm_cost: self.total_comm_cost,
             total_comp_cost: self.total_comp_cost,
+            total_energy_cost: self.total_energy_cost,
             mean_selected: if self.rounds > 0 {
                 self.selected_sum / self.rounds as f64
             } else {
@@ -242,6 +255,7 @@ impl RunSummary {
             ("total_comm_bytes", Json::num(self.total_comm_bytes)),
             ("total_comm_cost", Json::num(self.total_comm_cost)),
             ("total_comp_cost", Json::num(self.total_comp_cost)),
+            ("total_energy_cost", Json::num(self.total_energy_cost)),
             ("mean_selected", Json::num(self.mean_selected)),
             ("mean_available", Json::num(self.mean_available)),
             ("total_dropouts", Json::num(self.total_dropouts as f64)),
@@ -259,17 +273,17 @@ impl RunSummary {
 }
 
 /// Column order of the per-round CSV export (batch and streaming).
-pub const CSV_HEADER: &str = "round,selected,e,comm_bytes,round_time,sim_time,comm_cost,comp_cost,total_cost,train_loss,accuracy,test_loss,env_bw_scale,env_available,env_stragglers,env_deadline_scale,env_dropouts,retries,quorum_miss";
+pub const CSV_HEADER: &str = "round,selected,e,comm_bytes,round_time,sim_time,comm_cost,comp_cost,total_cost,train_loss,accuracy,test_loss,env_bw_scale,env_available,env_stragglers,env_deadline_scale,env_dropouts,retries,quorum_miss,energy_cost,env_bw_spread";
 
 /// One CSV row of a [`RoundRecord`] — the exact historical `write_csv`
 /// format, factored out so the streaming sink emits identical bytes.
 fn csv_line(r: &RoundRecord) -> String {
     format!(
-        "{},{},{},{:.1},{:.6},{:.6},{:.4},{:.6},{:.6},{:.5},{:.4},{:.5},{:.4},{},{},{:.4},{},{},{}",
+        "{},{},{},{:.1},{:.6},{:.6},{:.4},{:.6},{:.6},{:.5},{:.4},{:.5},{:.4},{},{},{:.4},{},{},{},{:.6},{:.4}",
         r.round, r.selected, r.e, r.comm_bytes, r.round_time, r.sim_time,
         r.comm_cost, r.comp_cost, r.total_cost, r.train_loss, r.accuracy, r.test_loss,
         r.env_bw_scale, r.env_available, r.env_stragglers, r.env_deadline_scale,
-        r.env_dropouts, r.retries, r.quorum_miss
+        r.env_dropouts, r.retries, r.quorum_miss, r.energy_cost, r.env_bw_spread
     )
 }
 
@@ -297,6 +311,8 @@ pub fn record_json(r: &RoundRecord) -> Json {
         ("env_dropouts", Json::num(r.env_dropouts as f64)),
         ("retries", Json::num(r.retries as f64)),
         ("quorum_miss", Json::num(r.quorum_miss as f64)),
+        ("energy_cost", Json::num(r.energy_cost)),
+        ("env_bw_spread", Json::num(r.env_bw_spread)),
     ])
 }
 
@@ -390,6 +406,8 @@ mod tests {
             env_dropouts: 0,
             retries: 0,
             quorum_miss: 0,
+            energy_cost: 0.3,
+            env_bw_spread: 0.0,
         }
     }
 
@@ -402,6 +420,7 @@ mod tests {
         assert_eq!(s.best_accuracy, 0.85);
         assert_eq!(s.final_accuracy, 0.8);
         assert_eq!(s.total_comm_bytes, 4e6);
+        assert_eq!(s.total_energy_cost, 0.3 * 4.0);
         assert_eq!(s.mean_selected, 10.0);
         assert_eq!(s.mean_available, 50.0);
     }
@@ -427,11 +446,11 @@ mod tests {
         let header = text.lines().next().unwrap();
         assert!(
             header.ends_with(
-                "env_bw_scale,env_available,env_stragglers,env_deadline_scale,env_dropouts,retries,quorum_miss"
+                "env_bw_scale,env_available,env_stragglers,env_deadline_scale,env_dropouts,retries,quorum_miss,energy_cost,env_bw_spread"
             ),
-            "env/fault columns missing from CSV: {header}"
+            "env/fault/energy columns missing from CSV: {header}"
         );
-        assert!(text.lines().nth(1).unwrap().ends_with("1.0000,50,0,1.0000,0,0,0"));
+        assert!(text.lines().nth(1).unwrap().ends_with("1.0000,50,0,1.0000,0,0,0,0.300000,0.0000"));
         std::fs::remove_file(dir).ok();
     }
 
@@ -455,6 +474,7 @@ mod tests {
         assert_eq!(windowed.total_comm_bytes.to_bits(), batch.total_comm_bytes.to_bits());
         assert_eq!(windowed.total_comm_cost.to_bits(), batch.total_comm_cost.to_bits());
         assert_eq!(windowed.total_comp_cost.to_bits(), batch.total_comp_cost.to_bits());
+        assert_eq!(windowed.total_energy_cost.to_bits(), batch.total_energy_cost.to_bits());
         assert_eq!(windowed.mean_selected.to_bits(), batch.mean_selected.to_bits());
         assert_eq!(windowed.mean_available.to_bits(), batch.mean_available.to_bits());
         assert_eq!(windowed.records.len(), 1);

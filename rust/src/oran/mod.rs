@@ -121,6 +121,74 @@ pub fn comm_cost(fracs: &[f64], bandwidth_bps: f64, p_c: f64) -> f64 {
     fracs.iter().sum::<f64>() * bandwidth_bps * p_c / 1e9 // per-Gbps unit
 }
 
+/// Communication resource cost with heterogeneous per-client rates (P2′):
+/// `R_co = sum_m a_m f_m r_m p_c` where `r_m = share_m * B` is client m's
+/// effective channel rate. NOT an algebraic rewrite of [`comm_cost`]: at
+/// uniform rates the two sums associate differently, so callers on the
+/// homogeneous path must keep calling `comm_cost` (the bitwise gate).
+pub fn comm_cost_rates(fracs: &[f64], rates_bps: &[f64], p_c: f64) -> f64 {
+    assert_eq!(fracs.len(), rates_bps.len());
+    fracs.iter().zip(rates_bps).map(|(&f, &r)| f * r).sum::<f64>() * p_c / 1e9
+}
+
+/// Per-client transmit/compute energy pricing (P2′). Powers are derived per
+/// RIC from its slice class — URLLC front-ends burn more joules per second
+/// than mMTC — and the weight `rho_e` folds round energy into the P2
+/// objective. `rho_e == 0` disables the term STRUCTURALLY (callers branch,
+/// they never add `0.0 * x`), which is what keeps the homogeneous path
+/// bitwise identical to the pre-P2′ solver.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyModel {
+    /// weight of the energy term in the P2′ objective (0 = off)
+    pub rho_e: f64,
+    /// base radio transmit power (W) while a client uploads
+    pub p_tx: f64,
+    /// base compute power (W) while a client trains
+    pub p_cmp: f64,
+}
+
+impl EnergyModel {
+    pub fn from_cfg(cfg: &SimConfig) -> Self {
+        Self { rho_e: cfg.rho_e, p_tx: cfg.p_tx, p_cmp: cfg.p_cmp }
+    }
+
+    /// Whether the energy term participates in the objective at all.
+    pub fn enabled(&self) -> bool {
+        self.rho_e != 0.0
+    }
+
+    /// Slice-class power multiplier: eMBB 1.0, mMTC 1.25, URLLC 1.5.
+    pub fn slice_weight(r: &RicProfile) -> f64 {
+        1.0 + 0.25 * r.slice_class as f64
+    }
+
+    /// Effective transmit power (W) of RIC `r`.
+    pub fn tx_power(&self, r: &RicProfile) -> f64 {
+        self.p_tx * Self::slice_weight(r)
+    }
+
+    /// Effective compute power (W) of RIC `r`.
+    pub fn cmp_power(&self, r: &RicProfile) -> f64 {
+        self.p_cmp * Self::slice_weight(r)
+    }
+}
+
+/// Round energy (J): `E_round = sum_m a_m (p_tx,m T^co_m + p_cmp,m T^cp_m)`.
+/// The caller supplies per-selected-index uplink times and per-RIC compute
+/// times so every framework prices exactly the transfers it actually makes.
+pub fn round_energy(
+    em: &EnergyModel,
+    selected: &[&RicProfile],
+    uplink_time_of: impl Fn(usize) -> f64,
+    compute_time_of: impl Fn(&RicProfile) -> f64,
+) -> f64 {
+    selected
+        .iter()
+        .enumerate()
+        .map(|(i, r)| em.tx_power(r) * uplink_time_of(i) + em.cmp_power(r) * compute_time_of(r))
+        .sum()
+}
+
 /// Computation resource cost of one round (Eq 17):
 /// `R_cp = sum_m a_m E (Q_C,m + Q_S,m) p_tr` (both sides billed — the
 /// difference from O-RANFed/MCORANFed the paper calls out).
@@ -168,6 +236,35 @@ pub fn round_latency(
     for ((r, &f), s) in selected.iter().zip(fracs).zip(sizes) {
         let per_round_bytes = s.total() + extra_uplink_per_update * e as f64;
         let t_co = uplink_time(per_round_bytes, f, bandwidth_bps);
+        let t_client = e as f64 * r.q_c * client_time_scale + t_co;
+        lat.client_phase = lat.client_phase.max(t_client);
+        lat.server_phase = lat.server_phase.max(e as f64 * r.q_s);
+        lat.max_uplink = lat.max_uplink.max(t_co);
+    }
+    lat
+}
+
+/// [`round_latency`] with heterogeneous per-client effective rates (P2′):
+/// `rates_bps[i]` replaces the shared `bandwidth_bps` for selected client
+/// `i`. The body keeps the exact expression shapes of the scalar version,
+/// so with `rates_bps[i] == bandwidth_bps` for all i the result is bitwise
+/// identical — division by an equal value is the same operation.
+pub fn round_latency_rates(
+    selected: &[&RicProfile],
+    fracs: &[f64],
+    sizes: &[UploadSizes],
+    e: usize,
+    rates_bps: &[f64],
+    extra_uplink_per_update: f64,
+    client_time_scale: f64,
+) -> RoundLatency {
+    assert_eq!(selected.len(), fracs.len());
+    assert_eq!(selected.len(), sizes.len());
+    assert_eq!(selected.len(), rates_bps.len());
+    let mut lat = RoundLatency::default();
+    for (((r, &f), s), &rate) in selected.iter().zip(fracs).zip(sizes).zip(rates_bps) {
+        let per_round_bytes = s.total() + extra_uplink_per_update * e as f64;
+        let t_co = uplink_time(per_round_bytes, f, rate);
         let t_client = e as f64 * r.q_c * client_time_scale + t_co;
         lat.client_phase = lat.client_phase.max(t_client);
         lat.server_phase = lat.server_phase.max(e as f64 * r.q_s);
@@ -282,5 +379,65 @@ mod tests {
         assert!(rcp > 0.0);
         let tot = total_cost(0.8, rco, rcp, 0.1);
         assert!((tot - (0.8 * (rco + rcp) + 0.2 * 0.1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_rates_at_uniform_rates_is_bitwise_scalar() {
+        let t = topo();
+        let sel: Vec<&RicProfile> = t.rics.iter().take(4).collect();
+        let sizes = vec![UploadSizes { model_bytes: 3e5, feature_bytes: 1e4 }; 4];
+        let fr = vec![0.4, 0.3, 0.2, 0.1];
+        let a = round_latency(&sel, &fr, &sizes, 7, 1e9, 2e5, 1.3);
+        let b = round_latency_rates(&sel, &fr, &sizes, 7, &[1e9; 4], 2e5, 1.3);
+        assert_eq!(a.client_phase.to_bits(), b.client_phase.to_bits());
+        assert_eq!(a.server_phase.to_bits(), b.server_phase.to_bits());
+        assert_eq!(a.max_uplink.to_bits(), b.max_uplink.to_bits());
+    }
+
+    #[test]
+    fn latency_rates_slow_client_dominates_uplink() {
+        let t = topo();
+        let sel: Vec<&RicProfile> = t.rics.iter().take(2).collect();
+        let sizes = vec![UploadSizes { model_bytes: 1e6, feature_bytes: 0.0 }; 2];
+        let fr = vec![0.5, 0.5];
+        // client 1 parked on a 4x-slower RAT: its uplink alone sets max_uplink
+        let lat = round_latency_rates(&sel, &fr, &sizes, 1, &[1e9, 0.25e9], 0.0, 1.0);
+        let slow = uplink_time(1e6, 0.5, 0.25e9);
+        assert_eq!(lat.max_uplink.to_bits(), slow.to_bits());
+        assert!(lat.max_uplink > 3.9 * uplink_time(1e6, 0.5, 1e9));
+    }
+
+    #[test]
+    fn comm_cost_rates_prices_each_client_at_its_own_rate() {
+        // uniform rates agree with the scalar model to rounding
+        let a = comm_cost(&[0.25; 4], 1e9, 1.0);
+        let b = comm_cost_rates(&[0.25; 4], &[1e9; 4], 1.0);
+        assert!((a - b).abs() < 1e-12);
+        // a half-rate client pays half for the same fraction
+        let het = comm_cost_rates(&[0.5, 0.5], &[1e9, 0.5e9], 1.0);
+        assert!((het - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_model_weights_slices_and_sums_round_energy() {
+        let t = topo();
+        let mut cfg = SimConfig::commag();
+        cfg.rho_e = 0.5;
+        let em = EnergyModel::from_cfg(&cfg);
+        assert!(em.enabled());
+        assert!(!EnergyModel { rho_e: 0.0, ..em }.enabled());
+        // slice weights: eMBB 1.0 < mMTC 1.25 < URLLC 1.5
+        assert_eq!(EnergyModel::slice_weight(&t.rics[0]), 1.0);
+        assert_eq!(EnergyModel::slice_weight(&t.rics[1]), 1.25);
+        assert_eq!(EnergyModel::slice_weight(&t.rics[2]), 1.5);
+        assert!(em.tx_power(&t.rics[2]) > em.tx_power(&t.rics[0]));
+        let sel: Vec<&RicProfile> = t.rics.iter().take(3).collect();
+        let e = round_energy(&em, &sel, |_| 0.01, |r| 5.0 * r.q_c);
+        let manual: f64 = sel
+            .iter()
+            .map(|r| em.tx_power(r) * 0.01 + em.cmp_power(r) * 5.0 * r.q_c)
+            .sum();
+        assert_eq!(e.to_bits(), manual.to_bits());
+        assert!(e > 0.0);
     }
 }

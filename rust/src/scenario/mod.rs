@@ -72,6 +72,14 @@ pub enum ScenarioKind {
     /// tightens all its clients' deadlines together and each bad slice
     /// takes a bite out of the shared uplink
     SliceFading,
+    /// heterogeneous radio access (P2′): each client carries its own
+    /// Gilbert–Elliott chain flipping between a fast and a slow RAT tier —
+    /// the per-client uplink share moves, the shared budget B does not
+    MultiRat,
+    /// persistent per-client bandwidth tiers (P2′): client `id % k` fixes a
+    /// cell-center/mid/edge uplink share for the whole run — deterministic
+    /// and seed-independent, like `rush_hour`
+    CellEdge,
     /// replay a recorded/measured per-round environment stream from a file
     /// (config spelling `trace:<path>`; schema in [`trace`])
     Trace(String),
@@ -88,6 +96,8 @@ impl ScenarioKind {
             Self::RushHour => "rush_hour",
             Self::Stragglers => "stragglers",
             Self::SliceFading => "slice_fading",
+            Self::MultiRat => "multi_rat",
+            Self::CellEdge => "cell_edge",
             Self::Trace(_) => "trace",
         }
     }
@@ -122,7 +132,7 @@ impl ScenarioKind {
     }
 
     /// The synthetic presets (a trace is a file, not a preset).
-    pub fn all() -> [ScenarioKind; 6] {
+    pub fn all() -> [ScenarioKind; 8] {
         [
             Self::Static,
             Self::Fading,
@@ -130,12 +140,22 @@ impl ScenarioKind {
             Self::RushHour,
             Self::Stragglers,
             Self::SliceFading,
+            Self::MultiRat,
+            Self::CellEdge,
         ]
     }
 
     /// The dynamic presets (everything synthetic but `static`).
-    pub fn dynamic() -> [ScenarioKind; 5] {
-        [Self::Fading, Self::Churn, Self::RushHour, Self::Stragglers, Self::SliceFading]
+    pub fn dynamic() -> [ScenarioKind; 7] {
+        [
+            Self::Fading,
+            Self::Churn,
+            Self::RushHour,
+            Self::Stragglers,
+            Self::SliceFading,
+            Self::MultiRat,
+            Self::CellEdge,
+        ]
     }
 }
 
@@ -158,9 +178,12 @@ impl std::str::FromStr for ScenarioKind {
             "rush_hour" | "rush-hour" | "rushhour" => Ok(Self::RushHour),
             "stragglers" | "straggler" => Ok(Self::Stragglers),
             "slice_fading" | "slice-fading" | "slicefading" => Ok(Self::SliceFading),
+            "multi_rat" | "multi-rat" | "multirat" => Ok(Self::MultiRat),
+            "cell_edge" | "cell-edge" | "celledge" => Ok(Self::CellEdge),
             other => bail!(
                 "unknown scenario {other:?} \
-                 (static|fading|churn|rush_hour|stragglers|slice_fading|trace:<file>)"
+                 (static|fading|churn|rush_hour|stragglers|slice_fading\
+                 |multi_rat|cell_edge|trace:<file>)"
             ),
         }
     }
@@ -205,6 +228,17 @@ const SLICE_BW_BAD: f64 = 0.8;
 const SLICE_DL_LO: f64 = 0.55;
 const SLICE_DL_HI: f64 = 0.9;
 
+/// multi_rat: per-client Gilbert–Elliott chain between the fast RAT
+/// (share 1.0) and a slow RAT tier — P(fast→slow), P(slow→fast), and the
+/// slow tier's uplink share
+const MULTI_RAT_P_FS: f64 = 0.12;
+const MULTI_RAT_P_SF: f64 = 0.4;
+const MULTI_RAT_SLOW_SHARE: f64 = 0.3;
+
+/// cell_edge: persistent per-client uplink-share tiers assigned by
+/// `id % CELL_EDGE_TIERS.len()` (cell center / mid-cell / cell edge)
+pub const CELL_EDGE_TIERS: [f64; 3] = [1.0, 0.55, 0.25];
+
 /// compute inflation at or above this factor counts as a straggler episode
 /// in [`RoundEnv::straggler_count`]; mild broadcast congestion (rush_hour's
 /// 1.25×) stays below it so the recorded straggler column isolates the
@@ -235,6 +269,10 @@ pub struct RoundEnv {
     /// per-client multiplicative factor on the deadline `t_round` (<= 1.0
     /// tightens; 1.0 = nominal)
     pub deadline_scale: PerClient<f64>,
+    /// per-client uplink share (P2′): client m's effective channel rate is
+    /// `uplink_share[m] · bandwidth_scale · B`. 1.0 everywhere = the
+    /// homogeneous shared-B model (the pre-P2′ behavior, bit for bit)
+    pub uplink_share: PerClient<f64>,
 }
 
 impl RoundEnv {
@@ -248,16 +286,27 @@ impl RoundEnv {
             available: PerClient::uniform(true),
             compute_scale: PerClient::uniform(1.0),
             deadline_scale: PerClient::uniform(1.0),
+            uplink_share: PerClient::uniform(1.0),
         }
     }
 
-    /// True iff applying this env to any topology is a bitwise no-op —
-    /// O(1) on broadcast representations.
-    pub fn is_identity(&self) -> bool {
+    /// True iff this env leaves the *topology* untouched (profiles and the
+    /// shared B). Per-client uplink shares live outside [`Topology`], so an
+    /// env that only carries heterogeneous shares (`multi_rat`, `cell_edge`)
+    /// still borrows in [`Self::effective`] — no O(M) clone.
+    fn is_topo_identity(&self) -> bool {
         self.bandwidth_scale == 1.0
             && self.available.all(self.m, |&a| a)
             && self.compute_scale.all(self.m, |&s| s == 1.0)
             && self.deadline_scale.all(self.m, |&s| s == 1.0)
+    }
+
+    /// True iff the whole env is a no-op — topology untouched AND every
+    /// uplink share nominal — O(1) on broadcast representations. This is
+    /// the predicate gating the Indexed selection fast path, which presorts
+    /// by homogeneous-bandwidth slack.
+    pub fn is_identity(&self) -> bool {
+        self.is_topo_identity() && self.uplink_share.all(self.m, |&s| s == 1.0)
     }
 
     pub fn available_count(&self) -> usize {
@@ -328,16 +377,62 @@ impl RoundEnv {
         }
     }
 
-    /// The effective topology without materializing it when the env is the
-    /// identity: `Cow::Borrowed` on identity rounds (no O(M) clone — the
-    /// M = 10⁵–10⁶ fast path), `Cow::Owned(self.apply(topo))` otherwise.
-    /// Since the identity `apply` is a bitwise no-op, both branches denote
-    /// the same topology.
+    /// The effective topology without materializing it when the env leaves
+    /// the topology untouched: `Cow::Borrowed` on topo-identity rounds (no
+    /// O(M) clone — the M = 10⁵–10⁶ fast path, including share-only rounds
+    /// like `multi_rat`/`cell_edge`), `Cow::Owned(self.apply(topo))`
+    /// otherwise. Since the identity `apply` is a bitwise no-op, both
+    /// branches denote the same topology.
     pub fn effective<'a>(&self, topo: &'a Topology) -> std::borrow::Cow<'a, Topology> {
-        if self.is_identity() {
+        if self.is_topo_identity() {
             std::borrow::Cow::Borrowed(topo)
         } else {
             std::borrow::Cow::Owned(self.apply(topo))
+        }
+    }
+
+    /// Spread (max − min) of the per-client uplink shares this round —
+    /// exactly 0.0 under homogeneous bandwidth (the `env_bw_spread` record
+    /// column, so a grep for nonzero spread finds the heterogeneous rounds).
+    pub fn bw_spread(&self) -> f64 {
+        match &self.uplink_share {
+            PerClient::Uniform(_) => 0.0,
+            PerClient::Dense(d) => {
+                let mut lo = f64::INFINITY;
+                let mut hi = f64::NEG_INFINITY;
+                for &v in d {
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+                if d.is_empty() {
+                    0.0
+                } else {
+                    hi - lo
+                }
+            }
+        }
+    }
+
+    /// Per-selected uplink shares for the P2′ allocation path: `None` when
+    /// every share is the nominal 1.0 — the homogeneous fast path, keeping
+    /// callers on the scalar-B expressions bit for bit — else the selected
+    /// clients' shares looked up by id.
+    pub fn shares_for(&self, ids: &[usize]) -> Option<Vec<f64>> {
+        if self.uplink_share.all(self.m, |&s| s == 1.0) {
+            return None;
+        }
+        Some(ids.iter().map(|&m| *self.uplink_share.get(m)).collect())
+    }
+
+    /// The uplink shares as a by-id map for the P1 selection path: `None`
+    /// when every share is the nominal 1.0 (semantically uniform under
+    /// either representation), so selectors stay on the historical θ
+    /// expressions bit for bit.
+    pub fn share_map(&self) -> Option<&PerClient<f64>> {
+        if self.uplink_share.all(self.m, |&s| s == 1.0) {
+            None
+        } else {
+            Some(&self.uplink_share)
         }
     }
 
@@ -348,6 +443,7 @@ impl RoundEnv {
         self.available.densify(self.m);
         self.compute_scale.densify(self.m);
         self.deadline_scale.densify(self.m);
+        self.uplink_share.densify(self.m);
     }
 }
 
@@ -376,6 +472,7 @@ pub struct Scenario {
     memo_churn: ChainMemo<Vec<bool>>,
     memo_straggle: ChainMemo<Vec<bool>>,
     memo_slice: ChainMemo<[bool; SLICE_CLASSES]>,
+    memo_rat: ChainMemo<Vec<bool>>,
 }
 
 impl Scenario {
@@ -402,6 +499,7 @@ impl Scenario {
             memo_churn: ChainMemo::new(),
             memo_straggle: ChainMemo::new(),
             memo_slice: ChainMemo::new(),
+            memo_rat: ChainMemo::new(),
         })
     }
 
@@ -419,6 +517,7 @@ impl Scenario {
             memo_churn: ChainMemo::new(),
             memo_straggle: ChainMemo::new(),
             memo_slice: ChainMemo::new(),
+            memo_rat: ChainMemo::new(),
         }
     }
 
@@ -449,6 +548,8 @@ impl Scenario {
             ScenarioKind::RushHour => self.rush_hour(round),
             ScenarioKind::Stragglers => self.stragglers(round),
             ScenarioKind::SliceFading => self.slice_fading(round),
+            ScenarioKind::MultiRat => self.multi_rat(round),
+            ScenarioKind::CellEdge => self.cell_edge(round),
             ScenarioKind::Trace(_) => {
                 self.trace.as_ref().expect("trace loaded at construction").env(round)
             }
@@ -623,6 +724,53 @@ impl Scenario {
         }
         env
     }
+
+    /// One transition of the per-client RAT chain across round `r` (`true`
+    /// = parked on the slow RAT). M sequential draws from the round-keyed
+    /// stream, exactly like the churn/straggler chains.
+    fn rat_step(&self, mut slow: Vec<bool>, r: usize) -> Vec<bool> {
+        let mut rng = self.pool.stream("scenario/multi_rat", r as u64);
+        for s in slow.iter_mut() {
+            let u = rng.f64();
+            *s = if *s { u >= MULTI_RAT_P_SF } else { u < MULTI_RAT_P_FS };
+        }
+        slow
+    }
+
+    /// Heterogeneous radio access (P2′): each client runs its own
+    /// Gilbert–Elliott chain between a fast RAT (full uplink share) and a
+    /// slow RAT (`MULTI_RAT_SLOW_SHARE`), starting all-fast. The topology
+    /// itself is untouched — only `uplink_share` is dense, so selection's
+    /// identity fast path correctly declines but `effective` stays O(1).
+    fn multi_rat(&self, round: usize) -> RoundEnv {
+        let slow = if self.dense {
+            let mut s = vec![false; self.m];
+            for r in 0..=round {
+                s = self.rat_step(s, r);
+            }
+            s
+        } else {
+            self.memo_rat
+                .state_at(round, || vec![false; self.m], |s, r| self.rat_step(s, r))
+        };
+        let mut env = RoundEnv::identity(round, self.m);
+        env.uplink_share = PerClient::Dense(
+            slow.iter().map(|&s| if s { MULTI_RAT_SLOW_SHARE } else { 1.0 }).collect(),
+        );
+        env
+    }
+
+    /// Persistent per-client bandwidth tiers from `id % k`: cell-center
+    /// clients keep the full share, edge clients are pinned to the lower
+    /// `CELL_EDGE_TIERS`. No RNG and no round dependence — the fixed
+    /// geometry counterpart of `multi_rat`'s mobility.
+    fn cell_edge(&self, round: usize) -> RoundEnv {
+        let mut env = RoundEnv::identity(round, self.m);
+        env.uplink_share = PerClient::Dense(
+            (0..self.m).map(|m| CELL_EDGE_TIERS[m % CELL_EDGE_TIERS.len()]).collect(),
+        );
+        env
+    }
 }
 
 #[cfg(test)]
@@ -704,6 +852,7 @@ mod tests {
             ScenarioKind::Churn,
             ScenarioKind::Stragglers,
             ScenarioKind::SliceFading,
+            ScenarioKind::MultiRat,
         ] {
             let a = scen(kind.clone(), 42, 10).trace(60);
             let b = scen(kind.clone(), 43, 10).trace(60);
@@ -825,6 +974,71 @@ mod tests {
     }
 
     #[test]
+    fn multi_rat_episodes_persist_and_only_touch_shares() {
+        let s = scen(ScenarioKind::MultiRat, 3, 30);
+        let tr = s.trace(100);
+        assert!(
+            tr.iter().any(|e| e.uplink_share.count(e.m, |&v| v < 1.0) > 0),
+            "nobody ever dropped to the slow RAT"
+        );
+        // the chain has memory: some slow episode spans >= 2 consecutive rounds
+        let mut persisted = false;
+        for w in tr.windows(2) {
+            for m in 0..30 {
+                if *w[0].uplink_share.get(m) < 1.0 && *w[1].uplink_share.get(m) < 1.0 {
+                    persisted = true;
+                }
+            }
+        }
+        assert!(persisted, "slow-RAT episodes never persisted");
+        for e in &tr {
+            assert!(!e.is_identity(), "dense shares must decline the identity fast path");
+            assert!(e.is_topo_identity(), "multi_rat must not touch the topology");
+            assert_eq!(e.available_count(), 30);
+            assert_eq!(e.straggler_count(), 0);
+            for &v in e.uplink_share.iter(e.m) {
+                assert!(v == 1.0 || v == MULTI_RAT_SLOW_SHARE);
+            }
+        }
+    }
+
+    #[test]
+    fn cell_edge_tiers_are_static_and_seed_independent() {
+        let s = scen(ScenarioKind::CellEdge, 1, 7);
+        let t2 = scen(ScenarioKind::CellEdge, 999, 7);
+        for r in [0usize, 5, 40] {
+            let e = s.env(r);
+            assert_eq!(e, t2.env(r), "cell_edge must not depend on the seed");
+            assert_eq!(e.uplink_share, s.env(0).uplink_share, "tiers must not move per round");
+            for m in 0..7 {
+                assert_eq!(
+                    e.uplink_share.get(m).to_bits(),
+                    CELL_EDGE_TIERS[m % CELL_EDGE_TIERS.len()].to_bits(),
+                    "client {m} got the wrong tier"
+                );
+            }
+            assert!(e.is_topo_identity() && !e.is_identity());
+        }
+    }
+
+    #[test]
+    fn bw_spread_and_shares_for_report_heterogeneity() {
+        let id = RoundEnv::identity(0, 5);
+        assert_eq!(id.bw_spread(), 0.0);
+        assert_eq!(id.shares_for(&[0, 2, 4]), None, "uniform shares must opt out");
+        let mut env = RoundEnv::identity(0, 5);
+        env.uplink_share = PerClient::Dense(vec![1.0, 0.25, 0.55, 1.0, 0.25]);
+        assert_eq!(env.bw_spread().to_bits(), 0.75f64.to_bits());
+        assert_eq!(env.shares_for(&[1, 3]), Some(vec![0.25, 1.0]));
+        // a dense representation of all-1.0 is still semantically uniform
+        let mut dense1 = RoundEnv::identity(0, 5);
+        dense1.uplink_share = PerClient::Dense(vec![1.0; 5]);
+        assert!(dense1.is_identity());
+        assert_eq!(dense1.bw_spread(), 0.0);
+        assert_eq!(dense1.shares_for(&[0, 1]), None);
+    }
+
+    #[test]
     fn recorded_trace_replays_identically_in_memory() {
         // the record→replay hinge, without files: capture a preset's stream
         // and a Trace scenario built from it must reproduce it bit for bit
@@ -937,6 +1151,15 @@ mod tests {
             }
             std::borrow::Cow::Borrowed(_) => panic!("non-identity env must materialize"),
         }
+        // share-only rounds (multi_rat/cell_edge) leave the topology alone:
+        // effective() must still borrow even though is_identity() is false
+        let mut sh = RoundEnv::identity(0, 6);
+        sh.uplink_share = PerClient::Dense(vec![0.5; 6]);
+        assert!(!sh.is_identity());
+        assert!(
+            matches!(sh.effective(&t), std::borrow::Cow::Borrowed(_)),
+            "share-only env must not clone the topology"
+        );
         // densify() changes representation, never values
         let mut d = s.env(2);
         d.densify();

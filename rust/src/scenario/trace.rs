@@ -13,13 +13,16 @@
 //! * **CSV** — a header line then one row per traced round. `#` lines and
 //!   blank lines are skipped. Per-client columns (`available`, `q_scale`,
 //!   `deadline_scale`) hold either ONE value (broadcast to all M clients)
-//!   or M `;`-separated values. `bw_scale` is global-only — the uplink
-//!   budget `B` is shared, per-client bandwidth is not representable.
+//!   or M `;`-separated values. `bw_scale` is overloaded (P2′): ONE value
+//!   scales the shared uplink budget `B` globally, while M `;`-separated
+//!   values are per-client uplink SHARES (each client m's effective rate is
+//!   `share_m * B`; the global budget stays nominal).
 //!
 //!   ```text
 //!   round,bw_scale,available,q_scale,deadline_scale
 //!   0,1,1,1,1
 //!   4,0.35,1;1;0;1,1;1;1;3.5,0.8
+//!   7,1;0.3;1;0.3,1,1,1
 //!   ```
 //!
 //! * **JSON** — `{"schema": 1, "m": M, "rounds": [{"round": 0, ...}]}`
@@ -71,6 +74,11 @@ const ROOT_KEYS: [&str; 6] = ["schema", "m", "source", "seed", "note", "rounds"]
 struct TraceRow {
     round: usize,
     bw_scale: f64,
+    /// per-client uplink shares (P2′); `Uniform(1.0)` on homogeneous rows.
+    /// Carried by the `bw_scale` column's per-client form — a row can hold
+    /// EITHER a global scale or per-client shares, never both (the
+    /// recorder rejects the combination as unrepresentable).
+    uplink_share: PerClient<f64>,
     available: PerClient<bool>,
     q_scale: PerClient<f64>,
     deadline_scale: PerClient<f64>,
@@ -142,31 +150,31 @@ impl ScenarioTrace {
             let round: usize = cells[round_at]
                 .parse()
                 .with_context(|| format!("line {ln}: bad round {:?}", cells[round_at]))?;
-            let bw_scale = match bw_at {
-                None => 1.0,
+            let (bw_scale, uplink_share) = match bw_at {
+                None => (1.0, PerClient::uniform(1.0)),
                 Some(i) => {
                     if cells[i].contains(';') {
-                        bail!(
-                            "line {ln}: bw_scale must be a single global value — the uplink \
-                             budget B is shared, per-client bandwidth is not representable"
-                        );
+                        // per-client form: heterogeneous uplink SHARES (P2′)
+                        // — the shared budget B itself stays nominal
+                        (1.0, parse_scale_list(cells[i], "bw_scale", ln, round, m)?)
+                    } else {
+                        (parse_scale(cells[i], "bw_scale", ln)?, PerClient::uniform(1.0))
                     }
-                    parse_scale(cells[i], "bw_scale", ln)?
                 }
             };
             let available = match avail_at {
                 None => PerClient::uniform(true),
-                Some(i) => parse_bool_list(cells[i], ln, m)?,
+                Some(i) => parse_bool_list(cells[i], ln, round, m)?,
             };
             let q_scale = match q_at {
                 None => PerClient::uniform(1.0),
-                Some(i) => parse_scale_list(cells[i], "q_scale", ln, m)?,
+                Some(i) => parse_scale_list(cells[i], "q_scale", ln, round, m)?,
             };
             let deadline_scale = match dl_at {
                 None => PerClient::uniform(1.0),
-                Some(i) => parse_scale_list(cells[i], "deadline_scale", ln, m)?,
+                Some(i) => parse_scale_list(cells[i], "deadline_scale", ln, round, m)?,
             };
-            rows.push(TraceRow { round, bw_scale, available, q_scale, deadline_scale });
+            rows.push(TraceRow { round, bw_scale, uplink_share, available, q_scale, deadline_scale });
         }
         Self::from_rows(rows, m)
     }
@@ -205,9 +213,24 @@ impl ScenarioTrace {
                 }
             }
             let round = entry.get("round").with_context(|| format!("rounds[{i}]"))?.as_usize()?;
-            let bw_scale = match entry.opt("bw_scale") {
-                None => 1.0,
-                Some(v) => check_scale(v.as_f64()?, "bw_scale", round)?,
+            let (bw_scale, uplink_share) = match entry.opt("bw_scale") {
+                None => (1.0, PerClient::uniform(1.0)),
+                Some(Json::Num(x)) => (check_scale(*x, "bw_scale", round)?, PerClient::uniform(1.0)),
+                // array form: heterogeneous per-client uplink shares (P2′)
+                Some(arr) => {
+                    let vals =
+                        arr.as_f64_vec().with_context(|| format!("round {round}: bw_scale"))?;
+                    if vals.len() != m {
+                        bail!(
+                            "round {round}: bw_scale has {} per-client values, federation has M={m}",
+                            vals.len()
+                        );
+                    }
+                    for &x in &vals {
+                        check_scale(x, "bw_scale", round)?;
+                    }
+                    (1.0, PerClient::Dense(vals))
+                }
             };
             let available = match entry.opt("available") {
                 None => PerClient::uniform(true),
@@ -231,7 +254,7 @@ impl ScenarioTrace {
             let q_scale = json_scale_list(entry.opt("q_scale"), "q_scale", round, m)?;
             let deadline_scale =
                 json_scale_list(entry.opt("deadline_scale"), "deadline_scale", round, m)?;
-            rows.push(TraceRow { round, bw_scale, available, q_scale, deadline_scale });
+            rows.push(TraceRow { round, bw_scale, uplink_share, available, q_scale, deadline_scale });
         }
         Self::from_rows(rows, m)
     }
@@ -310,6 +333,7 @@ impl ScenarioTrace {
             round,
             m: self.m,
             bandwidth_scale: row.bw_scale,
+            uplink_share: row.uplink_share.clone(),
             available: row.available.clone(),
             compute_scale: row.q_scale.clone(),
             deadline_scale: row.deadline_scale.clone(),
@@ -480,9 +504,21 @@ fn env_row(e: &RoundEnv, m: usize) -> Result<TraceRow> {
     if e.m != m {
         bail!("env at round {} is for a different federation size (want M={m})", e.round);
     }
+    let het = !e.uplink_share.all(m, |&s| s == 1.0);
+    if het && e.bandwidth_scale != 1.0 {
+        bail!(
+            "round {}: per-client uplink shares combined with a global bw_scale {} — the \
+             single bw_scale column carries one or the other, never both",
+            e.round,
+            e.bandwidth_scale
+        );
+    }
     Ok(TraceRow {
         round: e.round,
         bw_scale: e.bandwidth_scale,
+        // homogeneous rows normalize to the broadcast form so the column
+        // serializes as a global scale (O(1) in M)
+        uplink_share: if het { e.uplink_share.clone() } else { PerClient::uniform(1.0) },
         available: e.available.clone(),
         q_scale: e.compute_scale.clone(),
         deadline_scale: e.deadline_scale.clone(),
@@ -496,10 +532,17 @@ fn csv_row(r: &TraceRow, m: usize) -> String {
             r.available.iter(m).map(|&a| if a { "1" } else { "0" }).collect::<Vec<_>>().join(";")
         }
     };
+    // per-client shares take over the bw_scale cell (always as the dense
+    // `;` form — a bare scalar would read back as a global scale)
+    let bw = if r.uplink_share.as_uniform() == Some(&1.0) {
+        format!("{}", r.bw_scale)
+    } else {
+        r.uplink_share.iter(m).map(|x| format!("{x}")).collect::<Vec<_>>().join(";")
+    };
     format!(
         "{},{},{},{},{}",
         r.round,
-        r.bw_scale,
+        bw,
         avail,
         fmt_f64_cell(&r.q_scale, m),
         fmt_f64_cell(&r.deadline_scale, m)
@@ -515,9 +558,16 @@ fn row_json(r: &TraceRow, m: usize) -> Json {
         Some(&x) => Json::num(x),
         None => Json::arr(v.iter(m).map(|&x| Json::num(x)).collect()),
     };
+    // per-client shares take over the bw_scale key (always as the array
+    // form — a bare number would read back as a global scale)
+    let bw = if r.uplink_share.as_uniform() == Some(&1.0) {
+        Json::num(r.bw_scale)
+    } else {
+        Json::arr(r.uplink_share.iter(m).map(|&x| Json::num(x)).collect())
+    };
     Json::obj(vec![
         ("round", Json::num(r.round as f64)),
-        ("bw_scale", Json::num(r.bw_scale)),
+        ("bw_scale", bw),
         ("available", available),
         ("q_scale", scales(&r.q_scale)),
         ("deadline_scale", scales(&r.deadline_scale)),
@@ -541,14 +591,23 @@ fn parse_scale(cell: &str, col: &str, ln: usize) -> Result<f64> {
     Ok(v)
 }
 
-fn parse_scale_list(cell: &str, col: &str, ln: usize, m: usize) -> Result<PerClient<f64>> {
+fn parse_scale_list(
+    cell: &str,
+    col: &str,
+    ln: usize,
+    round: usize,
+    m: usize,
+) -> Result<PerClient<f64>> {
     if !cell.contains(';') {
         return Ok(PerClient::uniform(parse_scale(cell, col, ln)?));
     }
     let vals: Vec<f64> =
         cell.split(';').map(|t| parse_scale(t.trim(), col, ln)).collect::<Result<_>>()?;
     if vals.len() != m {
-        bail!("line {ln}: {col} has {} per-client values, federation has M={m}", vals.len());
+        bail!(
+            "line {ln} (round {round}): {col} has {} per-client values, federation has M={m}",
+            vals.len()
+        );
     }
     Ok(PerClient::Dense(vals))
 }
@@ -561,14 +620,17 @@ fn parse_bool_token(tok: &str, ln: usize) -> Result<bool> {
     }
 }
 
-fn parse_bool_list(cell: &str, ln: usize, m: usize) -> Result<PerClient<bool>> {
+fn parse_bool_list(cell: &str, ln: usize, round: usize, m: usize) -> Result<PerClient<bool>> {
     if !cell.contains(';') {
         return Ok(PerClient::uniform(parse_bool_token(cell.trim(), ln)?));
     }
     let vals: Vec<bool> =
         cell.split(';').map(|t| parse_bool_token(t.trim(), ln)).collect::<Result<_>>()?;
     if vals.len() != m {
-        bail!("line {ln}: available has {} per-client values, federation has M={m}", vals.len());
+        bail!(
+            "line {ln} (round {round}): available has {} per-client values, federation has M={m}",
+            vals.len()
+        );
     }
     Ok(PerClient::Dense(vals))
 }
@@ -710,10 +772,13 @@ round,bw_scale,available,q_scale,deadline_scale
 
     #[test]
     fn per_client_count_mismatch_errors() {
-        let e = ScenarioTrace::from_csv("round,q_scale\n0,1;2\n", 3).unwrap_err();
+        let e = ScenarioTrace::from_csv("round,q_scale\n7,1;2\n", 3).unwrap_err();
         assert!(e.to_string().contains("per-client values"), "{e:#}");
-        let e = ScenarioTrace::from_csv("round,available\n0,1;0;1;1\n", 3).unwrap_err();
+        // the message names the offending ROUND, not just the file line
+        assert!(e.to_string().contains("round 7"), "{e:#}");
+        let e = ScenarioTrace::from_csv("round,available\n2,1;0;1;1\n", 3).unwrap_err();
         assert!(e.to_string().contains("per-client values"), "{e:#}");
+        assert!(e.to_string().contains("round 2"), "{e:#}");
         let e = ScenarioTrace::from_json_text(
             r#"{"rounds":[{"round":0,"deadline_scale":[0.5,0.5]}]}"#,
             3,
@@ -736,12 +801,64 @@ round,bw_scale,available,q_scale,deadline_scale
         assert!(ScenarioTrace::from_csv("round,available\n0,maybe\n", 2).is_err());
         // ragged row
         assert!(ScenarioTrace::from_csv("round,bw_scale\n0\n", 2).is_err());
-        // per-client bandwidth is not representable
-        let e = ScenarioTrace::from_csv("round,bw_scale\n0,0.5;0.5\n", 2).unwrap_err();
-        assert!(e.to_string().contains("single global value"), "{e:#}");
+        // per-client share lists still validate each entry
+        assert!(ScenarioTrace::from_csv("round,bw_scale\n0,0.5;-1\n", 2).is_err());
+        assert!(ScenarioTrace::from_csv("round,bw_scale\n0,0.5;inf\n", 2).is_err());
         // a round with nobody available can never train
         let e = ScenarioTrace::from_csv("round,available\n0,0;0\n", 2).unwrap_err();
         assert!(e.to_string().contains("at least one candidate"), "{e:#}");
+    }
+
+    #[test]
+    fn per_client_bw_scale_is_uplink_shares() {
+        // the formerly-rejected `;` form of bw_scale now carries per-client
+        // uplink shares; the global budget stays nominal
+        let t = ScenarioTrace::from_csv("round,bw_scale\n0,1;0.3\n", 2).unwrap();
+        let e = t.env(0);
+        assert_eq!(e.bandwidth_scale, 1.0);
+        assert_eq!(e.uplink_share.to_vec(2), vec![1.0, 0.3]);
+        assert!(!e.is_identity());
+        // scalar cells keep the historical global-scale meaning
+        let t = ScenarioTrace::from_csv("round,bw_scale\n0,0.5\n", 2).unwrap();
+        let e = t.env(0);
+        assert_eq!(e.bandwidth_scale, 0.5);
+        assert!(e.uplink_share.all(2, |&s| s == 1.0));
+        // JSON array form mirrors the CSV `;` form
+        let t = ScenarioTrace::from_json_text(
+            r#"{"rounds":[{"round":0,"bw_scale":[0.25,1.0]}]}"#,
+            2,
+        )
+        .unwrap();
+        assert_eq!(t.env(0).uplink_share.to_vec(2), vec![0.25, 1.0]);
+        // count mismatches name the offending round
+        let e = ScenarioTrace::from_csv("round,bw_scale\n3,1;0.3;1\n", 2).unwrap_err();
+        assert!(e.to_string().contains("round 3"), "{e:#}");
+        let e = ScenarioTrace::from_json_text(
+            r#"{"rounds":[{"round":4,"bw_scale":[1.0,0.3,1.0]}]}"#,
+            2,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("round 4"), "{e:#}");
+    }
+
+    #[test]
+    fn recorder_rejects_shares_combined_with_global_scale() {
+        let mut env = RoundEnv::identity(0, 3);
+        env.uplink_share = crate::pop::PerClient::Dense(vec![1.0, 0.5, 0.25]);
+        env.bandwidth_scale = 0.8;
+        let e = ScenarioTrace::from_envs(std::slice::from_ref(&env), 3).unwrap_err();
+        assert!(e.to_string().contains("one or the other"), "{e:#}");
+        // shares alone round-trip through both formats
+        env.bandwidth_scale = 1.0;
+        let t = ScenarioTrace::from_envs(std::slice::from_ref(&env), 3).unwrap();
+        let back_csv = ScenarioTrace::from_csv(&t.to_csv(), 3).unwrap();
+        let back_json = ScenarioTrace::from_json_text(&t.to_json().to_string_pretty(), 3).unwrap();
+        for back in [back_csv, back_json] {
+            assert_eq!(
+                bits(&back.env(0).uplink_share.to_vec(3)),
+                bits(&env.uplink_share.to_vec(3))
+            );
+        }
     }
 
     #[test]
@@ -773,6 +890,12 @@ round,bw_scale,available,q_scale,deadline_scale
                         bits(&r.deadline_scale.to_vec(6)),
                         bits(&e.deadline_scale.to_vec(6)),
                         "{kind:?} r{}: deadline",
+                        e.round
+                    );
+                    assert_eq!(
+                        bits(&r.uplink_share.to_vec(6)),
+                        bits(&e.uplink_share.to_vec(6)),
+                        "{kind:?} r{}: uplink_share",
                         e.round
                     );
                 }

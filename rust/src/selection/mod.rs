@@ -22,6 +22,7 @@ use std::collections::{BTreeMap, BinaryHeap, HashMap};
 use std::sync::Arc;
 
 use crate::oran::{RicProfile, Topology, UploadSizes};
+use crate::pop::PerClient;
 
 /// Effective-deadline shrink factor per outstanding failure.
 pub const FAILURE_PENALTY: f64 = 0.8;
@@ -189,6 +190,36 @@ impl DeadlineSelector {
             .collect()
     }
 
+    /// [`DeadlineSelector::select`] with heterogeneous per-client uplink
+    /// shares (P2′): `t_estimate` tracks the measured max uplink of a
+    /// *full-rate* client, so a client on share `s` is admitted against the
+    /// stretched estimate `t_est / s` — slow-RAT RICs must clear a higher
+    /// bar. `None` (or all-uniform-1.0) shares run the historical predicate
+    /// verbatim: the stretched form divides by 1.0 only on the het branch,
+    /// so the homogeneous bits never change.
+    pub fn select_shares<'a, F>(
+        &self,
+        topo: &'a Topology,
+        shares: Option<&PerClient<f64>>,
+        compute_time: F,
+    ) -> Vec<&'a RicProfile>
+    where
+        F: Fn(&RicProfile) -> f64,
+    {
+        match shares.filter(|s| s.as_uniform() != Some(&1.0)) {
+            None => self.select(topo, compute_time),
+            Some(sh) => {
+                let t_est = self.t_estimate();
+                topo.rics
+                    .iter()
+                    .filter(|r| {
+                        compute_time(r) + t_est / *sh.get(r.id) <= self.effective_deadline(r)
+                    })
+                    .collect()
+            }
+        }
+    }
+
     /// Capped deadline-aware selection (ISSUE 7): Algorithm 1's admission
     /// predicate, recast as a top-`cap` so the admitted set — and with it
     /// every downstream per-selected cost — stays O(cap) at any federation
@@ -219,17 +250,51 @@ impl DeadlineSelector {
         path: SelectPath,
         jobs: usize,
     ) -> Vec<&'a RicProfile> {
+        self.select_capped_shares(topo, cost, cap, path, jobs, None)
+    }
+
+    /// [`DeadlineSelector::select_capped`] with heterogeneous per-client
+    /// uplink shares (P2′). With shares the candidate slack becomes
+    /// `θ′(r) = effective_deadline(r) − cost.eval(r) − t_estimate /
+    /// share_r` and admission is `θ′ >= 0` — clients on a slow RAT pay
+    /// their true (stretched) communication estimate, so ranking reflects
+    /// per-client reality instead of the shared-B fiction. `None` or
+    /// `Uniform(1.0)` shares run the historical θ/admission form VERBATIM
+    /// (not `θ − t_est/1.0`, whose subtraction would change bits and
+    /// tie-breaks), which is the homogeneous-identity gate.
+    ///
+    /// The `Indexed` path presorts by homogeneous penalty-free slack, an
+    /// order per-client shares can permute arbitrarily — so with shares
+    /// present it silently downgrades to `Streaming` (same admitted set,
+    /// no unsound early exit). Callers gate `Indexed` on
+    /// `RoundEnv::is_identity`, which already requires all-1.0 shares.
+    pub fn select_capped_shares<'a>(
+        &mut self,
+        topo: &'a Topology,
+        cost: &CostModel,
+        cap: usize,
+        path: SelectPath,
+        jobs: usize,
+        shares: Option<&PerClient<f64>>,
+    ) -> Vec<&'a RicProfile> {
         assert!(cap > 0, "select_capped with cap == 0 (use select)");
         if topo.is_empty() {
             return Vec::new();
         }
+        // a broadcast 1.0 is the homogeneous model whatever the caller held
+        let shares = shares.filter(|s| s.as_uniform() != Some(&1.0));
+        let path = if shares.is_some() && path == SelectPath::Indexed {
+            SelectPath::Streaming
+        } else {
+            path
+        };
         let kept = match path {
-            SelectPath::Dense => self.capped_dense(topo, cost, cap),
-            SelectPath::Streaming => self.capped_streaming(topo, cost, cap, jobs),
+            SelectPath::Dense => self.capped_dense(topo, cost, cap, shares),
+            SelectPath::Streaming => self.capped_streaming(topo, cost, cap, jobs, shares),
             SelectPath::Indexed => self.capped_indexed(topo, cost, cap),
         };
         if kept.is_empty() {
-            return vec![self.least_bad(topo, cost)];
+            return vec![self.least_bad(topo, cost, shares)];
         }
         let mut out: Vec<&RicProfile> = kept.into_iter().map(|x| &topo.rics[x.pos]).collect();
         out.sort_by_key(|r| r.id);
@@ -243,6 +308,31 @@ impl DeadlineSelector {
         self.effective_deadline(r) - cost.eval(r)
     }
 
+    /// `(rank, admitted)` of candidate `r`: the homogeneous branch is the
+    /// exact historical pair `(θ, θ >= t_est)`; the share branch folds the
+    /// per-client stretched estimate into one slack `θ′` with admission
+    /// `θ′ >= 0`. One subtraction chain per branch, shared by ranking and
+    /// admission so they can never disagree by a rounding.
+    #[inline]
+    fn theta_shares(
+        &self,
+        r: &RicProfile,
+        cost: &CostModel,
+        shares: Option<&PerClient<f64>>,
+        t_est: f64,
+    ) -> (f64, bool) {
+        match shares {
+            None => {
+                let theta = self.theta(r, cost);
+                (theta, theta >= t_est)
+            }
+            Some(sh) => {
+                let theta = self.effective_deadline(r) - cost.eval(r) - t_est / *sh.get(r.id);
+                (theta, theta >= 0.0)
+            }
+        }
+    }
+
     /// Penalty-free θ: an upper bound on [`Self::theta`] (the failure
     /// penalty only shrinks the deadline), which is what makes the indexed
     /// prefix walk's early exit sound.
@@ -253,15 +343,21 @@ impl DeadlineSelector {
 
     /// Reference oracle: filter-all + full sort. O(M log M); the behavioral
     /// spec the other paths are differentially pinned against.
-    fn capped_dense(&self, topo: &Topology, cost: &CostModel, cap: usize) -> Vec<Ranked> {
+    fn capped_dense(
+        &self,
+        topo: &Topology,
+        cost: &CostModel,
+        cap: usize,
+        shares: Option<&PerClient<f64>>,
+    ) -> Vec<Ranked> {
         let t_est = self.t_estimate();
         let mut cands: Vec<Ranked> = topo
             .rics
             .iter()
             .enumerate()
             .filter_map(|(pos, r)| {
-                let theta = self.theta(r, cost);
-                (theta >= t_est).then_some(Ranked { theta, id: r.id, pos })
+                let (theta, admitted) = self.theta_shares(r, cost, shares, t_est);
+                admitted.then_some(Ranked { theta, id: r.id, pos })
             })
             .collect();
         // best first: (θ desc, id asc) — Ranked's Ord has worse < better
@@ -279,14 +375,15 @@ impl DeadlineSelector {
         cost: &CostModel,
         cap: usize,
         jobs: usize,
+        shares: Option<&PerClient<f64>>,
     ) -> Vec<Ranked> {
         let t_est = self.t_estimate();
         let scan = |lo: usize, hi: usize| {
             let mut heap = BinaryHeap::with_capacity(cap + 1);
             for pos in lo..hi {
                 let r = &topo.rics[pos];
-                let theta = self.theta(r, cost);
-                if theta >= t_est {
+                let (theta, admitted) = self.theta_shares(r, cost, shares, t_est);
+                if admitted {
                     push_capped(&mut heap, cap, Ranked { theta, id: r.id, pos });
                 }
             }
@@ -367,13 +464,22 @@ impl DeadlineSelector {
         kept
     }
 
-    /// The empty-admission fallback: max θ, smallest id on ties.
-    fn least_bad<'a>(&self, topo: &'a Topology, cost: &CostModel) -> &'a RicProfile {
+    /// The empty-admission fallback: max θ (θ′ under shares), smallest id
+    /// on ties. With `shares == None` the rank IS the historical θ, so the
+    /// homogeneous fallback choice is unchanged.
+    fn least_bad<'a>(
+        &self,
+        topo: &'a Topology,
+        cost: &CostModel,
+        shares: Option<&PerClient<f64>>,
+    ) -> &'a RicProfile {
+        let t_est = self.t_estimate();
         topo.rics
             .iter()
             .max_by(|a, b| {
-                self.theta(a, cost)
-                    .total_cmp(&self.theta(b, cost))
+                self.theta_shares(a, cost, shares, t_est)
+                    .0
+                    .total_cmp(&self.theta_shares(b, cost, shares, t_est).0)
                     .then_with(|| b.id.cmp(&a.id))
             })
             .expect("least_bad on empty topology")
@@ -708,6 +814,74 @@ mod tests {
         let d = ids(&sel.select_capped(&topo, &cost, 6, SelectPath::Dense, 1));
         let i = ids(&sel.select_capped(&topo, &cost, 6, SelectPath::Indexed, 1));
         assert_eq!(d, i);
+    }
+
+    #[test]
+    fn uniform_shares_are_bitwise_the_homogeneous_path() {
+        let (topo, sizes) = setup(60);
+        let mut sel = DeadlineSelector::new(&topo, &sizes, 0.7);
+        sel.observe(5e-3);
+        sel.observe(5e-3);
+        let cost = CostModel::split(10.0);
+        let ones = PerClient::uniform(1.0);
+        for cap in [1usize, 4, 30] {
+            for path in [SelectPath::Dense, SelectPath::Streaming, SelectPath::Indexed] {
+                let a = ids(&sel.select_capped(&topo, &cost, cap, path, 1));
+                let b = ids(&sel.select_capped_shares(&topo, &cost, cap, path, 1, Some(&ones)));
+                assert_eq!(a, b, "cap={cap} {path:?}");
+            }
+        }
+        // and the uncapped predicate too
+        let ct = |r: &RicProfile| 10.0 * (r.q_c + r.q_s);
+        let a: Vec<usize> = sel.select(&topo, ct).iter().map(|r| r.id).collect();
+        let b: Vec<usize> =
+            sel.select_shares(&topo, Some(&ones), ct).iter().map(|r| r.id).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn heterogeneous_shares_demote_slow_clients_consistently() {
+        let (topo, sizes) = setup(80);
+        let mut sel = DeadlineSelector::new(&topo, &sizes, 0.7);
+        sel.observe(8e-3);
+        sel.observe(8e-3);
+        let cost = CostModel::split(10.0);
+        let baseline = ids(&sel.select_capped(&topo, &cost, 80, SelectPath::Dense, 1));
+        assert!(!baseline.is_empty());
+        // park every admitted client on a crawling RAT: the stretched
+        // estimate t_est/0.05 dwarfs every deadline, so none survive and
+        // the fallback keeps exactly one least-bad candidate
+        let mut v = vec![1.0f64; 80];
+        for &id in &baseline {
+            v[id] = 0.05;
+        }
+        let sh = PerClient::Dense(v);
+        let d = ids(&sel.select_capped_shares(&topo, &cost, 80, SelectPath::Dense, 1, Some(&sh)));
+        let s =
+            ids(&sel.select_capped_shares(&topo, &cost, 80, SelectPath::Streaming, 1, Some(&sh)));
+        let par =
+            ids(&sel.select_capped_shares(&topo, &cost, 80, SelectPath::Streaming, 4, Some(&sh)));
+        // Indexed downgrades to Streaming under shares — same admitted set
+        let i = ids(&sel.select_capped_shares(&topo, &cost, 80, SelectPath::Indexed, 1, Some(&sh)));
+        assert_eq!(d, s);
+        assert_eq!(d, par);
+        assert_eq!(d, i);
+        for id in &d {
+            assert!(
+                !baseline.contains(id) || d.len() == 1,
+                "slowed client {id} survived admission"
+            );
+        }
+        // a mild slowdown on one mid-pack client can only shrink the set
+        // and never admits anyone new
+        let mut v = vec![1.0f64; 80];
+        v[baseline[0]] = 0.5;
+        let sh = PerClient::Dense(v);
+        let mild =
+            ids(&sel.select_capped_shares(&topo, &cost, 80, SelectPath::Dense, 1, Some(&sh)));
+        for id in &mild {
+            assert!(baseline.contains(id), "shares admitted new member {id}");
+        }
     }
 
     #[test]

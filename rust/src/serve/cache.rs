@@ -223,11 +223,101 @@ impl HotTier {
     }
 }
 
+/// Name of the advisory lockfile inside a warm cache directory.
+pub const LOCK_FILE: &str = ".repro-serve.lock";
+
+/// Advisory single-owner lock on a warm cache directory: an owner-pid
+/// sentinel file, so two `repro serve` processes pointed at the same
+/// `--cache-dir` fail fast with a typed error instead of interleaving
+/// write-then-rename pairs and LRU promotions on one tree. Takeover is
+/// automatic when the recorded owner is dead (crashed server, stale file);
+/// the lockfile is removed on drop. Advisory by design — nothing stops a
+/// process that never calls [`CacheLock::acquire`] from touching the
+/// directory.
+pub struct CacheLock {
+    path: PathBuf,
+}
+
+impl CacheLock {
+    /// Acquire the lock for `dir` (creating `dir` if needed). Errors with a
+    /// typed [`ReproError::InvalidInput`] naming the lockfile and the live
+    /// owner pid when the directory is already held.
+    pub fn acquire(dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::Error::new(ReproError::io(dir.display(), e)))?;
+        let path = dir.join(LOCK_FILE);
+        for takeover in [false, true] {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    use std::io::Write as _;
+                    write!(f, "{}", std::process::id())
+                        .map_err(|e| anyhow::Error::new(ReproError::io(path.display(), e)))?;
+                    return Ok(Self { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let owner = std::fs::read_to_string(&path)
+                        .ok()
+                        .and_then(|s| s.trim().parse::<u32>().ok());
+                    if let Some(pid) = owner {
+                        if pid_alive(pid) {
+                            return Err(anyhow::Error::new(ReproError::invalid(format!(
+                                "cache dir {} is locked by live process {pid} — point this \
+                                 server at a different --cache-dir, or delete {} if the owner \
+                                 is really gone",
+                                dir.display(),
+                                path.display()
+                            ))));
+                        }
+                    }
+                    // dead or unreadable owner: stale — remove and retry the
+                    // atomic create once (one create_new wins any race)
+                    if takeover {
+                        return Err(anyhow::Error::new(ReproError::invalid(format!(
+                            "stale lockfile {} keeps reappearing — another process is \
+                             contending for this cache dir",
+                            path.display()
+                        ))));
+                    }
+                    std::fs::remove_file(&path).ok();
+                }
+                Err(e) => return Err(anyhow::Error::new(ReproError::io(path.display(), e))),
+            }
+        }
+        unreachable!("second takeover pass always returns");
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for CacheLock {
+    fn drop(&mut self) {
+        std::fs::remove_file(&self.path).ok();
+    }
+}
+
+/// Best-effort liveness: procfs where available (Linux); elsewhere every
+/// recorded owner is presumed alive, so a held lock is never stolen and a
+/// stale one needs the manual deletion the error message names. Our own pid
+/// counts as alive — a second locked cache in ONE process is still two
+/// writers.
+fn pid_alive(pid: u32) -> bool {
+    let proc_root = Path::new("/proc");
+    if proc_root.is_dir() {
+        proc_root.join(pid.to_string()).exists()
+    } else {
+        true
+    }
+}
+
 /// The two-tier cache: a byte-capped in-memory LRU over an optional on-disk
 /// warm directory. Warm hits are promoted back into the hot tier.
 pub struct ResultCache {
     hot: Mutex<HotTier>,
     warm_dir: Option<PathBuf>,
+    /// held for the cache's lifetime when built via [`ResultCache::new_locked`]
+    _lock: Option<CacheLock>,
 }
 
 impl ResultCache {
@@ -240,7 +330,19 @@ impl ResultCache {
                 entries: HashMap::new(),
             }),
             warm_dir,
+            _lock: None,
         }
+    }
+
+    /// [`ResultCache::new`] plus the advisory [`CacheLock`] on the warm
+    /// directory — the `repro serve` entry path, where a second server on
+    /// the same `--cache-dir` must fail fast rather than corrupt shared
+    /// state. The lock is released when the cache drops.
+    pub fn new_locked(hot_cap_bytes: usize, warm_dir: PathBuf) -> Result<Self> {
+        let lock = CacheLock::acquire(&warm_dir)?;
+        let mut cache = Self::new(hot_cap_bytes, Some(warm_dir));
+        cache._lock = Some(lock);
+        Ok(cache)
     }
 
     pub fn hot_entries(&self) -> usize {
@@ -443,6 +545,7 @@ fn verify_replay(stored: &RunSummary, replayed: &RunSummary) -> Result<()> {
     eq_bits64("total_comm_bytes", stored.total_comm_bytes, replayed.total_comm_bytes)?;
     eq_bits64("total_comm_cost", stored.total_comm_cost, replayed.total_comm_cost)?;
     eq_bits64("total_comp_cost", stored.total_comp_cost, replayed.total_comp_cost)?;
+    eq_bits64("total_energy_cost", stored.total_energy_cost, replayed.total_energy_cost)?;
     eq_bits64("mean_selected", stored.mean_selected, replayed.mean_selected)?;
     eq_bits64("mean_available", stored.mean_available, replayed.mean_available)?;
     if (stored.total_dropouts, stored.total_retries, stored.quorum_misses)
@@ -480,6 +583,8 @@ mod tests {
             env_dropouts: 1,
             retries: 4,
             quorum_miss: 0,
+            energy_cost: 0.031_25,
+            env_bw_spread: 0.45,
         }
     }
 
@@ -528,14 +633,17 @@ mod tests {
             prop_assert!(key_of(&rt, &spec) == base, "JSON round trip changed the key");
 
             let mut y = cfg.clone();
-            match g.usize_in(0..=6) {
+            match g.usize_in(0..=7) {
                 0 => y.seed = y.seed.wrapping_add(1),
                 1 => y.rho += 0.001,
                 2 => y.num_clients += 1,
                 3 => y.scenario = "fading".into(),
                 4 => y.eval_every += 1,
                 5 => y.record_window += 1,
-                _ => y.select_cap += 1,
+                6 => y.select_cap += 1,
+                // energy weight steers the P2′ allocator, so it must fragment
+                // the cache even though rho_e=0 runs never read it
+                _ => y.rho_e += 0.05,
             }
             prop_assert!(key_of(&y, &spec) != base, "semantic field change kept the key");
 
@@ -551,6 +659,52 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    #[test]
+    fn advisory_lock_excludes_second_cache_and_takes_over_stale() {
+        // satellite 1: two locked caches on ONE warm dir — the second must
+        // fail fast naming the live owner, not interleave writes
+        let dir = tmp_dir("lock");
+        let first = ResultCache::new_locked(1 << 20, dir.clone()).expect("first lock");
+        let err = match ResultCache::new_locked(1 << 20, dir.clone()) {
+            Ok(_) => panic!("second locked cache on a held dir must fail"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(
+            err.contains(&std::process::id().to_string()) && err.contains("--cache-dir"),
+            "error should name the owner pid and the remedy: {err}"
+        );
+        // the locked cache still works as a cache
+        let cfg = SimConfig::commag();
+        let spec = JobSpec::Run { kind: FrameworkKind::SplitMe, rounds: 4 };
+        let entry = CachedResult::Run(sample_summary(&cfg, 4));
+        first.put(&cfg, &spec, &entry).unwrap();
+        assert!(first.get(&cfg, &spec).unwrap().is_some());
+
+        // release: dropping the holder removes the lockfile, freeing the dir
+        let lockfile = dir.join(LOCK_FILE);
+        assert!(lockfile.is_file(), "held lock leaves a pid sentinel");
+        drop(first);
+        assert!(!lockfile.exists(), "drop must release the lock");
+        let reacquired = ResultCache::new_locked(1 << 20, dir.clone()).expect("re-acquire freed dir");
+        drop(reacquired);
+
+        // stale-pid takeover: a lockfile left by a dead process (pid far
+        // beyond any /proc entry — kernel pid_max caps at 2^22) is claimed
+        std::fs::write(&lockfile, "999999999").unwrap();
+        let taken = ResultCache::new_locked(1 << 20, dir.clone()).expect("take over stale lock");
+        assert_eq!(
+            std::fs::read_to_string(&lockfile).unwrap().trim(),
+            std::process::id().to_string(),
+            "takeover rewrites the sentinel with the new owner"
+        );
+        drop(taken);
+
+        // an unparseable owner is also stale, not a permanent wedge
+        std::fs::write(&lockfile, "not-a-pid").unwrap();
+        drop(ResultCache::new_locked(1 << 20, dir.clone()).expect("garbage sentinel is stale"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -152,9 +152,28 @@ impl Drop for FlightGuard<'_, '_> {
 
 impl<'e> Service<'e> {
     pub fn new(engine: Option<&'e Engine>, opts: &ServeOpts) -> Service<'e> {
+        Self::with_cache(engine, ResultCache::new(opts.hot_cap_bytes, opts.warm_dir.clone()))
+    }
+
+    /// [`Service::new`] plus the advisory [`cache::CacheLock`] on the warm
+    /// directory (when one is configured) — the `repro serve` process entry,
+    /// where a second server sharing the same `--cache-dir` must fail fast
+    /// with the owner's pid instead of interleaving writes on one tree.
+    /// In-process embedders (tests, `sweep --served`) keep the unlocked
+    /// [`Service::new`], which legitimately shares a directory within one
+    /// process.
+    pub fn new_locked(engine: Option<&'e Engine>, opts: &ServeOpts) -> Result<Service<'e>> {
+        let cache = match &opts.warm_dir {
+            Some(dir) => ResultCache::new_locked(opts.hot_cap_bytes, dir.clone())?,
+            None => ResultCache::new(opts.hot_cap_bytes, None),
+        };
+        Ok(Self::with_cache(engine, cache))
+    }
+
+    fn with_cache(engine: Option<&'e Engine>, cache: ResultCache) -> Service<'e> {
         Service {
             engine,
-            cache: ResultCache::new(opts.hot_cap_bytes, opts.warm_dir.clone()),
+            cache,
             contexts: Mutex::new(HashMap::new()),
             inflight: Mutex::new(HashSet::new()),
             inflight_done: Condvar::new(),

@@ -21,7 +21,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::allocation::solve_p2_at;
+use crate::allocation::solve_p2_shares;
 use crate::fl::{
     aggregate_indexed, effective_chunk, resolve_client_jobs, run_clients, run_steps, state,
     ExperimentContext, Framework, RoundOutcome,
@@ -362,6 +362,10 @@ impl Framework for SplitMe {
         let topo_r = env.effective(&ctx.topo);
 
         // ---- P1: deadline-aware selection (Algorithm 1) ----
+        // per-client uplink shares (P2′): None on every homogeneous round,
+        // which keeps selection AND allocation on the historical bitwise
+        // path; multi_rat/cell_edge rounds hand the dense share map through
+        let share_map = env.share_map();
         let e_sel = self.e_last;
         let selected: Vec<&RicProfile> = if cfg.select_cap > 0 {
             // capped top-k (ISSUE 7): O(selected) admitted set at any M;
@@ -376,17 +380,18 @@ impl Framework for SplitMe {
                 SelectPath::Streaming
             };
             let jobs = resolve_client_jobs(cfg.client_jobs, topo_r.len());
-            self.selector.select_capped(
+            self.selector.select_capped_shares(
                 &topo_r,
                 &CostModel::split(e_sel as f64),
                 cfg.select_cap,
                 path,
                 jobs,
+                share_map,
             )
         } else {
             let mut sel = self
                 .selector
-                .select(&topo_r, |r| e_sel as f64 * (r.q_c + r.q_s));
+                .select_shares(&topo_r, share_map, |r| e_sel as f64 * (r.q_c + r.q_s));
             if sel.is_empty() {
                 // degenerate deadline draw (or a churn round where no
                 // available RIC fits): admit the single most-slack candidate
@@ -407,12 +412,31 @@ impl Framework for SplitMe {
             })
             .collect();
 
-        // ---- P2: bandwidth + adaptive E, at the round's effective B ----
-        let alloc =
-            solve_p2_at(cfg, topo_r.bandwidth_bps, &selected, &sizes, self.e_last, true, 1.0, true);
+        // ---- P2′: bandwidth + adaptive E, at the round's effective B and
+        // the selected clients' effective rates (None = scalar-B path) ----
+        let sel_shares: Option<Vec<f64>> =
+            share_map.map(|sh| selected.iter().map(|r| *sh.get(r.id)).collect());
+        let alloc = solve_p2_shares(
+            cfg,
+            topo_r.bandwidth_bps,
+            sel_shares.as_deref(),
+            &selected,
+            &sizes,
+            self.e_last,
+            true,
+            1.0,
+            true,
+        );
         let e = alloc.e;
         self.e_last = e;
         let selected_ids: Vec<usize> = selected.iter().map(|r| r.id).collect();
+        // per-selected effective rates: the fault budget and energy model
+        // price uplinks at each client's own channel (== B on homogeneous
+        // rounds, where the multiply below is the historical expression)
+        let rates: Vec<f64> = match &sel_shares {
+            Some(s) => s.iter().map(|&v| v * topo_r.bandwidth_bps).collect(),
+            None => vec![topo_r.bandwidth_bps; selected.len()],
+        };
 
         // ---- fault layer: resolve the shared per-round events against the
         // P1 selection. Each client's retry budget is its deadline slack
@@ -426,7 +450,7 @@ impl Framework for SplitMe {
                     .position(|&x| x == m)
                     .expect("resolved from this selection");
                 let r = selected[i];
-                let uplink = sizes[i].total() * 8.0 / (alloc.fracs[i] * topo_r.bandwidth_bps);
+                let uplink = sizes[i].total() * 8.0 / (alloc.fracs[i] * rates[i]);
                 r.t_round - e as f64 * (r.q_c + r.q_s) - uplink
             },
             cfg.retry_backoff_s,
@@ -619,14 +643,30 @@ impl Framework for SplitMe {
         if fate.max_backoff > 0.0 {
             latency.max_uplink += fate.max_backoff;
         }
+        // heterogeneous rounds price comm at each client's true rate; the
+        // homogeneous branch keeps the historical scalar expression (the
+        // two sums associate differently, so this branch is load-bearing)
+        let comm_cost = match &sel_shares {
+            Some(_) => crate::oran::comm_cost_rates(&alloc.fracs, &rates, cfg.p_c),
+            None => crate::oran::comm_cost(&alloc.fracs, topo_r.bandwidth_bps, cfg.p_c),
+        };
+        // modeled clean-round energy, always reported (rho_e only controls
+        // whether the P2′ objective pays for it)
+        let energy_cost = crate::oran::round_energy(
+            &crate::oran::EnergyModel::from_cfg(cfg),
+            &selected,
+            |i| crate::oran::uplink_time(sizes[i].total(), alloc.fracs[i], rates[i]),
+            |r| e as f64 * r.q_c,
+        );
 
         Ok(RoundOutcome {
             selected_ids,
             e,
             comm_bytes,
             latency,
-            comm_cost: crate::oran::comm_cost(&alloc.fracs, topo_r.bandwidth_bps, cfg.p_c),
+            comm_cost,
             comp_cost,
+            energy_cost,
             train_loss,
             dropouts: fate.dropouts,
             retries: fate.retries,

@@ -115,4 +115,16 @@ pub fn assert_records_bitwise_eq(a: &RoundRecord, b: &RoundRecord, what: &str) {
     assert_eq!(a.env_dropouts, b.env_dropouts, "{what}: env_dropouts @r{}", a.round);
     assert_eq!(a.retries, b.retries, "{what}: retries @r{}", a.round);
     assert_eq!(a.quorum_miss, b.quorum_miss, "{what}: quorum_miss @r{}", a.round);
+    assert_eq!(
+        a.energy_cost.to_bits(),
+        b.energy_cost.to_bits(),
+        "{what}: energy_cost @r{}",
+        a.round
+    );
+    assert_eq!(
+        a.env_bw_spread.to_bits(),
+        b.env_bw_spread.to_bits(),
+        "{what}: env_bw_spread @r{}",
+        a.round
+    );
 }

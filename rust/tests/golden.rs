@@ -30,7 +30,7 @@ const GOLDEN_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/com
 const ROUNDS: usize = 3;
 
 /// f64 fields stored as 16-hex-digit bit patterns.
-const F64_FIELDS: [&str; 8] = [
+const F64_FIELDS: [&str; 10] = [
     "comm_bytes",
     "round_time",
     "sim_time",
@@ -39,6 +39,8 @@ const F64_FIELDS: [&str; 8] = [
     "total_cost",
     "env_bw_scale",
     "env_deadline_scale",
+    "energy_cost",
+    "env_bw_spread",
 ];
 /// f32 fields stored as 8-hex-digit bit patterns.
 const F32_FIELDS: [&str; 3] = ["train_loss", "accuracy", "test_loss"];
@@ -62,6 +64,8 @@ fn record_json(r: &RoundRecord) -> Json {
         r.total_cost,
         r.env_bw_scale,
         r.env_deadline_scale,
+        r.energy_cost,
+        r.env_bw_spread,
     ];
     for (name, v) in F64_FIELDS.iter().zip(f64s) {
         m.insert((*name).into(), Json::str(format!("{:016x}", v.to_bits())));

@@ -2,7 +2,7 @@
 //! coordinator invariants: bandwidth allocation, selection, aggregation,
 //! cost/latency models, linalg, and the JSON substrate.
 
-use repro::allocation::{solve_p2, waterfill};
+use repro::allocation::{solve_p2, solve_p2_at, solve_p2_shares, waterfill, waterfill_rates};
 use repro::config::SimConfig;
 use repro::fl::{aggregate, aggregate_indexed, sample_clients};
 use repro::jsonio::Json;
@@ -81,6 +81,112 @@ fn waterfill_minimizes_makespan_vs_random_feasible() {
                 "waterfill {opt} beaten by random {}",
                 makespan(&cand)
             );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn waterfill_rates_heterogeneous_invariants() {
+    // P2′ hardening: under ANY per-client effective-rate vector the simplex
+    // and floor still hold, and the allocation is monotone in rate — a
+    // client whose radio is faster (same compute, same bytes) never needs
+    // MORE of the shared bandwidth than a slower twin
+    check("waterfill_rates: het simplex + floor + rate-monotone", 300, |g| {
+        let k = g.usize_in(2..=40);
+        let b_min = g.f64_in(0.0001..0.9) / k as f64;
+        let ct = g.vec_f64(k, 0.0..0.05);
+        let by = g.vec_f64(k, 1e3..5e6);
+        // rates spanning the multi_rat/cell_edge regimes (down to 5% of B)
+        let mut rates: Vec<f64> = g.vec_f64(k, 0.05..1.0).iter().map(|s| s * 1e9).collect();
+        // plant a fast/slow twin pair: identical compute and bytes, only
+        // the rate differs
+        let (i, j) = (0, 1);
+        let mut ct = ct;
+        let mut by = by;
+        ct[j] = ct[i];
+        by[j] = by[i];
+        if rates[i] < rates[j] {
+            rates.swap(i, j);
+        }
+        let fr = waterfill_rates(&ct, &by, &rates, b_min);
+        prop_assert!(
+            (fr.iter().sum::<f64>() - 1.0).abs() <= 1e-9,
+            "sum {} != 1 (k={k}, b_min={b_min})",
+            fr.iter().sum::<f64>()
+        );
+        for &f in &fr {
+            prop_assert!(f >= b_min - 1e-12, "frac {f} below floor {b_min} (k={k})");
+        }
+        prop_assert!(
+            fr[i] <= fr[j] + 1e-9,
+            "faster twin got more bandwidth: rate {} frac {} vs rate {} frac {}",
+            rates[i],
+            fr[i],
+            rates[j],
+            fr[j]
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn p2_shares_uniform_is_bitwise_the_scalar_path() {
+    // the homogeneous-identity gate of PERF.md §allocation-P2′, fuzzed: an
+    // all-1.0 share vector (what a Uniform RoundEnv materializes for a
+    // sampled selection) must reproduce the pre-refactor scalar-B solver
+    // BIT FOR BIT across every output field, at any (k, sizes, E, adapt,
+    // scale, server_side) parameterization the four frameworks use
+    check("solve_p2_shares(all-1.0) ≡ solve_p2_at, bitwise", 150, |g| {
+        let mut cfg = SimConfig::commag();
+        cfg.e_max = g.usize_in(2..=20);
+        cfg.e_initial = cfg.e_max;
+        let topo = Topology::build(&cfg);
+        let k = g.usize_in(1..=20);
+        let sel: Vec<_> = topo.rics.iter().take(k).collect();
+        let sizes: Vec<UploadSizes> = (0..k)
+            .map(|_| UploadSizes {
+                model_bytes: g.f64_in(1e3..1e5),
+                feature_bytes: g.f64_in(1e3..1e6),
+            })
+            .collect();
+        let e_last = g.usize_in(1..=cfg.e_max);
+        let adapt = g.bool();
+        let scale = g.f64_in(0.2..2.0);
+        let server_side = g.bool();
+        let bw = cfg.bandwidth_bps * g.f64_in(0.3..1.5);
+        let a = solve_p2_at(&cfg, bw, &sel, &sizes, e_last, adapt, scale, server_side);
+        let ones = vec![1.0; k];
+        let b = solve_p2_shares(
+            &cfg,
+            bw,
+            Some(&ones),
+            &sel,
+            &sizes,
+            e_last,
+            adapt,
+            scale,
+            server_side,
+        );
+        prop_assert!(a.e == b.e, "E diverged: {} vs {}", a.e, b.e);
+        for (x, y) in a.fracs.iter().zip(&b.fracs) {
+            prop_assert!(x.to_bits() == y.to_bits(), "frac bits diverged: {x} vs {y}");
+        }
+        prop_assert!(
+            a.latency.total().to_bits() == b.latency.total().to_bits(),
+            "latency bits diverged"
+        );
+        prop_assert!(a.round_cost.to_bits() == b.round_cost.to_bits(), "round_cost diverged");
+        prop_assert!(a.objective.to_bits() == b.objective.to_bits(), "objective diverged");
+
+        // and the rate-vector form of the same identity at the waterfill
+        // layer: uniform rates delegate to the scalar expression shapes
+        let ct: Vec<f64> = sel.iter().map(|r| a.e as f64 * r.q_c * scale).collect();
+        let by: Vec<f64> = sizes.iter().map(|s| s.total()).collect();
+        let fr_scalar = waterfill(&ct, &by, bw, cfg.b_min);
+        let fr_rates = waterfill_rates(&ct, &by, &vec![bw; k], cfg.b_min);
+        for (x, y) in fr_scalar.iter().zip(&fr_rates) {
+            prop_assert!(x.to_bits() == y.to_bits(), "waterfill bits diverged: {x} vs {y}");
         }
         Ok(())
     });

@@ -88,6 +88,42 @@ fn capped_paths_match_dense_across_scenario_presets() {
                             dense.len() <= 1 || dense.windows(2).all(|w| w[0] < w[1]),
                             "{what}: ids not ascending"
                         );
+                        // P2′: the same parity with the round's per-client
+                        // uplink shares threaded through — the path the
+                        // frameworks take on the heterogeneous presets
+                        let sh = env.share_map();
+                        let dense_sh = ids(&sel.select_capped_shares(
+                            &topo_r,
+                            &cost,
+                            cap,
+                            SelectPath::Dense,
+                            1,
+                            sh,
+                        ));
+                        let stream_sh = ids(&sel.select_capped_shares(
+                            &topo_r,
+                            &cost,
+                            cap,
+                            SelectPath::Streaming,
+                            4,
+                            sh,
+                        ));
+                        assert_eq!(dense_sh, stream_sh, "{what}: shares streaming jobs=4");
+                        if matches!(kind, ScenarioKind::MultiRat | ScenarioKind::CellEdge) {
+                            // these presets only perturb shares (the topology
+                            // stays identity), so a requested Indexed walk —
+                            // downgraded internally when shares are present —
+                            // must still agree with the dense oracle
+                            let indexed_sh = ids(&sel.select_capped_shares(
+                                &topo_r,
+                                &cost,
+                                cap,
+                                SelectPath::Indexed,
+                                1,
+                                sh,
+                            ));
+                            assert_eq!(dense_sh, indexed_sh, "{what}: shares indexed");
+                        }
                     }
                 }
                 // the closed loop moves the comm estimate between rounds
