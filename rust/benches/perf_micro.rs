@@ -174,6 +174,35 @@ fn main() {
         });
     }
 
+    // ---- zero-copy dispatch: before/after (PERF.md §zero-copy) ------------
+    // identical splitme rounds with the upload memo + buffer pool disabled
+    // vs enabled — the differential suite proves the records bitwise
+    // identical; this pair prices the literal-upload and allocator churn
+    // the zero-copy path removes (the PERF.md before/after rows)
+    {
+        let mut engine_off = Engine::from_default_manifest().expect("artifacts");
+        engine_off.set_zero_copy(false, false);
+        let mut engine_on = Engine::from_default_manifest().expect("artifacts");
+        engine_on.set_zero_copy(true, true);
+        for (tag, eng) in [("off", &engine_off), ("on", &engine_on)] {
+            let zc_ctx = ExperimentContext::new(eng, &e2e_cfg).unwrap();
+            let mut runner = Runner::shared(&zc_ctx, FrameworkKind::SplitMe).unwrap();
+            let mut round = 0usize;
+            rec.bench(&format!("e2e/splitme_round_zerocopy_{tag}"), 1, 5, || {
+                runner.step(round).unwrap();
+                round += 1;
+            });
+        }
+        let zp = engine_on.pool();
+        println!(
+            "zero-copy counters (on): uploads elided={} built={}  pool hits={} misses={}",
+            engine_on.uploads_elided(),
+            zp.uploads_built(),
+            zp.pool_hits(),
+            zp.pool_misses()
+        );
+    }
+
     // ---- whole-shard smash batching vs the per-batch oracle ---------------
     // ONE client_fwd_x{NB} dispatch per client-round vs num_batches calls
     // (ISSUE 3; the differential suite proves the paths bitwise identical)

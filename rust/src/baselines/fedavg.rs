@@ -9,34 +9,47 @@
 use anyhow::Result;
 
 use crate::fl::{
-    aggregate_indexed, resolve_client_jobs, run_clients, run_steps, sample_from, state,
-    ExperimentContext, Framework, RoundOutcome,
+    aggregate_indexed_pooled, resolve_client_jobs, run_clients, run_steps, sample_from_into,
+    state, ExperimentContext, Framework, RoundOutcome,
 };
 use crate::jsonio::Json;
 use crate::oran::{self, RicProfile, UploadSizes};
-use crate::runtime::Tensor;
+use crate::runtime::{Tensor, Versioned};
 use crate::scenario::RoundEnv;
 use crate::sim::RngPool;
 
 pub struct FedAvg {
-    wf: Tensor,
+    /// global full model, version-tagged: the tag keys the engine's upload
+    /// memo so every client after a round's first elides the host→literal
+    /// copy of the broadcast (PERF.md §zero-copy)
+    wf: Versioned,
+    /// reclaimed selected-ids Vec from the previous round ([`Framework::reclaim`])
+    ids_scratch: Vec<usize>,
+    /// candidate-set scratch for the availability filter
+    avail_scratch: Vec<usize>,
 }
 
 impl FedAvg {
     pub fn new(ctx: &ExperimentContext) -> Result<Self> {
         let c = ctx.init.client(&ctx.pool)?;
         let s = ctx.init.server(&ctx.pool)?;
-        Ok(Self { wf: ctx.init.concat_full(&c, &s)? })
+        Ok(Self {
+            wf: Versioned::new(ctx.init.concat_full(&c, &s)?),
+            ids_scratch: Vec::new(),
+            avail_scratch: Vec::new(),
+        })
     }
 
     /// Shared by O-RANFed: run E full-model SGD steps for each selected
     /// client from the global model (one independent job per client on the
     /// scoped executor) and aggregate with the deterministic index-ordered
     /// reduce — any `client_jobs` count reproduces the sequential path bit
-    /// for bit (tests/differential.rs).
+    /// for bit (tests/differential.rs). The shared [`Versioned`] global
+    /// model rides the engine's upload memo: only the round's first client
+    /// builds its literal.
     pub(crate) fn train_selected(
         ctx: &ExperimentContext,
-        wf: &Tensor,
+        wf: &Versioned,
         selected: &[usize],
         e: usize,
     ) -> Result<(Tensor, f32)> {
@@ -49,7 +62,7 @@ impl FedAvg {
                 ctx,
                 "fedavg_step",
                 "fedavg_step_chunk",
-                wf.clone(),
+                wf,
                 e,
                 &eta,
                 |t| {
@@ -68,7 +81,7 @@ impl FedAvg {
             loss_n += ln;
             parts.push((i, w));
         }
-        Ok((aggregate_indexed(parts)?, loss_sum / loss_n.max(1) as f32))
+        Ok((aggregate_indexed_pooled(ctx.engine, parts)?, loss_sum / loss_n.max(1) as f32))
     }
 }
 
@@ -89,7 +102,11 @@ impl Framework for FedAvg {
         // that are actually reachable this round (scenario churn); identity
         // environments borrow ctx.topo — no per-round O(M) copy
         let topo_r = env.effective(&ctx.topo);
-        let ids = sample_from(rng, "fedavg_select", round, &env.available_ids(), cfg.fedavg_k);
+        // recycle the previous round's Vecs (PERF.md §zero-copy): same draw,
+        // same candidate order — bitwise identical to the allocating path
+        env.available_ids_into(&mut self.avail_scratch);
+        let mut ids = std::mem::take(&mut self.ids_scratch);
+        sample_from_into(rng, "fedavg_select", round, &self.avail_scratch, cfg.fedavg_k, &mut ids);
         let e = cfg.fedavg_e;
 
         // uniform bandwidth among the K selected; full-model upload each
@@ -139,7 +156,10 @@ impl Framework for FedAvg {
             f32::NAN
         } else {
             let (wf, loss) = Self::train_selected(ctx, &self.wf, &survivors, e)?;
-            self.wf = wf;
+            // replace() bumps the version tag (upload memo invalidation);
+            // the displaced model feeds the buffer pool
+            let old = self.wf.replace(wf);
+            ctx.engine.give_back(old);
             loss
         };
 
@@ -176,7 +196,7 @@ impl Framework for FedAvg {
             |r| e as f64 * r.q_c * scale,
         );
         Ok(RoundOutcome {
-            selected_ids: ids.clone(),
+            selected_ids: ids,
             e,
             comm_bytes,
             latency,
@@ -191,7 +211,7 @@ impl Framework for FedAvg {
     }
 
     fn full_model(&mut self, _ctx: &ExperimentContext) -> Result<Tensor> {
-        Ok(self.wf.clone())
+        Ok(self.wf.tensor().clone())
     }
 
     fn save_state(&self) -> Json {
@@ -199,7 +219,11 @@ impl Framework for FedAvg {
     }
 
     fn load_state(&mut self, s: &Json) -> Result<()> {
-        self.wf = state::tensor_from(s.get("wf")?)?;
+        let _ = self.wf.replace(state::tensor_from(s.get("wf")?)?);
         Ok(())
+    }
+
+    fn reclaim(&mut self, out: RoundOutcome) {
+        self.ids_scratch = out.selected_ids;
     }
 }

@@ -14,14 +14,18 @@ use crate::baselines::fedavg::FedAvg;
 use crate::fl::{resolve_client_jobs, state, ExperimentContext, Framework, RoundOutcome};
 use crate::jsonio::Json;
 use crate::oran::{self, RicProfile, UploadSizes};
-use crate::runtime::Tensor;
+use crate::runtime::{Tensor, Versioned};
 use crate::scenario::RoundEnv;
 use crate::selection::{CostModel, DeadlineSelector, SelectPath};
 use crate::sim::RngPool;
 
 pub struct OranFed {
-    wf: Tensor,
+    /// global full model, version-tagged for the engine's upload memo
+    /// (PERF.md §zero-copy)
+    wf: Versioned,
     selector: DeadlineSelector,
+    /// reclaimed selected-ids Vec from the previous round ([`Framework::reclaim`])
+    ids_scratch: Vec<usize>,
 }
 
 impl OranFed {
@@ -32,13 +36,14 @@ impl OranFed {
         // comes from the O(1) uniform constructor (no O(M) size vector)
         let size = UploadSizes { model_bytes: ctx.full_model_bytes(), feature_bytes: 0.0 };
         Ok(Self {
-            wf: ctx.init.concat_full(&c, &s)?,
+            wf: Versioned::new(ctx.init.concat_full(&c, &s)?),
             selector: DeadlineSelector::from_uniform(
                 ctx.topo.len(),
                 size,
                 ctx.topo.bandwidth_bps,
                 ctx.cfg.alpha,
             ),
+            ids_scratch: Vec::new(),
         })
     }
 }
@@ -124,7 +129,10 @@ impl Framework for OranFed {
         // fault layer: each selected client's retry budget is its deadline
         // slack after compute + its ALLOCATED uplink time (water-filling
         // fractions over its own effective rate, not uniform shares)
-        let ids: Vec<usize> = selected.iter().map(|r| r.id).collect();
+        // recycle the previous round's reclaimed Vec (PERF.md §zero-copy)
+        let mut ids = std::mem::take(&mut self.ids_scratch);
+        ids.clear();
+        ids.extend(selected.iter().map(|r| r.id));
         let fate = ctx.faults.round(round).resolve(
             &ids,
             |m| {
@@ -161,7 +169,10 @@ impl Framework for OranFed {
             f32::NAN
         } else {
             let (wf, loss) = FedAvg::train_selected(ctx, &self.wf, &survivors, e)?;
-            self.wf = wf;
+            // replace() bumps the version tag (upload memo invalidation);
+            // the displaced model feeds the buffer pool
+            let old = self.wf.replace(wf);
+            ctx.engine.give_back(old);
             loss
         };
 
@@ -213,7 +224,7 @@ impl Framework for OranFed {
     }
 
     fn full_model(&mut self, _ctx: &ExperimentContext) -> Result<Tensor> {
-        Ok(self.wf.clone())
+        Ok(self.wf.tensor().clone())
     }
 
     fn save_state(&self) -> Json {
@@ -224,8 +235,12 @@ impl Framework for OranFed {
     }
 
     fn load_state(&mut self, s: &Json) -> Result<()> {
-        self.wf = state::tensor_from(s.get("wf")?)?;
+        let _ = self.wf.replace(state::tensor_from(s.get("wf")?)?);
         state::selector_load(&mut self.selector, s.get("selector")?)?;
         Ok(())
+    }
+
+    fn reclaim(&mut self, out: RoundOutcome) {
+        self.ids_scratch = out.selected_ids;
     }
 }

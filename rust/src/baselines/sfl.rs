@@ -15,18 +15,25 @@
 use anyhow::Result;
 
 use crate::fl::{
-    aggregate_indexed, resolve_client_jobs, run_clients, sample_from, state, ExperimentContext,
-    Framework, RoundOutcome,
+    aggregate_indexed_pooled, resolve_client_jobs, run_clients, sample_from_into, state,
+    ExperimentContext, Framework, RoundOutcome,
 };
 use crate::jsonio::Json;
 use crate::oran::{self, RicProfile, UploadSizes};
-use crate::runtime::{Arg, Tensor};
+use crate::runtime::{Arg, Tensor, Versioned};
 use crate::scenario::RoundEnv;
 use crate::sim::RngPool;
 
 pub struct VanillaSfl {
-    wc: Tensor,
-    ws: Tensor,
+    /// global half-models, version-tagged: each round's first dispatch per
+    /// client takes the shared aggregate through the engine's upload memo
+    /// (PERF.md §zero-copy) instead of a per-client clone + re-upload
+    wc: Versioned,
+    ws: Versioned,
+    /// reclaimed selected-ids Vec from the previous round ([`Framework::reclaim`])
+    ids_scratch: Vec<usize>,
+    /// candidate-set scratch for the availability filter
+    avail_scratch: Vec<usize>,
 }
 
 /// One client's independent round contribution: both trained half-models
@@ -41,8 +48,10 @@ struct ClientHalves {
 impl VanillaSfl {
     pub fn new(ctx: &ExperimentContext) -> Result<Self> {
         Ok(Self {
-            wc: ctx.init.client(&ctx.pool)?,
-            ws: ctx.init.server(&ctx.pool)?,
+            wc: Versioned::new(ctx.init.client(&ctx.pool)?),
+            ws: Versioned::new(ctx.init.server(&ctx.pool)?),
+            ids_scratch: Vec::new(),
+            avail_scratch: Vec::new(),
         })
     }
 }
@@ -64,7 +73,11 @@ impl Framework for VanillaSfl {
         // (scenario churn) can join the per-batch ping-pong; identity
         // environments borrow ctx.topo — no per-round O(M) copy
         let topo_r = env.effective(&ctx.topo);
-        let ids = sample_from(rng, "sfl_select", round, &env.available_ids(), cfg.sfl_k);
+        // recycle the previous round's Vecs (PERF.md §zero-copy): same draw,
+        // same candidate order — bitwise identical to the allocating path
+        env.available_ids_into(&mut self.avail_scratch);
+        let mut ids = std::mem::take(&mut self.ids_scratch);
+        sample_from_into(rng, "sfl_select", round, &self.avail_scratch, cfg.sfl_k, &mut ids);
         let e = cfg.sfl_e;
         // per-client effective rates (P2′): None on homogeneous rounds keeps
         // every expression below on the historical scalar-B path bit for bit
@@ -110,31 +123,49 @@ impl Framework for VanillaSfl {
         let halves = run_clients(train_n, jobs, |i| {
             let m = survivors[i];
             let shard = &ctx.shard(m).data;
-            let mut wc_m = wc0.clone();
-            let mut ws_m = ws0.clone();
+            // None = "still at the round's shared aggregate": the t = 0
+            // dispatches take the Versioned halves through the upload memo
+            // (only the round's first client builds their literals); after
+            // the first update each half is this client's own tensor
+            let mut wc_m: Option<Tensor> = None;
+            let mut ws_m: Option<Tensor> = None;
+            let wc_arg = |wc_m: &'_ Option<Tensor>| -> Arg<'_> {
+                match wc_m {
+                    Some(t) => Arg::Fresh(t),
+                    None => Arg::Versioned(wc0),
+                }
+            };
             let mut loss = 0f32;
             for t in 0..e {
                 let (x, y) = shard.batch(t);
                 let smash = ctx
                     .engine
-                    .run_id(fwd, &[Arg::Fresh(&wc_m), Arg::Cached(x)])?
+                    .run_id(fwd, &[wc_arg(&wc_m), Arg::Cached(x)])?
                     .remove(0);
+                let ws_arg = match &ws_m {
+                    Some(t) => Arg::Fresh(t),
+                    None => Arg::Versioned(ws0),
+                };
                 let out = ctx.engine.run_id(
                     server_step,
-                    &[Arg::Fresh(&ws_m), Arg::Fresh(&smash), Arg::Cached(y), Arg::Cached(&eta)],
+                    &[ws_arg, Arg::Fresh(&smash), Arg::Cached(y), Arg::Cached(&eta)],
                 )?;
                 let mut it = out.into_iter();
-                ws_m = it.next().expect("sfl_server_step: params");
+                ws_m = Some(it.next().expect("sfl_server_step: params"));
                 let gsm = it.next().expect("sfl_server_step: gsmash");
                 loss += it.next().expect("sfl_server_step: loss").data[0];
-                wc_m = ctx
-                    .engine
-                    .run_id(
-                        client_bwd,
-                        &[Arg::Fresh(&wc_m), Arg::Cached(x), Arg::Fresh(&gsm), Arg::Cached(&eta)],
-                    )?
-                    .remove(0);
+                wc_m = Some(
+                    ctx.engine
+                        .run_id(
+                            client_bwd,
+                            &[wc_arg(&wc_m), Arg::Cached(x), Arg::Fresh(&gsm), Arg::Cached(&eta)],
+                        )?
+                        .remove(0),
+                );
             }
+            // e == 0: materialize copies so the reduce still averages
+            let wc_m = wc_m.unwrap_or_else(|| wc0.tensor().clone());
+            let ws_m = ws_m.unwrap_or_else(|| ws0.tensor().clone());
             Ok(ClientHalves { wc: wc_m, ws: ws_m, loss, steps: e })
         })?;
 
@@ -154,8 +185,12 @@ impl Framework for VanillaSfl {
         let train_loss = if quorum_miss {
             f32::NAN
         } else {
-            self.wc = aggregate_indexed(wc_parts)?;
-            self.ws = aggregate_indexed(ws_parts)?;
+            // pooled aggregation (bitwise = aggregate_indexed); replace()
+            // bumps the version tags and the displaced halves feed the pool
+            let old_wc = self.wc.replace(aggregate_indexed_pooled(ctx.engine, wc_parts)?);
+            ctx.engine.give_back(old_wc);
+            let old_ws = self.ws.replace(aggregate_indexed_pooled(ctx.engine, ws_parts)?);
+            ctx.engine.give_back(old_ws);
             loss_sum / loss_n.max(1) as f32
         };
 
@@ -223,7 +258,7 @@ impl Framework for VanillaSfl {
             |r| e as f64 * r.q_c,
         );
         Ok(RoundOutcome {
-            selected_ids: ids.clone(),
+            selected_ids: ids,
             e,
             comm_bytes,
             latency,
@@ -249,8 +284,12 @@ impl Framework for VanillaSfl {
     }
 
     fn load_state(&mut self, s: &Json) -> Result<()> {
-        self.wc = state::tensor_from(s.get("wc")?)?;
-        self.ws = state::tensor_from(s.get("ws")?)?;
+        let _ = self.wc.replace(state::tensor_from(s.get("wc")?)?);
+        let _ = self.ws.replace(state::tensor_from(s.get("ws")?)?);
         Ok(())
+    }
+
+    fn reclaim(&mut self, out: RoundOutcome) {
+        self.ids_scratch = out.selected_ids;
     }
 }

@@ -233,7 +233,7 @@ impl<'e> Runner<'e> {
             (f32::NAN, f32::NAN)
         };
 
-        Ok(RoundRecord {
+        let rec = RoundRecord {
             round,
             selected: out.selected_ids.len(),
             e: out.e,
@@ -261,7 +261,12 @@ impl<'e> Runner<'e> {
             quorum_miss: out.quorum_miss as usize,
             energy_cost: out.energy_cost,
             env_bw_spread: env.bw_spread(),
-        })
+        };
+        // everything the record needs is copied out above — hand the outcome
+        // back so the framework reuses its Vec scratch next round (PERF.md
+        // §zero-copy: no per-round selected_ids churn at M = 1e5-1e6)
+        framework.reclaim(out);
+        Ok(rec)
     }
 
     /// Force an evaluation of the current model (outside the round cadence).

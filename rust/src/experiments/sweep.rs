@@ -13,7 +13,7 @@ use anyhow::Result;
 use super::executor;
 use crate::allocation::{solve_p2_at, Allocation};
 use crate::config::SimConfig;
-use crate::oran::{Topology, UploadSizes};
+use crate::oran::{self, Topology, UploadSizes};
 use crate::scenario::Scenario;
 use crate::selection::DeadlineSelector;
 
@@ -27,6 +27,12 @@ pub struct SweepPoint {
     pub e: usize,
     pub round_latency: f64,
     pub round_cost: f64,
+    /// modeled client-side round energy (J) of the settled decision — the
+    /// P2′ energy axis as a grid column, so `repro sweep` surfaces plot it
+    /// without a separate pareto run. Priced like the training loop's
+    /// [`crate::oran::round_energy`]: transmit seconds at the allocated
+    /// fractions plus client-half compute at the settled E.
+    pub energy_cost: f64,
 }
 
 fn sizes(topo: &Topology, split_dim: usize, client_params: usize) -> Vec<UploadSizes> {
@@ -56,9 +62,11 @@ pub fn settle(
     let scenario = Scenario::new(cfg)?;
     let all_sizes = sizes(&topo, split_dim, client_params);
     let mut selector = DeadlineSelector::new(&topo, &all_sizes, cfg.alpha);
+    let em = oran::EnergyModel::from_cfg(cfg);
     let mut e_last = cfg.e_initial;
     let mut last: Option<Allocation> = None;
     let mut selected_n = 0usize;
+    let mut last_energy = 0.0f64;
     for round in 0..rounds {
         let env = scenario.env(round);
         // identity rounds borrow `topo` — no O(M) copy in the settle loop
@@ -72,6 +80,15 @@ pub fn settle(
         }
         let sz: Vec<UploadSizes> = selected.iter().map(|r| all_sizes[r.id]).collect();
         let alloc = solve_p2_at(cfg, topo_r.bandwidth_bps, &selected, &sz, e_last, true, 1.0, true);
+        // price the settled decision's client-side energy exactly like the
+        // training loop does (transmit at the allocated fractions, client-half
+        // compute at the chosen E) so grid columns line up with run records
+        last_energy = oran::round_energy(
+            &em,
+            &selected,
+            |i| oran::uplink_time(sz[i].total(), alloc.fracs[i], topo_r.bandwidth_bps),
+            |r| alloc.e as f64 * r.q_c,
+        );
         e_last = alloc.e;
         selector.observe(alloc.latency.max_uplink);
         selected_n = selected.len();
@@ -85,6 +102,7 @@ pub fn settle(
         e: alloc.e,
         round_latency: alloc.latency.total(),
         round_cost: alloc.round_cost,
+        energy_cost: last_energy,
     })
 }
 
@@ -161,18 +179,19 @@ pub fn grid_served(
 
 pub fn print_table(points: &[SweepPoint]) {
     println!(
-        "{:>12} {:>6} {:>9} {:>4} {:>12} {:>11}",
-        "bandwidth", "rho", "|A_t|", "E", "latency(ms)", "round cost"
+        "{:>12} {:>6} {:>9} {:>4} {:>12} {:>11} {:>11}",
+        "bandwidth", "rho", "|A_t|", "E", "latency(ms)", "round cost", "energy(J)"
     );
     for p in points {
         println!(
-            "{:>9.2}Gbps {:>6.2} {:>9} {:>4} {:>12.2} {:>11.2}",
+            "{:>9.2}Gbps {:>6.2} {:>9} {:>4} {:>12.2} {:>11.2} {:>11.3}",
             p.bandwidth_bps / 1e9,
             p.rho,
             p.selected,
             p.e,
             1e3 * p.round_latency,
-            p.round_cost
+            p.round_cost,
+            p.energy_cost
         );
     }
 }
@@ -194,6 +213,9 @@ mod tests {
         assert!(a.selected >= 1 && a.selected <= cfg.num_clients);
         assert!(a.e >= 1 && a.e <= cfg.e_max);
         assert!(a.round_latency > 0.0);
+        // the P2' energy column: positive, finite, and bitwise reproducible
+        assert!(a.energy_cost > 0.0 && a.energy_cost.is_finite());
+        assert_eq!(a.energy_cost.to_bits(), b.energy_cost.to_bits());
     }
 
     #[test]

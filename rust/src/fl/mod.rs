@@ -34,7 +34,7 @@ use crate::jsonio::Json;
 use crate::model::ModelInit;
 use crate::oran::{RoundLatency, Topology};
 use crate::runtime::{
-    Arg, ArtifactId, ChunkStacks, Engine, Frozen, PresetManifest, PresetPlan, Tensor,
+    Arg, ArtifactId, ChunkStacks, Engine, Frozen, PresetManifest, PresetPlan, Tensor, Versioned,
 };
 use crate::scenario::{RoundEnv, Scenario};
 use crate::sim::RngPool;
@@ -480,6 +480,33 @@ where
     executor::try_run_indexed(n, jobs, f).into_iter().collect()
 }
 
+/// Starting parameters of a [`run_steps`] local-training pass.
+///
+/// `Owned` is the historical shape: the caller clones the round's aggregate
+/// per client and the first dispatch re-uploads those bytes every time.
+/// `Shared` borrows the framework's [`Versioned`] aggregate instead: the
+/// first dispatch goes through the engine's upload memo (`Arg::Versioned`),
+/// so every client of a round after the first elides both the clone and the
+/// host→literal conversion of identical bytes (PERF.md §zero-copy). The two
+/// shapes are bitwise identical — the dispatched literal holds the same
+/// bytes either way (tests/differential.rs).
+pub enum StartParams<'a> {
+    Owned(Tensor),
+    Shared(&'a Versioned),
+}
+
+impl<'a> From<Tensor> for StartParams<'a> {
+    fn from(t: Tensor) -> Self {
+        StartParams::Owned(t)
+    }
+}
+
+impl<'a> From<&'a Versioned> for StartParams<'a> {
+    fn from(v: &'a Versioned) -> Self {
+        StartParams::Shared(v)
+    }
+}
+
 /// Run `e` local SGD steps of a `(params, a_t, b_t, lr) -> (params', loss)`
 /// step artifact, dispatching the scan-folded `*_chunk` variant for
 /// `floor(e/chunk)` iterations (one PJRT call per `chunk` updates — the §Perf
@@ -497,7 +524,7 @@ pub fn run_steps<'t>(
     ctx: &ExperimentContext,
     single_role: &str,
     chunk_role: &str,
-    params: Tensor,
+    params: impl Into<StartParams<'t>>,
     e: usize,
     lr: &Frozen,
     at: impl Fn(usize) -> (&'t Frozen, &'t Frozen),
@@ -514,13 +541,25 @@ pub fn run_steps_with<'t>(
     ctx: &ExperimentContext,
     single_role: &str,
     chunk_role: &str,
-    mut params: Tensor,
+    params: impl Into<StartParams<'t>>,
     e: usize,
     lr: &Frozen,
     at: impl Fn(usize) -> (&'t Frozen, &'t Frozen),
     chunks: Option<(&ChunkStacks, &ChunkStacks)>,
     chunk: usize,
 ) -> Result<(Tensor, f32, usize)> {
+    // the FIRST dispatch may borrow a shared Versioned aggregate (upload
+    // elision); after it, params is this client's own output tensor
+    let (mut cur, shared): (Option<Tensor>, Option<&Versioned>) = match params.into() {
+        StartParams::Owned(t) => (Some(t), None),
+        StartParams::Shared(v) => (None, Some(v)),
+    };
+    let param_arg = |cur: &'_ Option<Tensor>| -> Arg<'_> {
+        match cur {
+            Some(t) => Arg::Fresh(t),
+            None => Arg::Versioned(shared.expect("no owned params and no shared start")),
+        }
+    };
     let single = ctx.plan.role(single_role)?;
     let mut loss_sum = 0f32;
     let mut n = 0usize;
@@ -538,10 +577,10 @@ pub fn run_steps_with<'t>(
                 let zs = cb.window(t)?;
                 let out = ctx.engine.run_id(
                     chunk_id,
-                    &[Arg::Fresh(&params), Arg::Cached(xs), Arg::Cached(zs), Arg::Cached(lr)],
+                    &[param_arg(&cur), Arg::Cached(xs), Arg::Cached(zs), Arg::Cached(lr)],
                 )?;
                 let mut it = out.into_iter();
-                params = it.next().expect("chunk step: params");
+                cur = Some(it.next().expect("chunk step: params"));
                 // artifact reports the chunk-mean loss
                 loss_sum += it.next().expect("chunk step: loss").data[0] * chunk as f32;
                 n += chunk;
@@ -567,10 +606,10 @@ pub fn run_steps_with<'t>(
             let bx = Tensor::stack(&bw).context("stacking remainder window")?.freeze();
             let out = ctx.engine.run_id(
                 rem_id,
-                &[Arg::Fresh(&params), Arg::Cached(&ax), Arg::Cached(&bx), Arg::Cached(lr)],
+                &[param_arg(&cur), Arg::Cached(&ax), Arg::Cached(&bx), Arg::Cached(lr)],
             )?;
             let mut it = out.into_iter();
-            params = it.next().expect("remainder fold: params");
+            cur = Some(it.next().expect("remainder fold: params"));
             for l in &it.next().expect("remainder fold: losses").data {
                 loss_sum += l;
             }
@@ -582,14 +621,20 @@ pub fn run_steps_with<'t>(
         let (a, b) = at(t);
         let out = ctx.engine.run_id(
             single,
-            &[Arg::Fresh(&params), Arg::Cached(a), Arg::Cached(b), Arg::Cached(lr)],
+            &[param_arg(&cur), Arg::Cached(a), Arg::Cached(b), Arg::Cached(lr)],
         )?;
         let mut it = out.into_iter();
-        params = it.next().expect("step: params");
+        cur = Some(it.next().expect("step: params"));
         loss_sum += it.next().expect("step: loss").data[0];
         n += 1;
         t += 1;
     }
+    // e == 0 with a shared start: materialize a copy so the caller still
+    // gets an owned tensor (degenerate, but keeps the contract total)
+    let params = match cur {
+        Some(t) => t,
+        None => shared.expect("no owned params and no shared start").tensor().clone(),
+    };
     Ok((params, loss_sum, n))
 }
 
@@ -615,6 +660,30 @@ pub fn aggregate_indexed(mut parts: Vec<(usize, Tensor)>) -> Result<Tensor> {
     parts.sort_by_key(|p| p.0);
     let ordered: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
     aggregate(&ordered)
+}
+
+/// [`aggregate_indexed`] with the accumulator drawn from and the consumed
+/// per-client parts returned to the engine's [`crate::runtime::BufferPool`]
+/// (PERF.md §zero-copy): the accumulator starts from `take_zeroed` (bitwise
+/// all-zero, like `Tensor::zeros`) and every part goes back via `give_back`
+/// after its in-order axpy fold, so the next round's client outputs reuse
+/// the allocations instead of churning the allocator. Identical f32
+/// accumulation order → bitwise identical to [`aggregate_indexed`]
+/// (tests/differential.rs).
+pub fn aggregate_indexed_pooled(engine: &Engine, mut parts: Vec<(usize, Tensor)>) -> Result<Tensor> {
+    if parts.is_empty() {
+        bail!("aggregate over empty set");
+    }
+    parts.sort_by_key(|p| p.0);
+    let mut acc = engine.take_zeroed(&parts[0].1.dims);
+    let w = 1.0 / parts.len() as f32;
+    for (_, p) in &parts {
+        acc.axpy(w, p)?;
+    }
+    for (_, p) in parts {
+        engine.give_back(p);
+    }
+    Ok(acc)
 }
 
 /// What one global round produced (feeds metrics + the simulated clock).
@@ -675,6 +744,14 @@ pub trait Framework {
     fn cache_bytes(&self) -> usize {
         0
     }
+
+    /// Hand the consumed [`RoundOutcome`] back after the coordinator has
+    /// copied everything it needs into the `RoundRecord` (PERF.md
+    /// §zero-copy): implementations reclaim the `selected_ids` Vec as next
+    /// round's selection scratch instead of reallocating it per round — the
+    /// arena piece of the M=10⁵–10⁶ path. Purely an allocation-reuse hook;
+    /// the default drops the outcome, which is the historical behavior.
+    fn reclaim(&mut self, _out: RoundOutcome) {}
 
     /// Serialize the framework-private state that must survive a
     /// checkpoint/resume cycle: model params (bit-exact via [`state`]
@@ -866,12 +943,29 @@ pub fn sample_from(
     candidates: &[usize],
     k: usize,
 ) -> Vec<usize> {
-    let mut rng = pool.stream(label, round as u64);
-    let mut ids = candidates.to_vec();
-    rng.shuffle(&mut ids);
-    ids.truncate(k.min(candidates.len()));
-    ids.sort_unstable();
+    let mut ids = Vec::new();
+    sample_from_into(pool, label, round, candidates, k, &mut ids);
     ids
+}
+
+/// [`sample_from`] into a caller-owned buffer (cleared first): identical
+/// draw — same stream, same shuffle over the same candidate order — without
+/// the per-round `Vec` allocation. Frameworks recycle their previous round's
+/// `selected_ids` through this ([`Framework::reclaim`], PERF.md §zero-copy).
+pub fn sample_from_into(
+    pool: &RngPool,
+    label: &str,
+    round: usize,
+    candidates: &[usize],
+    k: usize,
+    out: &mut Vec<usize>,
+) {
+    let mut rng = pool.stream(label, round as u64);
+    out.clear();
+    out.extend_from_slice(candidates);
+    rng.shuffle(out);
+    out.truncate(k.min(candidates.len()));
+    out.sort_unstable();
 }
 
 /// Draw K distinct client ids uniformly over all M (the pre-scenario shape;
@@ -1015,6 +1109,17 @@ mod tests {
                 sample_clients(&pool, "sel", round, 50, 10),
                 "round {round}"
             );
+        }
+    }
+
+    #[test]
+    fn sample_from_into_reuses_buffer_and_matches_sample_from() {
+        let pool = RngPool::new(11);
+        let avail: Vec<usize> = (0..40).step_by(3).collect();
+        let mut buf = vec![999usize; 77]; // dirty carry-over scratch
+        for round in 0..6 {
+            sample_from_into(&pool, "sel", round, &avail, 5, &mut buf);
+            assert_eq!(buf, sample_from(&pool, "sel", round, &avail, 5), "round {round}");
         }
     }
 

@@ -1,0 +1,284 @@
+//! Measured-perf regression gate: the engine behind `repro bench compare`.
+//!
+//! Parses two `BENCH_perf.json` files (the schema-1 output of
+//! [`super::Recorder::to_json`]), joins them by bench name, and reports a
+//! per-bench p50 delta table. A bench REGRESSES when its current median
+//! exceeds the baseline median by more than the threshold percentage; the
+//! CLI (and the CI `bench-compare` job) exit non-zero when any bench
+//! regresses. Added/removed benches are reported but never gate — renames
+//! and new coverage must not paint the gate red.
+//!
+//! The committed PR-1 placeholder baseline has an empty `benches` array;
+//! comparing against it passes with a warning (the gate arms itself the
+//! moment the bootstrap-baselines flow commits a real measurement).
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonio::Json;
+
+/// One bench row as read from a `BENCH_perf.json` file.
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    pub name: String,
+    pub iters: usize,
+    pub p50_secs: f64,
+    pub mean_secs: f64,
+}
+
+/// One joined bench: present in both files.
+#[derive(Debug, Clone)]
+pub struct Delta {
+    pub name: String,
+    pub base_p50: f64,
+    pub cur_p50: f64,
+    /// median delta in percent: `(cur - base) / base * 100`; 0 when the
+    /// baseline median is non-positive (degenerate timer resolution — such
+    /// a bench never gates)
+    pub pct: f64,
+}
+
+/// The full comparison of two bench files.
+#[derive(Debug)]
+pub struct Comparison {
+    /// benches present in both files, in baseline order
+    pub deltas: Vec<Delta>,
+    /// bench names only in the current file (reported, never gating)
+    pub added: Vec<String>,
+    /// bench names only in the baseline file (reported, never gating)
+    pub removed: Vec<String>,
+    /// regression threshold in percent (the `--threshold` knob)
+    pub threshold_pct: f64,
+}
+
+/// Parse the `benches` array of a schema-1 `BENCH_perf.json` document.
+pub fn load_benches(json: &Json) -> Result<Vec<BenchRow>> {
+    let schema = json.get("schema")?.as_usize().context("reading bench schema")?;
+    if schema != 1 {
+        bail!("unsupported BENCH_perf schema {schema} (expected 1)");
+    }
+    json.get("benches")?
+        .as_arr()?
+        .iter()
+        .map(|b| {
+            Ok(BenchRow {
+                name: b.get("name")?.as_str()?.to_string(),
+                iters: b.get("iters")?.as_usize()?,
+                p50_secs: b.get("p50_secs")?.as_f64()?,
+                mean_secs: b.get("mean_secs")?.as_f64()?,
+            })
+        })
+        .collect()
+}
+
+/// Join two bench sets by name and compute the per-bench median deltas.
+pub fn compare(baseline: &Json, current: &Json, threshold_pct: f64) -> Result<Comparison> {
+    if threshold_pct < 0.0 || !threshold_pct.is_finite() {
+        bail!("threshold must be a non-negative percentage, got {threshold_pct}");
+    }
+    let base = load_benches(baseline).context("parsing baseline bench file")?;
+    let cur = load_benches(current).context("parsing current bench file")?;
+    let mut deltas = Vec::new();
+    let mut removed = Vec::new();
+    for b in &base {
+        match cur.iter().find(|c| c.name == b.name) {
+            Some(c) => {
+                let pct = if b.p50_secs > 0.0 {
+                    (c.p50_secs - b.p50_secs) / b.p50_secs * 100.0
+                } else {
+                    0.0
+                };
+                deltas.push(Delta {
+                    name: b.name.clone(),
+                    base_p50: b.p50_secs,
+                    cur_p50: c.p50_secs,
+                    pct,
+                });
+            }
+            None => removed.push(b.name.clone()),
+        }
+    }
+    let added = cur
+        .iter()
+        .filter(|c| !base.iter().any(|b| b.name == c.name))
+        .map(|c| c.name.clone())
+        .collect();
+    Ok(Comparison { deltas, added, removed, threshold_pct })
+}
+
+impl Comparison {
+    /// Benches whose current median exceeds the baseline by more than the
+    /// threshold.
+    pub fn regressions(&self) -> Vec<&Delta> {
+        self.deltas.iter().filter(|d| d.pct > self.threshold_pct).collect()
+    }
+
+    /// True when any bench regresses — the CLI exits 1 on this.
+    pub fn regressed(&self) -> bool {
+        !self.regressions().is_empty()
+    }
+
+    /// The per-bench delta table (markdown — readable in terminals AND as a
+    /// CI artifact / PR comment), with a trailing added/removed note.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str("| bench | baseline p50 | current p50 | delta | status |\n");
+        out.push_str("|---|---:|---:|---:|---|\n");
+        for d in &self.deltas {
+            let status = if d.pct > self.threshold_pct {
+                "**REGRESSED**"
+            } else if d.pct < -self.threshold_pct {
+                "faster"
+            } else {
+                "ok"
+            };
+            out.push_str(&format!(
+                "| {} | {} | {} | {:+.1}% | {} |\n",
+                d.name,
+                fmt_secs(d.base_p50),
+                fmt_secs(d.cur_p50),
+                d.pct,
+                status
+            ));
+        }
+        if self.deltas.is_empty() {
+            out.push_str("| _(no common benches)_ | | | | |\n");
+        }
+        if !self.added.is_empty() {
+            out.push_str(&format!("\nadded (not gated): {}\n", self.added.join(", ")));
+        }
+        if !self.removed.is_empty() {
+            out.push_str(&format!("\nremoved (not gated): {}\n", self.removed.join(", ")));
+        }
+        let n = self.regressions().len();
+        out.push_str(&format!(
+            "\n{} of {} benches regressed past {:.1}% (threshold on median)\n",
+            n,
+            self.deltas.len(),
+            self.threshold_pct
+        ));
+        out
+    }
+}
+
+fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bench_file(rows: &[(&str, f64)]) -> Json {
+        let benches = rows
+            .iter()
+            .map(|(name, p50)| {
+                Json::obj(vec![
+                    ("name", Json::str(name.to_string())),
+                    ("iters", Json::num(10.0)),
+                    ("mean_secs", Json::num(*p50)),
+                    ("p50_secs", Json::num(*p50)),
+                    ("mad_secs", Json::num(0.0)),
+                    ("min_secs", Json::num(*p50)),
+                    ("max_secs", Json::num(*p50)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("schema", Json::num(1.0)), ("benches", Json::arr(benches))])
+    }
+
+    #[test]
+    fn identical_files_never_regress() {
+        let f = bench_file(&[("a", 1e-3), ("b", 2.5e-2)]);
+        let c = compare(&f, &f, 10.0).unwrap();
+        assert!(!c.regressed());
+        assert_eq!(c.deltas.len(), 2);
+        assert!(c.added.is_empty() && c.removed.is_empty());
+        assert!(c.deltas.iter().all(|d| d.pct == 0.0));
+    }
+
+    #[test]
+    fn slowdown_past_threshold_regresses() {
+        let base = bench_file(&[("hot", 1e-3), ("cold", 1e-3)]);
+        let cur = bench_file(&[("hot", 1.2e-3), ("cold", 1.05e-3)]);
+        let c = compare(&base, &cur, 10.0).unwrap();
+        assert!(c.regressed());
+        let regs = c.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].name, "hot");
+        assert!((regs[0].pct - 20.0).abs() < 1e-9);
+        // table marks exactly the regressed row
+        let t = c.table();
+        assert!(t.contains("**REGRESSED**"), "{t}");
+        assert!(t.contains("1 of 2 benches regressed"), "{t}");
+    }
+
+    #[test]
+    fn threshold_knob_moves_the_gate() {
+        let base = bench_file(&[("hot", 1e-3)]);
+        let cur = bench_file(&[("hot", 1.2e-3)]);
+        assert!(compare(&base, &cur, 10.0).unwrap().regressed());
+        assert!(!compare(&base, &cur, 25.0).unwrap().regressed());
+        // speedups never gate, whatever the threshold
+        assert!(!compare(&cur, &base, 0.0).unwrap().regressed());
+    }
+
+    #[test]
+    fn added_and_removed_benches_report_but_do_not_gate() {
+        let base = bench_file(&[("kept", 1e-3), ("gone", 1e-3)]);
+        let cur = bench_file(&[("kept", 1e-3), ("new", 5.0)]);
+        let c = compare(&base, &cur, 10.0).unwrap();
+        assert!(!c.regressed());
+        assert_eq!(c.added, vec!["new".to_string()]);
+        assert_eq!(c.removed, vec!["gone".to_string()]);
+        let t = c.table();
+        assert!(t.contains("added (not gated): new"), "{t}");
+        assert!(t.contains("removed (not gated): gone"), "{t}");
+    }
+
+    #[test]
+    fn empty_placeholder_baseline_passes_with_all_benches_added() {
+        // the committed PR-1 placeholder: schema 1, zero benches
+        let base = bench_file(&[]);
+        let cur = bench_file(&[("a", 1e-3)]);
+        let c = compare(&base, &cur, 10.0).unwrap();
+        assert!(!c.regressed());
+        assert!(c.deltas.is_empty());
+        assert_eq!(c.added.len(), 1);
+    }
+
+    #[test]
+    fn zero_baseline_median_never_gates() {
+        let base = bench_file(&[("degenerate", 0.0)]);
+        let cur = bench_file(&[("degenerate", 1.0)]);
+        assert!(!compare(&base, &cur, 10.0).unwrap().regressed());
+    }
+
+    #[test]
+    fn schema_and_threshold_validation() {
+        let bad = Json::obj(vec![("schema", Json::num(2.0)), ("benches", Json::arr(vec![]))]);
+        let ok = bench_file(&[]);
+        assert!(compare(&bad, &ok, 10.0).is_err());
+        assert!(compare(&ok, &bad, 10.0).is_err());
+        assert!(compare(&ok, &ok, -1.0).is_err());
+        assert!(compare(&ok, &ok, f64::NAN).is_err());
+    }
+
+    #[test]
+    fn recorder_output_round_trips_through_compare() {
+        // the end-to-end contract: what Recorder writes, compare reads
+        let mut rec = super::super::Recorder::new();
+        rec.bench("alpha", 0, 3, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        let j = Json::parse(&rec.to_json().to_string_pretty()).unwrap();
+        let c = compare(&j, &j, 10.0).unwrap();
+        assert_eq!(c.deltas.len(), 1);
+        assert!(!c.regressed());
+    }
+}

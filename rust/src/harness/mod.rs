@@ -11,6 +11,8 @@
 //! machine-readable `BENCH_perf.json` (schema documented in PERF.md) that
 //! tracks the repo's perf trajectory PR over PR.
 
+pub mod compare;
+
 use std::time::{Duration, Instant};
 
 use crate::jsonio::Json;

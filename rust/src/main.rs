@@ -48,6 +48,7 @@ USAGE:
                 [--served] [--cache-dir DIR] [--no-warm-cache]
   repro serve   [--jobs N] [--queue-cap N] [--hot-cache-bytes N]
                 [--cache-dir DIR] [--no-warm-cache] [--listen HOST:PORT]
+  repro bench compare BASELINE.json CURRENT.json [--threshold PCT] [--out FILE]
   repro inspect
 
 --scenario NAME: dynamic O-RAN environment applied to every round: a preset
@@ -123,6 +124,13 @@ serve:           one request per stdin line, one response per line, e.g.
                  serves the same protocol on a local TCP socket instead.
 sweep --served:  route grid cells through an in-process service so repeated
                  sweeps answer from the same cache (hits are reported)
+bench compare:   the measured-perf regression gate (PERF.md #zero-copy): join
+                 two BENCH_perf.json files by bench name, print the per-bench
+                 median delta table, and exit 1 when any bench's p50 slowed
+                 by more than --threshold percent (default 10). Added/removed
+                 benches report but never gate; the empty PR-1 placeholder
+                 baseline passes vacuously. --out FILE also writes the table
+                 (the CI bench-compare job uploads it as the PR artifact).
 ";
 
 fn main() {
@@ -147,6 +155,7 @@ fn real_main(argv: &[String]) -> Result<()> {
         "scenario" => cmd_scenario(&args),
         "sweep" => cmd_sweep(&args),
         "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
         "inspect" => cmd_inspect(),
         other => {
             print!("{USAGE}");
@@ -238,6 +247,17 @@ fn cmd_run(args: &Args) -> Result<()> {
             1e3 * s.total_secs / s.calls.max(1) as f64
         );
     }
+    // zero-copy dispatch counters (PERF.md #zero-copy): elisions prove the
+    // versioned upload memo engages; pool hits prove buffer recycling does
+    let pool = engine.pool();
+    println!(
+        "  zero-copy: uploads elided={} built={}  pool hits={} misses={} retained={:.1}MB",
+        engine.uploads_elided(),
+        pool.uploads_built(),
+        pool.pool_hits(),
+        pool.pool_misses(),
+        pool.retained_bytes() as f64 / 1e6,
+    );
     let ms = runner.memory_stats();
     println!(
         "  cache memory: shards {:.1}MB (+{:.1}MB literals) chunks {:.1}MB (+{:.1}MB literals) \
@@ -606,6 +626,61 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Ok(())
         }
     }
+}
+
+/// `repro bench compare BASELINE.json CURRENT.json`: the measured-perf
+/// regression gate. Exit codes: 0 = no regression, 1 = at least one bench's
+/// median slowed past the threshold, 2 = bad input, 3 = unreadable file.
+/// Pure L3 — no engine, no artifacts — so it runs anywhere (CI included).
+fn cmd_bench(args: &Args) -> Result<()> {
+    use repro::errors::ReproError;
+    use repro::harness::compare;
+    use repro::jsonio::Json;
+    let action = args.positional.first().cloned().unwrap_or_default();
+    if action != "compare" {
+        return Err(anyhow::Error::new(ReproError::invalid(format!(
+            "unknown bench action {action:?} — usage: repro bench compare \
+             BASELINE.json CURRENT.json [--threshold PCT] [--out FILE]"
+        ))));
+    }
+    let (Some(base_path), Some(cur_path)) = (args.positional.get(1), args.positional.get(2))
+    else {
+        return Err(anyhow::Error::new(ReproError::invalid(
+            "bench compare needs two positional files: BASELINE.json CURRENT.json",
+        )));
+    };
+    let threshold = args.f64_or("threshold", 10.0)?;
+    let out = args.opt_str("out");
+    args.finish()?;
+
+    let read = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::Error::new(ReproError::io(path, e)))?;
+        Json::parse(&text)
+            .map_err(|e| anyhow::Error::new(ReproError::invalid(format!("parsing {path}: {e:#}"))))
+    };
+    let cmp = compare::compare(&read(base_path)?, &read(cur_path)?, threshold)?;
+    let table = cmp.table();
+    print!("{table}");
+    if cmp.deltas.is_empty() {
+        println!(
+            "warning: no common benches between {base_path} and {cur_path} — the gate \
+             passes vacuously (placeholder baseline? run the bootstrap-baselines flow)"
+        );
+    }
+    if let Some(path) = &out {
+        std::fs::write(path, &table)
+            .map_err(|e| anyhow::Error::new(ReproError::io(path, e)))?;
+        println!("delta table -> {path}");
+    }
+    if cmp.regressed() {
+        eprintln!(
+            "perf regression: {} bench(es) slowed past {threshold}% median",
+            cmp.regressions().len()
+        );
+        std::process::exit(1);
+    }
+    Ok(())
 }
 
 fn cmd_inspect() -> Result<()> {

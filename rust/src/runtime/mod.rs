@@ -43,7 +43,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 pub use manifest::{ArtifactEntry, Manifest, PresetManifest, ServerLayer};
 pub use plan::{Arg, ArtifactId, ChunkStacks, LayerPlan, PresetPlan};
-pub use tensor::{Frozen, Tensor};
+pub use tensor::{BufferPool, Frozen, Tensor, Versioned};
 
 /// Cumulative execution statistics per artifact (perf pass input) — a
 /// point-in-time snapshot of the engine's atomic counters.
@@ -131,6 +131,16 @@ pub struct Engine {
     /// how many `ExperimentContext`s were built over this engine — lets
     /// tests assert the shared-context path constructs shards exactly once
     ctx_builds: AtomicU64,
+    /// round-to-round literal memo + host-buffer recycler (PERF.md
+    /// §zero-copy); engine-global like the stats, shared by every runner
+    pool: tensor::BufferPool,
+    /// elide `Arg::Versioned` literal rebuilds via the pool memo
+    /// (`REPRO_NO_ELIDE=1` disables; per-engine so differential tests can
+    /// toggle both paths in one process)
+    elide_uploads: bool,
+    /// recycle host buffers through [`Engine::take_zeroed`]/[`Engine::give_back`]
+    /// (`REPRO_NO_POOL=1` disables)
+    recycle_buffers: bool,
 }
 
 /// `REPRO_SERIAL_EXECUTE=1` routes every PJRT execute through one mutex —
@@ -153,6 +163,7 @@ impl Engine {
         let client = SyncClient(xla::PjRtClient::cpu().context("creating PJRT CPU client")?);
         let slots: Vec<OnceLock<CompiledArtifact>> =
             (0..manifest.artifacts.len()).map(|_| OnceLock::new()).collect();
+        let off = |var: &str| std::env::var(var).map(|v| v == "1").unwrap_or(false);
         Ok(Self {
             client,
             manifest,
@@ -160,6 +171,9 @@ impl Engine {
             ids: RwLock::new(HashMap::new()),
             intern_lock: Mutex::new(()),
             ctx_builds: AtomicU64::new(0),
+            pool: tensor::BufferPool::new(),
+            elide_uploads: !off("REPRO_NO_ELIDE"),
+            recycle_buffers: !off("REPRO_NO_POOL"),
         })
     }
 
@@ -278,19 +292,30 @@ impl Engine {
                 args.len()
             );
         }
-        // literals for the fresh (mutable) inputs, rebuilt every call
+        // literals for the fresh (mutable) inputs, rebuilt every call;
+        // Versioned inputs go through the pool memo instead (the Arc keeps
+        // an elided literal alive for the duration of the execute)
         let mut fresh: Vec<Option<xla::Literal>> = Vec::with_capacity(args.len());
+        let mut pooled: Vec<Option<std::sync::Arc<tensor::SyncLiteral>>> =
+            Vec::with_capacity(args.len());
         for a in args {
-            fresh.push(match a {
-                Arg::Fresh(t) => Some(t.to_literal()?),
-                Arg::Cached(_) => None,
-            });
+            let (f, p) = match a {
+                Arg::Fresh(t) => (Some(t.to_literal()?), None),
+                Arg::Cached(_) => (None, None),
+                Arg::Versioned(v) if self.elide_uploads => (None, Some(self.pool.upload(v)?)),
+                Arg::Versioned(v) => (Some(v.tensor().to_literal()?), None),
+            };
+            fresh.push(f);
+            pooled.push(p);
         }
         let mut lits: Vec<&xla::Literal> = Vec::with_capacity(args.len());
-        for (a, f) in args.iter().zip(&fresh) {
+        for (a, (f, p)) in args.iter().zip(fresh.iter().zip(&pooled)) {
             lits.push(match a {
-                Arg::Fresh(_) => f.as_ref().expect("fresh literal built above"),
                 Arg::Cached(fz) => fz.literal()?,
+                _ => match p {
+                    Some(arc) => &arc.0,
+                    None => f.as_ref().expect("fresh literal built above"),
+                },
             });
         }
 
@@ -385,6 +410,47 @@ impl Engine {
 
     pub fn platform(&self) -> String {
         self.client.0.platform_name()
+    }
+
+    /// The engine's round-to-round buffer pool (counters + direct access
+    /// for tests and the CLI's zero-copy report line).
+    pub fn pool(&self) -> &tensor::BufferPool {
+        &self.pool
+    }
+
+    /// `Arg::Versioned` uploads elided via the pool memo so far — the
+    /// §zero-copy acceptance counter, surfaced on the engine because that is
+    /// where the dispatch decision lives.
+    pub fn uploads_elided(&self) -> u64 {
+        self.pool.uploads_elided()
+    }
+
+    /// An all-zeros tensor of `dims` from the recycler — or a plain
+    /// [`Tensor::zeros`] when recycling is off. Bitwise identical either way.
+    pub fn take_zeroed(&self, dims: &[usize]) -> Tensor {
+        if self.recycle_buffers {
+            self.pool.take_zeroed(dims)
+        } else {
+            Tensor::zeros(dims)
+        }
+    }
+
+    /// Return a spent tensor's buffer to the recycler (no-op when recycling
+    /// is off — the buffer just drops).
+    pub fn give_back(&self, t: Tensor) {
+        if self.recycle_buffers {
+            self.pool.give(t);
+        }
+    }
+
+    /// Test/bench knob: toggle the two zero-copy services on a live engine
+    /// so differential suites can run the elided and always-upload paths —
+    /// and the pooled and fresh-allocation paths — in ONE process against
+    /// one artifact table. Production engines read `REPRO_NO_ELIDE` /
+    /// `REPRO_NO_POOL` once at construction instead.
+    pub fn set_zero_copy(&mut self, elide_uploads: bool, recycle_buffers: bool) {
+        self.elide_uploads = elide_uploads;
+        self.recycle_buffers = recycle_buffers;
     }
 }
 

@@ -29,7 +29,7 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::tensor::{Frozen, Tensor};
+use super::tensor::{Frozen, Tensor, Versioned};
 
 /// Interned handle to a compiled artifact — a dense index into the engine's
 /// executable table. Valid only for the [`super::Engine`] that produced it.
@@ -50,6 +50,12 @@ pub enum Arg<'a> {
     Fresh(&'a Tensor),
     /// Immutable: the literal cached inside the [`Frozen`] is reused.
     Cached(&'a Frozen),
+    /// Mutable between ROUNDS but version-tagged: the engine's
+    /// [`super::BufferPool`] elides the literal rebuild whenever the
+    /// `(key, version)` pair matches the previous dispatch (PERF.md
+    /// §zero-copy). Falls back to the `Fresh` conversion when elision is
+    /// disabled.
+    Versioned(&'a Versioned),
 }
 
 impl<'a> Arg<'a> {
@@ -57,6 +63,7 @@ impl<'a> Arg<'a> {
         match self {
             Arg::Fresh(t) => &t.dims,
             Arg::Cached(f) => &f.dims,
+            Arg::Versioned(v) => &v.tensor().dims,
         }
     }
 }
@@ -70,6 +77,12 @@ impl<'a> From<&'a Tensor> for Arg<'a> {
 impl<'a> From<&'a Frozen> for Arg<'a> {
     fn from(f: &'a Frozen) -> Self {
         Arg::Cached(f)
+    }
+}
+
+impl<'a> From<&'a Versioned> for Arg<'a> {
+    fn from(v: &'a Versioned) -> Self {
+        Arg::Versioned(v)
     }
 }
 

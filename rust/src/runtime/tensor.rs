@@ -9,7 +9,9 @@
 //! can live in the shared `ExperimentContext` and be dispatched from several
 //! runner threads at once.
 
-use std::sync::OnceLock;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{bail, Context, Result};
 
@@ -127,7 +129,7 @@ impl Tensor {
 /// module, deliberately scoped to the one xla handle so `Frozen` itself
 /// keeps auto-deriving `Send + Sync` (any future non-thread-safe field
 /// breaks the build instead of riding a blanket impl).
-struct SyncLiteral(xla::Literal);
+pub(super) struct SyncLiteral(pub(super) xla::Literal);
 
 // SAFETY: the literal is immutable after construction and only ever read
 // (`execute` borrows it immutably). `xla::Literal` owns a plain host
@@ -230,6 +232,221 @@ impl PartialEq for Frozen {
     }
 }
 
+/// Identity source for [`Versioned`] keys: process-global, never reused, so
+/// a pool memo entry can outlive the tensor it was built from without ever
+/// aliasing a different parameter vector.
+static NEXT_VERSIONED_KEY: AtomicU64 = AtomicU64::new(1);
+
+/// A **mutable** parameter tensor with a stable identity key and a version
+/// tag bumped on every reassignment — the dispatch-layer generalization of
+/// the wsi memo's manual `wc_version`/`wsi_version` counters (PERF.md
+/// §zero-copy).
+///
+/// Correctness contract: the wrapped tensor has no `&mut` accessor; the ONLY
+/// way to change the bytes is [`Versioned::replace`], which bumps `version`.
+/// A `(key, version)` pair therefore names one immutable byte pattern
+/// forever, which is exactly what lets [`BufferPool`] elide the fresh-literal
+/// upload when the same pair is dispatched twice (e.g. every per-client
+/// clone of the round's aggregate params).
+#[derive(Debug)]
+pub struct Versioned {
+    key: u64,
+    version: u64,
+    tensor: Tensor,
+}
+
+impl Versioned {
+    pub fn new(tensor: Tensor) -> Self {
+        Self { key: NEXT_VERSIONED_KEY.fetch_add(1, Ordering::Relaxed), version: 0, tensor }
+    }
+
+    /// Process-unique identity of this parameter vector.
+    pub fn key(&self) -> u64 {
+        self.key
+    }
+
+    /// Bumped on every [`Versioned::replace`]; `(key, version)` names one
+    /// immutable byte pattern.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn tensor(&self) -> &Tensor {
+        &self.tensor
+    }
+
+    /// Swap in a new tensor (aggregate reassignment, state load), bumping
+    /// the version tag. Returns the displaced tensor so the caller can give
+    /// its buffer back to the pool.
+    #[must_use = "give the displaced tensor back to the engine pool (or drop it explicitly)"]
+    pub fn replace(&mut self, tensor: Tensor) -> Tensor {
+        self.version = self.version.wrapping_add(1);
+        std::mem::replace(&mut self.tensor, tensor)
+    }
+}
+
+impl std::ops::Deref for Versioned {
+    type Target = Tensor;
+
+    fn deref(&self) -> &Tensor {
+        &self.tensor
+    }
+}
+
+impl From<Tensor> for Versioned {
+    fn from(tensor: Tensor) -> Self {
+        Self::new(tensor)
+    }
+}
+
+/// How many distinct [`Versioned`] keys the upload memo retains. Far above
+/// any real round (4 frameworks × a handful of parameter vectors each);
+/// overflow clears the whole memo — a correctness-neutral cache flush, never
+/// a wrong literal.
+const MEMO_CAP: usize = 256;
+
+/// How many spare host buffers the pool retains per shape. One round
+/// produces at most `selected` same-shape parts, and `selected` beyond ~32
+/// means the allocator churn this pool kills is noise anyway.
+const PER_SHAPE_CAP: usize = 32;
+
+/// Round-to-round buffer recycler + upload-elision memo (PERF.md
+/// §zero-copy), owned by the engine.
+///
+/// Two independent services:
+///
+/// * **Upload elision** — `upload(v)` returns the memoized literal when the
+///   `(key, version)` pair matches the previous dispatch of the same
+///   [`Versioned`], skipping the host→literal conversion entirely (counter:
+///   `uploads_elided`). xla-rs exposes no literal-mutation API, so a stale
+///   entry is never overwritten in place — a version mismatch simply builds
+///   a fresh literal (counter: `uploads_built`) and replaces the `Arc`.
+/// * **Host-buffer recycling** — `take_zeroed(dims)` hands back a recycled
+///   `Vec<f32>` re-zeroed to the requested shape (bitwise identical to
+///   [`Tensor::zeros`]; counters: `pool_hits`/`pool_misses`), and `give(t)`
+///   returns a spent tensor's buffer to the per-shape free list instead of
+///   freeing it.
+///
+/// All state sits behind `Mutex`/atomics, so one pool serves every runner
+/// thread of a shared engine.
+#[derive(Default)]
+pub struct BufferPool {
+    /// `Versioned.key` → (version, literal) of the most recent upload
+    memo: Mutex<HashMap<u64, (u64, Arc<SyncLiteral>)>>,
+    /// shape → spare host buffers (capacity ≥ product(shape))
+    free: Mutex<HashMap<Vec<usize>, Vec<Vec<f32>>>>,
+    uploads_elided: AtomicU64,
+    uploads_built: AtomicU64,
+    pool_hits: AtomicU64,
+    pool_misses: AtomicU64,
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The literal for `v`: memoized when `(key, version)` matches the last
+    /// upload of the same parameter vector, freshly built (and memoized)
+    /// otherwise.
+    pub(super) fn upload(&self, v: &Versioned) -> Result<Arc<SyncLiteral>> {
+        {
+            let memo = self.memo.lock().expect("buffer pool memo lock");
+            if let Some((ver, lit)) = memo.get(&v.key()) {
+                if *ver == v.version() {
+                    self.uploads_elided.fetch_add(1, Ordering::Relaxed);
+                    return Ok(Arc::clone(lit));
+                }
+            }
+        }
+        // build outside the lock: conversions of different keys proceed in
+        // parallel. A racing duplicate build of the SAME (key, version) is
+        // benign — both literals hold identical bytes; last insert wins.
+        let lit = Arc::new(SyncLiteral(v.tensor().to_literal()?));
+        self.uploads_built.fetch_add(1, Ordering::Relaxed);
+        let mut memo = self.memo.lock().expect("buffer pool memo lock");
+        if memo.len() >= MEMO_CAP && !memo.contains_key(&v.key()) {
+            memo.clear(); // cache flush, not an error: next uploads rebuild
+        }
+        memo.insert(v.key(), (v.version(), Arc::clone(&lit)));
+        Ok(lit)
+    }
+
+    /// An all-zeros tensor of `dims`, recycling a spare buffer when one of
+    /// the right shape is available. Bitwise identical to
+    /// [`Tensor::zeros`] — the recycled buffer is fully re-zeroed.
+    pub fn take_zeroed(&self, dims: &[usize]) -> Tensor {
+        let recycled = {
+            let mut free = self.free.lock().expect("buffer pool free-list lock");
+            free.get_mut(dims).and_then(Vec::pop)
+        };
+        match recycled {
+            Some(mut data) => {
+                self.pool_hits.fetch_add(1, Ordering::Relaxed);
+                let n: usize = dims.iter().product();
+                data.clear();
+                data.resize(n, 0.0);
+                Tensor { dims: dims.to_vec(), data }
+            }
+            None => {
+                self.pool_misses.fetch_add(1, Ordering::Relaxed);
+                Tensor::zeros(dims)
+            }
+        }
+    }
+
+    /// Return a spent tensor's buffer to the free list (dropped instead once
+    /// the per-shape cap is reached).
+    pub fn give(&self, t: Tensor) {
+        let Tensor { dims, data } = t;
+        let mut free = self.free.lock().expect("buffer pool free-list lock");
+        let bufs = free.entry(dims).or_default();
+        if bufs.len() < PER_SHAPE_CAP {
+            bufs.push(data);
+        }
+    }
+
+    /// Fresh-literal conversions skipped because the `(key, version)` memo
+    /// matched (the §zero-copy acceptance counter).
+    pub fn uploads_elided(&self) -> u64 {
+        self.uploads_elided.load(Ordering::Relaxed)
+    }
+
+    /// Literals actually built through the memo (misses + version bumps).
+    pub fn uploads_built(&self) -> u64 {
+        self.uploads_built.load(Ordering::Relaxed)
+    }
+
+    /// `take_zeroed` calls served from a recycled buffer.
+    pub fn pool_hits(&self) -> u64 {
+        self.pool_hits.load(Ordering::Relaxed)
+    }
+
+    /// `take_zeroed` calls that fell through to a fresh allocation.
+    pub fn pool_misses(&self) -> u64 {
+        self.pool_misses.load(Ordering::Relaxed)
+    }
+
+    /// Bytes pinned by the free lists + memoized literals (PERF.md §memory).
+    pub fn retained_bytes(&self) -> usize {
+        let free = self.free.lock().expect("buffer pool free-list lock");
+        let host: usize =
+            free.values().flat_map(|bufs| bufs.iter().map(|b| b.capacity() * 4)).sum();
+        let memo = self.memo.lock().expect("buffer pool memo lock");
+        // a memoized literal pins ~the tensor it was built from; the memo
+        // does not retain host tensors, so size via the literal's shape
+        let lits: usize = memo
+            .values()
+            .map(|(_, l)| {
+                l.0.array_shape()
+                    .map(|s| s.dims().iter().map(|&d| d as usize).product::<usize>() * 4)
+                    .unwrap_or(0)
+            })
+            .sum();
+        host + lits
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -277,5 +494,81 @@ mod tests {
         let g = f.clone();
         assert_eq!(f, g);
         assert_eq!(g.into_tensor(), t);
+    }
+
+    #[test]
+    fn versioned_keys_are_unique_and_replace_bumps_version() {
+        let mut a = Versioned::new(Tensor::zeros(&[3]));
+        let b = Versioned::new(Tensor::zeros(&[3]));
+        assert_ne!(a.key(), b.key());
+        assert_eq!(a.version(), 0);
+        assert_eq!(a.dims, vec![3]); // Deref into the wrapped tensor
+        let old = a.replace(Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap());
+        assert_eq!(old, Tensor::zeros(&[3]));
+        assert_eq!(a.version(), 1);
+        assert_eq!(a.tensor().data, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn pool_elides_same_version_and_rebuilds_on_bump() {
+        let pool = BufferPool::new();
+        let mut v = Versioned::new(Tensor::new(vec![2], vec![1.0, 2.0]).unwrap());
+        let l0 = pool.upload(&v).unwrap();
+        assert_eq!((pool.uploads_built(), pool.uploads_elided()), (1, 0));
+        let l1 = pool.upload(&v).unwrap();
+        assert!(Arc::ptr_eq(&l0, &l1), "same (key, version) must reuse the literal");
+        assert_eq!((pool.uploads_built(), pool.uploads_elided()), (1, 1));
+        let _ = v.replace(Tensor::new(vec![2], vec![3.0, 4.0]).unwrap());
+        let l2 = pool.upload(&v).unwrap();
+        assert!(!Arc::ptr_eq(&l0, &l2), "a version bump must rebuild the literal");
+        assert_eq!((pool.uploads_built(), pool.uploads_elided()), (2, 1));
+        // the rebuilt literal carries the NEW bytes
+        assert_eq!(Tensor::from_literal(&l2.0).unwrap().data, vec![3.0, 4.0]);
+        // distinct keys never alias, even with equal bytes
+        let w = Versioned::new(v.tensor().clone());
+        let l3 = pool.upload(&w).unwrap();
+        assert!(!Arc::ptr_eq(&l2, &l3));
+        assert_eq!((pool.uploads_built(), pool.uploads_elided()), (3, 1));
+    }
+
+    #[test]
+    fn pool_take_zeroed_is_bitwise_zeros_and_recycles() {
+        let pool = BufferPool::new();
+        let miss = pool.take_zeroed(&[2, 3]);
+        assert_eq!(miss, Tensor::zeros(&[2, 3]));
+        assert_eq!((pool.pool_hits(), pool.pool_misses()), (0, 1));
+        // give back a DIRTY buffer of the same shape: the next take must
+        // come out fully re-zeroed (the bitwise-parity contract)
+        pool.give(Tensor::new(vec![2, 3], vec![9.0; 6]).unwrap());
+        let hit = pool.take_zeroed(&[2, 3]);
+        assert_eq!(hit, Tensor::zeros(&[2, 3]));
+        assert_eq!((pool.pool_hits(), pool.pool_misses()), (1, 1));
+        // shape mismatch falls through to a fresh allocation
+        pool.give(hit);
+        let other = pool.take_zeroed(&[4]);
+        assert_eq!(other, Tensor::zeros(&[4]));
+        assert_eq!((pool.pool_hits(), pool.pool_misses()), (1, 2));
+    }
+
+    #[test]
+    fn pool_memo_overflow_clears_instead_of_growing() {
+        let pool = BufferPool::new();
+        let vs: Vec<Versioned> =
+            (0..MEMO_CAP + 1).map(|_| Versioned::new(Tensor::scalar1(1.0))).collect();
+        for v in &vs {
+            pool.upload(v).unwrap();
+        }
+        // the overflowing insert flushed the memo: re-uploading the first
+        // key rebuilds (correctness-neutral — never a stale literal)
+        let built = pool.uploads_built();
+        pool.upload(&vs[0]).unwrap();
+        assert_eq!(pool.uploads_built(), built + 1);
+    }
+
+    #[test]
+    fn pool_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<BufferPool>();
+        assert_send_sync::<Versioned>();
     }
 }

@@ -320,7 +320,17 @@ impl RoundEnv {
 
     /// Client ids in the candidate set this round, ascending.
     pub fn available_ids(&self) -> Vec<usize> {
-        (0..self.m).filter(|&i| *self.available.get(i)).collect()
+        let mut ids = Vec::new();
+        self.available_ids_into(&mut ids);
+        ids
+    }
+
+    /// [`RoundEnv::available_ids`] into a caller-owned buffer (cleared
+    /// first): same ids, same order, no per-round `Vec` churn at
+    /// M = 10⁵–10⁶ (PERF.md §zero-copy).
+    pub fn available_ids_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend((0..self.m).filter(|&i| *self.available.get(i)));
     }
 
     /// Clients in a straggler episode this round (compute inflated at or

@@ -38,7 +38,10 @@ use crate::jsonio::Json;
 use crate::metrics::{RoundRecord, RunSummary};
 
 /// Bumped on any incompatible change to the warm-tier document layout.
-pub const WARM_SCHEMA: usize = 1;
+/// 1 → 2: `SweepPoint` gained the `energy_cost` column (P2′ energy axis);
+/// schema-1 sweep entries lack the field, so they re-settle rather than
+/// deserialize to a half-filled point.
+pub const WARM_SCHEMA: usize = 2;
 
 /// Config fields removed from the hash preimage because they steer *how* a
 /// run executes, not *what* it computes — each is pinned bitwise-invisible
@@ -405,6 +408,7 @@ fn point_to_json(p: &SweepPoint) -> Json {
         ("e", Json::num(p.e as f64)),
         ("round_latency", state::f64_json(p.round_latency)),
         ("round_cost", state::f64_json(p.round_cost)),
+        ("energy_cost", state::f64_json(p.energy_cost)),
     ])
 }
 
@@ -416,6 +420,7 @@ fn point_from_json(j: &Json) -> Result<SweepPoint> {
         e: j.get("e")?.as_usize()?,
         round_latency: state::f64_from(j.get("round_latency")?)?,
         round_cost: state::f64_from(j.get("round_cost")?)?,
+        energy_cost: state::f64_from(j.get("energy_cost")?)?,
     })
 }
 
@@ -840,6 +845,7 @@ mod tests {
             e: 7,
             round_latency: 0.062_500_000_000_000_01,
             round_cost: 3.75,
+            energy_cost: 0.1 + 0.2, // 0.30000000000000004 again — bit-hex only
         };
         {
             let cache = ResultCache::new(1 << 20, Some(dir.clone()));
@@ -852,6 +858,7 @@ mod tests {
         assert_eq!(back.rho.to_bits(), p.rho.to_bits());
         assert_eq!(back.round_latency.to_bits(), p.round_latency.to_bits());
         assert_eq!(back.round_cost.to_bits(), p.round_cost.to_bits());
+        assert_eq!(back.energy_cost.to_bits(), p.energy_cost.to_bits());
         assert_eq!((back.selected, back.e), (p.selected, p.e));
         std::fs::remove_dir_all(&dir).ok();
     }

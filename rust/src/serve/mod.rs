@@ -604,6 +604,7 @@ fn point_json(p: &SweepPoint) -> Json {
         ("e", Json::num(p.e as f64)),
         ("round_latency", Json::num(p.round_latency)),
         ("round_cost", Json::num(p.round_cost)),
+        ("energy_cost", Json::num(p.energy_cost)),
     ])
 }
 
@@ -742,6 +743,7 @@ mod tests {
             assert_eq!(p.e, cold.e, "{what}");
             assert_eq!(p.round_latency.to_bits(), cold.round_latency.to_bits(), "{what}");
             assert_eq!(p.round_cost.to_bits(), cold.round_cost.to_bits(), "{what}");
+            assert_eq!(p.energy_cost.to_bits(), cold.energy_cost.to_bits(), "{what}");
         }
         assert_eq!(svc.tel.executed.load(Ordering::Relaxed), 1, "one cold compute only");
         assert_eq!(svc2.tel.executed.load(Ordering::Relaxed), 0, "warm hit never computes");

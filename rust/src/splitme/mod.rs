@@ -23,12 +23,12 @@ use anyhow::{Context, Result};
 
 use crate::allocation::solve_p2_shares;
 use crate::fl::{
-    aggregate_indexed, effective_chunk, resolve_client_jobs, run_clients, run_steps, state,
+    aggregate_indexed_pooled, effective_chunk, resolve_client_jobs, run_clients, run_steps, state,
     ExperimentContext, Framework, RoundOutcome,
 };
 use crate::jsonio::Json;
 use crate::oran::{RicProfile, UploadSizes};
-use crate::runtime::{Arg, ChunkStacks, Frozen, Tensor};
+use crate::runtime::{Arg, ChunkStacks, Frozen, Tensor, Versioned};
 use crate::scenario::RoundEnv;
 use crate::selection::{CostModel, DeadlineSelector, SelectPath};
 use crate::sim::RngPool;
@@ -100,29 +100,29 @@ impl<T> VersionedCache<T> {
 }
 
 pub struct SplitMe {
-    /// aggregated client model w_C
-    wc: Tensor,
-    /// aggregated inverse server model (the rApps' w_S)
-    wsi: Tensor,
+    /// aggregated client model w_C — version-tagged: the tag keys the memo
+    /// caches AND the engine's upload memo (PERF.md §zero-copy)
+    wc: Versioned,
+    /// aggregated inverse server model (the rApps' w_S), version-tagged
+    wsi: Versioned,
     selector: DeadlineSelector,
     /// E used in the previous round (paper guard: E is non-increasing)
     e_last: usize,
     /// selected set of the most recent round — the rApps that run Step 4
     last_selected: Vec<usize>,
-    /// params-version tags: bumped whenever the aggregate is reassigned
-    wc_version: u64,
-    wsi_version: u64,
-    /// per-client `inv_acts` passes (tuples + frozen z), keyed by `wsi_version`
+    /// per-client `inv_acts` passes (tuples + frozen z), keyed by `wsi`'s version
     acts: VersionedCache<InvActsPass>,
-    /// per-client whole-shard smashed activations, keyed by `wc_version`
+    /// per-client whole-shard smashed activations, keyed by `wc`'s version
     smash: VersionedCache<Vec<Frozen>>,
+    /// reclaimed selected-ids Vec from the previous round ([`Framework::reclaim`])
+    ids_scratch: Vec<usize>,
 }
 
 impl SplitMe {
     pub fn new(ctx: &ExperimentContext) -> Result<Self> {
         Ok(Self {
-            wc: ctx.init.client(&ctx.pool)?,
-            wsi: ctx.init.inverse(&ctx.pool)?,
+            wc: Versioned::new(ctx.init.client(&ctx.pool)?),
+            wsi: Versioned::new(ctx.init.inverse(&ctx.pool)?),
             selector: DeadlineSelector::from_uniform(
                 ctx.topo.len(),
                 Self::upload_size(ctx),
@@ -131,10 +131,9 @@ impl SplitMe {
             ),
             e_last: ctx.cfg.e_initial,
             last_selected: Vec::new(),
-            wc_version: 0,
-            wsi_version: 0,
             acts: VersionedCache::new(),
             smash: VersionedCache::new(),
+            ids_scratch: Vec::new(),
         })
     }
 
@@ -162,7 +161,7 @@ impl SplitMe {
     /// count the key IS the client id and nothing changes.
     fn inv_acts_for(&mut self, ctx: &ExperimentContext, m: usize) -> Result<Arc<InvActsPass>> {
         let m = ctx.shard_of(m);
-        self.acts.sync(self.wsi_version);
+        self.acts.sync(self.wsi.version());
         if let Some(a) = self.acts.per_client.get(&m) {
             return Ok(a.clone());
         }
@@ -183,7 +182,7 @@ impl SplitMe {
     /// aggregated `wc`, memoized per `(wc_version, data shard)`.
     fn smashed_for(&mut self, ctx: &ExperimentContext, m: usize) -> Result<Arc<Vec<Frozen>>> {
         let m = ctx.shard_of(m);
-        self.smash.sync(self.wc_version);
+        self.smash.sync(self.wc.version());
         if let Some(s) = self.smash.per_client.get(&m) {
             return Ok(s.clone());
         }
@@ -429,7 +428,10 @@ impl Framework for SplitMe {
         );
         let e = alloc.e;
         self.e_last = e;
-        let selected_ids: Vec<usize> = selected.iter().map(|r| r.id).collect();
+        // recycle the previous round's reclaimed Vec (PERF.md §zero-copy)
+        let mut selected_ids = std::mem::take(&mut self.ids_scratch);
+        selected_ids.clear();
+        selected_ids.extend(selected.iter().map(|r| r.id));
         // per-selected effective rates: the fault budget and energy model
         // price uplinks at each client's own channel (== B on homogeneous
         // rounds, where the multiply below is the historical expression)
@@ -490,7 +492,7 @@ impl Framework for SplitMe {
         // frozen wsi shared by every miss (its literal converts once). Only
         // fault survivors train (a clean round's survivors ARE the selected
         // set, in selection order)
-        self.acts.sync(self.wsi_version);
+        self.acts.sync(self.wsi.version());
         let hits: Vec<Option<Arc<InvActsPass>>> = survivors
             .iter()
             .map(|&m| self.acts.per_client.get(&ctx.shard_of(m)).cloned())
@@ -536,12 +538,15 @@ impl Framework for SplitMe {
                 .shard_chunks(m)
                 .and_then(|(xs, _)| z_stacks.as_ref().map(|zs| (xs, zs)));
 
-            // Step 2: E client-side KL steps over the reconstructed dataset
+            // Step 2: E client-side KL steps over the reconstructed dataset.
+            // The shared Versioned aggregate goes straight in: the first
+            // dispatch rides the engine's upload memo, so every client after
+            // the round's first elides the aggregate's host→literal copy
             let (wc_m, client_loss, client_steps) = run_steps(
                 ctx,
                 "client_step",
                 "client_step_chunk",
-                wc0.clone(),
+                wc0,
                 e,
                 &eta_c,
                 |t| (shard.batch(t).0, z[t % z.len()]),
@@ -566,7 +571,7 @@ impl Framework for SplitMe {
                 ctx,
                 "inv_step",
                 "inv_step_chunk",
-                wsi0.clone(),
+                wsi0,
                 e,
                 &eta_s,
                 |t| (shard.batch(t).1, &smashed[t % smashed.len()]),
@@ -606,10 +611,13 @@ impl Framework for SplitMe {
         let train_loss = if quorum_miss {
             f32::NAN
         } else {
-            self.wc = aggregate_indexed(wc_parts)?;
-            self.wsi = aggregate_indexed(wsi_parts)?;
-            self.wc_version += 1;
-            self.wsi_version += 1;
+            // pooled aggregation (bitwise = aggregate_indexed); replace()
+            // bumps each version tag, invalidating memos AND upload memo,
+            // and the displaced aggregates feed the buffer pool
+            let old_wc = self.wc.replace(aggregate_indexed_pooled(ctx.engine, wc_parts)?);
+            ctx.engine.give_back(old_wc);
+            let old_wsi = self.wsi.replace(aggregate_indexed_pooled(ctx.engine, wsi_parts)?);
+            ctx.engine.give_back(old_wsi);
             self.last_selected = survivors;
             if loss_n > 0 {
                 loss_sum / loss_n as f32
@@ -698,15 +706,20 @@ impl Framework for SplitMe {
     }
 
     fn load_state(&mut self, s: &Json) -> Result<()> {
-        self.wc = state::tensor_from(s.get("wc")?)?;
-        self.wsi = state::tensor_from(s.get("wsi")?)?;
+        // replace() bumps the version tags, so every memo (and the engine's
+        // upload memo) drops the pre-restore bytes; memo reuse is bitwise
+        // identical to recompute, so a cold cache reproduces the warm-cache
+        // records bit for bit
+        let _ = self.wc.replace(state::tensor_from(s.get("wc")?)?);
+        let _ = self.wsi.replace(state::tensor_from(s.get("wsi")?)?);
         self.e_last = s.get("e_last")?.as_usize()?;
         self.last_selected = state::usize_vec_from(s.get("last_selected")?)?;
         state::selector_load(&mut self.selector, s.get("selector")?)?;
-        // version tags and memo caches keep their fresh-construction values:
-        // memo reuse is bitwise identical to recompute, so a cold cache
-        // reproduces the warm-cache records bit for bit
         Ok(())
+    }
+
+    fn reclaim(&mut self, out: RoundOutcome) {
+        self.ids_scratch = out.selected_ids;
     }
 }
 

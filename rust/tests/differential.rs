@@ -26,6 +26,12 @@
 //!   an unreachable quorum records skipped rounds instead of panicking;
 //!   and `Runner::resume` from a mid-run checkpoint reproduces the
 //!   uninterrupted run record for record, bit for bit.
+//! * zero-copy dispatch (ISSUE 10): the version-tagged upload memo and the
+//!   buffer pool — together and independently — leave every `RoundRecord`
+//!   bitwise identical to the fresh-literal / fresh-allocation paths across
+//!   all four frameworks, {static, fading}, and `--client-jobs` {1, 4},
+//!   with `Engine::uploads_elided` / pool-hit counters proving both
+//!   mechanisms actually fired.
 //!
 //! Requires `make artifacts`; SKIPs (stderr note) without it —
 //! `REPRO_REQUIRE_ARTIFACTS=1` (the CI artifacts lane) turns any SKIP into
@@ -555,6 +561,73 @@ fn remainder_folds_eliminate_single_step_dispatch() {
         assert_eq!(wa.data, wb.data, "params diverge at e={e}");
         assert_eq!(la.to_bits(), lb.to_bits(), "loss sums diverge at e={e}: {la} vs {lb}");
     }
+}
+
+#[test]
+fn zero_copy_dispatch_is_bitwise_identical_and_actually_fires() {
+    // ISSUE 10 acceptance gate: the upload memo (version-tagged literal
+    // reuse for `Arg::Versioned`) and the buffer pool (recycled aggregation
+    // accumulators) must be bitwise invisible in every RoundRecord — all
+    // four frameworks, {static, fading} environments, client_jobs {1, 4} —
+    // while the engine counters prove both mechanisms actually engaged
+    let Some(mut baseline) = try_engine() else { return };
+    baseline.set_zero_copy(false, false);
+    let Some(mut zerocopy) = try_engine() else { return };
+    zerocopy.set_zero_copy(true, true);
+    for scenario in ["static", "fading"] {
+        for client_jobs in [1usize, 4] {
+            let mut cfg = tiny_cfg();
+            cfg.scenario = scenario.into();
+            cfg.client_jobs = client_jobs;
+            for kind in FrameworkKind::all() {
+                let a = train_records(&baseline, &cfg, kind, 3);
+                let b = train_records(&zerocopy, &cfg, kind, 3);
+                assert_eq!(a.len(), b.len(), "{}: round count", kind.name());
+                for (ra, rb) in a.iter().zip(&b) {
+                    assert_records_bitwise_eq(
+                        ra,
+                        rb,
+                        &format!("{}/{scenario}/cj{client_jobs}/zero-copy", kind.name()),
+                    );
+                }
+            }
+        }
+    }
+    // the disabled engine must never have engaged either mechanism ...
+    assert_eq!(baseline.uploads_elided(), 0, "disabled engine elided an upload");
+    assert_eq!(baseline.pool().pool_hits(), 0, "disabled engine recycled a buffer");
+    // ... and the enabled one must have engaged BOTH, or the parity above
+    // is vacuous
+    assert!(zerocopy.uploads_elided() > 0, "upload elision never fired across the matrix");
+    assert!(zerocopy.pool().pool_hits() > 0, "buffer pool never recycled across the matrix");
+}
+
+#[test]
+fn pool_and_elision_are_independently_bitwise_invisible() {
+    // the two zero-copy services gate independently (REPRO_NO_ELIDE /
+    // REPRO_NO_POOL): each alone must reproduce the fully-disabled records
+    // bit for bit, with only its own counter moving
+    let Some(mut off) = try_engine() else { return };
+    off.set_zero_copy(false, false);
+    let Some(mut only_elide) = try_engine() else { return };
+    only_elide.set_zero_copy(true, false);
+    let Some(mut only_pool) = try_engine() else { return };
+    only_pool.set_zero_copy(false, true);
+    let cfg = tiny_cfg();
+    for kind in FrameworkKind::all() {
+        let base = train_records(&off, &cfg, kind, 3);
+        for (eng, tag) in [(&only_elide, "elide-only"), (&only_pool, "pool-only")] {
+            let got = train_records(eng, &cfg, kind, 3);
+            assert_eq!(base.len(), got.len(), "{}/{tag}", kind.name());
+            for (ra, rb) in base.iter().zip(&got) {
+                assert_records_bitwise_eq(ra, rb, &format!("{}/{tag}", kind.name()));
+            }
+        }
+    }
+    assert!(only_elide.uploads_elided() > 0, "elide-only engine never elided");
+    assert_eq!(only_elide.pool().pool_hits(), 0, "elide-only engine touched the pool");
+    assert!(only_pool.pool().pool_hits() > 0, "pool-only engine never recycled");
+    assert_eq!(only_pool.uploads_elided(), 0, "pool-only engine elided an upload");
 }
 
 #[test]
